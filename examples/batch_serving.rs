@@ -1,0 +1,90 @@
+//! End-to-end serving driver (the repo's headline validation run): a mixed
+//! task workload is batch-served through the full stack — rust coordinator
+//! -> continuous batcher -> TRIM-KV cache manager -> AOT decode graph on
+//! PJRT — and we report accuracy, throughput and latency percentiles.
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//!   make artifacts && cargo run --release --example batch_serving
+//!   [--policy trimkv] [--budget 96] [--requests 48]
+
+use anyhow::{Context, Result};
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::model_meta::ModelMeta;
+use trimkv::runtime::PjrtBackend;
+use trimkv::scheduler::Request;
+use trimkv::server::InProcServer;
+use trimkv::util::cli::Args;
+use trimkv::util::stats::Percentiles;
+use trimkv::vocab::Vocab;
+use trimkv::workload::{grade, suites};
+
+fn main() -> Result<()> {
+    let args = Args::spec()
+        .opt("policy", "trimkv", "eviction policy")
+        .opt("budget", "96", "kv budget per head")
+        .opt("requests", "48", "number of requests")
+        .opt("batch", "8", "batch lanes")
+        .parse_env()?;
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("no artifacts found — run `make artifacts` first");
+        return Ok(());
+    }
+    let meta = ModelMeta::load(dir)?;
+    let vocab = Vocab::load(&dir.join("vocab.json"))?;
+    let budget = args.usize("budget")?;
+    let batch = args.usize("batch")?;
+    let policy = args.get_or("policy", "trimkv");
+    let n = args.usize("requests")?;
+
+    let cfg = EngineConfig {
+        policy: policy.clone(),
+        budget,
+        batch,
+        ..Default::default()
+    };
+    let spec = meta
+        .pick("decode", batch, budget + meta.chunk + 1, "mlp")
+        .context("no artifact for this batch/budget")?;
+    println!("loading {} (b={} m={}), policy {policy}, budget {budget}",
+             spec.file, spec.b, spec.m);
+    let backend = PjrtBackend::load(&meta, spec.b, spec.m, "default", "mlp", true)?;
+    let engine = Engine::new(backend, cfg, vocab.eos())?;
+    let srv = InProcServer::spawn(engine);
+
+    // mixed workload: one episode per paper suite family
+    let mut episodes = Vec::new();
+    episodes.extend(suites::math(&vocab, "gsm8k", n / 3, 1).episodes);
+    episodes.extend(suites::longmem(&vocab, "single", n / 3, 2).episodes);
+    episodes.extend(suites::scbench(&vocab, "manyshot", n - 2 * (n / 3), 3).episodes);
+
+    let t0 = std::time::Instant::now();
+    for (i, ep) in episodes.iter().enumerate() {
+        let mut req = Request::new(i as u64, ep.prompt.clone(), 24);
+        req.tag = ep.task.clone();
+        srv.submit(req);
+    }
+    let responses = srv.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut score = 0.0;
+    let mut ttft = Percentiles::default();
+    let mut e2e = Percentiles::default();
+    let mut decoded = 0usize;
+    for r in &responses {
+        score += grade(&episodes[r.id as usize], &r.tokens, &vocab);
+        ttft.push(r.ttft_us / 1e3);
+        e2e.push(r.e2e_us / 1e3);
+        decoded += r.tokens.len();
+    }
+    println!("\n=== batch serving report ===");
+    println!("requests           {}", responses.len());
+    println!("mean accuracy      {:.3}", score / responses.len() as f64);
+    println!("wall time          {wall:.2} s");
+    println!("decode throughput  {:.1} tok/s", decoded as f64 / wall);
+    println!("request rate       {:.2} req/s", responses.len() as f64 / wall);
+    println!("ttft p50/p95       {:.1} / {:.1} ms", ttft.pct(50.0), ttft.pct(95.0));
+    println!("e2e  p50/p95       {:.1} / {:.1} ms", e2e.pct(50.0), e2e.pct(95.0));
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, serve one recall episode under a
+//! tight KV budget with TRIM-KV eviction, print everything.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::{Context, Result};
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::model_meta::ModelMeta;
+use trimkv::runtime::PjrtBackend;
+use trimkv::scheduler::Request;
+use trimkv::vocab::Vocab;
+use trimkv::workload::{grade, Gen};
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("no artifacts found — run `make artifacts` first");
+        return Ok(());
+    }
+    let meta = ModelMeta::load(dir)?;
+    let vocab = Vocab::load(&dir.join("vocab.json"))?;
+
+    let cfg = EngineConfig {
+        policy: "trimkv".into(),
+        budget: 48,
+        batch: 1,
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    let spec = meta
+        .pick("decode", 1, cfg.budget + meta.chunk + 1, "mlp")
+        .context("no b=1 artifact")?;
+    println!("loading {} (b={} m={})", spec.file, spec.b, spec.m);
+    let backend = PjrtBackend::load(&meta, spec.b, spec.m, "default", "mlp", true)?;
+    let mut engine = Engine::new(backend, cfg, vocab.eos())?;
+
+    let mut g = Gen::new(&vocab, 1234);
+    let ep = g.recall(10, 4);
+    println!("\nprompt ({} tokens):\n  {}", ep.prompt.len(),
+             ep.prompt.iter().map(|&t| vocab.name(t)).collect::<Vec<_>>().join(" "));
+    println!("expected answer: {}", vocab.name(ep.answer[0]));
+
+    engine
+        .submit(Request::new(0, ep.prompt.clone(), 8))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rs = engine.run_to_completion()?;
+    let r = &rs[0];
+    println!("\ngenerated: {}",
+             r.tokens.iter().map(|&t| vocab.name(t)).collect::<Vec<_>>().join(" "));
+    println!("grade: {}", grade(&ep, &r.tokens, &vocab));
+    println!("evictions under budget {}: {}", engine.cfg.budget,
+             engine.metrics.evictions);
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}

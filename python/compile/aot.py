@@ -1,0 +1,273 @@
+"""AOT export: lower the serving graphs to HLO text + dump weight blobs.
+
+This is the only bridge between the python build path and the rust serving
+engine.  Interchange contract (consumed by rust/src/model_meta.rs and
+rust/src/runtime/):
+
+  artifacts/
+    decode_b{B}_m{M}[_lin].hlo.txt    one decode step (model.decode_fn)
+    prefill_b{B}_m{M}[_lin].hlo.txt   one chunk prefill (model.prefill_fn)
+    weights.bin                       base parameters (TKVW format)
+    gates_<variant>.bin               gate parameters per trained variant
+    meta.json                         dims, artifact table, tensor orders
+    vocab.json                        vocabulary layout
+    golden_decode.bin /               runtime I/O pairs for the rust golden
+    golden_prefill.bin                tests (inputs + expected outputs)
+    golden_episodes.jsonl             sample episodes for workload parity
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot [--out ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tasks
+from . import vocab as V
+from .model import (CONFIG, decode_fn, gate_names, init_gates, param_names,
+                    prefill_fn, save_weights_bin)
+
+CHUNK = 64  # prefill chunk length C
+
+# (batch, slots) variants exported by default; the engine picks the smallest
+# M >= its configured budget, and B by its batching mode.
+DECODE_VARIANTS = [(1, 256), (1, 768), (8, 128), (8, 256), (8, 768)]
+PREFILL_VARIANTS = [(1, 256), (1, 768), (8, 128), (8, 256), (8, 768)]
+LIN_VARIANTS = [(8, 256)]  # gate-architecture ablation (Fig. 9)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def decode_specs(cfg, b, m):
+    L, H, dh = cfg.layers, cfg.hkv, cfg.dh
+    return dict(
+        token=spec((b,), jnp.int32),
+        pos=spec((b,), jnp.int32),
+        kc=spec((L, b, H, m, dh)),
+        vc=spec((L, b, H, m, dh)),
+        valid=spec((L, b, H, m)),
+        write_slot=spec((L, b, H), jnp.int32),
+        inject_flag=spec((L, b, H)),
+        inject_slot=spec((L, b, H), jnp.int32),
+        inject_k=spec((L, b, H, dh)),
+        inject_v=spec((L, b, H, dh)),
+    )
+
+
+def prefill_specs(cfg, b, m, c=CHUNK):
+    L, H, dh = cfg.layers, cfg.hkv, cfg.dh
+    return dict(
+        tokens=spec((b, c), jnp.int32),
+        pos=spec((b, c), jnp.int32),
+        in_mask=spec((b, c)),
+        kc=spec((L, b, H, m, dh)),
+        vc=spec((L, b, H, m, dh)),
+        valid=spec((L, b, H, m)),
+        write_slots=spec((L, b, H, c), jnp.int32),
+    )
+
+
+DECODE_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn",
+                    "k_new", "v_new"]
+PREFILL_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn_slots",
+                     "attn_chunk", "k_chunk", "v_chunk"]
+
+
+def build_fn(kind, cfg, pnames, gnames, attn_impl):
+    """Flat-signature wrapper: fn(*params, *gates, *runtime) -> tuple."""
+    np_, ng = len(pnames), len(gnames)
+
+    def fn(*args):
+        params = dict(zip(pnames, args[:np_]))
+        gates = dict(zip(gnames, args[np_:np_ + ng]))
+        rt = args[np_ + ng:]
+        if kind == "decode":
+            out = decode_fn(params, gates, *rt, cfg=cfg, attn_impl=attn_impl)
+            return tuple(out[k] for k in DECODE_OUT_ORDER)
+        out = prefill_fn(params, gates, *rt, cfg=cfg)
+        return tuple(out[k] for k in PREFILL_OUT_ORDER)
+
+    return fn
+
+
+def lower_variant(kind, cfg, b, m, params_np, gates_np, linear, attn_impl):
+    pnames = param_names(cfg)
+    gnames = gate_names(cfg, linear=linear)
+    fn = build_fn(kind, cfg, pnames, gnames, attn_impl)
+    pspecs = [spec(params_np[n].shape) for n in pnames]
+    gspecs = [spec(gates_np[n].shape) for n in gnames]
+    rspecs = (decode_specs(cfg, b, m) if kind == "decode"
+              else prefill_specs(cfg, b, m))
+    lowered = jax.jit(fn).lower(*pspecs, *gspecs, *rspecs.values())
+    return to_hlo_text(lowered), list(rspecs.keys())
+
+
+def export_goldens(out, cfg, params, gates, b, m):
+    """Run one decode step + one prefill chunk in python; dump I/O pairs."""
+    L, H, dh = cfg.layers, cfg.hkv, cfg.dh
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 8)
+    n_live = m // 4
+    kc = jax.random.normal(ks[0], (L, b, H, m, dh)) * 0.3
+    vc = jax.random.normal(ks[1], (L, b, H, m, dh)) * 0.3
+    valid = jnp.zeros((L, b, H, m)).at[:, :, :, :n_live].set(1.0)
+    token = jax.random.randint(ks[2], (b,), 0, cfg.vocab)
+    pos = jnp.full((b,), n_live, jnp.int32)
+    write_slot = jnp.full((L, b, H), n_live, jnp.int32)
+    zf = jnp.zeros((L, b, H))
+    zs = jnp.zeros((L, b, H), jnp.int32)
+    zk = jnp.zeros((L, b, H, dh))
+    ins = dict(token=token, pos=pos, kc=kc, vc=vc, valid=valid,
+               write_slot=write_slot, inject_flag=zf, inject_slot=zs,
+               inject_k=zk, inject_v=zk)
+    outs = decode_fn(params, gates, *ins.values(), cfg=cfg)
+    blob = {f"in.{k}": np.asarray(v, np.float32) for k, v in ins.items()}
+    blob.update({f"out.{k}": np.asarray(outs[k], np.float32)
+                 for k in DECODE_OUT_ORDER})
+    save_weights_bin(f"{out}/golden_decode.bin", blob)
+
+    c = CHUNK
+    toks = jax.random.randint(ks[3], (b, c), 0, cfg.vocab)
+    posc = jnp.broadcast_to(jnp.arange(n_live, n_live + c)[None], (b, c)
+                            ).astype(jnp.int32)
+    in_mask = jnp.ones((b, c))
+    ws = jnp.broadcast_to(jnp.arange(n_live, n_live + c)[None, None, None],
+                          (L, b, H, c)).astype(jnp.int32)
+    pins = dict(tokens=toks, pos=posc, in_mask=in_mask, kc=kc, vc=vc,
+                valid=valid, write_slots=ws)
+    pouts = prefill_fn(params, gates, *pins.values(), cfg=cfg)
+    blob = {f"in.{k}": np.asarray(v, np.float32) for k, v in pins.items()}
+    blob.update({f"out.{k}": np.asarray(pouts[k], np.float32)
+                 for k in PREFILL_OUT_ORDER})
+    save_weights_bin(f"{out}/golden_prefill.bin", blob)
+
+
+def export_episodes(out, n_per: int = 6):
+    rng = random.Random(2024)
+    with open(f"{out}/golden_episodes.jsonl", "w") as f:
+        for task, gen in tasks.GENERATORS.items():
+            for _ in range(n_per):
+                ep = gen(rng)
+                f.write(json.dumps({
+                    "task": ep.task, "tokens": ep.tokens,
+                    "prompt_end": ep.prompt_end,
+                    "answer_start": ep.answer_start, "answer": ep.answer,
+                }) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only export the (8,256) pair (fast iteration)")
+    ap.add_argument("--attn-impl", default="pallas", choices=["pallas", "ref"])
+    args = ap.parse_args()
+    out = args.out
+    cfg = CONFIG
+    t0 = time.time()
+
+    params_np = dict(np.load(f"{out}/base.npz"))
+    params = {k: jnp.asarray(v) for k, v in params_np.items()}
+
+    # all trained gate variants -> .bin; 'default' also drives the goldens
+    import glob
+    import os
+    gate_files = sorted(glob.glob(f"{out}/gates_*.npz"))
+    if not gate_files:
+        raise SystemExit("no gates_*.npz found; run train_gates first")
+    gates_np = None
+    for gf in gate_files:
+        name = os.path.basename(gf)[len("gates_"):-len(".npz")]
+        g = dict(np.load(gf))
+        save_weights_bin(f"{out}/gates_{name}.bin", g)
+        if name == "default":
+            gates_np = g
+    if gates_np is None:
+        gates_np = dict(np.load(gate_files[0]))
+    gates = {k: jnp.asarray(v) for k, v in gates_np.items()}
+    save_weights_bin(f"{out}/weights.bin", params_np)
+
+    dec_vars = [(8, 256)] if args.quick else DECODE_VARIANTS
+    pre_vars = [(8, 256)] if args.quick else PREFILL_VARIANTS
+    artifacts = []
+    for kind, variants in (("decode", dec_vars), ("prefill", pre_vars)):
+        for b, m in variants:
+            fname = f"{kind}_b{b}_m{m}.hlo.txt"
+            hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
+                                          gates_np, False, args.attn_impl)
+            with open(f"{out}/{fname}", "w") as f:
+                f.write(hlo)
+            artifacts.append({"kind": kind, "b": b, "m": m,
+                              "c": CHUNK if kind == "prefill" else 1,
+                              "file": fname, "gate_arch": "mlp",
+                              "runtime_inputs": rt_order})
+            print(f"lowered {fname} ({len(hlo)//1024} KiB, "
+                  f"{time.time()-t0:.0f}s)", flush=True)
+
+    # linear-gate ablation graphs, if that variant was trained
+    lin_files = [f for f in gate_files if "linear" in f]
+    if lin_files and not args.quick:
+        lin_np = dict(np.load(lin_files[0]))
+        for kind in ("decode", "prefill"):
+            for b, m in LIN_VARIANTS:
+                fname = f"{kind}_b{b}_m{m}_lin.hlo.txt"
+                hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
+                                              lin_np, True, args.attn_impl)
+                with open(f"{out}/{fname}", "w") as f:
+                    f.write(hlo)
+                artifacts.append({"kind": kind, "b": b, "m": m,
+                                  "c": CHUNK if kind == "prefill" else 1,
+                                  "file": fname, "gate_arch": "linear",
+                                  "runtime_inputs": rt_order})
+
+    meta = {
+        "model": {"vocab": cfg.vocab, "d": cfg.d, "layers": cfg.layers,
+                  "hq": cfg.hq, "hkv": cfg.hkv, "dh": cfg.dh,
+                  "ffn": cfg.ffn, "gate_hidden": cfg.gate_hidden,
+                  "rope_theta": cfg.rope_theta},
+        "chunk": CHUNK,
+        "param_order": [{"name": n, "shape": list(params_np[n].shape)}
+                        for n in param_names(cfg)],
+        "gate_order": [{"name": n, "shape": list(gates_np[n].shape)}
+                       for n in gate_names(cfg)],
+        "gate_order_linear": [{"name": n}
+                              for n in gate_names(cfg, linear=True)],
+        "decode_outputs": DECODE_OUT_ORDER,
+        "prefill_outputs": PREFILL_OUT_ORDER,
+        "gate_variants": [os.path.basename(f)[len("gates_"):-len(".npz")]
+                          for f in gate_files],
+        "artifacts": artifacts,
+    }
+    with open(f"{out}/meta.json", "w") as f:
+        json.dump(meta, f, indent=1)
+    with open(f"{out}/vocab.json", "w") as f:
+        json.dump(V.vocab_json(), f, indent=1)
+
+    export_goldens(out, cfg, params, gates, 8, 256)
+    export_episodes(out)
+    print(f"aot export complete in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .capacity_loss import capacity_loss, retention_load
+from .decode_attention import decode_attention
+from .retention_attention import retention_attention
+
+__all__ = [
+    "capacity_loss",
+    "retention_load",
+    "decode_attention",
+    "retention_attention",
+]

@@ -1,0 +1,129 @@
+"""Pallas capacity-loss kernel (paper Eq. 5), forward + backward.
+
+The loss needs the retention load  s_t = sum_{i<=t} beta_i^{t-i}  for every
+step t without materializing the T x T retention matrix.  The paper does this
+with a custom Triton kernel; here we tile (t-block x i-block) on the Pallas
+grid and accumulate per-t partial sums — the same block-parallel reduction,
+mapped to VMEM tiles (DESIGN.md §3).
+
+Forward returns the scalar hinge loss; the per-t load s is kept as the
+residual so the backward kernel only revisits blocks where s_t > M:
+  dL/dlog_beta_i = sum_{t>=i} g_t (t-i) exp((t-i) log_beta_i),
+  g_t = [s_t > M] / (B H T (t+1)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 64
+
+
+def _fit_block(block: int, t: int) -> int:
+    """Largest block size <= `block` that divides t (grid must tile exactly)."""
+    b = min(block, t)
+    while t % b:
+        b -= 1
+    return b
+
+
+def _load_kernel(lb_ref, s_ref, *, block_i: int):
+    """s_t = sum_{i<=t} exp((t-i) log_beta_i) for one (row, t-block)."""
+    lbfull = lb_ref[0]                   # [T]
+    t_total = lbfull.shape[0]
+    bt = s_ref.shape[1]
+    t_pos = pl.program_id(1) * bt + jnp.arange(bt)
+    n_ib = t_total // block_i
+
+    def body(j, s):
+        lbb = jax.lax.dynamic_slice_in_dim(lbfull, j * block_i, block_i)
+        i_pos = j * block_i + jnp.arange(block_i)
+        dist = t_pos[:, None] - i_pos[None, :]
+        ret = jnp.where(dist >= 0, jnp.exp(dist * lbb[None, :]), 0.0)
+        return s + ret.sum(axis=1)
+
+    s0 = jnp.zeros((bt,), lbfull.dtype)
+    s_ref[0] = jax.lax.fori_loop(0, n_ib, body, s0)
+
+
+def _grad_kernel(lb_ref, g_ref, dlb_ref, *, block_t: int):
+    """dlog_beta for one (row, i-block): sum over t blocks of g_t (t-i) ret."""
+    lbb = lb_ref[0]                      # [Bi]
+    gfull = g_ref[0]                     # [T]
+    t_total = gfull.shape[0]
+    bi = lbb.shape[0]
+    i_pos = pl.program_id(1) * bi + jnp.arange(bi)
+    n_tb = t_total // block_t
+
+    def body(j, dlb):
+        gb = jax.lax.dynamic_slice_in_dim(gfull, j * block_t, block_t)
+        t_pos = j * block_t + jnp.arange(block_t)
+        dist = t_pos[:, None] - i_pos[None, :]               # [Bt, Bi]
+        ret = jnp.where(dist >= 0, jnp.exp(dist * lbb[None, :]), 0.0)
+        return dlb + (gb[:, None] * dist * ret).sum(axis=0)
+
+    dlb0 = jnp.zeros((bi,), lbb.dtype)
+    dlb_ref[0] = jax.lax.fori_loop(0, n_tb, body, dlb0)
+
+
+def retention_load(log_beta, block_t: int = DEFAULT_BLOCK_T,
+                   interpret: bool = True):
+    """Per-step cache load s_t [B, H, T] (public: also used by Fig-5c sparsity)."""
+    b, h, t = log_beta.shape
+    bt = _fit_block(block_t, t)
+    lbf = log_beta.reshape(b * h, t)
+    s = pl.pallas_call(
+        functools.partial(_load_kernel, block_i=bt),
+        grid=(b * h, t // bt),
+        in_specs=[pl.BlockSpec((1, t), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t), log_beta.dtype),
+        interpret=interpret,
+    )(lbf)
+    return s.reshape(b, h, t)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def capacity_loss(log_beta, m: float, block_t: int = DEFAULT_BLOCK_T,
+                  interpret: bool = True):
+    """Scalar capacity loss; matches ``ref.capacity_loss_ref``."""
+    loss, _ = _cap_fwd(log_beta, m, block_t, interpret)
+    return loss
+
+
+def _cap_fwd(log_beta, m, block_t, interpret):
+    b, h, t = log_beta.shape
+    s = retention_load(log_beta, block_t, interpret)
+    ti = jnp.arange(t, dtype=log_beta.dtype)
+    hinge = jnp.maximum(0.0, s - m) / (ti + 1.0)
+    loss = hinge.mean(axis=-1).mean()
+    return loss, (log_beta, s)
+
+
+def _cap_bwd(m, block_t, interpret, res, dl):
+    log_beta, s = res
+    b, h, t = log_beta.shape
+    bt = _fit_block(block_t, t)
+    ti = jnp.arange(t, dtype=log_beta.dtype)
+    g = jnp.where(s > m, 1.0, 0.0) / ((ti + 1.0) * t * b * h) * dl
+    lbf = log_beta.reshape(b * h, t)
+    gf = g.reshape(b * h, t)
+    dlb = pl.pallas_call(
+        functools.partial(_grad_kernel, block_t=bt),
+        grid=(b * h, t // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t), log_beta.dtype),
+        interpret=interpret,
+    )(lbf, gf)
+    return (dlb.reshape(b, h, t),)
+
+
+capacity_loss.defvjp(_cap_fwd, _cap_bwd)

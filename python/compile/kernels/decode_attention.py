@@ -1,0 +1,73 @@
+"""Pallas single-query decode attention over M cache slots.
+
+This is the serving hot path: one query per sequence attends to the resident
+KV slots under a validity mask (holes left by eviction are masked out).  The
+kernel is lowered (interpret=True) inside the AOT decode graph that the rust
+engine executes every step, so its cost structure — O(M) per head regardless
+of the true context length — is exactly the paper's bounded-memory claim.
+
+It also emits the post-softmax attention probabilities, which the rust-side
+H2O / SnapKV / R-KV baseline policies consume as their importance signal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, p_ref):
+    q = q_ref[0]                        # [dh]
+    k = k_ref[0]                        # [M, dh]
+    v = v_ref[0]
+    valid = valid_ref[0]                # [M]
+    dh = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = (k @ q) * scale
+    s = jnp.where(valid > 0.5, s, NEG_INF)
+    m = s.max()
+    p = jnp.exp(s - m)
+    l = p.sum()
+    p = p / l
+    # fully-masked row (no live slots): output zeros, not NaN
+    any_valid = valid.sum() > 0.5
+    p = jnp.where(any_valid, p, 0.0)
+    o_ref[0] = p @ v
+    p_ref[0] = p
+
+
+def decode_attention(q, k, v, valid, interpret: bool = True):
+    """q [B,Hq,dh], k/v [B,Hkv,M,dh], valid [B,Hkv,M] ->
+    (o [B,Hq,dh], probs [B,Hq,M]); matches ``ref.decode_attention_ref``."""
+    b, hq, dh = q.shape
+    hkv, m = k.shape[1], k.shape[2]
+    group = hq // hkv
+    k_e = jnp.repeat(k, group, axis=1).reshape(b * hq, m, dh)
+    v_e = jnp.repeat(v, group, axis=1).reshape(b * hq, m, dh)
+    valid_e = jnp.repeat(valid, group, axis=1).reshape(b * hq, m)
+    qf = q.reshape(b * hq, dh)
+    o, p = pl.pallas_call(
+        _decode_kernel,
+        grid=(b * hq,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, dh), q.dtype),
+            jax.ShapeDtypeStruct((b * hq, m), q.dtype),
+        ],
+        interpret=interpret,
+    )(qf, k_e, v_e, valid_e)
+    return o.reshape(b, hq, dh), p.reshape(b, hq, m)

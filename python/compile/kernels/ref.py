@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the AOT
+graphs the rust engine executes) are tested against.  They materialize the
+full attention / retention matrices, so they are O(T^2) memory — fine for
+tests and for small-model gate training, wrong for production; the Pallas
+kernels implement the blocked versions.
+
+Shapes (GQA handled natively here):
+  q        [B, Hq,  T, dh]
+  k, v     [B, Hkv, T, dh]   (Hq % Hkv == 0, group = Hq // Hkv)
+  log_beta [B, Hkv, T]       log of the retention gate output, <= 0
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def expand_kv(x: jax.Array, hq: int) -> jax.Array:
+    """[B, Hkv, ...] -> [B, Hq, ...] by repeating each kv head over its group."""
+    hkv = x.shape[1]
+    group = hq // hkv
+    return jnp.repeat(x, group, axis=1)
+
+
+def retention_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                            log_beta: jax.Array,
+                            segments: jax.Array | None = None) -> jax.Array:
+    """Retention-gated causal attention (paper Eq. 3).
+
+    attention logits: q_t . k_i / sqrt(dh) + (t - i) * log_beta_i   for i <= t
+    `segments` [B, T] optionally restricts attention to a block-diagonal
+    pattern (packed-episode training).
+    """
+    b, hq, t, dh = q.shape
+    k_e = expand_kv(k, hq)
+    v_e = expand_kv(v, hq)
+    lb_e = expand_kv(log_beta, hq)  # [B, Hq, T]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhtd,bhid->bhti", q, k_e) * scale
+    ti = jnp.arange(t)
+    dist = ti[:, None] - ti[None, :]                       # t - i
+    s = s + dist[None, None, :, :] * lb_e[:, :, None, :]   # decay bias
+    mask = (dist >= 0)[None]
+    if segments is not None:
+        mask = mask & (segments[:, :, None] == segments[:, None, :])
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhti,bhid->bhtd", p, v_e)
+
+
+def capacity_loss_ref(log_beta: jax.Array, m: float) -> jax.Array:
+    """Capacity loss (paper Eq. 5), mean over batch and kv heads.
+
+    L = (1/T) sum_t (1/t) max(0, sum_{i<=t} beta_i^{t-i} - M), t 1-indexed.
+    """
+    b, h, t = log_beta.shape
+    ti = jnp.arange(t)
+    dist = ti[:, None] - ti[None, :]
+    expo = dist[None, None] * log_beta[:, :, None, :]      # (t-i) log beta_i
+    # mask the exponent (not the value) so gradients stay NaN-free: for i > t
+    # the exponent would be a large positive number whose exp overflows.
+    expo = jnp.where((dist >= 0)[None, None], expo, NEG_INF)
+    s = jnp.exp(expo).sum(-1)                              # [B, H, T]
+    hinge = jnp.maximum(0.0, s - m) / (ti[None, None] + 1.0)
+    return hinge.mean(axis=-1).mean()
+
+
+def retention_matrix_ref(log_beta: jax.Array) -> jax.Array:
+    """beta_i^{t-i} lower-triangular matrix [..., T, T] (Fig. 4 top)."""
+    t = log_beta.shape[-1]
+    ti = jnp.arange(t)
+    dist = ti[:, None] - ti[None, :]
+    expo = jnp.where(dist >= 0, dist * log_beta[..., None, :], NEG_INF)
+    return jnp.exp(expo)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-query attention over M cache slots with a validity mask.
+
+    q     [B, Hq, dh]
+    k, v  [B, Hkv, M, dh]
+    valid [B, Hkv, M]  (1.0 = live slot, 0.0 = hole)
+    Returns (o [B, Hq, dh], probs [B, Hq, M]).
+    """
+    b, hq, dh = q.shape
+    k_e = expand_kv(k, hq)
+    v_e = expand_kv(v, hq)
+    m_e = expand_kv(valid, hq)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhd,bhmd->bhm", q, k_e) * scale
+    s = jnp.where(m_e > 0.5, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # a fully-invalid row would produce uniform garbage; zero it instead
+    any_valid = m_e.sum(-1, keepdims=True) > 0.5
+    p = jnp.where(any_valid, p, 0.0)
+    o = jnp.einsum("bhm,bhmd->bhd", p, v_e)
+    return o, p

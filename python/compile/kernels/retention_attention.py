@@ -1,0 +1,278 @@
+"""Pallas retention-gated flash attention (paper Eq. 3), forward + backward.
+
+The retention decay `(t - i) * log(beta_i)` is an additive bias on the
+attention logits, so the kernel is a standard two-pass online-softmax flash
+attention with one extra bias row streamed alongside K.  See DESIGN.md §3 for
+the TPU mapping (VMEM tiles via BlockSpec, MXU matmuls); here we run under
+``interpret=True`` so the same kernel lowers to plain HLO executable on the
+CPU PJRT plugin.
+
+Layout: heads are pre-expanded to the query-head count by the wrapper (GQA
+groups repeat their KV head), so kernels see
+  q, k, v   [N, T, dh]      with N = B * Hq
+  log_beta  [N, T]
+The custom-vjp wrapper sums GQA-group gradients back onto the KV heads.
+
+Backward follows the flash-attention-2 decomposition with one extra output:
+  dS = P * (dP - D),  dP = dO V^T,  D_t = sum_d dO_td O_td
+  dlog_beta_i = sum_t dS_ti * (t - i)        (the retention-gate gradient)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, lb_ref, o_ref, lse_ref, *, block_k: int):
+    """One (head, q-block) grid cell: online softmax over all k blocks."""
+    qb = q_ref[0]                      # [Bq, dh]
+    kfull = k_ref[0]                   # [T, dh]
+    vfull = v_ref[0]                   # [T, dh]
+    lbfull = lb_ref[0]                 # [T]
+    t_total, dh = kfull.shape
+    bq = qb.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, qb.dtype))
+
+    q_pos = pl.program_id(1) * bq + jnp.arange(bq)          # absolute t
+    n_kb = t_total // block_k
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kfull, j * block_k, block_k)
+        vb = jax.lax.dynamic_slice_in_dim(vfull, j * block_k, block_k)
+        lbb = jax.lax.dynamic_slice_in_dim(lbfull, j * block_k, block_k)
+        k_pos = j * block_k + jnp.arange(block_k)
+        dist = q_pos[:, None] - k_pos[None, :]               # t - i
+        s = (qb @ kb.T) * scale + dist * lbb[None, :]
+        s = jnp.where(dist >= 0, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ vb
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, qb.dtype)
+    l0 = jnp.zeros((bq,), qb.dtype)
+    acc0 = jnp.zeros((bq, dh), qb.dtype)
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[0] = acc_f / l_f[:, None]
+    lse_ref[0] = m_f + jnp.log(l_f)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, lb_ref, do_ref, lse_ref, dd_ref, dq_ref,
+               *, block_k: int):
+    """dq for one (head, q-block): dq_t = sum_i dS_ti k_i * scale."""
+    qb = q_ref[0]
+    kfull = k_ref[0]
+    vfull = v_ref[0]
+    lbfull = lb_ref[0]
+    dob = do_ref[0]
+    lseb = lse_ref[0]
+    ddb = dd_ref[0]                                          # D_t
+    t_total, dh = kfull.shape
+    bq = qb.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, qb.dtype))
+    q_pos = pl.program_id(1) * bq + jnp.arange(bq)
+    n_kb = t_total // block_k
+
+    def body(j, dq):
+        kb = jax.lax.dynamic_slice_in_dim(kfull, j * block_k, block_k)
+        vb = jax.lax.dynamic_slice_in_dim(vfull, j * block_k, block_k)
+        lbb = jax.lax.dynamic_slice_in_dim(lbfull, j * block_k, block_k)
+        k_pos = j * block_k + jnp.arange(block_k)
+        dist = q_pos[:, None] - k_pos[None, :]
+        s = (qb @ kb.T) * scale + dist * lbb[None, :]
+        s = jnp.where(dist >= 0, s, NEG_INF)
+        p = jnp.exp(s - lseb[:, None])
+        dp = dob @ vb.T
+        ds = p * (dp - ddb[:, None])
+        return dq + (ds @ kb) * scale
+
+    dq0 = jnp.zeros((bq, dh), qb.dtype)
+    dq_ref[0] = jax.lax.fori_loop(0, n_kb, body, dq0)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, lb_ref, do_ref, lse_ref, dd_ref,
+                dk_ref, dv_ref, dlb_ref, *, block_q: int):
+    """dk, dv, dlog_beta for one (head, k-block): loop over q blocks."""
+    kb = k_ref[0]                                            # [Bk, dh]
+    vb = v_ref[0]
+    lbb = lb_ref[0]                                          # [Bk]
+    qfull = q_ref[0]                                         # [T, dh]
+    dofull = do_ref[0]
+    lsefull = lse_ref[0]
+    ddfull = dd_ref[0]
+    t_total, dh = qfull.shape
+    bk = kb.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, kb.dtype))
+    k_pos = pl.program_id(1) * bk + jnp.arange(bk)
+    n_qb = t_total // block_q
+
+    def body(j, carry):
+        dk, dv, dlb = carry
+        qb = jax.lax.dynamic_slice_in_dim(qfull, j * block_q, block_q)
+        dob = jax.lax.dynamic_slice_in_dim(dofull, j * block_q, block_q)
+        lseb = jax.lax.dynamic_slice_in_dim(lsefull, j * block_q, block_q)
+        ddb = jax.lax.dynamic_slice_in_dim(ddfull, j * block_q, block_q)
+        q_pos = j * block_q + jnp.arange(block_q)
+        dist = q_pos[:, None] - k_pos[None, :]               # [Bq, Bk]
+        s = (qb @ kb.T) * scale + dist * lbb[None, :]
+        s = jnp.where(dist >= 0, s, NEG_INF)
+        p = jnp.exp(s - lseb[:, None])
+        dp = dob @ vb.T
+        ds = p * (dp - ddb[:, None])
+        dv = dv + p.T @ dob
+        dk = dk + (ds.T @ qb) * scale
+        dlb = dlb + (ds * dist).sum(axis=0)
+        return dk, dv, dlb
+
+    dk0 = jnp.zeros((bk, dh), kb.dtype)
+    dv0 = jnp.zeros((bk, dh), kb.dtype)
+    dlb0 = jnp.zeros((bk,), kb.dtype)
+    dk_f, dv_f, dlb_f = jax.lax.fori_loop(0, n_qb, body, (dk0, dv0, dlb0))
+    dk_ref[0] = dk_f
+    dv_ref[0] = dv_f
+    dlb_ref[0] = dlb_f
+
+
+def _fwd_pallas(q, k, v, lb, block_q, block_k, interpret):
+    n, t, dh = q.shape
+    grid = (n, t // block_q)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((n, t), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, lb)
+
+
+def _bwd_pallas(q, k, v, lb, o, lse, do, block_q, block_k, interpret):
+    n, t, dh = q.shape
+    dd = jnp.sum(do * o, axis=-1)                            # D_t  [N, T]
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_k=block_k),
+        grid=(n, t // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, lb, do, lse, dd)
+
+    dk, dv, dlb = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=block_q),
+        grid=(n, t // block_k),
+        in_specs=[
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((n, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((n, t), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, lb, do, lse, dd)
+    return dq, dk, dv, dlb
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def retention_attention(q, k, v, log_beta,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = True):
+    """Retention-gated causal flash attention with GQA.
+
+    q [B,Hq,T,dh], k/v [B,Hkv,T,dh], log_beta [B,Hkv,T] -> o [B,Hq,T,dh]
+    Matches ``ref.retention_attention_ref`` to float32 tolerance.
+    """
+    o, _ = _ra_fwd(q, k, v, log_beta, block_q, block_k, interpret)
+    return o
+
+
+def _fit_block(block: int, t: int) -> int:
+    """Largest block size <= `block` that divides t (grid must tile exactly)."""
+    b = min(block, t)
+    while t % b:
+        b -= 1
+    return b
+
+
+def _flatten_heads(q, k, v, lb):
+    b, hq, t, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k_e = jnp.repeat(k, group, axis=1).reshape(b * hq, t, dh)
+    v_e = jnp.repeat(v, group, axis=1).reshape(b * hq, t, dh)
+    lb_e = jnp.repeat(lb, group, axis=1).reshape(b * hq, t)
+    return q.reshape(b * hq, t, dh), k_e, v_e, lb_e
+
+
+def _ra_fwd(q, k, v, log_beta, block_q, block_k, interpret):
+    b, hq, t, dh = q.shape
+    bq = _fit_block(block_q, t)
+    bk = _fit_block(block_k, t)
+    qf, kf, vf, lbf = _flatten_heads(q, k, v, log_beta)
+    o, lse = _fwd_pallas(qf, kf, vf, lbf, bq, bk, interpret)
+    res = (q, k, v, log_beta, o, lse)
+    return o.reshape(b, hq, t, dh), res
+
+
+def _ra_bwd(block_q, block_k, interpret, res, do):
+    q, k, v, log_beta, o, lse = res
+    b, hq, t, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    bq = _fit_block(block_q, t)
+    bk = _fit_block(block_k, t)
+    qf, kf, vf, lbf = _flatten_heads(q, k, v, log_beta)
+    dof = do.reshape(b * hq, t, dh)
+    dq, dk_e, dv_e, dlb_e = _bwd_pallas(qf, kf, vf, lbf, o, lse, dof,
+                                        bq, bk, interpret)
+    # fold GQA-group gradients back onto the kv heads
+    dk = dk_e.reshape(b, hkv, group, t, dh).sum(axis=2)
+    dv = dv_e.reshape(b, hkv, group, t, dh).sum(axis=2)
+    dlb = dlb_e.reshape(b, hkv, group, t).sum(axis=2)
+    return dq.reshape(b, hq, t, dh), dk, dv, dlb
+
+
+retention_attention.defvjp(_ra_fwd, _ra_bwd)

@@ -1,0 +1,472 @@
+"""Layer-2: the `trimkv-tiny` model — a miniature Qwen3-style decoder.
+
+Architecture (matches the Qwen3 family the paper uses, scaled down):
+  RMSNorm -> GQA attention (RoPE, Hq query heads sharing Hkv KV heads)
+  RMSNorm -> SwiGLU MLP, untied LM head.
+
+Three execution modes share the same weights:
+  forward_full    standard causal attention — the frozen teacher and the
+                  base-model training graph
+  forward_gated   retention-gated attention (paper Eq. 3) via the L1 Pallas
+                  kernel (or its jnp oracle) — the gate-training graph
+  decode_fn /     the AOT serving graphs the rust engine executes: explicit
+  prefill_fn      KV slot caches, in-graph scatter of new tokens into
+                  rust-chosen slots, validity-masked attention, retention
+                  gate scores as an output.  Weights are runtime inputs so
+                  one HLO artifact serves every gate-ablation variant.
+
+The retention gate g is a single-hidden-layer MLP (paper §5.1) applied to the
+post-norm layer input; its bias is initialized large so training starts from
+"no forgetting" (paper Fig. 9 ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import decode_attention, retention_attention
+from .kernels.ref import (
+    decode_attention_ref,
+    expand_kv,
+    retention_attention_ref,
+    NEG_INF,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d: int = 128          # model width (sized for the single-core testbed)
+    layers: int = 4
+    hq: int = 4           # query heads
+    hkv: int = 2          # kv heads (GQA group = hq // hkv)
+    dh: int = 32          # head dim
+    ffn: int = 256        # SwiGLU hidden
+    gate_hidden: int = 48  # retention-gate MLP hidden (paper: 512 @ 4B scale)
+    gate_bias_init: float = 8.0  # paper: 18.0 @ 128K ctx; scaled to ctx 2K
+    rope_theta: float = 10000.0
+
+    @property
+    def group(self) -> int:
+        return self.hq // self.hkv
+
+
+CONFIG = ModelConfig()
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Base-model parameters as a flat {name: array} dict (fixed iteration
+    order = insertion order; meta.json and weights.bin rely on it)."""
+    p: dict[str, jax.Array] = {}
+    k_iter = iter(jax.random.split(key, 8 * cfg.layers + 3))
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+    p["embed"] = nrm(next(k_iter), (cfg.vocab, cfg.d), 0.02)
+    for l in range(cfg.layers):
+        s = 1.0 / math.sqrt(cfg.d)
+        p[f"l{l}.ln1"] = jnp.ones((cfg.d,), jnp.float32)
+        p[f"l{l}.wq"] = nrm(next(k_iter), (cfg.d, cfg.hq * cfg.dh), s)
+        p[f"l{l}.wk"] = nrm(next(k_iter), (cfg.d, cfg.hkv * cfg.dh), s)
+        p[f"l{l}.wv"] = nrm(next(k_iter), (cfg.d, cfg.hkv * cfg.dh), s)
+        p[f"l{l}.wo"] = nrm(next(k_iter), (cfg.hq * cfg.dh, cfg.d), s)
+        p[f"l{l}.ln2"] = jnp.ones((cfg.d,), jnp.float32)
+        p[f"l{l}.wg"] = nrm(next(k_iter), (cfg.d, cfg.ffn), s)
+        p[f"l{l}.wu"] = nrm(next(k_iter), (cfg.d, cfg.ffn), s)
+        p[f"l{l}.wd"] = nrm(next(k_iter), (cfg.ffn, cfg.d), 1.0 / math.sqrt(cfg.ffn))
+    p["lnf"] = jnp.ones((cfg.d,), jnp.float32)
+    p["lm_head"] = nrm(next(k_iter), (cfg.d, cfg.vocab), 1.0 / math.sqrt(cfg.d))
+    return p
+
+
+def init_gates(cfg: ModelConfig, key: jax.Array, *, linear: bool = False,
+               bias: float | None = None) -> dict:
+    """Retention-gate parameters.  `linear=True` ablates the MLP (Fig. 9)."""
+    g: dict[str, jax.Array] = {}
+    b0 = cfg.gate_bias_init if bias is None else bias
+    keys = jax.random.split(key, 2 * cfg.layers)
+    for l in range(cfg.layers):
+        s = 1.0 / math.sqrt(cfg.d)
+        if linear:
+            g[f"g{l}.w1"] = (jax.random.normal(keys[2 * l], (cfg.d, cfg.hkv)) * s
+                             ).astype(jnp.float32)
+            g[f"g{l}.b1"] = jnp.full((cfg.hkv,), b0, jnp.float32)
+        else:
+            g[f"g{l}.w1"] = (jax.random.normal(keys[2 * l], (cfg.d, cfg.gate_hidden))
+                             * s).astype(jnp.float32)
+            g[f"g{l}.b1"] = jnp.zeros((cfg.gate_hidden,), jnp.float32)
+            g[f"g{l}.w2"] = (jax.random.normal(keys[2 * l + 1],
+                                               (cfg.gate_hidden, cfg.hkv))
+                             * (1.0 / math.sqrt(cfg.gate_hidden))).astype(jnp.float32)
+            g[f"g{l}.b2"] = jnp.full((cfg.hkv,), b0, jnp.float32)
+    return g
+
+
+def gate_log_beta(gates: dict, l: int, h: jax.Array) -> jax.Array:
+    """log beta = log sigmoid(g(h)) for layer l; h [..., d] -> [..., Hkv].
+
+    Computed as -softplus(-z) for numerical stability (beta -> 1 means
+    log_beta -> 0-)."""
+    w1, b1 = gates[f"g{l}.w1"], gates[f"g{l}.b1"]
+    z = h @ w1 + b1
+    if f"g{l}.w2" in gates:
+        z = jax.nn.silu(z) @ gates[f"g{l}.w2"] + gates[f"g{l}.b2"]
+    return -jax.nn.softplus(-z)
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x [..., T, H, dh] or [..., H, dh]; pos broadcastable
+    to x's leading time axes."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over the head axis, which sits between pos axes and dh
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(params: dict, cfg: ModelConfig, l: int, h: jax.Array):
+    """h [..., d] -> q [..., Hq, dh], k/v [..., Hkv, dh]."""
+    lead = h.shape[:-1]
+    q = (h @ params[f"l{l}.wq"]).reshape(*lead, cfg.hq, cfg.dh)
+    k = (h @ params[f"l{l}.wk"]).reshape(*lead, cfg.hkv, cfg.dh)
+    v = (h @ params[f"l{l}.wv"]).reshape(*lead, cfg.hkv, cfg.dh)
+    return q, k, v
+
+
+def _mlp(params: dict, l: int, x: jax.Array) -> jax.Array:
+    h = rmsnorm(x, params[f"l{l}.ln2"])
+    return x + (jax.nn.silu(h @ params[f"l{l}.wg"]) * (h @ params[f"l{l}.wu"])
+                ) @ params[f"l{l}.wd"]
+
+
+# --------------------------------------------------------------------------
+# training-time forward passes
+# --------------------------------------------------------------------------
+def forward_full(params: dict, tokens: jax.Array, cfg: ModelConfig = CONFIG,
+                 return_attn: bool = False, segments: jax.Array | None = None):
+    """Standard causal forward. tokens [B, T] -> logits [B, T, V].
+
+    `segments` [B, T] (optional) makes attention block-diagonal across packed
+    training episodes.  With return_attn=True also returns per-layer attention
+    probabilities [L, B, Hkv, T, T] (mean over each GQA group) — used as the
+    regression target for the LocRet baseline's retaining heads."""
+    b, t = tokens.shape
+    pos = jnp.arange(t)[None, :]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    scale = 1.0 / math.sqrt(cfg.dh)
+    causal = (jnp.arange(t)[:, None] >= jnp.arange(t)[None, :])[None]
+    if segments is not None:
+        causal = causal & (segments[:, :, None] == segments[:, None, :])
+    attns = []
+    for l in range(cfg.layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(params, cfg, l, h)                  # [B,T,H,dh]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        q = q.transpose(0, 2, 1, 3)                        # [B,Hq,T,dh]
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        k_e, v_e = expand_kv(k, cfg.hq), expand_kv(v, cfg.hq)
+        s = jnp.einsum("bhtd,bhid->bhti", q, k_e) * scale
+        s = jnp.where(causal[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        if return_attn:
+            attns.append(p.reshape(b, cfg.hkv, cfg.group, t, t).mean(axis=2))
+        o = jnp.einsum("bhti,bhid->bhtd", p, v_e)
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.hq * cfg.dh)
+        x = x + o @ params[f"l{l}.wo"]
+        x = _mlp(params, l, x)
+    logits = rmsnorm(x, params["lnf"]) @ params["lm_head"]
+    if return_attn:
+        return logits, jnp.stack(attns)
+    return logits
+
+
+def forward_gated(params: dict, gates: dict, tokens: jax.Array,
+                  cfg: ModelConfig = CONFIG, impl: str = "ref",
+                  segments: jax.Array | None = None):
+    """Retention-gated forward (paper Eq. 3). Returns (logits, log_betas)
+    with log_betas [L, B, Hkv, T].  impl: "ref" (materialized oracle — fast
+    under jit on CPU for small T; supports `segments`) or "pallas" (the L1
+    flash kernel)."""
+    b, t = tokens.shape
+    pos = jnp.arange(t)[None, :]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if impl == "ref":
+        def attn(q, k, v, lb):
+            return retention_attention_ref(q, k, v, lb, segments=segments)
+    else:
+        assert segments is None, "pallas kernel path has no segment support"
+        attn = retention_attention
+    log_betas = []
+    for l in range(cfg.layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(params, cfg, l, h)
+        lb = gate_log_beta(gates, l, h)                    # [B,T,Hkv]
+        lb = lb.transpose(0, 2, 1)                         # [B,Hkv,T]
+        log_betas.append(lb)
+        q = rope(q, pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope(k, pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        o = attn(q, k, v, lb)                              # [B,Hq,T,dh]
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.hq * cfg.dh)
+        x = x + o @ params[f"l{l}.wo"]
+        x = _mlp(params, l, x)
+    logits = rmsnorm(x, params["lnf"]) @ params["lm_head"]
+    return logits, jnp.stack(log_betas)
+
+
+# --------------------------------------------------------------------------
+# serving graphs (AOT-exported; executed by the rust engine)
+# --------------------------------------------------------------------------
+def _scatter_slot(cache: jax.Array, new: jax.Array, slot: jax.Array,
+                  m: int) -> jax.Array:
+    """cache [B,H,M,dh], new [B,H,dh], slot [B,H] -> cache with new written."""
+    oh = jax.nn.one_hot(slot, m, dtype=cache.dtype)        # [B,H,M]
+    return cache * (1.0 - oh[..., None]) + new[:, :, None, :] * oh[..., None]
+
+
+def decode_fn(params: dict, gates: dict, token: jax.Array, pos: jax.Array,
+              kc: jax.Array, vc: jax.Array, valid: jax.Array,
+              write_slot: jax.Array, inject_flag: jax.Array,
+              inject_slot: jax.Array, inject_k: jax.Array,
+              inject_v: jax.Array, cfg: ModelConfig = CONFIG,
+              attn_impl: str = "pallas"):
+    """One decode step over M cache slots (rust hot path).
+
+    token [B] i32          next input token per lane
+    pos   [B] i32          absolute position of that token
+    kc/vc [L,B,Hkv,M,dh]   device-resident KV slot caches
+    valid [L,B,Hkv,M] f32  1.0 = live slot (device-resident)
+    write_slot [L,B,Hkv]   slot each layer/head writes the new token into
+                           (rust's eviction decision: the previous victim)
+    inject_*               optional KV re-admission (retrieval baseline):
+                           where inject_flag==1, (inject_k, inject_v) are
+                           written into inject_slot before attention.
+
+    Returns dict: logits [B,V], kc/vc/valid (updated), log_beta [L,B,Hkv],
+    attn [L,B,Hkv,M] (group-mean probs), k_new [L,B,Hkv,dh].
+    """
+    b = token.shape[0]
+    m = kc.shape[3]
+    x = jnp.take(params["embed"], token, axis=0)           # [B,d]
+    kc_out, vc_out, valid_out = [], [], []
+    log_betas, attns, k_news, v_news = [], [], [], []
+    for l in range(cfg.layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k_new, v_new = _qkv(params, cfg, l, h)          # [B,H,dh]
+        lb = gate_log_beta(gates, l, h)                    # [B,Hkv]
+        # lift to [B,1,H,dh] so rope's time axis broadcasts correctly
+        q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k_new = rope(k_new[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+        kl, vl, val = kc[l], vc[l], valid[l]
+        # retrieval re-admission first, then the new token's write
+        ih = jax.nn.one_hot(inject_slot[l], m, dtype=kl.dtype) \
+            * inject_flag[l][..., None]
+        kl = kl * (1.0 - ih[..., None]) + inject_k[l][:, :, None, :] * ih[..., None]
+        vl = vl * (1.0 - ih[..., None]) + inject_v[l][:, :, None, :] * ih[..., None]
+        val = jnp.maximum(val, ih)
+        kl = _scatter_slot(kl, k_new, write_slot[l], m)
+        vl = _scatter_slot(vl, v_new, write_slot[l], m)
+        oh = jax.nn.one_hot(write_slot[l], m, dtype=val.dtype)
+        val = jnp.maximum(val, oh)
+
+        if attn_impl == "pallas":
+            o, probs = decode_attention(q, kl, vl, val)
+        else:
+            o, probs = decode_attention_ref(q, kl, vl, val)
+        attns.append(probs.reshape(b, cfg.hkv, cfg.group, m).mean(axis=2))
+        x = x + o.reshape(b, cfg.hq * cfg.dh) @ params[f"l{l}.wo"]
+        x = _mlp(params, l, x)
+        kc_out.append(kl)
+        vc_out.append(vl)
+        valid_out.append(val)
+        log_betas.append(lb)
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = rmsnorm(x, params["lnf"]) @ params["lm_head"]
+    return {
+        "logits": logits,
+        "kc": jnp.stack(kc_out),
+        "vc": jnp.stack(vc_out),
+        "valid": jnp.stack(valid_out),
+        "log_beta": jnp.stack(log_betas),
+        "attn": jnp.stack(attns),
+        "k_new": jnp.stack(k_news),
+        "v_new": jnp.stack(v_news),
+    }
+
+
+def prefill_fn(params: dict, gates: dict, tokens: jax.Array, pos: jax.Array,
+               in_mask: jax.Array, kc: jax.Array, vc: jax.Array,
+               valid: jax.Array, write_slots: jax.Array,
+               cfg: ModelConfig = CONFIG):
+    """Prefill one chunk of C tokens against the resident cache.
+
+    tokens [B,C] i32, pos [B,C] i32, in_mask [B,C] f32 (0 = padding)
+    kc/vc [L,B,Hkv,M,dh], valid [L,B,Hkv,M]
+    write_slots [L,B,Hkv,C] i32  slot for each chunk position (rust points
+                                 padding at a reserved trash slot)
+
+    Chunk queries attend to live resident slots plus causally to earlier
+    chunk positions.  Returns dict: logits [B,C,V], kc/vc/valid (updated),
+    log_beta [L,B,Hkv,C], attn_slots [L,B,Hkv,M] (attention mass received by
+    each resident slot, summed over chunk queries — H2O/SnapKV signal),
+    attn_chunk [L,B,Hkv,C] (mass received by each chunk position),
+    k_chunk [L,B,Hkv,C,dh].
+    """
+    b, c = tokens.shape
+    m = kc.shape[3]
+    scale = 1.0 / math.sqrt(cfg.dh)
+    x = jnp.take(params["embed"], tokens, axis=0)          # [B,C,d]
+    causal = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+    kc_out, vc_out, valid_out = [], [], []
+    log_betas, attn_slots, attn_chunks, k_chunks, v_chunks = [], [], [], [], []
+    for l in range(cfg.layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k_new, v_new = _qkv(params, cfg, l, h)          # [B,C,H,dh]
+        lb = gate_log_beta(gates, l, h)                    # [B,C,Hkv]
+        q = rope(q, pos, cfg.rope_theta).transpose(0, 2, 1, 3)      # [B,Hq,C,dh]
+        k_new = rope(k_new, pos, cfg.rope_theta)                    # [B,C,Hkv,dh]
+        k_t = k_new.transpose(0, 2, 1, 3)                           # [B,Hkv,C,dh]
+        v_t = v_new.transpose(0, 2, 1, 3)
+
+        kl, vl, val = kc[l], vc[l], valid[l]
+        # attention: resident slots ++ intra-chunk causal
+        k_all = jnp.concatenate([expand_kv(kl, cfg.hq),
+                                 expand_kv(k_t, cfg.hq)], axis=2)   # [B,Hq,M+C,dh]
+        v_all = jnp.concatenate([expand_kv(vl, cfg.hq),
+                                 expand_kv(v_t, cfg.hq)], axis=2)
+        s = jnp.einsum("bhcd,bhkd->bhck", q, k_all) * scale
+        mask_slots = expand_kv(val, cfg.hq)[:, :, None, :] > 0.5    # [B,Hq,1,M]
+        mask_chunk = (causal[None, None] & (in_mask[:, None, None, :] > 0.5))
+        mask_chunk = jnp.broadcast_to(mask_chunk, (b, cfg.hq, c, c))
+        mask = jnp.concatenate(
+            [jnp.broadcast_to(mask_slots, (b, cfg.hq, c, m)), mask_chunk], axis=3)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # a row with no live slot and first position still has itself; padding
+        # rows attend to themselves only — harmless, they are never read.
+        o = jnp.einsum("bhck,bhkd->bhcd", p, v_all)
+        o = o.transpose(0, 2, 1, 3).reshape(b, c, cfg.hq * cfg.dh)
+        x = x + o @ params[f"l{l}.wo"]
+        x = _mlp(params, l, x)
+
+        # aggregate attention received (group-mean over q heads, masked sum
+        # over real chunk queries)
+        pg = p.reshape(b, cfg.hkv, cfg.group, c, m + c).mean(axis=2)
+        wq_mask = in_mask[:, None, :, None]                 # [B,1,C,1]
+        received = (pg * wq_mask).sum(axis=2)               # [B,Hkv,M+C]
+        attn_slots.append(received[:, :, :m])
+        attn_chunks.append(received[:, :, m:])
+
+        # scatter chunk KV into rust-assigned slots
+        oh = jax.nn.one_hot(write_slots[l], m, dtype=kl.dtype)      # [B,Hkv,C,M]
+        keep = jnp.maximum(0.0, 1.0 - oh.sum(axis=2))               # clobbered?
+        kl = kl * keep[..., None] + jnp.einsum("bhcm,bhcd->bhmd", oh, k_t)
+        vl = vl * keep[..., None] + jnp.einsum("bhcm,bhcd->bhmd", oh, v_t)
+        live = oh * in_mask[:, None, :, None]               # pads never go live
+        val = jnp.maximum(val * keep, live.sum(axis=2).clip(0.0, 1.0))
+
+        kc_out.append(kl)
+        vc_out.append(vl)
+        valid_out.append(val)
+        log_betas.append(lb.transpose(0, 2, 1))
+        k_chunks.append(k_t)
+        v_chunks.append(v_t)
+    logits = rmsnorm(x, params["lnf"]) @ params["lm_head"]
+    return {
+        "logits": logits,
+        "kc": jnp.stack(kc_out),
+        "vc": jnp.stack(vc_out),
+        "valid": jnp.stack(valid_out),
+        "log_beta": jnp.stack(log_betas),
+        "attn_slots": jnp.stack(attn_slots),
+        "attn_chunk": jnp.stack(attn_chunks),
+        "k_chunk": jnp.stack(k_chunks),
+        "v_chunk": jnp.stack(v_chunks),
+    }
+
+
+# --------------------------------------------------------------------------
+# weight (de)serialization — flat order contract shared with rust
+# --------------------------------------------------------------------------
+def param_names(cfg: ModelConfig) -> list[str]:
+    names = ["embed"]
+    for l in range(cfg.layers):
+        names += [f"l{l}.{n}" for n in
+                  ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")]
+    names += ["lnf", "lm_head"]
+    return names
+
+
+def gate_names(cfg: ModelConfig, linear: bool = False) -> list[str]:
+    out = []
+    for l in range(cfg.layers):
+        out += [f"g{l}.w1", f"g{l}.b1"]
+        if not linear:
+            out += [f"g{l}.w2", f"g{l}.b2"]
+    return out
+
+
+def save_weights_bin(path: str, arrays: dict[str, np.ndarray]) -> None:
+    """trimkv weights.bin format (little-endian):
+    magic 'TKVW' u32 | n u32 | per array: name_len u32, name bytes,
+    ndim u32, dims u32*, f32 data."""
+    import struct
+    with open(path, "wb") as f:
+        f.write(b"TKVW")
+        f.write(struct.pack("<I", len(arrays)))
+        for name, arr in arrays.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.tobytes())
+
+
+def load_weights_bin(path: str) -> dict[str, np.ndarray]:
+    import struct
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"TKVW", "bad magic"
+    off = 4
+    (n,) = struct.unpack_from("<I", data, off); off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<I", data, off); off += 4
+        name = data[off:off + nl].decode(); off += nl
+        (nd,) = struct.unpack_from("<I", data, off); off += 4
+        dims = struct.unpack_from(f"<{nd}I", data, off); off += 4 * nd
+        cnt = int(np.prod(dims)) if nd else 1
+        arr = np.frombuffer(data, dtype="<f4", count=cnt, offset=off).reshape(dims)
+        off += 4 * cnt
+        out[name] = arr
+    return out

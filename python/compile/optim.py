@@ -1,0 +1,38 @@
+"""Minimal Adam + schedules (self-contained; optax is not assumed present)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, *, b1=0.9, b2=0.99, eps=1e-8,
+                weight_decay=0.0):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        return p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps) - lr * weight_decay * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+def cosine_lr(step: int, base: float, total: int, warmup: int = 50) -> float:
+    if step < warmup:
+        return base * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return base * 0.5 * (1 + math.cos(math.pi * min(1.0, frac)))

@@ -1,0 +1,374 @@
+"""Synthetic task generators — the training corpus for the base model and gates.
+
+Each generator emits a full token sequence plus per-token loss weights and
+the answer span.  The grammar is tuned so the lookup circuit the tasks need
+is the classic induction pattern (… A B … A -> B): every value token
+immediately follows its key token, and episodes carry several query/answer
+pairs so the supervision is dense enough for the circuit to emerge at this
+model scale (see DESIGN.md §2).
+
+The same grammar is re-implemented in rust/src/workload/ for serving-time
+evaluation; the shared contract is the vocabulary layout in `vocab.py`
+(exported to artifacts/vocab.json) plus the golden episodes exported by
+aot.py which the rust side must parse and grade.
+
+Task families (paper benchmark analogs, see DESIGN.md §2):
+  recall        GSM8K/MATH analog: key-value facts, filler, queries -> values
+  chain         AIME analog: multi-hop pointer chase with chain-of-thought
+  copy          LongProc copy/transform analog: replay a symbol span
+  proc_table    LongProc HTML->TSV analog: tagged rows -> ordered extraction
+  countdown     LongProc Countdown analog: digit arithmetic trace
+  manyshot      SCBench ICL.ManyShot analog: many (x y) shots, then query
+  find_minmax   SCBench Math.Find analog: min/max over a long digit list
+  multi_session LongMemEval analog: sessions of facts, question about one
+  niah          SCBench Retr.KV analog: one needle pair in a long haystack
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable
+
+from . import vocab as V
+
+ANSWER_WEIGHT = 10.0
+STRUCT_WEIGHT = 0.1
+
+# keys/values are drawn from a reduced symbol pool: dense enough supervision
+# per symbol for the tiny model while keeping the task non-trivial
+SYM_POOL = 64
+
+
+@dataclass
+class Episode:
+    task: str
+    tokens: list[int]          # full sequence incl. BOS .. EOS
+    answer_start: int          # index of the first graded answer token
+    answer: list[int]          # the graded answer tokens (excl. EOS)
+    weights: list[float]       # per-token NTP loss weight (len == tokens)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def prompt(self) -> list[int]:
+        """Tokens the serving side feeds as the request prompt."""
+        return self.tokens[: self.prompt_end]
+
+    @property
+    def prompt_end(self) -> int:
+        return self.meta.get("prompt_end", self.answer_start)
+
+
+def _mk(task: str, toks: list[int], ans_start: int, ans: list[int],
+        meta: dict | None = None, extra_answer_spans=()) -> Episode:
+    w = [STRUCT_WEIGHT] * len(toks)
+    for i in range(ans_start, len(toks)):
+        w[i] = ANSWER_WEIGHT
+    for lo, hi in extra_answer_spans:
+        for i in range(lo, hi):
+            w[i] = ANSWER_WEIGHT
+    return Episode(task, toks, ans_start, ans, w, meta or {})
+
+
+def _filler(rng: random.Random, n: int) -> list[int]:
+    return [V.word(rng.randrange(V.NUM_WORDS)) for _ in range(n)]
+
+
+def _sym(rng: random.Random) -> int:
+    return rng.randrange(SYM_POOL)
+
+
+# --------------------------------------------------------------------------
+# recall: <bos> (<key> k v  filler*)xN ... (<query> k v)xQ <eos>
+# Values sit immediately after their key; the last query is the graded one.
+# --------------------------------------------------------------------------
+def gen_recall(rng: random.Random, n_pairs: int = 8, filler: int = 5,
+               n_queries: int = 3) -> Episode:
+    keys = rng.sample(range(SYM_POOL), n_pairs)
+    vals = [_sym(rng) for _ in keys]
+    kv = dict(zip(keys, vals))
+    toks = [V.BOS]
+    for k, v in kv.items():
+        toks += [V.KEY, V.sym(k), V.sym(v)]
+        toks += _filler(rng, rng.randrange(filler + 1))
+    spans = []
+    # queries hit *distinct* keys: with repeated keys the model can learn a
+    # copy-the-previous-answer shortcut instead of the lookup circuit
+    qs = rng.sample(keys, min(n_queries, len(keys)))
+    for q in qs[:-1]:
+        toks += [V.QUERY, V.sym(q)]
+        spans.append((len(toks), len(toks) + 1))
+        toks += [V.sym(kv[q])]
+    toks += [V.QUERY, V.sym(qs[-1])]
+    ans_start = len(toks)
+    toks += [V.sym(kv[qs[-1]]), V.EOS]
+    return _mk("recall", toks, ans_start, [V.sym(kv[qs[-1]])],
+               {"n_pairs": n_pairs, "query_key": qs[-1]}, spans)
+
+
+# --------------------------------------------------------------------------
+# copy: <bos> s1 .. sn <sep> s1 .. sn <eos>   (LongProc copy analog; also
+# the precursor task for the induction circuit)
+# --------------------------------------------------------------------------
+def gen_copy(rng: random.Random, n: int = 6) -> Episode:
+    syms = [_sym(rng) for _ in range(n)]
+    toks = [V.BOS] + [V.sym(s) for s in syms] + [V.SEP]
+    ans_start = len(toks)
+    toks += [V.sym(s) for s in syms] + [V.EOS]
+    return _mk("copy", toks, ans_start, toks[ans_start:-1], {"n": n})
+
+
+# --------------------------------------------------------------------------
+# chain: pointer chase k0 -> k1 -> ... -> k_h, emitted hop by hop between
+# <think> ... </think>, then the final answer after <ans>.
+# --------------------------------------------------------------------------
+def gen_chain(rng: random.Random, n_pairs: int = 8, hops: int = 3,
+              filler: int = 3) -> Episode:
+    syms = rng.sample(range(SYM_POOL), n_pairs + hops + 1)
+    chain = syms[: hops + 1]
+    distract = syms[hops + 1:]
+    pairs = [(chain[i], chain[i + 1]) for i in range(hops)]
+    for d in distract:
+        pairs.append((d, rng.choice(distract)))
+    rng.shuffle(pairs)
+    toks = [V.BOS]
+    for a, b in pairs:
+        toks += [V.KEY, V.sym(a), V.sym(b)]
+        toks += _filler(rng, rng.randrange(filler + 1))
+    toks += [V.QUERY, V.sym(chain[0]), V.HOP, V.digit(hops), V.THINK]
+    prompt_end = len(toks)
+    think_start = len(toks)
+    # chain-of-thought: re-query each hop explicitly so the lookup circuit
+    # is reused hop by hop: <query> k_i k_{i+1}
+    for i in range(hops):
+        toks += [V.QUERY, V.sym(chain[i]), V.sym(chain[i + 1])]
+    toks += [V.END_THINK, V.ANS]
+    ans_start = len(toks)
+    toks += [V.sym(chain[hops]), V.EOS]
+    ep = _mk("chain", toks, ans_start, [V.sym(chain[hops])],
+             {"hops": hops, "prompt_end": prompt_end,
+              "think_start": think_start})
+    for i in range(think_start, ans_start):
+        ep.weights[i] = ANSWER_WEIGHT
+    return ep
+
+
+# --------------------------------------------------------------------------
+# proc_table: <row> tag v1 v2 ... <exec> tags <ans> -> emit requested rows.
+# --------------------------------------------------------------------------
+def gen_proc_table(rng: random.Random, n_rows: int = 6, row_width: int = 2,
+                   n_extract: int = 2) -> Episode:
+    tags = rng.sample(range(SYM_POOL), n_rows)
+    rows = {t: [_sym(rng) for _ in range(row_width)] for t in tags}
+    toks = [V.BOS]
+    for t in tags:
+        toks += [V.ROW, V.sym(t)] + [V.sym(v) for v in rows[t]]
+        toks += _filler(rng, rng.randrange(3))
+    want = rng.sample(tags, n_extract)
+    toks += [V.EXEC]
+    for t in want:
+        toks += [V.sym(t)]
+    toks += [V.ANS]
+    ans_start = len(toks)
+    ans: list[int] = []
+    for t in want:
+        ans += [V.ROW, V.sym(t)] + [V.sym(v) for v in rows[t]]
+    toks += ans + [V.EOS]
+    return _mk("proc_table", toks, ans_start, ans,
+               {"n_rows": n_rows, "n_extract": n_extract})
+
+
+# --------------------------------------------------------------------------
+# countdown: start digit + ops; model emits the full evaluation trace.
+# --------------------------------------------------------------------------
+def gen_countdown(rng: random.Random, n_steps: int = 4) -> Episode:
+    start = rng.randrange(10)
+    cur = start
+    ops: list[tuple[int, int]] = []
+    trace: list[int] = []
+    for _ in range(n_steps):
+        op = rng.choice([V.PLUS, V.MINUS])
+        operand = rng.randrange(1, 10)
+        cur = (cur + operand) % 10 if op == V.PLUS else (cur - operand) % 10
+        ops.append((op, operand))
+        trace += [op, V.digit(operand), V.EQUALS, V.digit(cur)]
+    toks = [V.BOS, V.COUNT, V.digit(start), V.SEP]
+    for op, operand in ops:
+        toks += [op, V.digit(operand)]
+    toks += [V.THINK]
+    prompt_end = len(toks)
+    toks += trace + [V.END_THINK, V.ANS]
+    ans_start = len(toks)
+    toks += [V.digit(cur), V.EOS]
+    ep = _mk("countdown", toks, ans_start, [V.digit(cur)],
+             {"prompt_end": prompt_end, "n_steps": n_steps})
+    for i in range(prompt_end, ans_start):
+        ep.weights[i] = ANSWER_WEIGHT
+    return ep
+
+
+# --------------------------------------------------------------------------
+# manyshot: repeated (x y) demonstrations of a fixed mapping, then queries.
+# --------------------------------------------------------------------------
+def gen_manyshot(rng: random.Random, domain: int = 4, n_shots: int = 16) -> Episode:
+    dom = rng.sample(range(SYM_POOL), domain)
+    f = {d: _sym(rng) for d in dom}
+    toks = [V.BOS]
+    for _ in range(n_shots):
+        d = rng.choice(dom)
+        toks += [V.SHOT, V.sym(d), V.sym(f[d])]
+    q = rng.choice(dom)
+    toks += [V.QUERY, V.sym(q)]
+    ans_start = len(toks)
+    toks += [V.sym(f[q]), V.EOS]
+    return _mk("manyshot", toks, ans_start, [V.sym(f[q])],
+               {"domain": domain, "n_shots": n_shots})
+
+
+# --------------------------------------------------------------------------
+# find_minmax: long digit list; find min or max.
+# --------------------------------------------------------------------------
+def gen_find_minmax(rng: random.Random, n: int = 32) -> Episode:
+    xs = [rng.randrange(10) for _ in range(n)]
+    want_max = rng.random() < 0.5
+    marker = V.FIND_MAX if want_max else V.FIND_MIN
+    toks = [V.BOS, marker] + [V.digit(x) for x in xs] + [V.ANS]
+    ans_start = len(toks)
+    res = max(xs) if want_max else min(xs)
+    toks += [V.digit(res), V.EOS]
+    return _mk("find_minmax", toks, ans_start, [V.digit(res)],
+               {"n": n, "max": want_max})
+
+
+# --------------------------------------------------------------------------
+# multi_session: sessions of facts with filler chat; facts may be updated in
+# later sessions; final query asks the latest value.  LongMemEval analog.
+# --------------------------------------------------------------------------
+def gen_multi_session(rng: random.Random, n_sessions: int = 3,
+                      facts_per: int = 3, filler: int = 8,
+                      qtype: str | None = None) -> Episode:
+    qtype = qtype or rng.choice(["single", "update", "multi"])
+    store: dict[int, int] = {}
+    toks = [V.BOS]
+    key_session: dict[int, int] = {}
+    updated: set[int] = set()
+    for s in range(n_sessions):
+        toks += [V.SESSION, V.digit(s % 10)]
+        for _ in range(facts_per):
+            if qtype == "update" and store and rng.random() < 0.4:
+                k = rng.choice(list(store.keys()))
+                v = _sym(rng)
+                toks += [V.UPDATE, V.sym(k), V.sym(v)]
+                updated.add(k)
+            else:
+                k = _sym(rng)
+                while k in store:
+                    k = _sym(rng)
+                v = _sym(rng)
+                toks += [V.KEY, V.sym(k), V.sym(v)]
+            store[k] = v
+            key_session[k] = s
+        toks += [V.USER] + _filler(rng, rng.randrange(filler + 1))
+        toks += [V.ASSISTANT] + _filler(rng, rng.randrange(filler + 1))
+    pool = list(updated) if (qtype == "update" and updated) else list(store)
+    qk = rng.choice(pool)
+    toks += [V.SEP, V.QUERY, V.sym(qk)]
+    ans_start = len(toks)
+    toks += [V.sym(store[qk]), V.EOS]
+    return _mk("multi_session", toks, ans_start, [V.sym(store[qk])],
+               {"n_sessions": n_sessions, "qtype": qtype,
+                "key_session": key_session.get(qk, 0)})
+
+
+# --------------------------------------------------------------------------
+# niah: one needle <niah> k v in a long filler haystack; query at the end.
+# --------------------------------------------------------------------------
+def gen_niah(rng: random.Random, haystack: int = 100) -> Episode:
+    k, v = _sym(rng), _sym(rng)
+    pos = rng.randrange(max(1, haystack - 4))
+    toks = [V.BOS]
+    toks += _filler(rng, pos)
+    toks += [V.NIAH, V.sym(k), V.sym(v)]
+    toks += _filler(rng, haystack - pos)
+    toks += [V.QUERY, V.sym(k)]
+    ans_start = len(toks)
+    toks += [V.sym(v), V.EOS]
+    return _mk("niah", toks, ans_start, [V.sym(v)],
+               {"needle_pos": pos, "haystack": haystack})
+
+
+GENERATORS: dict[str, Callable[..., Episode]] = {
+    "recall": gen_recall,
+    "copy": gen_copy,
+    "chain": gen_chain,
+    "proc_table": gen_proc_table,
+    "countdown": gen_countdown,
+    "manyshot": gen_manyshot,
+    "find_minmax": gen_find_minmax,
+    "multi_session": gen_multi_session,
+    "niah": gen_niah,
+}
+
+
+def sample_episode(rng: random.Random, mix: str = "math") -> Episode:
+    """Sample one episode from a named corpus mixture.
+
+    "math"    — reasoning-heavy mix (OpenR1-Math analog)
+    "general" — long-context mix (SynthLong/BookSum analog)
+    "all"     — union
+    """
+    if mix == "math":
+        r = rng.random()
+        if r < 0.3:
+            return gen_recall(rng, n_pairs=rng.randrange(4, 12),
+                              filler=rng.randrange(2, 7),
+                              n_queries=rng.randrange(2, 5))
+        if r < 0.45:
+            return gen_copy(rng, n=rng.randrange(3, 10))
+        if r < 0.7:
+            return gen_chain(rng, n_pairs=rng.randrange(5, 10),
+                             hops=rng.randrange(2, 5))
+        if r < 0.88:
+            return gen_countdown(rng, n_steps=rng.randrange(2, 7))
+        return gen_find_minmax(rng, n=rng.randrange(12, 48))
+    if mix == "general":
+        r = rng.random()
+        if r < 0.3:
+            return gen_multi_session(rng, n_sessions=rng.randrange(2, 5))
+        if r < 0.55:
+            return gen_niah(rng, haystack=rng.randrange(30, 120))
+        if r < 0.75:
+            return gen_proc_table(rng, n_rows=rng.randrange(4, 9))
+        if r < 0.9:
+            return gen_manyshot(rng, n_shots=rng.randrange(8, 24))
+        return gen_copy(rng, n=rng.randrange(4, 12))
+    return sample_episode(rng, "math") if rng.random() < 0.5 else \
+        sample_episode(rng, "general")
+
+
+def pack_batch(rng: random.Random, batch: int, seq_len: int,
+               mix: str = "math"
+               ) -> tuple[list[list[int]], list[list[float]], list[list[int]]]:
+    """Pack episodes back-to-back into fixed-length rows for LM training.
+
+    Returns (tokens, loss_weight, segment_ids), each [batch][seq_len].
+    segment_ids keep attention block-diagonal across packed episodes —
+    without this, symbol collisions across episodes make queries ambiguous
+    and the lookup circuit cannot be learned.
+    """
+    rows, weights, segs = [], [], []
+    for _ in range(batch):
+        row: list[int] = []
+        wt: list[float] = []
+        sg: list[int] = []
+        seg = 0
+        while len(row) < seq_len:
+            ep = sample_episode(rng, mix)
+            row += ep.tokens
+            wt += ep.weights
+            sg += [seg] * len(ep.tokens)
+            seg += 1
+        rows.append(row[:seq_len])
+        weights.append(wt[:seq_len])
+        segs.append(sg[:seq_len])
+    return rows, weights, segs

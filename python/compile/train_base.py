@@ -1,0 +1,115 @@
+"""Train the trimkv-tiny base model on the synthetic task mixture.
+
+This replaces the paper's pretrained Qwen3 backbone (no network access on
+this testbed — see DESIGN.md §2).  The model is trained with weighted
+next-token prediction on packed episodes, then frozen; the retention gates
+are trained on top by train_gates.py.
+
+Usage:  cd python && python -m compile.train_base [--steps N] [--out DIR]
+Writes: artifacts/base.npz, artifacts/base_metrics.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+from . import vocab as V
+from .model import CONFIG, forward_full, init_params
+from .optim import adam_init, adam_update, cosine_lr
+
+
+def make_batch(rng: random.Random, batch: int, seq: int, mix: str):
+    rows, wts, segs = tasks.pack_batch(rng, batch, seq + 1, mix)
+    toks = np.asarray(rows, np.int32)
+    wts = np.asarray(wts, np.float32)
+    segs = np.asarray(segs, np.int32)
+    # inputs are t, targets are t+1; target weight follows the target token;
+    # cross-segment targets (the first token of the next episode) get 0 weight
+    w = wts[:, 1:] * (segs[:, 1:] == segs[:, :-1])
+    return toks[:, :-1], toks[:, 1:], w, segs[:, :-1]
+
+
+def loss_fn(params, x, y, w, seg, cfg):
+    logits = forward_full(params, x, cfg, segments=seg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return (nll * w).sum() / w.sum()
+
+
+@jax.jit
+def train_step(params, opt, x, y, w, seg, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y, w, seg, CONFIG)
+    params, opt = adam_update(params, grads, opt, lr, weight_decay=1e-4)
+    return params, opt, loss
+
+
+def eval_teacher_forced(params, rng: random.Random, cfg, n: int = 80,
+                        pad_to: int = 512) -> dict:
+    """Answer-token argmax accuracy per task family (full cache).
+
+    Episodes are padded to a fixed length so a single jit specialization
+    serves the whole eval (single-core testbed: recompiles dominate)."""
+    fwd = jax.jit(lambda p, t: jnp.argmax(forward_full(p, t, cfg), axis=-1))
+    per: dict[str, list[float]] = {}
+    for _ in range(n):
+        ep = tasks.sample_episode(rng, "all")
+        toks = ep.tokens[:pad_to]
+        padded = np.zeros((1, pad_to), np.int32)
+        padded[0, : len(toks)] = toks
+        pred = np.asarray(fwd(params, jnp.asarray(padded)))[0]
+        span = range(ep.prompt_end - 1, min(len(ep.tokens), pad_to) - 1)
+        ok = all(int(pred[i]) == ep.tokens[i + 1] for i in span)
+        per.setdefault(ep.task, []).append(1.0 if ok else 0.0)
+    return {k: float(np.mean(v)) for k, v in sorted(per.items())}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1400)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=448)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mix", default="all")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = CONFIG
+    rng = random.Random(args.seed)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adam_init(params)
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        x, y, w, seg = make_batch(rng, args.batch, args.seq, args.mix)
+        lr = cosine_lr(step, args.lr, args.steps)
+        params, opt, loss = train_step(params, opt, x, y, w, seg, lr)
+        losses.append(float(loss))
+        if step % 100 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"lr {lr:.2e} elapsed {time.time()-t0:.0f}s", flush=True)
+
+    acc = eval_teacher_forced(params, random.Random(123), cfg)
+    print("teacher-forced accuracy:", acc)
+
+    np.savez(f"{args.out}/base.npz", **{k: np.asarray(v) for k, v in params.items()})
+    with open(f"{args.out}/base_metrics.json", "w") as f:
+        json.dump({"final_loss": float(np.mean(losses[-50:])),
+                   "loss_curve": losses[::10],
+                   "teacher_forced_acc": acc,
+                   "steps": args.steps, "batch": args.batch,
+                   "seq": args.seq, "wall_s": time.time() - t0}, f, indent=1)
+    print(f"saved base model ({sum(v.size for v in params.values())} params) "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Train the retention gates (paper §4.2) on top of the frozen base model.
+
+Objective (paper Eq. 4-6):
+    L = D_KL(teacher || student) + L_NTP + lambda_cap * L_cap
+where the student is the retention-gated model (Eq. 3) and the teacher the
+frozen standard-attention model.  Only gate parameters receive gradients.
+
+Also trains the paper's ablation variants (Table 5, Figs 8-10) and the
+LocRet baseline's retaining heads (Appendix B.3 comparison):
+    --no-kl / --no-ntp / --no-cap      loss-term ablations
+    --linear-gate                      gate-architecture ablation
+    --cap-m M / --gate-bias B          hyperparameter ablations
+    --corpus math|general|all          training-data ablation
+    --objective locret                 regression to max-future-attention
+                                       (LocRet-style retaining heads)
+
+Usage:  cd python && python -m compile.train_gates [--name default] [...]
+Writes: artifacts/gates_<name>.npz (+ _metrics.json)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+from .kernels import capacity_loss as capacity_loss_kernel
+from .kernels.ref import capacity_loss_ref
+from .model import (CONFIG, forward_full, forward_gated, gate_log_beta,
+                    init_gates)
+from .optim import adam_init, adam_update, cosine_lr
+from .train_base import make_batch
+
+
+def gate_loss_fn(gates, params, x, y, w, seg, cfg, *, use_kl, use_ntp, use_cap,
+                 cap_m, lam_cap, impl, cap_impl):
+    teacher = jax.lax.stop_gradient(forward_full(params, x, cfg, segments=seg))
+    logits, log_betas = forward_gated(params, gates, x, cfg, impl=impl,
+                                      segments=seg)
+    loss = 0.0
+    parts = {}
+    if use_kl:
+        pt = jax.nn.softmax(teacher, axis=-1)
+        kl = (pt * (jax.nn.log_softmax(teacher, -1)
+                    - jax.nn.log_softmax(logits, -1))).sum(-1)
+        loss_kl = (kl * (w > 0)).mean()
+        loss = loss + loss_kl
+        parts["kl"] = loss_kl
+    if use_ntp:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        loss_ntp = (nll * w).sum() / w.sum()
+        loss = loss + loss_ntp
+        parts["ntp"] = loss_ntp
+    if use_cap:
+        cap = capacity_loss_ref if cap_impl == "ref" else capacity_loss_kernel
+        # mean the per-layer losses (gates are trained jointly; Eq. 6)
+        loss_cap = jnp.mean(jnp.stack(
+            [cap(log_betas[l], cap_m) for l in range(cfg.layers)]))
+        loss = loss + lam_cap * loss_cap
+        parts["cap"] = loss_cap
+    return loss, parts
+
+
+def locret_loss_fn(gates, params, x, seg, cfg):
+    """LocRet-style retaining heads: per-layer/head/token score beta_i is
+    regressed (MSE) onto the max attention token i receives from any future
+    query in the frozen teacher (clipped causal-attention importance)."""
+    _, attn = forward_full(params, x, cfg, return_attn=True, segments=seg)
+    attn = jax.lax.stop_gradient(attn)                     # [L,B,Hkv,T,T]
+    target = attn.max(axis=3).clip(0.0, 1.0)               # [L,B,Hkv,T]
+    b, t = x.shape
+    xe = jnp.take(params["embed"], x, axis=0)
+    loss = 0.0
+    h = xe
+    # run the backbone once more to get per-layer inputs (cheap at this scale)
+    from .model import rmsnorm, _qkv, _mlp, rope
+    import math as _math
+    from .kernels.ref import expand_kv, NEG_INF
+    pos = jnp.arange(t)[None, :]
+    scale = 1.0 / _math.sqrt(cfg.dh)
+    causal = (jnp.arange(t)[:, None] >= jnp.arange(t)[None, :])[None]
+    if seg is not None:
+        causal = causal & (seg[:, :, None] == seg[:, None, :])
+    for l in range(cfg.layers):
+        hn = rmsnorm(h, params[f"l{l}.ln1"])
+        beta = jnp.exp(gate_log_beta(gates, l, hn))        # [B,T,Hkv]
+        pred = beta.transpose(0, 2, 1)                     # [B,Hkv,T]
+        loss = loss + jnp.mean((pred - target[l]) ** 2)
+        q, k, v = _qkv(params, cfg, l, hn)
+        q = rope(q, pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope(k, pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        k_e, v_e = expand_kv(k, cfg.hq), expand_kv(v, cfg.hq)
+        s = jnp.einsum("bhtd,bhid->bhti", q, k_e) * scale
+        s = jnp.where(causal[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhti,bhid->bhtd", p, v_e)
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.hq * cfg.dh)
+        h = h + o @ params[f"l{l}.wo"]
+        h = _mlp(params, l, h)
+    return loss / cfg.layers, {}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--name", default="default")
+    ap.add_argument("--steps", type=int, default=700)
+    ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--seq", type=int, default=384)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--corpus", default="all",
+                    choices=["math", "general", "all"])
+    ap.add_argument("--cap-m", type=float, default=48.0)
+    ap.add_argument("--lam-cap", type=float, default=1.0)
+    ap.add_argument("--gate-bias", type=float, default=None)
+    ap.add_argument("--no-kl", action="store_true")
+    ap.add_argument("--no-ntp", action="store_true")
+    ap.add_argument("--no-cap", action="store_true")
+    ap.add_argument("--linear-gate", action="store_true")
+    ap.add_argument("--objective", default="trimkv",
+                    choices=["trimkv", "locret"])
+    ap.add_argument("--impl", default="ref", choices=["ref", "pallas"],
+                    help="retention-attention implementation for training; "
+                         "'ref' is the jnp oracle (bit-identical math, faster "
+                         "on the single-core CPU); 'pallas' exercises the L1 "
+                         "kernels end-to-end")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = CONFIG
+    rng = random.Random(args.seed + 1000)
+    base = dict(np.load(f"{args.out}/base.npz"))
+    params = {k: jnp.asarray(v) for k, v in base.items()}
+    gates = init_gates(cfg, jax.random.PRNGKey(args.seed + 7),
+                       linear=args.linear_gate, bias=args.gate_bias)
+    opt = adam_init(gates)
+
+    if args.objective == "locret":
+        def full_loss(g, x, y, w, seg):
+            return locret_loss_fn(g, params, x, seg, cfg)
+    else:
+        def full_loss(g, x, y, w, seg):
+            return gate_loss_fn(
+                g, params, x, y, w, seg, cfg,
+                use_kl=not args.no_kl, use_ntp=not args.no_ntp,
+                use_cap=not args.no_cap, cap_m=args.cap_m,
+                lam_cap=args.lam_cap, impl=args.impl, cap_impl="ref")
+
+    @jax.jit
+    def step_fn(gates, opt, x, y, w, seg, lr):
+        (loss, parts), grads = jax.value_and_grad(
+            full_loss, has_aux=True)(gates, x, y, w, seg)
+        gates, opt = adam_update(gates, grads, opt, lr)
+        return gates, opt, loss, parts
+
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        x, y, w, seg = make_batch(rng, args.batch, args.seq, args.corpus)
+        lr = cosine_lr(step, args.lr, args.steps)
+        gates, opt, loss, parts = step_fn(gates, opt, x, y, w, seg, lr)
+        losses.append(float(loss))
+        if step % 100 == 0 or step == args.steps - 1:
+            extra = " ".join(f"{k}={float(v):.4f}" for k, v in parts.items())
+            print(f"step {step:5d} loss {float(loss):.4f} {extra} "
+                  f"elapsed {time.time()-t0:.0f}s", flush=True)
+
+    np.savez(f"{args.out}/gates_{args.name}.npz",
+             **{k: np.asarray(v) for k, v in gates.items()})
+    with open(f"{args.out}/gates_{args.name}_metrics.json", "w") as f:
+        json.dump({"final_loss": float(np.mean(losses[-50:])),
+                   "loss_curve": losses[::10],
+                   "args": vars(args), "wall_s": time.time() - t0}, f, indent=1)
+    print(f"saved gates_{args.name} in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Synthetic vocabulary shared between the python (training) and rust (serving) sides.
+
+The 512-token vocabulary is structured: a block of control tokens that give the
+synthetic tasks their grammar, a block of "symbol" tokens used as keys/values/
+tags, a block of "word" tokens used as natural-language-like filler, and a
+small auxiliary block.  `aot.py` serializes this layout to artifacts/vocab.json
+so the rust tokenizer/workload generators stay byte-compatible with the
+training corpus.
+"""
+
+from __future__ import annotations
+
+VOCAB_SIZE = 512
+
+# --- control tokens -------------------------------------------------------
+PAD = 0
+BOS = 1
+EOS = 2
+SEP = 3
+QUERY = 4
+ANS = 5
+KEY = 6
+VAL = 7
+THINK = 8
+ROW = 9
+EXEC = 10
+SESSION = 11
+USER = 12
+ASSISTANT = 13
+QMARK = 14
+UPDATE = 15
+SHOT = 16
+LABEL = 17
+FIND_MIN = 18
+FIND_MAX = 19
+CHOICE = 20
+CORRECT = 21
+NIAH = 22
+SUM = 23
+COUNT = 24
+TARGET = 25
+PLUS = 26
+MINUS = 27
+TIMES = 28
+EQUALS = 29
+HOP = 30
+END_THINK = 31
+
+CONTROL_NAMES = {
+    PAD: "<pad>", BOS: "<bos>", EOS: "<eos>", SEP: "<sep>",
+    QUERY: "<query>", ANS: "<ans>", KEY: "<key>", VAL: "<val>",
+    THINK: "<think>", ROW: "<row>", EXEC: "<exec>", SESSION: "<session>",
+    USER: "<user>", ASSISTANT: "<assistant>", QMARK: "<q>", UPDATE: "<update>",
+    SHOT: "<shot>", LABEL: "<label>", FIND_MIN: "<find_min>",
+    FIND_MAX: "<find_max>", CHOICE: "<choice>", CORRECT: "<correct>",
+    NIAH: "<niah>", SUM: "<sum>", COUNT: "<count>", TARGET: "<target>",
+    PLUS: "<plus>", MINUS: "<minus>", TIMES: "<times>", EQUALS: "<equals>",
+    HOP: "<hop>", END_THINK: "</think>",
+}
+
+# --- symbol tokens (keys, values, tags) -----------------------------------
+SYM_BASE = 32
+NUM_SYMS = 256
+
+# --- filler "word" tokens ---------------------------------------------------
+WORD_BASE = SYM_BASE + NUM_SYMS  # 288
+NUM_WORDS = 192
+
+# --- digits / aux -----------------------------------------------------------
+DIGIT_BASE = WORD_BASE + NUM_WORDS  # 480
+NUM_DIGITS = 10
+AUX_BASE = DIGIT_BASE + NUM_DIGITS  # 490 .. 511 reserved
+
+assert AUX_BASE + 22 == VOCAB_SIZE
+
+
+def sym(i: int) -> int:
+    assert 0 <= i < NUM_SYMS
+    return SYM_BASE + i
+
+
+def word(i: int) -> int:
+    assert 0 <= i < NUM_WORDS
+    return WORD_BASE + i
+
+
+def digit(i: int) -> int:
+    assert 0 <= i < NUM_DIGITS
+    return DIGIT_BASE + i
+
+
+def token_name(t: int) -> str:
+    if t in CONTROL_NAMES:
+        return CONTROL_NAMES[t]
+    if SYM_BASE <= t < SYM_BASE + NUM_SYMS:
+        return f"s{t - SYM_BASE}"
+    if WORD_BASE <= t < WORD_BASE + NUM_WORDS:
+        return f"w{t - WORD_BASE}"
+    if DIGIT_BASE <= t < DIGIT_BASE + NUM_DIGITS:
+        return str(t - DIGIT_BASE)
+    return f"<aux{t}>"
+
+
+def vocab_json() -> dict:
+    """Layout descriptor serialized to artifacts/vocab.json for the rust side."""
+    return {
+        "vocab_size": VOCAB_SIZE,
+        "control": {name: tok for tok, name in CONTROL_NAMES.items()},
+        "sym_base": SYM_BASE,
+        "num_syms": NUM_SYMS,
+        "word_base": WORD_BASE,
+        "num_words": NUM_WORDS,
+        "digit_base": DIGIT_BASE,
+        "num_digits": NUM_DIGITS,
+    }

@@ -1,0 +1,143 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Sweeps shapes/seeds (hypothesis-style grid; the hypothesis package is not
+assumed installed on this image) and checks forward values and every
+gradient the training path uses.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import (capacity_loss, decode_attention,
+                             retention_attention, retention_load)
+from compile.kernels.ref import (capacity_loss_ref, decode_attention_ref,
+                                 retention_attention_ref,
+                                 retention_matrix_ref)
+
+SHAPES = [
+    # (B, Hq, Hkv, T, dh)
+    (1, 2, 1, 32, 8),
+    (2, 4, 2, 64, 16),
+    (1, 4, 4, 128, 32),   # MHA (group = 1)
+    (2, 8, 2, 96, 16),    # wide GQA group
+]
+
+
+def _inputs(b, hq, hkv, t, dh, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, hq, t, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, t, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, t, dh), jnp.float32)
+    lb = -jax.nn.softplus(jax.random.normal(ks[3], (b, hkv, t)))
+    return q, k, v, lb
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_retention_attention_fwd(shape, seed):
+    q, k, v, lb = _inputs(*shape, seed)
+    out = retention_attention(q, k, v, lb)
+    ref = retention_attention_ref(q, k, v, lb)
+    assert jnp.abs(out - ref).max() < 2e-5
+
+
+@pytest.mark.parametrize("block", [16, 32, 128])
+def test_retention_attention_block_sizes(block):
+    q, k, v, lb = _inputs(1, 2, 1, 64, 8, 3)
+    out = retention_attention(q, k, v, lb, block, block)
+    ref = retention_attention_ref(q, k, v, lb)
+    assert jnp.abs(out - ref).max() < 2e-5
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_retention_attention_grads(shape):
+    q, k, v, lb = _inputs(*shape, 5)
+
+    def loss_k(f):
+        return (retention_attention(q, k, v, lb) * f).sum()
+
+    def loss_r(f):
+        return (retention_attention_ref(q, k, v, lb) * f).sum()
+
+    f = jax.random.normal(jax.random.PRNGKey(9), q.shape)
+    for argfn, name in [
+        (lambda fn: jax.grad(lambda q_: (fn(q_, k, v, lb) * f).sum())(q), "dq"),
+        (lambda fn: jax.grad(lambda k_: (fn(q, k_, v, lb) * f).sum())(k), "dk"),
+        (lambda fn: jax.grad(lambda v_: (fn(q, k, v_, lb) * f).sum())(v), "dv"),
+        (lambda fn: jax.grad(lambda lb_: (fn(q, k, v, lb_) * f).sum())(lb), "dlb"),
+    ]:
+        gk = argfn(retention_attention)
+        gr = argfn(retention_attention_ref)
+        scale = jnp.abs(gr).max() + 1e-6
+        assert jnp.abs(gk - gr).max() / scale < 5e-4, name
+
+
+def test_retention_attention_all_beta_one_is_vanilla():
+    """beta == 1 must recover standard causal attention (paper §4.1)."""
+    q, k, v, _ = _inputs(1, 2, 2, 32, 8, 11)
+    lb = jnp.zeros((1, 2, 32))
+    out = retention_attention(q, k, v, lb)
+    ref = retention_attention_ref(q, k, v, lb)
+    # vanilla softmax attention computed directly
+    s = jnp.einsum("bhtd,bhid->bhti", q, k) / jnp.sqrt(8.0)
+    mask = jnp.tril(jnp.ones((32, 32), bool))
+    s = jnp.where(mask, s, -1e30)
+    van = jnp.einsum("bhti,bhid->bhtd", jax.nn.softmax(s, -1), v)
+    assert jnp.abs(out - van).max() < 2e-5
+    assert jnp.abs(ref - van).max() < 2e-5
+
+
+@pytest.mark.parametrize("m", [1.0, 4.0, 16.0])
+@pytest.mark.parametrize("seed", [0, 2])
+def test_capacity_loss(m, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 1)[0]
+    lb = -jax.nn.softplus(jax.random.normal(ks, (2, 3, 96)))
+    a = capacity_loss(lb, m)
+    b = capacity_loss_ref(lb, m)
+    assert abs(float(a) - float(b)) < 1e-5
+    ga = jax.grad(lambda x: capacity_loss(x, m))(lb)
+    gb = jax.grad(lambda x: capacity_loss_ref(x, m))(lb)
+    assert jnp.abs(ga - gb).max() < 1e-6
+
+
+def test_capacity_loss_zero_when_under_budget():
+    lb = jnp.full((1, 1, 64), -3.0)  # beta ~ 0.05: load stays tiny
+    assert float(capacity_loss(lb, 8.0)) == 0.0
+
+
+def test_retention_load_matches_matrix_sum():
+    lb = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (1, 2, 64)))
+    s = retention_load(lb)
+    mat = retention_matrix_ref(lb)
+    assert jnp.abs(s - mat.sum(-1)).max() < 2e-4
+
+
+@pytest.mark.parametrize("m", [16, 64])
+@pytest.mark.parametrize("frac", [0.0, 0.4, 1.0])
+def test_decode_attention(m, frac):
+    b, hq, hkv, dh = 2, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, m, dh))
+    v = jax.random.normal(ks[2], (b, hkv, m, dh))
+    valid = (jax.random.uniform(ks[3], (b, hkv, m)) >= frac).astype(jnp.float32)
+    o1, p1 = decode_attention(q, k, v, valid)
+    o2, p2 = decode_attention_ref(q, k, v, valid)
+    assert jnp.abs(o1 - o2).max() < 2e-5
+    assert jnp.abs(p1 - p2).max() < 2e-6
+    # probabilities are a distribution over live slots
+    live = valid.sum() > 0
+    if frac == 0.0:
+        assert jnp.abs(p1.sum(-1) - 1.0).max() < 1e-4
+
+
+def test_decode_attention_all_invalid_is_zero():
+    b, hq, hkv, m, dh = 1, 2, 1, 8, 4
+    q = jnp.ones((b, hq, dh))
+    k = jnp.ones((b, hkv, m, dh))
+    v = jnp.ones((b, hkv, m, dh))
+    valid = jnp.zeros((b, hkv, m))
+    o, p = decode_attention(q, k, v, valid)
+    assert jnp.abs(o).max() == 0.0
+    assert jnp.abs(p).max() == 0.0

@@ -1,0 +1,178 @@
+"""L2 model tests: graph-mode consistency, gating semantics, serialization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIG
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def gates():
+    return M.init_gates(CFG, jax.random.PRNGKey(2))
+
+
+def test_forward_full_shapes(params):
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = M.forward_full(params, toks, CFG)
+    assert logits.shape == (2, 16, CFG.vocab)
+    logits2, attn = M.forward_full(params, toks, CFG, return_attn=True)
+    assert attn.shape == (CFG.layers, 2, CFG.hkv, 16, 16)
+    assert jnp.abs(logits - logits2).max() == 0.0
+    # attention rows are causal distributions
+    assert jnp.abs(attn.sum(-1) - 1.0).max() < 1e-4
+    assert float(attn[0, 0, 0, 0, 5]) == 0.0
+
+
+def test_gated_equals_full_when_beta_one(params):
+    """With gate bias -> +inf (beta = 1) retention-gated == standard."""
+    g1 = M.init_gates(CFG, jax.random.PRNGKey(3), bias=30.0)
+    # zero the input-dependent weights so the gate is exactly the bias
+    g1 = {k: (jnp.zeros_like(v) if ".w" in k else v) for k, v in g1.items()}
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 24), 0, CFG.vocab)
+    full = M.forward_full(params, toks, CFG)
+    gated, lbs = M.forward_gated(params, g1, toks, CFG, impl="ref")
+    assert jnp.abs(full - gated).max() < 1e-3
+    assert jnp.exp(lbs).min() > 0.999
+
+
+def test_gated_pallas_matches_ref(params, gates):
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 64), 0, CFG.vocab)
+    l1, b1 = M.forward_gated(params, gates, toks, CFG, impl="ref")
+    l2, b2 = M.forward_gated(params, gates, toks, CFG, impl="pallas")
+    assert jnp.abs(b1 - b2).max() < 1e-6
+    assert jnp.abs(l1 - l2).max() < 2e-3  # logit-scale f32 accumulation
+
+
+def test_decode_replay_matches_full(params, gates):
+    """Streaming decode with a big-enough cache must equal full attention."""
+    B, T, Msl = 2, 20, 32
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, T), 0, CFG.vocab)
+    full = M.forward_full(params, toks, CFG)
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    kc = jnp.zeros((L, B, H, Msl, dh))
+    vc = jnp.zeros_like(kc)
+    valid = jnp.zeros((L, B, H, Msl))
+    zf, zs = jnp.zeros((L, B, H)), jnp.zeros((L, B, H), jnp.int32)
+    zk = jnp.zeros((L, B, H, dh))
+    for t in range(T):
+        ws = jnp.full((L, B, H), t, jnp.int32)
+        out = M.decode_fn(params, gates, toks[:, t],
+                          jnp.full((B,), t, jnp.int32), kc, vc, valid, ws,
+                          zf, zs, zk, zk, cfg=CFG)
+        kc, vc, valid = out["kc"], out["vc"], out["valid"]
+        assert jnp.abs(out["logits"] - full[:, t]).max() < 1e-4
+    assert float(valid.sum()) == L * B * H * T
+
+
+def test_decode_beta_matches_gate(params, gates):
+    """The decode graph's log_beta output equals gate(post-norm h) directly."""
+    B, Msl = 1, 16
+    token = jnp.array([7], jnp.int32)
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    out = M.decode_fn(params, gates, token, jnp.array([0], jnp.int32),
+                      jnp.zeros((L, B, H, Msl, dh)),
+                      jnp.zeros((L, B, H, Msl, dh)),
+                      jnp.zeros((L, B, H, Msl)),
+                      jnp.zeros((L, B, H), jnp.int32),
+                      jnp.zeros((L, B, H)), jnp.zeros((L, B, H), jnp.int32),
+                      jnp.zeros((L, B, H, dh)), jnp.zeros((L, B, H, dh)),
+                      cfg=CFG)
+    x = params["embed"][7][None]
+    h = M.rmsnorm(x, params["l0.ln1"])
+    lb0 = M.gate_log_beta(gates, 0, h)
+    assert jnp.abs(out["log_beta"][0, 0] - lb0[0]).max() < 1e-6
+
+
+def test_prefill_then_decode_consistency(params, gates):
+    """Chunked prefill + decode equals full attention on the same stream."""
+    B, C, Msl = 1, 8, 32
+    T = 2 * C + 3
+    toks = jax.random.randint(jax.random.PRNGKey(8), (B, T), 0, CFG.vocab)
+    full = M.forward_full(params, toks, CFG)
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    kc = jnp.zeros((L, B, H, Msl, dh))
+    vc = jnp.zeros_like(kc)
+    valid = jnp.zeros((L, B, H, Msl))
+    for ci in range(2):
+        sl = slice(ci * C, (ci + 1) * C)
+        pos = jnp.arange(ci * C, (ci + 1) * C)[None].astype(jnp.int32)
+        ws = jnp.broadcast_to(jnp.arange(ci * C, (ci + 1) * C)[None, None, None],
+                              (L, B, H, C)).astype(jnp.int32)
+        out = M.prefill_fn(params, gates, toks[:, sl], pos, jnp.ones((B, C)),
+                           kc, vc, valid, ws, cfg=CFG)
+        kc, vc, valid = out["kc"], out["vc"], out["valid"]
+        assert jnp.abs(out["logits"] - full[:, sl]).max() < 1e-4
+    zf, zs = jnp.zeros((L, B, H)), jnp.zeros((L, B, H), jnp.int32)
+    zk = jnp.zeros((L, B, H, dh))
+    for t in range(2 * C, T):
+        ws = jnp.full((L, B, H), t, jnp.int32)
+        out = M.decode_fn(params, gates, toks[:, t],
+                          jnp.full((B,), t, jnp.int32), kc, vc, valid, ws,
+                          zf, zs, zk, zk, cfg=CFG)
+        kc, vc, valid = out["kc"], out["vc"], out["valid"]
+        assert jnp.abs(out["logits"] - full[:, t]).max() < 1e-4
+
+
+def test_prefill_padding_never_goes_live(params, gates):
+    B, C, Msl = 1, 8, 32
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    toks = jnp.ones((B, C), jnp.int32)
+    in_mask = jnp.array([[1, 1, 1, 0, 0, 0, 0, 0]], jnp.float32)
+    # pads all point at the reserved trash slot (M-1)
+    ws = np.zeros((L, B, H, C), np.int32)
+    ws[..., :3] = np.arange(3)
+    ws[..., 3:] = Msl - 1
+    out = M.prefill_fn(params, gates, toks, jnp.arange(C)[None].astype(jnp.int32),
+                       in_mask, jnp.zeros((L, B, H, Msl, dh)),
+                       jnp.zeros((L, B, H, Msl, dh)), jnp.zeros((L, B, H, Msl)),
+                       jnp.asarray(ws), cfg=CFG)
+    valid = out["valid"]
+    assert float(valid[..., Msl - 1].max()) == 0.0
+    assert float(valid.sum()) == L * B * H * 3
+
+
+def test_eviction_hole_is_masked(params, gates):
+    """After clearing a slot's valid bit, attention ignores its contents."""
+    B, Msl = 1, 16
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    kc = jax.random.normal(jax.random.PRNGKey(9), (L, B, H, Msl, dh))
+    vc = jax.random.normal(jax.random.PRNGKey(10), (L, B, H, Msl, dh))
+    valid = jnp.zeros((L, B, H, Msl)).at[..., :4].set(1.0)
+    args = (jnp.array([3], jnp.int32), jnp.array([4], jnp.int32),
+            kc, vc, valid, jnp.full((L, B, H), 4, jnp.int32),
+            jnp.zeros((L, B, H)), jnp.zeros((L, B, H), jnp.int32),
+            jnp.zeros((L, B, H, dh)), jnp.zeros((L, B, H, dh)))
+    out1 = M.decode_fn(params, gates, *args, cfg=CFG)
+    # corrupt an invalid slot: result must not change
+    kc2 = kc.at[:, :, :, 9].set(99.0)
+    out2 = M.decode_fn(params, gates, args[0], args[1], kc2, *args[3:], cfg=CFG)
+    assert jnp.abs(out1["logits"] - out2["logits"]).max() == 0.0
+    # corrupt a live slot: result must change
+    kc3 = kc.at[:, :, :, 1].set(99.0)
+    out3 = M.decode_fn(params, gates, args[0], args[1], kc3, *args[3:], cfg=CFG)
+    assert jnp.abs(out1["logits"] - out3["logits"]).max() > 1e-4
+
+
+def test_weights_bin_roundtrip(tmp_path, params):
+    arrays = {k: np.asarray(v) for k, v in params.items()}
+    p = str(tmp_path / "w.bin")
+    M.save_weights_bin(p, arrays)
+    back = M.load_weights_bin(p)
+    assert set(back) == set(arrays)
+    for k in arrays:
+        assert back[k].shape == arrays[k].shape
+        assert np.abs(back[k] - arrays[k]).max() == 0.0
+
+
+def test_param_and_gate_name_order(params, gates):
+    assert M.param_names(CFG) == list(params.keys())
+    assert M.gate_names(CFG) == list(gates.keys())

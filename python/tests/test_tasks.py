@@ -1,0 +1,165 @@
+"""Synthetic task generator invariants (the grading contract with rust)."""
+
+import random
+
+import pytest
+
+from compile import tasks
+from compile import vocab as V
+
+
+@pytest.mark.parametrize("task", list(tasks.GENERATORS))
+def test_episode_well_formed(task):
+    rng = random.Random(7)
+    for _ in range(20):
+        ep = tasks.GENERATORS[task](rng)
+        assert ep.tokens[0] == V.BOS
+        assert ep.tokens[-1] == V.EOS
+        assert 0 < ep.prompt_end <= ep.answer_start < len(ep.tokens)
+        assert all(0 <= t < V.VOCAB_SIZE for t in ep.tokens)
+        assert ep.answer == ep.tokens[ep.answer_start:len(ep.tokens) - 1]
+        assert len(ep.weights) == len(ep.tokens)
+        # answer tokens always carry the high loss weight
+        assert all(ep.weights[i] == tasks.ANSWER_WEIGHT
+                   for i in range(ep.answer_start, len(ep.tokens)))
+
+
+def test_recall_answer_is_queried_value():
+    rng = random.Random(1)
+    for _ in range(30):
+        ep = tasks.gen_recall(rng)
+        toks = ep.tokens
+        qkey = toks[ep.answer_start - 1]
+        # value immediately follows <key> k
+        vals = [toks[i + 2] for i in range(len(toks) - 2)
+                if toks[i] == V.KEY and toks[i + 1] == qkey]
+        assert vals and vals[0] == ep.answer[0]
+
+
+def test_recall_multi_queries_are_consistent():
+    rng = random.Random(9)
+    for _ in range(20):
+        ep = tasks.gen_recall(rng, n_queries=4)
+        toks = ep.tokens
+        kv = {toks[i + 1]: toks[i + 2] for i in range(len(toks) - 2)
+              if toks[i] == V.KEY}
+        for i in range(len(toks) - 2):
+            if toks[i] == V.QUERY:
+                assert kv[toks[i + 1]] == toks[i + 2]
+
+
+def test_copy_replays_span():
+    rng = random.Random(11)
+    for _ in range(20):
+        ep = tasks.gen_copy(rng, n=5)
+        toks = ep.tokens
+        assert toks[1:6] == ep.answer
+        assert toks[6] == V.SEP
+
+
+def test_chain_trace_is_valid():
+    rng = random.Random(2)
+    for _ in range(30):
+        ep = tasks.gen_chain(rng, hops=3)
+        toks = ep.tokens
+        mapping = {toks[i + 1]: toks[i + 2] for i in range(len(toks) - 2)
+                   if toks[i] == V.KEY}
+        start = toks[toks.index(V.QUERY) + 1]
+        cur = start
+        for _ in range(3):
+            cur = mapping[cur]
+        assert cur == ep.answer[0]
+        # the think span re-queries each hop: <query> k_i k_{i+1}
+        i = ep.meta["think_start"]
+        hop_cur = start
+        while toks[i] == V.QUERY:
+            assert toks[i + 1] == hop_cur
+            hop_cur = toks[i + 2]
+            i += 3
+        assert hop_cur == ep.answer[0]
+
+
+def test_countdown_trace_arithmetic():
+    rng = random.Random(3)
+    for _ in range(30):
+        ep = tasks.gen_countdown(rng, n_steps=3)
+        toks = ep.tokens
+        cur = toks[2] - V.DIGIT_BASE
+        i = ep.prompt_end
+        while toks[i] != V.END_THINK:
+            op, opd, eq, res = toks[i:i + 4]
+            assert eq == V.EQUALS
+            cur = (cur + (opd - V.DIGIT_BASE)) % 10 if op == V.PLUS \
+                else (cur - (opd - V.DIGIT_BASE)) % 10
+            assert res - V.DIGIT_BASE == cur
+            i += 4
+        assert ep.answer[0] - V.DIGIT_BASE == cur
+
+
+def test_multi_session_latest_value_wins():
+    rng = random.Random(4)
+    for _ in range(40):
+        ep = tasks.gen_multi_session(rng)
+        toks = ep.tokens
+        qkey = toks[ep.answer_start - 1]
+        latest = None
+        for i in range(len(toks) - 2):
+            if toks[i] in (V.KEY, V.UPDATE) and toks[i + 1] == qkey:
+                latest = toks[i + 2]
+        assert latest == ep.answer[0]
+
+
+def test_niah_needle_is_answer():
+    rng = random.Random(8)
+    for _ in range(20):
+        ep = tasks.gen_niah(rng, haystack=40)
+        toks = ep.tokens
+        i = toks.index(V.NIAH)
+        assert toks[i + 1] == toks[ep.answer_start - 1]  # queried key
+        assert toks[i + 2] == ep.answer[0]
+
+
+def test_find_minmax_answer():
+    rng = random.Random(5)
+    for _ in range(30):
+        ep = tasks.gen_find_minmax(rng, n=20)
+        digs = [t - V.DIGIT_BASE for t in ep.tokens[2:2 + 20]]
+        want = max(digs) if ep.meta["max"] else min(digs)
+        assert ep.answer[0] - V.DIGIT_BASE == want
+
+
+def test_manyshot_mapping_consistent():
+    rng = random.Random(12)
+    for _ in range(20):
+        ep = tasks.gen_manyshot(rng)
+        toks = ep.tokens
+        f = {}
+        for i in range(len(toks) - 2):
+            if toks[i] == V.SHOT:
+                x, y = toks[i + 1], toks[i + 2]
+                assert f.setdefault(x, y) == y  # mapping is a function
+        q = toks[ep.answer_start - 1]
+        assert f[q] == ep.answer[0]
+
+
+def test_pack_batch_shapes_and_weights():
+    rng = random.Random(6)
+    rows, wts, segs = tasks.pack_batch(rng, 3, 128, "all")
+    assert len(rows) == 3 and all(len(r) == 128 for r in rows)
+    assert all(len(w) == 128 for w in wts)
+    assert any(w == tasks.ANSWER_WEIGHT for row in wts for w in row)
+    # segments are non-decreasing within each row
+    for sg in segs:
+        assert all(sg[i] <= sg[i + 1] for i in range(len(sg) - 1))
+
+
+def test_vocab_layout_is_consistent():
+    j = V.vocab_json()
+    assert j["vocab_size"] == 512
+    assert j["sym_base"] + j["num_syms"] == j["word_base"]
+    assert j["word_base"] + j["num_words"] == j["digit_base"]
+    names = set()
+    for t in range(V.VOCAB_SIZE):
+        n = V.token_name(t)
+        assert n not in names, f"duplicate token name {n}"
+        names.add(n)

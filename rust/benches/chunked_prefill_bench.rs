@@ -1,0 +1,39 @@
+//! Tables 4 / 9 / 10 reproduction: chunked-prefill comparison vs LocRet —
+//! long prompts are compressed chunk-by-chunk before generation.  Shape to
+//! match: TRIM-KV >= LocRet; both near FullKV on compressible QA.
+
+use trimkv::eval::bench_support::{bench_n, load_ctx};
+use trimkv::eval::{results_table, run_suite};
+use trimkv::workload::suites;
+
+fn main() {
+    let Some(ctx) = load_ctx("chunked_prefill") else { return };
+    if !ctx.meta.gate_variants.iter().any(|v| v == "locret") {
+        println!("note: locret gates not trained; comparing trimkv vs heuristics only");
+    }
+    let n = bench_n(16);
+    let budget = 48usize;
+    let max_m = ctx.max_slots(8);
+    let suite = suites::longqa(&ctx.vocab, n, 23);
+    let mut all = Vec::new();
+    // policies sharing the default gates reuse one backend
+    let mut backend = ctx.backend(8, max_m, "default");
+    for policy in ["trimkv", "snapkv", "streaming_llm", "fullkv"] {
+        let eff = if policy == "fullkv" { max_m - ctx.meta.chunk - 1 } else { budget };
+        let (r, be) = run_suite(backend, &ctx.cfg, &ctx.vocab, policy, eff,
+                                &suite).expect("chunked run");
+        backend = be;
+        all.push(r);
+    }
+    if ctx.meta.gate_variants.iter().any(|v| v == "locret") {
+        let be = ctx.backend(8, max_m, "locret");
+        let (r, _) = run_suite(be, &ctx.cfg, &ctx.vocab, "locret", budget,
+                               &suite).expect("locret run");
+        all.push(r);
+    }
+    println!("=== Tables 4/9/10 analog (chunked prefill) ===\n{}",
+             results_table(&all).render());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/chunked_prefill.csv",
+                   results_table(&all).to_csv()).ok();
+}

@@ -1,0 +1,52 @@
+//! Tables 3 / 8 reproduction: LongMemEval analog — multi-session memory
+//! accuracy under a budget ladder, split by question type.  Shape to match:
+//! TRIM-KV degrades gracefully as the budget shrinks; StreamingLLM/SnapKV
+//! collapse.
+
+use trimkv::eval::bench_support::{bench_n, load_ctx};
+use trimkv::eval::{pareto_table, results_table, run_suite};
+use trimkv::workload::suites;
+
+fn main() {
+    let Some(mut ctx) = load_ctx("longmem") else { return };
+    let n = bench_n(16);
+    let budgets = [16usize, 32, 64];
+    let policies = ["trimkv", "snapkv", "streaming_llm", "fullkv"];
+    // token-by-token prefill: eviction pressure applies over the whole
+    // sequence (the paper's long-horizon setting), not just past chunk 1
+    ctx.cfg.chunked_prefill = false;
+    let max_m = ctx.max_slots(8);
+    let mut backend = ctx.backend(8, max_m, "default");
+    let mut all = Vec::new();
+    for qtype in ["single", "update"] {
+        let suite = suites::longmem(&ctx.vocab, qtype, n, 5);
+        let mut results = Vec::new();
+        for policy in policies {
+            for &budget in &budgets {
+                if policy == "fullkv" && budget != *budgets.last().unwrap() {
+                    continue;
+                }
+                let eff = if policy == "fullkv" {
+                    max_m - ctx.meta.chunk - 1
+                } else {
+                    budget
+                };
+                let (mut r, be) = run_suite(backend, &ctx.cfg, &ctx.vocab,
+                                            policy, eff, &suite)
+                    .expect("longmem run");
+                backend = be;
+                r.task = qtype.to_string();
+                if policy == "fullkv" {
+                    r.budget = *budgets.last().unwrap();
+                }
+                results.push(r);
+            }
+        }
+        println!("\n=== LongMemEval analog, qtype={qtype} ===\n{}",
+                 pareto_table(&results, &budgets).render());
+        all.extend(results);
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/longmem.csv",
+                   results_table(&all).to_csv()).ok();
+}

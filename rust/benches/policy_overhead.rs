@@ -1,0 +1,52 @@
+//! Appendix A.2 reproduction: per-step policy cost vs cache size M.
+//! TRIM-KV's victim selection is O(M); R-KV/KeyDiff pay O(M^2 dh) for key
+//! similarity.  Pure host-side microbench — no artifacts needed.
+
+use trimkv::kvcache::{HeadState, SlotEntry};
+use trimkv::policy::Policy;
+use trimkv::util::benchkit::{bench, report, BenchResult};
+use trimkv::util::rng::Rng;
+
+fn filled_head(m: usize, dh: usize, rng: &mut Rng) -> HeadState {
+    let mut h = HeadState::new(m + 2, dh, true);
+    for s in 0..m {
+        let key: Vec<f32> = (0..dh).map(|_| rng.normal() as f32).collect();
+        h.insert(
+            s,
+            SlotEntry {
+                pos: s as i64,
+                token: rng.below(512) as u32,
+                log_beta: -(rng.f32() * 2.0 + 0.001),
+                acc_attn: rng.f32(),
+                ema_attn: rng.f32(),
+                last_attn: rng.f32(),
+            },
+            Some(&key),
+        );
+    }
+    h
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    for &m in &[64usize, 128, 256, 512] {
+        let mut rng = Rng::new(9);
+        let head = filled_head(m, 32, &mut rng);
+        for name in ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv", "keydiff"] {
+            let mut pol = Policy::from_name(name, m, 1).unwrap();
+            let r = bench(&format!("{name}/M={m}"), 20, 200, || {
+                std::hint::black_box(pol.select_victim(&head, m as i64 + 5));
+            });
+            results.push(r);
+        }
+    }
+    println!("=== Appendix A.2 analog: victim-selection cost vs M ===");
+    report(&results);
+    // sanity: trimkv must scale ~linearly, rkv superlinearly
+    let t64 = results.iter().find(|r| r.name == "trimkv/M=64").unwrap().mean_us;
+    let t512 = results.iter().find(|r| r.name == "trimkv/M=512").unwrap().mean_us;
+    let r64 = results.iter().find(|r| r.name == "rkv/M=64").unwrap().mean_us;
+    let r512 = results.iter().find(|r| r.name == "rkv/M=512").unwrap().mean_us;
+    println!("\ntrimkv 512/64 ratio: {:.1}x (O(M) expected ~8x)", t512 / t64);
+    println!("rkv    512/64 ratio: {:.1}x (O(M^2) expected ~64x)", r512 / r64);
+}

@@ -1,0 +1,186 @@
+//! Engine configuration: TOML file + CLI overrides.
+//!
+//! ```toml
+//! artifacts_dir = "artifacts"
+//!
+//! [engine]
+//! policy = "trimkv"       # see policy::POLICY_NAMES
+//! budget = 255            # live tokens per head (slots picked as > budget)
+//! batch = 8               # batch lanes (must match an exported artifact)
+//! max_new_tokens = 256
+//! temperature = 0.0       # 0 = greedy
+//! top_k = 0               # 0 = full distribution
+//! seed = 0
+//!
+//! [scheduler]
+//! queue_capacity = 1024
+//! prefill_priority = false
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::util::tomllite;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub policy: String,
+    pub budget: usize,
+    pub batch: usize,
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+    pub queue_capacity: usize,
+    pub prefill_priority: bool,
+    /// Use chunked prefill (prefill graph) for prompts; otherwise prompts
+    /// are fed token-by-token through the decode graph.
+    pub chunked_prefill: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            policy: "trimkv".into(),
+            budget: 255,
+            batch: 8,
+            max_new_tokens: 256,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            queue_capacity: 1024,
+            prefill_priority: false,
+            chunked_prefill: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_file(path: &Path) -> anyhow::Result<EngineConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path:?}: {e}"))?;
+        Self::from_toml_str(&src)
+    }
+
+    pub fn from_toml_str(src: &str) -> anyhow::Result<EngineConfig> {
+        let map = tomllite::parse(src)?;
+        let mut cfg = EngineConfig::default();
+        for (key, val) in &map {
+            match key.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = PathBuf::from(
+                        val.as_str().ok_or_else(|| bad(key))?)
+                }
+                "engine.policy" => {
+                    cfg.policy = val.as_str().ok_or_else(|| bad(key))?.into()
+                }
+                "engine.budget" => cfg.budget = val.as_usize().ok_or_else(|| bad(key))?,
+                "engine.batch" => cfg.batch = val.as_usize().ok_or_else(|| bad(key))?,
+                "engine.max_new_tokens" => {
+                    cfg.max_new_tokens = val.as_usize().ok_or_else(|| bad(key))?
+                }
+                "engine.temperature" => {
+                    cfg.temperature = val.as_f64().ok_or_else(|| bad(key))?
+                }
+                "engine.top_k" => cfg.top_k = val.as_usize().ok_or_else(|| bad(key))?,
+                "engine.seed" => cfg.seed = val.as_usize().ok_or_else(|| bad(key))? as u64,
+                "engine.chunked_prefill" => {
+                    cfg.chunked_prefill = val.as_bool().ok_or_else(|| bad(key))?
+                }
+                "scheduler.queue_capacity" => {
+                    cfg.queue_capacity = val.as_usize().ok_or_else(|| bad(key))?
+                }
+                "scheduler.prefill_priority" => {
+                    cfg.prefill_priority = val.as_bool().ok_or_else(|| bad(key))?
+                }
+                other => anyhow::bail!("unknown config key `{other}`"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply `--policy/--budget/--batch/...` style CLI overrides.
+    pub fn apply_cli(&mut self, args: &crate::util::cli::Args) -> anyhow::Result<()> {
+        if let Some(v) = args.get("policy") {
+            self.policy = v.to_string();
+        }
+        if let Some(v) = args.get("budget") {
+            self.budget = v.parse().map_err(|_| anyhow::anyhow!("bad --budget"))?;
+        }
+        if let Some(v) = args.get("batch") {
+            self.batch = v.parse().map_err(|_| anyhow::anyhow!("bad --batch"))?;
+        }
+        if let Some(v) = args.get("max-new-tokens") {
+            self.max_new_tokens =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --max-new-tokens"))?;
+        }
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("seed") {
+            self.seed = v.parse().map_err(|_| anyhow::anyhow!("bad --seed"))?;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.budget >= 8, "budget must be >= 8 (got {})", self.budget);
+        anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(self.temperature >= 0.0, "temperature must be >= 0");
+        anyhow::ensure!(
+            crate::policy::POLICY_NAMES.contains(&self.policy.as_str()),
+            "unknown policy `{}`", self.policy
+        );
+        Ok(())
+    }
+}
+
+fn bad(key: &str) -> anyhow::Error {
+    anyhow::anyhow!("config key `{key}` has the wrong type")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_file() {
+        let cfg = EngineConfig::from_toml_str(
+            r#"
+artifacts_dir = "x/y"
+[engine]
+policy = "h2o"
+budget = 128
+batch = 1
+temperature = 0.7
+top_k = 40
+[scheduler]
+queue_capacity = 9
+prefill_priority = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.artifacts_dir, PathBuf::from("x/y"));
+        assert_eq!(cfg.policy, "h2o");
+        assert_eq!(cfg.budget, 128);
+        assert_eq!(cfg.batch, 1);
+        assert_eq!(cfg.temperature, 0.7);
+        assert_eq!(cfg.queue_capacity, 9);
+        assert!(cfg.prefill_priority);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(EngineConfig::from_toml_str("nope = 1").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\npolicy = \"bogus\"").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\nbudget = 2").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\nbudget = \"s\"").is_err());
+    }
+}

@@ -1,0 +1,798 @@
+//! The serving engine: continuous-batching event loop that drives the AOT
+//! model graphs and enforces the KV budget through the configured eviction
+//! policy (paper Algorithm 1, generalized over all baselines).
+//!
+//! Per decode tick:
+//!   1. idle lanes admit waiting requests (continuous batching)
+//!   2. each running lane picks, per (layer, head), the slot its new token
+//!      will occupy — a free slot (the arena keeps `slots > budget` so one
+//!      always exists after the previous tick's eviction)
+//!   3. one batched decode-graph execution (KV stays device-resident)
+//!   4. per lane/head: record the new token's retention score beta (gate
+//!      output), fold attention stats, then — if the head now exceeds the
+//!      budget — evict the policy's victim (provisional-add-then-evict,
+//!      exactly the paper's rule: the newest token itself can be evicted)
+//!   5. sample the next token, finish lanes on EOS / length
+//!
+//! Prompts run through the chunked prefill graph (compress-after-each-chunk,
+//! the LocRet protocol used in paper §B.3) or token-by-token through the
+//! decode graph (`chunked_prefill = false`).
+
+pub mod sampler;
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::EngineConfig;
+use crate::kvcache::{LaneCache, SlotEntry};
+use crate::metrics::EngineMetrics;
+use crate::policy::Policy;
+use crate::runtime::{DecodeIn, ModelBackend, PrefillIn};
+use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
+use sampler::Sampler;
+
+/// EMA factor for the SnapKV-style attention statistic.
+const ATTN_EMA: f32 = 0.9;
+
+/// Host mirror of an evicted token (retrieval baseline re-admission pool).
+#[derive(Debug, Clone)]
+struct MirrorEntry {
+    entry: SlotEntry,
+    key: Vec<f32>,
+    val: Vec<f32>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct PendingInject {
+    /// per (l, h): (slot, mirror entry) scheduled for the next decode tick
+    plans: Vec<Option<(usize, MirrorEntry)>>,
+}
+
+/// Full gate/eviction trace of one sequence (inspect tooling, Figs 4/5/11-19).
+#[derive(Debug, Clone, Default)]
+pub struct SeqRecord {
+    /// token id at each position
+    pub tokens: Vec<u32>,
+    /// per position, per (layer*hkv) head: the gate's log beta
+    pub log_betas: Vec<Vec<f32>>,
+    /// (head index, evicted token pos, eviction step)
+    pub evictions: Vec<(usize, i64, i64)>,
+}
+
+struct SeqState {
+    id: u64,
+    tag: String,
+    prompt: Vec<u32>,
+    generated: Vec<u32>,
+    max_new: usize,
+    stop_at_eos: bool,
+    /// tokens fed to the model so far (== position of the next input)
+    fed: usize,
+    cache: LaneCache,
+    mirror: Vec<Vec<MirrorEntry>>, // per (l*h); retrieval only
+    inject: PendingInject,
+    t_submit: Instant,
+    ttft_us: Option<f64>,
+    record: Option<SeqRecord>,
+}
+
+impl SeqState {
+    fn stream_token(&self, idx: usize) -> u32 {
+        if idx < self.prompt.len() {
+            self.prompt[idx]
+        } else {
+            self.generated[idx - self.prompt.len()]
+        }
+    }
+}
+
+enum Lane {
+    Idle,
+    Busy(Box<SeqState>),
+}
+
+pub struct Engine<B: ModelBackend> {
+    backend: B,
+    pub cfg: EngineConfig,
+    policy: Policy,
+    queue: WaitQueue,
+    lanes: Vec<Lane>,
+    sampler: Sampler,
+    eos_token: u32,
+    responses: Vec<Response>,
+    pub metrics: EngineMetrics,
+    /// record per-token gate scores + evictions (inspect tooling)
+    pub record_gates: bool,
+    /// trace of the most recently finished sequence (when record_gates)
+    pub last_record: Option<SeqRecord>,
+    // scratch buffers reused across ticks (perf: no per-step allocation)
+    valid_buf: Vec<f32>,
+    ws_buf: Vec<i32>,
+}
+
+impl<B: ModelBackend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig, eos_token: u32) -> Result<Engine<B>> {
+        let dims = backend.dims();
+        let slots = backend.slots();
+        let needed = if cfg.chunked_prefill {
+            cfg.budget + backend.chunk() + 1
+        } else {
+            cfg.budget + 2
+        };
+        ensure!(
+            slots >= needed,
+            "arena too small: slots {slots} < budget {} (+ headroom {})",
+            cfg.budget, needed - cfg.budget
+        );
+        let policy = Policy::from_name(&cfg.policy, cfg.budget, cfg.seed)?;
+        let b = backend.batch();
+        let lbhm = dims.layers * b * dims.hkv * slots;
+        Ok(Engine {
+            sampler: Sampler::new(cfg.temperature, cfg.top_k, cfg.seed),
+            queue: WaitQueue::new(cfg.queue_capacity),
+            lanes: (0..b).map(|_| Lane::Idle).collect(),
+            policy,
+            backend,
+            eos_token,
+            responses: Vec::new(),
+            metrics: EngineMetrics::new(),
+            record_gates: false,
+            last_record: None,
+            valid_buf: vec![0.0; lbhm],
+            ws_buf: vec![0; dims.layers * b * dims.hkv],
+            cfg,
+        })
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Tear down the engine and recover the backend (the eval harness
+    /// rebuilds engines per policy/budget without recompiling artifacts).
+    pub fn into_backend(self) -> B {
+        self.backend
+    }
+
+    pub fn submit(&mut self, req: Request) -> Result<(), AdmitError> {
+        self.metrics.requests_admitted += 1;
+        self.queue.admit(req)
+    }
+
+    pub fn take_responses(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.responses)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.lanes.iter().all(|l| matches!(l, Lane::Idle))
+    }
+
+    /// Run until every submitted request has finished; returns all responses.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        while !self.idle() {
+            self.tick()?;
+        }
+        Ok(self.take_responses())
+    }
+
+    /// One scheduling step. Returns false when there was nothing to do.
+    pub fn tick(&mut self) -> Result<bool> {
+        self.admit_waiting();
+        let any_prefill = self.lanes.iter().any(|l| match l {
+            Lane::Busy(s) => self.cfg.chunked_prefill && s.fed < s.prompt.len(),
+            Lane::Idle => false,
+        });
+        let any_decode = self.lanes.iter().any(|l| match l {
+            Lane::Busy(s) => !self.cfg.chunked_prefill || s.fed >= s.prompt.len(),
+            Lane::Idle => false,
+        });
+        if any_prefill && (self.cfg.prefill_priority || !any_decode) {
+            self.prefill_tick()?;
+            Ok(true)
+        } else if any_decode || any_prefill {
+            self.decode_tick()?;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn admit_waiting(&mut self) {
+        let dims = self.backend.dims();
+        let slots = self.backend.slots();
+        let record_gates = self.record_gates;
+        for lane in self.lanes.iter_mut() {
+            if matches!(lane, Lane::Idle) {
+                if let Some(req) = self.queue.pop() {
+                    let cache = LaneCache::with_mirrors(
+                        &dims, slots, self.policy.needs_keys(),
+                        self.policy.is_retrieval());
+                    let nheads = dims.layers * dims.hkv;
+                    *lane = Lane::Busy(Box::new(SeqState {
+                        id: req.id,
+                        tag: req.tag,
+                        prompt: req.prompt,
+                        generated: Vec::new(),
+                        max_new: req.max_new_tokens,
+                        stop_at_eos: req.stop_at_eos,
+                        fed: 0,
+                        cache,
+                        mirror: vec![Vec::new(); nheads],
+                        inject: PendingInject { plans: vec![None; nheads] },
+                        t_submit: Instant::now(),
+                        ttft_us: None,
+                        record: record_gates.then(SeqRecord::default),
+                    }));
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // decode tick
+    // -----------------------------------------------------------------
+    fn decode_tick(&mut self) -> Result<()> {
+        let dims = self.backend.dims();
+        let (l, b, h, m) = (dims.layers, self.backend.batch(), dims.hkv,
+                            self.backend.slots());
+        let trash = (m - 1) as i32;
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        self.valid_buf.iter_mut().for_each(|x| *x = 0.0);
+        self.ws_buf.iter_mut().for_each(|x| *x = trash);
+        let mut chosen: Vec<Option<Vec<usize>>> = vec![None; b];
+        let mut inj_flag = vec![0.0f32; l * b * h];
+        let mut inj_slot = vec![0i32; l * b * h];
+        let mut inj_k = vec![0.0f32; l * b * h * dims.dh];
+        let mut inj_v = vec![0.0f32; l * b * h * dims.dh];
+        let mut any_inject = false;
+        let mut active = 0usize;
+
+        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            // in chunked mode, mid-prefill lanes skip decode ticks
+            if self.cfg.chunked_prefill && seq.fed < seq.prompt.len() {
+                continue;
+            }
+            active += 1;
+            tokens[lane_idx] = seq.stream_token(seq.fed) as i32;
+            pos[lane_idx] = seq.fed as i32;
+            seq.cache.fill_valid(lane_idx, b, &mut self.valid_buf);
+            // apply pending retrieval injections: mark live *before* the
+            // call (the graph writes inject k/v ahead of attention)
+            let mut slots_per_head = Vec::with_capacity(l * h);
+            for li in 0..l {
+                for hi in 0..h {
+                    let flat = li * h + hi;
+                    let base = (li * b + lane_idx) * h + hi;
+                    if let Some((slot, me)) = seq.inject.plans[flat].take() {
+                        inj_flag[base] = 1.0;
+                        inj_slot[base] = slot as i32;
+                        let kb = base * dims.dh;
+                        inj_k[kb..kb + dims.dh].copy_from_slice(&me.key);
+                        inj_v[kb..kb + dims.dh].copy_from_slice(&me.val);
+                        seq.cache.head_mut(li, hi).insert_kv(
+                            slot, me.entry, Some(&me.key), Some(&me.val));
+                        let vb = ((li * b + lane_idx) * h + hi) * m + slot;
+                        self.valid_buf[vb] = 1.0;
+                        any_inject = true;
+                        self.metrics.injections += 1;
+                    }
+                    let head = seq.cache.head(li, hi);
+                    let slot = head
+                        .free_slot()
+                        .context("no free slot (arena invariant broken)")?;
+                    self.ws_buf[base] = slot as i32;
+                    slots_per_head.push(slot);
+                }
+            }
+            chosen[lane_idx] = Some(slots_per_head);
+        }
+        if active == 0 {
+            return Ok(());
+        }
+
+        let want_attn = self.policy.needs_attention() || self.record_gates;
+        let want_kv = self.policy.needs_keys();
+        let t0 = Instant::now();
+        let out = self.backend.decode(&DecodeIn {
+            tokens: &tokens,
+            pos: &pos,
+            valid: &self.valid_buf,
+            write_slot: &self.ws_buf,
+            inject_flag: any_inject.then_some(&inj_flag[..]),
+            inject_slot: any_inject.then_some(&inj_slot[..]),
+            inject_k: any_inject.then_some(&inj_k[..]),
+            inject_v: any_inject.then_some(&inj_v[..]),
+            want_attn,
+            want_kv,
+        })?;
+        self.metrics.step_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        self.metrics.decode_steps += 1;
+        self.metrics.lane_occupancy.push(active as f64);
+
+        let vocab = dims.vocab;
+        let mut finished: Vec<usize> = Vec::new();
+        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            let Some(slots_per_head) = chosen[lane_idx].take() else { continue };
+            let now = seq.fed as i64;
+            for li in 0..l {
+                for hi in 0..h {
+                    let base = (li * b + lane_idx) * h + hi;
+                    let slot = slots_per_head[li * h + hi];
+                    let kb = base * dims.dh;
+                    let entry = SlotEntry {
+                        pos: now,
+                        token: tokens[lane_idx] as u32,
+                        log_beta: out.log_beta[base],
+                        ..Default::default()
+                    };
+                    let head = seq.cache.head_mut(li, hi);
+                    head.insert_kv(
+                        slot, entry,
+                        want_kv.then(|| &out.k_new[kb..kb + dims.dh]).as_deref(),
+                        want_kv.then(|| &out.v_new[kb..kb + dims.dh]).as_deref());
+                    if want_attn {
+                        let arow = &out.attn[base * m..(base + 1) * m];
+                        head.update_attention(arow, ATTN_EMA);
+                    }
+                    // budget enforcement: provisional add, then evict argmin
+                    while head.used > self.cfg.budget {
+                        let Some(victim) = self.policy.select_victim(head, now)
+                        else { break };
+                        if self.policy.is_retrieval() {
+                            let me = MirrorEntry {
+                                entry: head.entries[victim],
+                                key: head.key(victim).to_vec(),
+                                val: head.val(victim).to_vec(),
+                            };
+                            seq.mirror[li * h + hi].push(me);
+                        }
+                        let vpos = head.entries[victim].pos;
+                        head.evict(victim);
+                        self.metrics.evictions += 1;
+                        if let Some(rec) = seq.record.as_mut() {
+                            rec.evictions.push((li * h + hi, vpos, now));
+                        }
+                    }
+                    head.check_invariants();
+                    // retrieval: schedule a re-admission when a mirrored key
+                    // matches the current decoding direction better than the
+                    // weakest resident does
+                    if self.policy.is_retrieval() {
+                        let q_proxy = &out.k_new[kb..kb + dims.dh];
+                        let head = seq.cache.head(li, hi);
+                        if let Some(plan) = plan_injection(
+                            head, &mut seq.mirror[li * h + hi], q_proxy) {
+                            seq.inject.plans[li * h + hi] = Some(plan);
+                        }
+                    }
+                }
+            }
+
+            if let Some(rec) = seq.record.as_mut() {
+                rec.tokens.push(tokens[lane_idx] as u32);
+                let mut row = Vec::with_capacity(l * h);
+                for li in 0..l {
+                    for hi in 0..h {
+                        row.push(out.log_beta[(li * b + lane_idx) * h + hi]);
+                    }
+                }
+                rec.log_betas.push(row);
+            }
+            seq.fed += 1;
+            self.metrics.tokens_prefilled +=
+                (seq.fed <= seq.prompt.len()) as u64;
+            // logits at this step predict stream[fed]; sample once the
+            // prompt is exhausted
+            if seq.fed >= seq.prompt.len() {
+                let logits = &out.logits[lane_idx * vocab..(lane_idx + 1) * vocab];
+                let tok = self.sampler.sample(logits) as u32;
+                seq.generated.push(tok);
+                self.metrics.tokens_decoded += 1;
+                if seq.ttft_us.is_none() {
+                    let us = seq.t_submit.elapsed().as_secs_f64() * 1e6;
+                    seq.ttft_us = Some(us);
+                    self.metrics.ttft_us.record_us(us);
+                }
+                let hit_eos = seq.stop_at_eos && tok == self.eos_token;
+                if hit_eos || seq.generated.len() >= seq.max_new {
+                    finished.push(lane_idx);
+                }
+            }
+        }
+        for lane_idx in finished {
+            self.finish_lane(lane_idx);
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // chunked prefill tick
+    // -----------------------------------------------------------------
+    fn prefill_tick(&mut self) -> Result<()> {
+        let dims = self.backend.dims();
+        let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
+                               self.backend.slots(), self.backend.chunk());
+        let trash = (m - 1) as i32;
+        let mut tokens = vec![0i32; b * c];
+        let mut pos = vec![0i32; b * c];
+        let mut in_mask = vec![0.0f32; b * c];
+        let mut ws = vec![trash; l * b * h * c];
+        self.valid_buf.iter_mut().for_each(|x| *x = 0.0);
+        // per lane: (real_c, per-(l,h) slot lists)
+        let mut chunk_info: Vec<Option<(usize, Vec<Vec<usize>>)>> = vec![None; b];
+
+        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            if seq.fed >= seq.prompt.len() {
+                continue;
+            }
+            let start = seq.fed;
+            let real_c = c.min(seq.prompt.len() - start);
+            for ci in 0..real_c {
+                tokens[lane_idx * c + ci] = seq.prompt[start + ci] as i32;
+                pos[lane_idx * c + ci] = (start + ci) as i32;
+                in_mask[lane_idx * c + ci] = 1.0;
+            }
+            seq.cache.fill_valid(lane_idx, b, &mut self.valid_buf);
+            let mut per_head = Vec::with_capacity(l * h);
+            for li in 0..l {
+                for hi in 0..h {
+                    let head = seq.cache.head(li, hi);
+                    // first real_c free slots for this chunk
+                    let mut free: Vec<usize> = (0..m - 1)
+                        .filter(|&s| !head.live[s])
+                        .take(real_c)
+                        .collect();
+                    ensure!(free.len() == real_c,
+                            "prefill needs {real_c} free slots, found {}",
+                            free.len());
+                    let base = ((li * b + lane_idx) * h + hi) * c;
+                    for ci in 0..real_c {
+                        ws[base + ci] = free[ci] as i32;
+                    }
+                    free.truncate(real_c);
+                    per_head.push(free);
+                }
+            }
+            chunk_info[lane_idx] = Some((real_c, per_head));
+        }
+        if chunk_info.iter().all(Option::is_none) {
+            return Ok(());
+        }
+
+        let out = self.backend.prefill(&PrefillIn {
+            tokens: &tokens,
+            pos: &pos,
+            in_mask: &in_mask,
+            valid: &self.valid_buf,
+            write_slots: &ws,
+        })?;
+        self.metrics.prefill_chunks += 1;
+
+        let vocab = dims.vocab;
+        let mut finished: Vec<usize> = Vec::new();
+        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            let Some((real_c, per_head)) = chunk_info[lane_idx].take() else {
+                continue;
+            };
+            let start = seq.fed;
+            for li in 0..l {
+                for hi in 0..h {
+                    let base = (li * b + lane_idx) * h + hi;
+                    let head = seq.cache.head_mut(li, hi);
+                    // resident slots first absorb the chunk's attention
+                    let arow = &out.attn_slots[base * m..(base + 1) * m];
+                    head.update_attention(arow, ATTN_EMA);
+                    // insert the chunk's tokens
+                    for ci in 0..real_c {
+                        let slot = per_head[li * h + hi][ci];
+                        let cb = base * c + ci;
+                        let kb = cb * dims.dh;
+                        let entry = SlotEntry {
+                            pos: (start + ci) as i64,
+                            token: seq.prompt[start + ci],
+                            log_beta: out.log_beta[cb],
+                            acc_attn: out.attn_chunk[cb],
+                            ema_attn: out.attn_chunk[cb] / real_c as f32,
+                            last_attn: out.attn_chunk[cb] / real_c as f32,
+                        };
+                        head.insert_kv(slot, entry,
+                                       Some(&out.k_chunk[kb..kb + dims.dh]),
+                                       Some(&out.v_chunk[kb..kb + dims.dh]));
+                    }
+                    // compress down to budget (LocRet chunked protocol)
+                    let now = (start + real_c) as i64;
+                    while head.used > self.cfg.budget {
+                        let Some(victim) = self.policy.select_victim(head, now)
+                        else { break };
+                        if self.policy.is_retrieval() {
+                            let me = MirrorEntry {
+                                entry: head.entries[victim],
+                                key: head.key(victim).to_vec(),
+                                val: head.val(victim).to_vec(),
+                            };
+                            seq.mirror[li * h + hi].push(me);
+                        }
+                        let vpos = head.entries[victim].pos;
+                        head.evict(victim);
+                        self.metrics.evictions += 1;
+                        if let Some(rec) = seq.record.as_mut() {
+                            rec.evictions.push((li * h + hi, vpos, now));
+                        }
+                    }
+                    head.check_invariants();
+                }
+            }
+            if let Some(rec) = seq.record.as_mut() {
+                for ci in 0..real_c {
+                    rec.tokens.push(seq.prompt[start + ci]);
+                    let mut row = Vec::with_capacity(l * h);
+                    for li in 0..l {
+                        for hi in 0..h {
+                            row.push(out.log_beta[((li * b + lane_idx) * h + hi)
+                                                  * c + ci]);
+                        }
+                    }
+                    rec.log_betas.push(row);
+                }
+            }
+            seq.fed += real_c;
+            self.metrics.tokens_prefilled += real_c as u64;
+            if seq.fed >= seq.prompt.len() {
+                // prompt complete: the last real position's logits sample the
+                // first generated token
+                let lb = (lane_idx * c + real_c - 1) * vocab;
+                let tok = self.sampler.sample(&out.logits[lb..lb + vocab]) as u32;
+                seq.generated.push(tok);
+                self.metrics.tokens_decoded += 1;
+                let us = seq.t_submit.elapsed().as_secs_f64() * 1e6;
+                seq.ttft_us = Some(us);
+                self.metrics.ttft_us.record_us(us);
+                let hit_eos = seq.stop_at_eos && tok == self.eos_token;
+                if hit_eos || seq.generated.len() >= seq.max_new {
+                    finished.push(lane_idx);
+                }
+            }
+        }
+        for lane_idx in finished {
+            self.finish_lane(lane_idx);
+        }
+        Ok(())
+    }
+
+    fn finish_lane(&mut self, lane_idx: usize) {
+        let lane = std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle);
+        let Lane::Busy(mut seq) = lane else { return };
+        if let Some(rec) = seq.record.take() {
+            self.last_record = Some(rec);
+        }
+        let e2e = seq.t_submit.elapsed().as_secs_f64() * 1e6;
+        self.metrics.e2e_us.record_us(e2e);
+        self.metrics.requests_finished += 1;
+        let finish = if seq.stop_at_eos
+            && seq.generated.last() == Some(&self.eos_token)
+        {
+            FinishReason::Eos
+        } else {
+            FinishReason::Length
+        };
+        self.responses.push(Response {
+            id: seq.id,
+            tag: seq.tag,
+            prompt_len: seq.prompt.len(),
+            tokens: seq.generated,
+            finish,
+            ttft_us: seq.ttft_us.unwrap_or(e2e),
+            e2e_us: e2e,
+        });
+    }
+
+    /// Live cache snapshot of a lane for the retention-inspection tooling
+    /// (Figs 4/5/13-19): per (layer, head) the live (pos, token, log_beta).
+    pub fn retention_snapshot(&self, lane_idx: usize)
+        -> Option<Vec<Vec<(i64, u32, f32)>>> {
+        match &self.lanes[lane_idx] {
+            Lane::Idle => None,
+            Lane::Busy(seq) => Some(
+                seq.cache
+                    .heads
+                    .iter()
+                    .map(|head| {
+                        head.live_slots()
+                            .map(|s| {
+                                let e = &head.entries[s];
+                                (e.pos, e.token, e.log_beta)
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            ),
+        }
+    }
+}
+
+/// Retrieval re-admission rule: among mirrored (evicted) tokens, find the
+/// one whose key best matches the current key direction; if it beats the
+/// weakest resident's match, swap them (evict resident now, inject next
+/// tick into the freed slot).
+fn plan_injection(head: &crate::kvcache::HeadState,
+                  mirror: &mut Vec<MirrorEntry>,
+                  q_proxy: &[f32]) -> Option<(usize, MirrorEntry)> {
+    if mirror.is_empty() || head.used == 0 {
+        return None;
+    }
+    let cos = |a: &[f32], b: &[f32]| -> f32 {
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        dot / (na * nb)
+    };
+    let (best_idx, best_sim) = mirror
+        .iter()
+        .enumerate()
+        .map(|(i, me)| (i, cos(&me.key, q_proxy)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+    let (worst_slot, worst_sim) = head
+        .live_slots()
+        .map(|s| (s, cos(head.key(s), q_proxy)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+    if best_sim > worst_sim + 0.05 {
+        let me = mirror.swap_remove(best_idx);
+        Some((worst_slot, me))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockBackend;
+
+    fn engine(policy: &str, budget: usize, batch: usize)
+        -> Engine<MockBackend> {
+        let mut cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch,
+            max_new_tokens: 8,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let backend = MockBackend::new(batch, budget + 4);
+        Engine::new(backend, cfg, 2).unwrap()
+    }
+
+    #[test]
+    fn generates_mock_successor_tokens() {
+        let mut e = engine("trimkv", 16, 2);
+        e.submit(Request::new(1, vec![1, 10, 20], 4)).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 1);
+        // mock emits successor of last fed token each step: 21, 22, 23, 24
+        assert_eq!(rs[0].tokens, vec![21, 22, 23, 24]);
+        assert_eq!(rs[0].finish, FinishReason::Length);
+        assert_eq!(rs[0].prompt_len, 3);
+    }
+
+    #[test]
+    fn eos_finishes_early() {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 16,
+            batch: 1,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let backend = MockBackend::new(1, 20).with_eos_after(5);
+        let mut e = Engine::new(backend, cfg, 2).unwrap();
+        e.submit(Request::new(7, vec![1, 3, 5], 50)).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs[0].finish, FinishReason::Eos);
+        assert_eq!(*rs[0].tokens.last().unwrap(), 2);
+        assert!(rs[0].tokens.len() < 50);
+    }
+
+    #[test]
+    fn budget_is_never_exceeded() {
+        let mut e = engine("trimkv", 8, 1);
+        e.submit(Request::new(1, (0..30).map(|i| 32 + i).collect(), 10)).unwrap();
+        while !e.idle() {
+            e.tick().unwrap();
+            if let Lane::Busy(seq) = &e.lanes[0] {
+                for head in &seq.cache.heads {
+                    assert!(head.used <= 8, "budget exceeded: {}", head.used);
+                }
+            }
+        }
+        assert!(e.metrics.evictions > 0);
+    }
+
+    #[test]
+    fn continuous_batching_fills_lanes() {
+        let mut e = engine("streaming_llm", 16, 2);
+        for i in 0..5 {
+            e.submit(Request::new(i, vec![1, 40 + i as u32], 3)).unwrap();
+        }
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 5);
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        // with 2 lanes and 5 requests, peak occupancy must reach 2
+        assert!(e.metrics.lane_occupancy.max() >= 2.0);
+    }
+
+    #[test]
+    fn chunked_prefill_path_matches_decode_path_token_count() {
+        for chunked in [false, true] {
+            let cfg = EngineConfig {
+                policy: "h2o".into(),
+                budget: 24,
+                batch: 1,
+                chunked_prefill: chunked,
+                ..Default::default()
+            };
+            let backend = MockBackend::new(1, 24 + 20);
+            let mut e = Engine::new(backend, cfg, 2).unwrap();
+            let prompt: Vec<u32> = (0..37).map(|i| 32 + i).collect();
+            e.submit(Request::new(1, prompt, 5)).unwrap();
+            let rs = e.run_to_completion().unwrap();
+            assert_eq!(rs[0].tokens.len(), 5, "chunked={chunked}");
+            if chunked {
+                assert!(e.metrics.prefill_chunks >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn fullkv_never_evicts_and_overflows_gracefully() {
+        // fullkv with a big enough arena: no evictions
+        let cfg = EngineConfig {
+            policy: "fullkv".into(),
+            budget: 64,
+            batch: 1,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let backend = MockBackend::new(1, 80);
+        let mut e = Engine::new(backend, cfg, 2).unwrap();
+        e.submit(Request::new(1, (0..40).map(|i| 32 + i).collect(), 8)).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.evictions, 0);
+    }
+
+    #[test]
+    fn metrics_track_tokens() {
+        let mut e = engine("trimkv", 16, 1);
+        e.submit(Request::new(1, vec![1, 2, 3, 4, 5], 6)).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.tokens_decoded, 6);
+        assert_eq!(e.metrics.tokens_prefilled, 5);
+        assert_eq!(e.metrics.requests_finished, 1);
+    }
+
+    #[test]
+    fn retention_snapshot_exposes_live_tokens() {
+        let mut e = engine("trimkv", 16, 1);
+        e.submit(Request::new(1, vec![1, 33, 44], 64)).unwrap();
+        // run a few ticks but do not finish
+        for _ in 0..5 {
+            e.tick().unwrap();
+        }
+        let snap = e.retention_snapshot(0).unwrap();
+        assert_eq!(snap.len(), 4 * 2); // layers * hkv
+        assert!(!snap[0].is_empty());
+        let (pos0, tok0, lb0) = snap[0][0];
+        assert_eq!(pos0, 0);
+        assert_eq!(tok0, 1);
+        assert!(lb0 < 0.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Token sampler: greedy, temperature, and top-k sampling over raw logits.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug)]
+pub struct Sampler {
+    pub temperature: f64,
+    pub top_k: usize,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(temperature: f64, top_k: usize, seed: u64) -> Sampler {
+        Sampler { temperature, top_k, rng: Rng::new(seed ^ 0x5a17) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if self.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // softmax with temperature over the (optionally top-k-truncated) set
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.top_k > 0 && self.top_k < logits.len() {
+            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(self.top_k);
+        }
+        let t = self.temperature as f32;
+        let mx = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> =
+            idx.iter().map(|&i| (((logits[i] - mx) / t) as f64).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let mut r = self.rng.f64() * total;
+        for (w, &i) in weights.iter().zip(&idx) {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        *idx.last().unwrap()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(0.0, 0, 1);
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 2.9]), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_respects_top_k() {
+        let mut s = Sampler::new(1.0, 2, 7);
+        let logits = [10.0, 9.5, -50.0, -50.0];
+        for _ in 0..100 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut s = Sampler::new(0.05, 0, 3);
+        let logits = [1.0, 2.0, 0.0];
+        let hits = (0..200).filter(|_| s.sample(&logits) == 1).count();
+        assert!(hits > 190, "hits {hits}");
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+    }
+}

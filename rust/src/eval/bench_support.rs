@@ -1,0 +1,69 @@
+//! Shared plumbing for the `cargo bench` paper-table harnesses.
+//!
+//! Benches run against the real AOT artifacts; when `artifacts/` has not
+//! been built yet they print SKIPPED and exit 0 so `cargo bench` stays
+//! green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use crate::config::EngineConfig;
+use crate::model_meta::ModelMeta;
+use crate::runtime::PjrtBackend;
+use crate::vocab::Vocab;
+
+pub struct BenchCtx {
+    pub meta: ModelMeta,
+    pub vocab: Vocab,
+    pub cfg: EngineConfig,
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TRIMKV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Load meta + vocab, or None (with a SKIPPED banner) when absent.
+pub fn load_ctx(name: &str) -> Option<BenchCtx> {
+    let dir = artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        println!("bench {name}: SKIPPED (no artifacts; run `make artifacts`)");
+        return None;
+    }
+    let meta = ModelMeta::load(&dir).expect("meta.json parse");
+    let vocab = Vocab::load(&dir.join("vocab.json")).expect("vocab.json parse");
+    let cfg = EngineConfig { artifacts_dir: dir, ..Default::default() };
+    Some(BenchCtx { meta, vocab, cfg })
+}
+
+impl BenchCtx {
+    /// Backend sized for the largest budget in a sweep.
+    pub fn backend(&self, batch: usize, min_slots: usize,
+                   gate_variant: &str) -> PjrtBackend {
+        let spec = self
+            .meta
+            .pick("decode", batch, min_slots, "mlp")
+            .unwrap_or_else(|| panic!("no artifact for b={batch} m>={min_slots}"));
+        PjrtBackend::load(&self.meta, spec.b, spec.m, gate_variant, "mlp", true)
+            .expect("backend load")
+    }
+
+    /// Largest slot count exported for this batch size.
+    pub fn max_slots(&self, batch: usize) -> usize {
+        self.meta
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode" && a.b == batch)
+            .map(|a| a.m)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Episodes-per-cell for benches; override with TRIMKV_BENCH_N.
+pub fn bench_n(default: usize) -> usize {
+    std::env::var("TRIMKV_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}

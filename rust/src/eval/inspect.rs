@@ -1,0 +1,212 @@
+//! Retention-trace dumps behind the paper's qualitative figures:
+//!   Fig 4 / 11 / 12 — per-head retention matrices beta_i^(t-i) and the
+//!                      eviction decision matrices alpha_ti
+//!   Fig 5a/b        — per-token mean retention + top/bottom token tables
+//!   Fig 5c          — layer/head sparsity heatmap
+//!   Figs 13-19      — kept-vs-evicted token visualizations per head
+
+use crate::engine::SeqRecord;
+use crate::util::benchkit::Table;
+use crate::vocab::Vocab;
+
+/// beta_i^(t-i) lower-triangular matrix for one head as CSV (Fig 4 top).
+pub fn retention_matrix_csv(rec: &SeqRecord, head: usize) -> String {
+    let t_len = rec.tokens.len();
+    let mut out = String::new();
+    for t in 0..t_len {
+        let mut row = Vec::with_capacity(t_len);
+        for i in 0..t_len {
+            if i > t {
+                row.push("0".to_string());
+            } else {
+                let lb = rec.log_betas[i][head];
+                let val = ((t - i) as f32 * lb).exp();
+                row.push(format!("{val:.4}"));
+            }
+        }
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// alpha_ti eviction matrix for one head as CSV (Fig 4 bottom): cell (t, i)
+/// is 1 while token i is still cached at step t.
+pub fn eviction_matrix_csv(rec: &SeqRecord, head: usize) -> String {
+    let t_len = rec.tokens.len();
+    // eviction step per position (default: never evicted)
+    let mut evicted_at = vec![i64::MAX; t_len];
+    for &(h, pos, step) in &rec.evictions {
+        if h == head && (pos as usize) < t_len {
+            evicted_at[pos as usize] = step;
+        }
+    }
+    let mut out = String::new();
+    for t in 0..t_len {
+        let mut row = Vec::with_capacity(t_len);
+        for i in 0..t_len {
+            let alive = i <= t && (t as i64) < evicted_at[i];
+            row.push(if alive { "1" } else { "0" }.to_string());
+        }
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig 5a/b: mean retention score per token (averaged over heads), plus the
+/// top/bottom-k token tables.
+pub fn token_retention_table(rec: &SeqRecord, vocab: &Vocab, k: usize) -> Table {
+    let n_heads = rec.log_betas.first().map(Vec::len).unwrap_or(0);
+    let mut scored: Vec<(usize, f32)> = rec
+        .log_betas
+        .iter()
+        .enumerate()
+        .map(|(i, lbs)| {
+            let beta_mean: f32 =
+                lbs.iter().map(|lb| lb.exp()).sum::<f32>() / n_heads.max(1) as f32;
+            (i, beta_mean)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut t = Table::new(&["rank", "pos", "token", "mean beta"]);
+    for (rank, &(pos, beta)) in scored.iter().take(k).enumerate() {
+        t.row(vec![format!("top{}", rank + 1), pos.to_string(),
+                   vocab.name(rec.tokens[pos]), format!("{beta:.4}")]);
+    }
+    for (rank, &(pos, beta)) in scored.iter().rev().take(k).enumerate() {
+        t.row(vec![format!("bot{}", rank + 1), pos.to_string(),
+                   vocab.name(rec.tokens[pos]), format!("{beta:.4}")]);
+    }
+    t
+}
+
+/// Fig 5c: per-head sparsity `1 - 2/(T(T+1)) * sum_{i<=t} beta_i^(t-i)`.
+pub fn sparsity_table(rec: &SeqRecord, layers: usize, hkv: usize) -> Table {
+    let t_len = rec.tokens.len();
+    let mut header: Vec<String> = vec!["layer".into()];
+    header.extend((0..hkv).map(|h| format!("head{h}")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(&hdr);
+    for l in 0..layers {
+        let mut row = vec![format!("{l}")];
+        for h in 0..hkv {
+            let head = l * hkv + h;
+            let mut total = 0.0f64;
+            for t in 0..t_len {
+                for i in 0..=t {
+                    total += (((t - i) as f32) * rec.log_betas[i][head]).exp() as f64;
+                }
+            }
+            let denom = (t_len * (t_len + 1)) as f64 / 2.0;
+            row.push(format!("{:.3}", 1.0 - total / denom));
+        }
+        table.row(row);
+    }
+    table
+}
+
+/// Figs 13-19: which prompt tokens survive in a head's cache at the end.
+/// `kept` comes from Engine::retention_snapshot.
+pub fn kept_tokens_render(rec: &SeqRecord, kept_pos: &[i64],
+                          vocab: &Vocab) -> String {
+    let kept: std::collections::BTreeSet<i64> = kept_pos.iter().copied().collect();
+    rec.tokens
+        .iter()
+        .enumerate()
+        .map(|(i, &tok)| {
+            let name = vocab.name(tok);
+            if kept.contains(&(i as i64)) {
+                format!("[{name}]")
+            } else {
+                name
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> SeqRecord {
+        // 4 tokens, 2 heads; head 0 retains strongly, head 1 decays fast
+        SeqRecord {
+            tokens: vec![1, 40, 41, 2],
+            log_betas: vec![
+                vec![-0.01, -2.0],
+                vec![-0.02, -1.5],
+                vec![-0.01, -2.5],
+                vec![-0.03, -1.0],
+            ],
+            evictions: vec![(1, 0, 2)], // head 1 evicted pos 0 at step 2
+        }
+    }
+
+    #[test]
+    fn retention_matrix_is_lower_triangular_and_decaying() {
+        let csv = retention_matrix_csv(&record(), 0);
+        let rows: Vec<Vec<f32>> = csv
+            .lines()
+            .map(|l| l.split(',').map(|x| x.parse().unwrap()).collect())
+            .collect();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0][1], 0.0); // upper triangle empty
+        assert_eq!(rows[1][1], 1.0); // fresh token at full weight
+        assert!(rows[3][0] < rows[1][0]); // older -> decayed
+    }
+
+    #[test]
+    fn eviction_matrix_respects_monotonicity() {
+        let csv = eviction_matrix_csv(&record(), 1);
+        let rows: Vec<Vec<u8>> = csv
+            .lines()
+            .map(|l| l.split(',').map(|x| x.parse().unwrap()).collect())
+            .collect();
+        // pos 0 alive at steps 0 and 1, evicted from step 2 on
+        assert_eq!(rows[0][0], 1);
+        assert_eq!(rows[1][0], 1);
+        assert_eq!(rows[2][0], 0);
+        assert_eq!(rows[3][0], 0);
+        // monotone: once dead, stays dead (paper alpha constraint)
+        for i in 0..4 {
+            for t in 1..4 {
+                assert!(rows[t][i] <= rows[t - 1][i] || t <= i);
+            }
+        }
+        // head 0 never evicts
+        let csv0 = eviction_matrix_csv(&record(), 0);
+        assert!(!csv0.lines().last().unwrap().starts_with('0'));
+    }
+
+    #[test]
+    fn token_table_ranks_by_mean_beta() {
+        let v = Vocab::builtin();
+        let t = token_retention_table(&record(), &v, 2);
+        let s = t.render();
+        assert!(s.contains("top1"));
+        assert!(s.contains("bot1"));
+    }
+
+    #[test]
+    fn sparsity_in_unit_range() {
+        let t = sparsity_table(&record(), 1, 2);
+        let csv = t.to_csv();
+        let line = csv.lines().nth(1).unwrap();
+        let cells: Vec<&str> = line.split(',').collect();
+        for c in &cells[1..] {
+            let x: f64 = c.parse().unwrap();
+            assert!((0.0..=1.0).contains(&x), "sparsity {x}");
+        }
+    }
+
+    #[test]
+    fn kept_render_marks_survivors() {
+        let v = Vocab::builtin();
+        let s = kept_tokens_render(&record(), &[0, 2], &v);
+        assert!(s.starts_with("[<bos>]"));
+        assert!(s.contains("[s9]")); // token 41 = sym 9 kept
+        assert!(s.contains(" s8 ")); // token 40 evicted -> unbracketed
+    }
+}

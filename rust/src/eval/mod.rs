@@ -1,0 +1,202 @@
+//! Evaluation harness: runs workload suites through the engine under a
+//! (policy, budget) grid and renders the paper's tables/figures
+//! (DESIGN.md §6 experiment index).  `inspect` holds the retention-trace
+//! dumps behind Figs 4/5/11-19.
+
+pub mod bench_support;
+pub mod inspect;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::runtime::ModelBackend;
+use crate::scheduler::Request;
+use crate::util::benchkit::Table;
+use crate::util::stats::Percentiles;
+use crate::vocab::Vocab;
+use crate::workload::suites::Suite;
+use crate::workload::{grade, Episode};
+
+/// Aggregate outcome of one (suite, policy, budget) cell.
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub suite: String,
+    pub task: String,
+    pub policy: String,
+    pub budget: usize,
+    pub n: usize,
+    pub score: f64,          // mean grade in [0, 1]
+    pub tok_s: f64,          // decode throughput
+    pub decode_ms_p50: f64,  // per-step latency
+    pub e2e_ms_p50: f64,
+    pub evictions: u64,
+    pub wall_s: f64,
+}
+
+/// Run one suite through an engine configured for (policy, budget);
+/// consumes and returns the backend so artifact compilation is reused
+/// across grid cells.
+pub fn run_suite<B: ModelBackend>(
+    backend: B,
+    base_cfg: &EngineConfig,
+    vocab: &Vocab,
+    policy: &str,
+    budget: usize,
+    suite: &Suite,
+) -> Result<(SuiteResult, B)> {
+    let mut cfg = base_cfg.clone();
+    cfg.policy = policy.to_string();
+    cfg.budget = budget;
+    cfg.max_new_tokens = suite.max_new_tokens;
+    cfg.validate()?;
+    let mut engine = Engine::new(backend, cfg, vocab.eos())?;
+    let t0 = std::time::Instant::now();
+    for (i, ep) in suite.episodes.iter().enumerate() {
+        let mut req = Request::new(i as u64, ep.prompt.clone(),
+                                   suite.max_new_tokens);
+        req.tag = ep.task.clone();
+        engine
+            .submit(req)
+            .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?;
+    }
+    let responses = engine.run_to_completion()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut score_sum = 0.0;
+    let mut e2e = Percentiles::default();
+    for resp in &responses {
+        let ep: &Episode = &suite.episodes[resp.id as usize];
+        score_sum += grade(ep, &resp.tokens, vocab);
+        e2e.push(resp.e2e_us / 1e3);
+    }
+    let n = suite.episodes.len();
+    let m = &engine.metrics;
+    let task = suite
+        .episodes
+        .first()
+        .map(|e| e.task.clone())
+        .unwrap_or_default();
+    let result = SuiteResult {
+        suite: suite.name.to_string(),
+        task,
+        policy: policy.to_string(),
+        budget,
+        n,
+        score: if n > 0 { score_sum / n as f64 } else { 0.0 },
+        tok_s: m.tokens_decoded as f64 / wall_s.max(1e-9),
+        decode_ms_p50: m.step_us.mean() / 1e3,
+        e2e_ms_p50: e2e.pct(50.0),
+        evictions: m.evictions,
+        wall_s,
+    };
+    Ok((result, engine.into_backend()))
+}
+
+/// Generic results table (all paper-table benches pivot from this).
+pub fn results_table(results: &[SuiteResult]) -> Table {
+    let mut t = Table::new(&[
+        "suite", "task", "policy", "budget", "n", "score", "tok/s",
+        "step_ms", "e2e_ms_p50", "evictions",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.suite.clone(),
+            r.task.clone(),
+            r.policy.clone(),
+            r.budget.to_string(),
+            r.n.to_string(),
+            format!("{:.3}", r.score),
+            format!("{:.1}", r.tok_s),
+            format!("{:.2}", r.decode_ms_p50),
+            format!("{:.1}", r.e2e_ms_p50),
+            r.evictions.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Pareto pivot (Fig 3/6/7): rows = policy, columns = budgets, cells = score.
+pub fn pareto_table(results: &[SuiteResult], budgets: &[usize]) -> Table {
+    let mut header: Vec<String> = vec!["policy".into()];
+    header.extend(budgets.iter().map(|b| format!("b={b}")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&hdr);
+    let mut policies: Vec<String> =
+        results.iter().map(|r| r.policy.clone()).collect();
+    policies.dedup();
+    let mut seen = std::collections::BTreeSet::new();
+    for p in policies {
+        if !seen.insert(p.clone()) {
+            continue;
+        }
+        let mut row = vec![p.clone()];
+        for &b in budgets {
+            let cell = results
+                .iter()
+                .find(|r| r.policy == p && r.budget == b)
+                .map(|r| format!("{:.3}", r.score))
+                .unwrap_or_else(|| "-".into());
+            row.push(cell);
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Throughput pivot (Table 6): method rows, throughput + decode-time columns.
+pub fn throughput_table(results: &[SuiteResult]) -> Table {
+    let mut t = Table::new(&[
+        "method", "budget", "ctx", "tok/s", "decode_ms/step", "total_s",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.policy.clone(),
+            r.budget.to_string(),
+            r.task.clone(),
+            format!("{:.1}", r.tok_s),
+            format!("{:.2}", r.decode_ms_p50),
+            format!("{:.2}", r.wall_s),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockBackend;
+    use crate::workload::suites;
+
+    #[test]
+    fn harness_runs_grid_and_reuses_backend() {
+        let vocab = Vocab::builtin();
+        let base = EngineConfig {
+            batch: 2,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let mut backend = MockBackend::new(2, 40);
+        let suite = suites::math(&vocab, "gsm8k", 4, 3);
+        let mut results = Vec::new();
+        for policy in ["trimkv", "streaming_llm"] {
+            for budget in [16, 32] {
+                let (r, be) = run_suite(backend, &base, &vocab, policy,
+                                        budget, &suite).unwrap();
+                backend = be;
+                assert_eq!(r.n, 4);
+                assert!(r.score >= 0.0 && r.score <= 1.0);
+                results.push(r);
+            }
+        }
+        assert_eq!(results.len(), 4);
+        let table = results_table(&results);
+        let s = table.render();
+        assert!(s.contains("trimkv"));
+        assert!(s.contains("streaming_llm"));
+        let p = pareto_table(&results, &[16, 32]);
+        assert_eq!(p.render().lines().count(), 2 + 2);
+        let tt = throughput_table(&results);
+        assert!(tt.to_csv().lines().count() == 5);
+    }
+}

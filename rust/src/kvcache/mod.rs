@@ -1,0 +1,272 @@
+//! Slotted KV-cache manager (L3 state behind the paper's eviction policies).
+//!
+//! The device holds the actual K/V tensors in `[L, B, Hkv, M, dh]` slot
+//! arenas; this module owns the *host-side* bookkeeping per (lane, layer,
+//! head): which slot is live, each cached token's position/id, its retention
+//! score `log beta` (TRIM-KV), accumulated/last attention (H2O/SnapKV/R-KV)
+//! and an optional mirror of the key vector (R-KV/KeyDiff/retrieval).
+//!
+//! Invariants (enforced in debug + property tests):
+//!   - `used == live.count_ones()`
+//!   - a slot is never double-occupied, the trash slot is never live
+//!   - evicting removes exactly one live slot; once evicted a token never
+//!     re-enters except through the explicit retrieval `inject` path
+//!     (the paper's monotonicity constraint alpha_ti >= alpha_(t+1)i).
+
+use crate::model_meta::ModelDims;
+
+/// Host bookkeeping for one cached token in one head.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotEntry {
+    pub pos: i64,       // token index i in the sequence
+    pub token: u32,     // token id (for retention dumps / debugging)
+    pub log_beta: f32,  // retention gate output, <= 0
+    pub acc_attn: f32,  // sum of attention received (H2O signal)
+    pub ema_attn: f32,  // exponentially-averaged attention (SnapKV signal)
+    pub last_attn: f32, // attention received on the latest step
+}
+
+/// One (layer, head) slot table for one lane.
+#[derive(Debug, Clone)]
+pub struct HeadState {
+    pub entries: Vec<SlotEntry>,
+    pub live: Vec<bool>,
+    pub used: usize,
+    /// key-vector mirror, `slots * dh` (empty unless the policy needs keys)
+    pub keys: Vec<f32>,
+    /// value-vector mirror (retrieval baseline only)
+    pub vals: Vec<f32>,
+    pub dh: usize,
+}
+
+impl HeadState {
+    pub fn new(slots: usize, dh: usize, mirror_keys: bool) -> HeadState {
+        Self::with_mirrors(slots, dh, mirror_keys, false)
+    }
+
+    pub fn with_mirrors(slots: usize, dh: usize, mirror_keys: bool,
+                        mirror_values: bool) -> HeadState {
+        HeadState {
+            entries: vec![SlotEntry::default(); slots],
+            live: vec![false; slots],
+            used: 0,
+            keys: if mirror_keys { vec![0.0; slots * dh] } else { Vec::new() },
+            vals: if mirror_values { vec![0.0; slots * dh] } else { Vec::new() },
+            dh,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.live.len()
+    }
+
+    /// First free slot, skipping the reserved trash slot (last index).
+    pub fn free_slot(&self) -> Option<usize> {
+        (0..self.slots() - 1).find(|&s| !self.live[s])
+    }
+
+    pub fn insert(&mut self, slot: usize, entry: SlotEntry, key: Option<&[f32]>) {
+        self.insert_kv(slot, entry, key, None)
+    }
+
+    pub fn insert_kv(&mut self, slot: usize, entry: SlotEntry,
+                     key: Option<&[f32]>, val: Option<&[f32]>) {
+        debug_assert!(slot < self.slots() - 1, "insert into trash slot");
+        if !self.live[slot] {
+            self.used += 1;
+            self.live[slot] = true;
+        }
+        self.entries[slot] = entry;
+        if let (Some(k), false) = (key, self.keys.is_empty()) {
+            self.keys[slot * self.dh..(slot + 1) * self.dh].copy_from_slice(k);
+        }
+        if let (Some(v), false) = (val, self.vals.is_empty()) {
+            self.vals[slot * self.dh..(slot + 1) * self.dh].copy_from_slice(v);
+        }
+    }
+
+    pub fn val(&self, slot: usize) -> &[f32] {
+        &self.vals[slot * self.dh..(slot + 1) * self.dh]
+    }
+
+    pub fn evict(&mut self, slot: usize) {
+        debug_assert!(self.live[slot], "evicting a dead slot");
+        self.live[slot] = false;
+        self.used -= 1;
+    }
+
+    pub fn clear(&mut self) {
+        self.live.iter_mut().for_each(|b| *b = false);
+        self.used = 0;
+    }
+
+    pub fn live_slots(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.slots()).filter(|&s| self.live[s])
+    }
+
+    pub fn key(&self, slot: usize) -> &[f32] {
+        &self.keys[slot * self.dh..(slot + 1) * self.dh]
+    }
+
+    /// TRIM-KV decayed retention score in log domain:
+    /// log(beta_i^(now - i)) = (now - i) * log_beta_i  (paper §4.3).
+    pub fn retention_score(&self, slot: usize, now: i64) -> f32 {
+        let e = &self.entries[slot];
+        ((now - e.pos) as f32) * e.log_beta
+    }
+
+    /// Fold this step's attention row into the running statistics.
+    pub fn update_attention(&mut self, attn_row: &[f32], ema: f32) {
+        for s in self.live_slots().collect::<Vec<_>>() {
+            let a = attn_row[s];
+            let e = &mut self.entries[s];
+            e.acc_attn += a;
+            e.ema_attn = ema * e.ema_attn + (1.0 - ema) * a;
+            e.last_attn = a;
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    pub fn check_invariants(&self) {
+        assert_eq!(self.used, self.live.iter().filter(|&&b| b).count());
+        assert!(!self.live[self.slots() - 1], "trash slot went live");
+    }
+    #[cfg(not(debug_assertions))]
+    pub fn check_invariants(&self) {}
+}
+
+/// All (layer, head) tables for one batch lane.
+#[derive(Debug, Clone)]
+pub struct LaneCache {
+    pub heads: Vec<HeadState>, // layers * hkv, row-major (l, h)
+    pub layers: usize,
+    pub hkv: usize,
+}
+
+impl LaneCache {
+    pub fn new(dims: &ModelDims, slots: usize, mirror_keys: bool) -> LaneCache {
+        Self::with_mirrors(dims, slots, mirror_keys, false)
+    }
+
+    pub fn with_mirrors(dims: &ModelDims, slots: usize, mirror_keys: bool,
+                        mirror_values: bool) -> LaneCache {
+        let n = dims.layers * dims.hkv;
+        LaneCache {
+            heads: (0..n)
+                .map(|_| HeadState::with_mirrors(slots, dims.dh, mirror_keys,
+                                                 mirror_values))
+                .collect(),
+            layers: dims.layers,
+            hkv: dims.hkv,
+        }
+    }
+
+    pub fn head(&self, l: usize, h: usize) -> &HeadState {
+        &self.heads[l * self.hkv + h]
+    }
+    pub fn head_mut(&mut self, l: usize, h: usize) -> &mut HeadState {
+        &mut self.heads[l * self.hkv + h]
+    }
+
+    pub fn clear(&mut self) {
+        self.heads.iter_mut().for_each(HeadState::clear);
+    }
+
+    /// Total live tokens across heads (diagnostics).
+    pub fn total_live(&self) -> usize {
+        self.heads.iter().map(|h| h.used).sum()
+    }
+
+    /// Write this lane's validity bits into the flat `[L, B, H, M]` buffer
+    /// the decode graph consumes.
+    pub fn fill_valid(&self, lane: usize, batch: usize, valid: &mut [f32]) {
+        let m = self.heads[0].slots();
+        for l in 0..self.layers {
+            for h in 0..self.hkv {
+                let head = self.head(l, h);
+                let base = ((l * batch + lane) * self.hkv + h) * m;
+                for s in 0..m {
+                    valid[base + s] = if head.live[s] { 1.0 } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 512, d: 128, layers: 2, hq: 4, hkv: 2, dh: 4,
+                    ffn: 256, gate_hidden: 48 }
+    }
+
+    #[test]
+    fn insert_evict_lifecycle() {
+        let mut h = HeadState::new(8, 4, true);
+        assert_eq!(h.free_slot(), Some(0));
+        h.insert(0, SlotEntry { pos: 0, token: 5, log_beta: -0.1, ..Default::default() },
+                 Some(&[1., 2., 3., 4.]));
+        h.insert(1, SlotEntry { pos: 1, token: 6, log_beta: -0.2, ..Default::default() },
+                 Some(&[5., 6., 7., 8.]));
+        assert_eq!(h.used, 2);
+        assert_eq!(h.free_slot(), Some(2));
+        assert_eq!(h.key(1), &[5., 6., 7., 8.]);
+        h.evict(0);
+        assert_eq!(h.used, 1);
+        assert_eq!(h.free_slot(), Some(0));
+        h.check_invariants();
+    }
+
+    #[test]
+    fn trash_slot_is_never_offered() {
+        let h = HeadState::new(4, 4, false);
+        // fill 0..2; slot 3 (trash) must never be returned
+        let mut h2 = h.clone();
+        for s in 0..3 {
+            h2.insert(s, SlotEntry::default(), None);
+        }
+        assert_eq!(h2.free_slot(), None);
+    }
+
+    #[test]
+    fn retention_score_decays_with_age() {
+        let mut h = HeadState::new(4, 4, false);
+        h.insert(0, SlotEntry { pos: 0, log_beta: -0.5, ..Default::default() }, None);
+        h.insert(1, SlotEntry { pos: 8, log_beta: -0.5, ..Default::default() }, None);
+        // same beta, older token scores lower
+        assert!(h.retention_score(0, 10) < h.retention_score(1, 10));
+        // higher beta wins at equal age
+        h.insert(2, SlotEntry { pos: 8, log_beta: -0.01, ..Default::default() }, None);
+        assert!(h.retention_score(2, 10) > h.retention_score(1, 10));
+    }
+
+    #[test]
+    fn attention_stats_update_only_live() {
+        let mut h = HeadState::new(4, 4, false);
+        h.insert(0, SlotEntry::default(), None);
+        h.insert(2, SlotEntry::default(), None);
+        h.update_attention(&[0.5, 9.0, 0.25, 9.0], 0.9);
+        assert_eq!(h.entries[0].acc_attn, 0.5);
+        assert_eq!(h.entries[1].acc_attn, 0.0); // dead slot untouched
+        assert_eq!(h.entries[2].last_attn, 0.25);
+        assert!((h.entries[2].ema_attn - 0.025).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lane_valid_mask_layout() {
+        let d = dims();
+        let mut lane = LaneCache::new(&d, 4, false);
+        lane.head_mut(1, 0).insert(2, SlotEntry::default(), None);
+        let batch = 3;
+        let mut valid = vec![0.0; d.layers * batch * d.hkv * 4];
+        lane.fill_valid(1, batch, &mut valid);
+        // index (l=1, lane=1, h=0, s=2)
+        let idx = ((1 * batch + 1) * d.hkv + 0) * 4 + 2;
+        assert_eq!(valid[idx], 1.0);
+        assert_eq!(valid.iter().filter(|&&x| x > 0.0).count(), 1);
+        assert_eq!(lane.total_live(), 1);
+    }
+}

@@ -1,0 +1,25 @@
+//! TRIM-KV: learnable token-retention eviction for memory-bounded KV caches
+//! (reproduction of Bui et al., 2025), served by a rust coordinator over
+//! AOT-compiled JAX/Pallas graphs via PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! - [`util`] — offline substrates (json/toml/cli/rng/stats/proptest/bench)
+//! - [`vocab`] / [`model_meta`] — artifact interchange contracts with python
+//! - [`runtime`] — PJRT client, HLO loading, the ModelBackend abstraction
+//! - [`kvcache`] / [`policy`] — slot cache manager + eviction policies
+//! - [`engine`] / [`scheduler`] / [`server`] — the serving coordinator
+//! - [`workload`] / [`eval`] — paper benchmark suites and table harnesses
+
+pub mod config;
+pub mod engine;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod model_meta;
+pub mod policy;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+pub mod vocab;
+pub mod workload;

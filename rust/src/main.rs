@@ -1,0 +1,246 @@
+//! `trimkv` — CLI for the TRIM-KV serving engine.
+//!
+//! Subcommands:
+//!   serve      run the TCP front-end (line-delimited JSON)
+//!   generate   run one prompt through the engine and print the tokens
+//!   eval       policy x budget accuracy sweep over a paper suite
+//!   inspect    retention-trace dumps (Figs 4/5/11-19)
+//!   selftest   golden-I/O check of the AOT artifacts vs the python export
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::eval::{self, inspect};
+use trimkv::model_meta::ModelMeta;
+use trimkv::policy::Policy;
+use trimkv::runtime::PjrtBackend;
+use trimkv::scheduler::Request;
+use trimkv::server::{tcp, InProcServer};
+use trimkv::util::cli::Args;
+use trimkv::vocab::Vocab;
+use trimkv::workload::suites;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = std::iter::once(argv[0].clone())
+        .chain(argv.iter().skip(2).cloned())
+        .collect();
+    match cmd {
+        "serve" => serve(&rest),
+        "generate" => generate(&rest),
+        "eval" => eval_cmd(&rest),
+        "inspect" => inspect_cmd(&rest),
+        "selftest" => selftest(&rest),
+        _ => {
+            eprintln!(
+                "usage: trimkv <serve|generate|eval|inspect|selftest> [--help]\n\
+                 see README.md for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn common_spec() -> trimkv::util::cli::SpecBuilder {
+    Args::spec()
+        .opt("artifacts", "artifacts", "artifact directory (meta.json etc.)")
+        .opt("policy", "trimkv", "eviction policy")
+        .opt("budget", "127", "live tokens per head")
+        .opt("batch", "8", "batch lanes (must match an exported artifact)")
+        .opt("max-new-tokens", "64", "generation cap")
+        .opt("seed", "0", "rng seed")
+}
+
+fn load_engine(args: &Args) -> Result<(Engine<PjrtBackend>, Vocab, ModelMeta)> {
+    let mut cfg = EngineConfig::default();
+    cfg.apply_cli(args)?;
+    let meta = ModelMeta::load(&cfg.artifacts_dir)?;
+    let vocab = Vocab::load(&cfg.artifacts_dir.join("vocab.json"))?;
+    let policy = Policy::from_name(&cfg.policy, cfg.budget, cfg.seed)?;
+    let headroom = if cfg.chunked_prefill { meta.chunk + 1 } else { 2 };
+    let spec = meta
+        .pick("decode", cfg.batch, cfg.budget + headroom, "mlp")
+        .with_context(|| format!(
+            "no decode artifact for batch {} budget {}", cfg.batch, cfg.budget))?;
+    eprintln!("[trimkv] loading {} (b={} m={})", spec.file, spec.b, spec.m);
+    let backend = PjrtBackend::load(&meta, spec.b, spec.m,
+                                    policy.gate_variant(), "mlp", true)?;
+    let engine = Engine::new(backend, cfg, vocab.eos())?;
+    Ok((engine, vocab, meta))
+}
+
+fn serve(argv: &[String]) -> Result<()> {
+    let args = common_spec()
+        .opt("addr", "127.0.0.1:7878", "listen address")
+        .parse(argv)?;
+    let (engine, _vocab, _meta) = load_engine(&args)?;
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let srv = InProcServer::spawn(engine);
+    tcp::listen(&addr, &srv)
+}
+
+fn generate(argv: &[String]) -> Result<()> {
+    let args = common_spec()
+        .opt("prompt", "", "comma-separated token ids (default: demo recall)")
+        .parse(argv)?;
+    let (mut engine, vocab, _) = load_engine(&args)?;
+    let prompt: Vec<u32> = match args.get("prompt") {
+        Some(s) if !s.is_empty() => s
+            .split(',')
+            .map(|x| x.trim().parse().context("bad token id"))
+            .collect::<Result<_>>()?,
+        _ => {
+            let mut g = trimkv::workload::Gen::new(&vocab, args.u64("seed")?);
+            let ep = g.recall(8, 4);
+            println!("demo recall episode; expected answer: {}",
+                     vocab.name(ep.answer[0]));
+            ep.prompt
+        }
+    };
+    println!("prompt ({} tokens): {}", prompt.len(),
+             prompt.iter().map(|&t| vocab.name(t)).collect::<Vec<_>>().join(" "));
+    engine.submit(Request::new(0, prompt, args.usize("max-new-tokens")?))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rs = engine.run_to_completion()?;
+    let r = &rs[0];
+    println!("generated ({:?}): {}", r.finish,
+             r.tokens.iter().map(|&t| vocab.name(t)).collect::<Vec<_>>().join(" "));
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn eval_cmd(argv: &[String]) -> Result<()> {
+    let args = common_spec()
+        .opt("suite", "math", "math|longproc|longmem|scbench|longqa")
+        .opt("tier", "gsm8k", "suite tier/task")
+        .opt("n", "32", "episodes per cell")
+        .opt("budgets", "32,64,127", "comma-separated budgets")
+        .opt("policies", "trimkv,snapkv,h2o,streaming_llm", "comma list")
+        .parse(argv)?;
+    let mut cfg = EngineConfig::default();
+    cfg.apply_cli(&args)?;
+    let meta = ModelMeta::load(&cfg.artifacts_dir)?;
+    let vocab = Vocab::load(&cfg.artifacts_dir.join("vocab.json"))?;
+    let budgets = args.usize_list("budgets")?;
+    let policies: Vec<String> = args
+        .get_or("policies", "trimkv")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let suite = build_suite(&vocab, &args)?;
+    let max_budget = *budgets.iter().max().unwrap();
+    let spec = meta
+        .pick("decode", cfg.batch, max_budget + meta.chunk + 1, "mlp")
+        .context("no artifact large enough for the largest budget")?;
+    let mut results = Vec::new();
+    // policies may need different gate weights (locret) -> backend per variant
+    let mut variants: Vec<&str> = policies
+        .iter()
+        .map(|p| if p == "locret" { "locret" } else { "default" })
+        .collect();
+    variants.dedup();
+    for variant in variants {
+        let mut backend = PjrtBackend::load(&meta, spec.b, spec.m, variant,
+                                            "mlp", true)?;
+        for policy in &policies {
+            let needs = if policy == "locret" { "locret" } else { "default" };
+            if needs != variant {
+                continue;
+            }
+            for &budget in &budgets {
+                eprintln!("[eval] {policy} @ budget {budget}");
+                let (r, be) = eval::run_suite(backend, &cfg, &vocab, policy,
+                                              budget, &suite)?;
+                backend = be;
+                results.push(r);
+            }
+        }
+    }
+    println!("{}", eval::results_table(&results).render());
+    println!("{}", eval::pareto_table(&results, &budgets).render());
+    Ok(())
+}
+
+fn build_suite(vocab: &Vocab, args: &Args) -> Result<suites::Suite> {
+    let n = args.usize("n")?;
+    let seed = args.u64("seed")?;
+    let tier = args.get_or("tier", "gsm8k");
+    Ok(match args.get_or("suite", "math").as_str() {
+        "math" => suites::math(vocab, &tier, n, seed),
+        "longproc" => suites::longproc(vocab, &tier, 1, n, seed),
+        "longmem" => suites::longmem(vocab, &tier, n, seed),
+        "scbench" => suites::scbench(vocab, &tier, n, seed),
+        "longqa" => suites::longqa(vocab, n, seed),
+        other => anyhow::bail!("unknown suite {other}"),
+    })
+}
+
+fn inspect_cmd(argv: &[String]) -> Result<()> {
+    let args = common_spec()
+        .opt("layer", "0", "layer for matrix dumps")
+        .opt("head", "0", "kv head for matrix dumps")
+        .opt("out", "figures", "output directory")
+        .flag("matrices", "dump retention + eviction matrices (Fig 4/11/12)")
+        .flag("tokens", "per-token retention table (Fig 5a/b)")
+        .flag("sparsity", "layer/head sparsity (Fig 5c)")
+        .flag("kept", "kept-token rendering (Figs 13-19)")
+        .parse(argv)?;
+    let (mut engine, vocab, meta) = load_engine(&args)?;
+    engine.record_gates = true;
+    let mut g = trimkv::workload::Gen::new(&vocab, args.u64("seed")?);
+    let ep = g.chain(10, 3, 4); // AIME-like episode, as in the paper's Fig 4
+    let kept_before_finish = {
+        engine.submit(Request::new(0, ep.prompt.clone(), 48))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        // run until one step before completion to snapshot the live cache
+        let mut snap = None;
+        while !engine.idle() {
+            engine.tick()?;
+            if let Some(s) = engine.retention_snapshot(0) {
+                snap = Some(s);
+            }
+        }
+        snap
+    };
+    let rec = engine.last_record.clone().context("no record (run too short?)")?;
+    let out_dir = args.get_or("out", "figures");
+    std::fs::create_dir_all(&out_dir)?;
+    let dims = meta.dims;
+    let l = args.usize("layer")?;
+    let h = args.usize("head")?;
+    let head = l * dims.hkv + h;
+    if args.flag("matrices") {
+        std::fs::write(format!("{out_dir}/retention_l{l}h{h}.csv"),
+                       inspect::retention_matrix_csv(&rec, head))?;
+        std::fs::write(format!("{out_dir}/eviction_l{l}h{h}.csv"),
+                       inspect::eviction_matrix_csv(&rec, head))?;
+        println!("wrote {out_dir}/retention_l{l}h{h}.csv and eviction_l{l}h{h}.csv");
+    }
+    if args.flag("tokens") {
+        println!("{}", inspect::token_retention_table(&rec, &vocab, 10).render());
+    }
+    if args.flag("sparsity") {
+        println!("{}", inspect::sparsity_table(&rec, dims.layers, dims.hkv).render());
+    }
+    if args.flag("kept") {
+        if let Some(snap) = kept_before_finish {
+            let kept: Vec<i64> = snap[head].iter().map(|&(p, _, _)| p).collect();
+            println!("{}", inspect::kept_tokens_render(&rec, &kept, &vocab));
+        }
+    }
+    Ok(())
+}
+
+/// Golden test: execute the exported decode/prefill graphs on the I/O pair
+/// the python side dumped, compare outputs elementwise.
+fn selftest(argv: &[String]) -> Result<()> {
+    let args = common_spec().parse(argv)?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let dir = Path::new(&dir);
+    let report = trimkv::runtime::golden::run_goldens(dir)?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Serving metrics: request latencies, token throughput, cache occupancy.
+
+use std::time::Instant;
+
+use crate::util::stats::{LatencyHistogram, OnlineStats};
+
+#[derive(Debug)]
+pub struct EngineMetrics {
+    pub started: Instant,
+    pub requests_admitted: u64,
+    pub requests_finished: u64,
+    pub tokens_prefilled: u64,
+    pub tokens_decoded: u64,
+    pub evictions: u64,
+    pub injections: u64,
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+    pub ttft_us: LatencyHistogram,       // time to first token
+    pub e2e_us: LatencyHistogram,        // request end-to-end
+    pub step_us: OnlineStats,            // decode-step wall time
+    pub lane_occupancy: OnlineStats,     // live lanes per step
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        EngineMetrics {
+            started: Instant::now(),
+            requests_admitted: 0,
+            requests_finished: 0,
+            tokens_prefilled: 0,
+            tokens_decoded: 0,
+            evictions: 0,
+            injections: 0,
+            decode_steps: 0,
+            prefill_chunks: 0,
+            ttft_us: LatencyHistogram::new(),
+            e2e_us: LatencyHistogram::new(),
+            step_us: OnlineStats::new(),
+            lane_occupancy: OnlineStats::new(),
+        }
+    }
+
+    pub fn decode_throughput_tok_s(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el > 0.0 { self.tokens_decoded as f64 / el } else { 0.0 }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests {}/{} finished | prefill {} tok | decode {} tok \
+             ({:.1} tok/s) | steps {} (mean {:.2} ms) | evictions {} | \
+             ttft p50 {:.1} ms | e2e p50 {:.1} ms | lanes {:.2}",
+            self.requests_finished,
+            self.requests_admitted,
+            self.tokens_prefilled,
+            self.tokens_decoded,
+            self.decode_throughput_tok_s(),
+            self.decode_steps,
+            self.step_us.mean() / 1e3,
+            self.evictions,
+            self.ttft_us.pct_us(50.0) / 1e3,
+            self.e2e_us.pct_us(50.0) / 1e3,
+            self.lane_occupancy.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_renders() {
+        let mut m = EngineMetrics::new();
+        m.requests_admitted = 3;
+        m.requests_finished = 2;
+        m.tokens_decoded = 100;
+        m.decode_steps = 50;
+        m.step_us.push(1500.0);
+        m.ttft_us.record_us(2000.0);
+        m.e2e_us.record_us(9000.0);
+        m.lane_occupancy.push(4.0);
+        let s = m.summary();
+        assert!(s.contains("requests 2/3"));
+        assert!(s.contains("decode 100 tok"));
+    }
+}

@@ -1,0 +1,204 @@
+//! artifacts/meta.json — the AOT interchange contract with python.
+//!
+//! Describes the model dimensions, the flat parameter/gate tensor order the
+//! HLO graphs expect, and the exported graph variants (batch lanes B, cache
+//! slots M, chunk C).  The engine picks the smallest M >= its budget.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub hq: usize,
+    pub hkv: usize,
+    pub dh: usize,
+    pub ffn: usize,
+    pub gate_hidden: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub kind: String, // "decode" | "prefill"
+    pub b: usize,
+    pub m: usize,
+    pub c: usize,
+    pub file: String,
+    pub gate_arch: String, // "mlp" | "linear"
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub chunk: usize,
+    pub param_order: Vec<TensorSpec>,
+    pub gate_order: Vec<TensorSpec>,
+    pub decode_outputs: Vec<String>,
+    pub prefill_outputs: Vec<String>,
+    pub gate_variants: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> anyhow::Result<ModelMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Self::from_json(dir, &Json::parse(&text)?)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> anyhow::Result<ModelMeta> {
+        let m = j.get("model").ok_or_else(|| anyhow::anyhow!("meta: no model"))?;
+        let dims = ModelDims {
+            vocab: m.usize_field("vocab")?,
+            d: m.usize_field("d")?,
+            layers: m.usize_field("layers")?,
+            hq: m.usize_field("hq")?,
+            hkv: m.usize_field("hkv")?,
+            dh: m.usize_field("dh")?,
+            ffn: m.usize_field("ffn")?,
+            gate_hidden: m.usize_field("gate_hidden")?,
+        };
+        let tensor_list = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("meta: missing {key}"))?
+                .iter()
+                .map(|e| {
+                    Ok(TensorSpec {
+                        name: e.str_field("name")?.to_string(),
+                        shape: e
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                            .unwrap_or_default(),
+                    })
+                })
+                .collect()
+        };
+        let str_list = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("meta: missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    kind: a.str_field("kind")?.to_string(),
+                    b: a.usize_field("b")?,
+                    m: a.usize_field("m")?,
+                    c: a.usize_field("c")?,
+                    file: a.str_field("file")?.to_string(),
+                    gate_arch: a.str_field("gate_arch")?.to_string(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            dir: dir.to_path_buf(),
+            dims,
+            chunk: j.usize_field("chunk")?,
+            param_order: tensor_list("param_order")?,
+            gate_order: tensor_list("gate_order")?,
+            decode_outputs: str_list("decode_outputs"),
+            prefill_outputs: str_list("prefill_outputs"),
+            gate_variants: str_list("gate_variants"),
+            artifacts,
+        })
+    }
+
+    /// Smallest exported variant with b == `b` and m >= `budget`.
+    pub fn pick(&self, kind: &str, b: usize, budget: usize,
+                gate_arch: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.b == b && a.m >= budget
+                        && a.gate_arch == gate_arch)
+            .min_by_key(|a| a.m)
+    }
+
+    /// All batch-lane counts available for a given kind.
+    pub fn available_batches(&self, kind: &str) -> Vec<usize> {
+        let mut bs: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.b).collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+}
+
+#[cfg(test)]
+pub fn test_meta() -> ModelMeta {
+    ModelMeta {
+        dir: PathBuf::from("artifacts"),
+        dims: ModelDims { vocab: 512, d: 128, layers: 4, hq: 4, hkv: 2,
+                          dh: 32, ffn: 256, gate_hidden: 48 },
+        chunk: 64,
+        param_order: vec![],
+        gate_order: vec![],
+        decode_outputs: vec!["logits".into(), "kc".into(), "vc".into(),
+                             "valid".into(), "log_beta".into(), "attn".into(),
+                             "k_new".into()],
+        prefill_outputs: vec![],
+        gate_variants: vec!["default".into()],
+        artifacts: vec![
+            ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
+                           file: "decode_b8_m128.hlo.txt".into(),
+                           gate_arch: "mlp".into() },
+            ArtifactSpec { kind: "decode".into(), b: 8, m: 768, c: 1,
+                           file: "decode_b8_m768.hlo.txt".into(),
+                           gate_arch: "mlp".into() },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_chooses_smallest_sufficient_m() {
+        let meta = test_meta();
+        assert_eq!(meta.pick("decode", 8, 100, "mlp").unwrap().m, 128);
+        assert_eq!(meta.pick("decode", 8, 128, "mlp").unwrap().m, 128);
+        assert_eq!(meta.pick("decode", 8, 200, "mlp").unwrap().m, 768);
+        assert!(meta.pick("decode", 8, 1000, "mlp").is_none());
+        assert!(meta.pick("decode", 1, 64, "mlp").is_none());
+    }
+
+    #[test]
+    fn parses_meta_json() {
+        let src = r#"{
+          "model": {"vocab":512,"d":128,"layers":4,"hq":4,"hkv":2,"dh":32,
+                    "ffn":256,"gate_hidden":48,"rope_theta":10000.0},
+          "chunk": 64,
+          "param_order": [{"name":"embed","shape":[512,128]}],
+          "gate_order": [{"name":"g0.w1","shape":[128,48]}],
+          "decode_outputs": ["logits"],
+          "prefill_outputs": ["logits"],
+          "gate_variants": ["default"],
+          "artifacts": [{"kind":"decode","b":8,"m":256,"c":1,
+                         "file":"decode_b8_m256.hlo.txt","gate_arch":"mlp"}]
+        }"#;
+        let meta =
+            ModelMeta::from_json(Path::new("x"), &Json::parse(src).unwrap()).unwrap();
+        assert_eq!(meta.dims.layers, 4);
+        assert_eq!(meta.param_order[0].shape, vec![512, 128]);
+        assert_eq!(meta.artifacts.len(), 1);
+        assert_eq!(meta.available_batches("decode"), vec![8]);
+    }
+}

@@ -1,0 +1,337 @@
+//! Eviction policies: TRIM-KV (the paper's contribution) plus every baseline
+//! the paper compares against (§5.1): StreamingLLM, H2O, SnapKV, R-KV,
+//! KeyDiff, LocRet, random, full-cache, and a SeerAttn-R-style retrieval
+//! mode (handled jointly with the engine's inject path).
+//!
+//! A policy is a victim-selection rule over one head's slot table.  The
+//! engine calls `select_victim` whenever a head exceeds its budget; the
+//! returned slot is overwritten by the next token (the paper's O(M) scheme:
+//! eviction is a mask-bit flip plus slot reuse).
+
+use crate::kvcache::HeadState;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// Paper: evict argmin beta_i^(now-i) — learned intrinsic importance
+    /// with exponential decay.
+    TrimKv,
+    /// Xiao et al. 2023: keep `sinks` initial tokens + the most recent rest.
+    StreamingLlm { sinks: usize },
+    /// Zhang et al. 2023: keep heavy hitters by accumulated attention,
+    /// protecting the `recent` newest tokens.
+    H2O { recent: usize },
+    /// Li et al. 2024: observation-window attention (EMA adaptation for
+    /// long generation), protecting the `recent` newest tokens.
+    SnapKv { recent: usize },
+    /// Cai et al. 2025: importance + key-diversity (redundant tokens go
+    /// first), protecting the `recent` newest tokens.
+    RKv { lambda: f32, recent: usize },
+    /// Park et al. 2025: key diversity only (query-agnostic).
+    KeyDiff,
+    /// Huang et al. 2024: trained retaining score without decay + a
+    /// hand-crafted recent-window protection.
+    LocRet { recent: usize },
+    /// Uniform random among live slots.
+    RandomEvict,
+    /// Never evict (requires slots >= sequence length).
+    FullKv,
+    /// SeerAttn-R-like learnable retrieval: resident set managed like
+    /// SnapKV, but evicted tokens stay in a host mirror and can be
+    /// re-admitted via the engine's inject path.
+    Retrieval { recent: usize },
+}
+
+#[derive(Debug)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    rng: Rng,
+}
+
+pub const POLICY_NAMES: &[&str] = &[
+    "trimkv", "streaming_llm", "h2o", "snapkv", "rkv", "keydiff", "locret",
+    "random", "fullkv", "retrieval",
+];
+
+impl Policy {
+    pub fn from_name(name: &str, budget: usize, seed: u64) -> anyhow::Result<Policy> {
+        // recent-window protection scaled to the budget, as in the baselines'
+        // reference implementations (1/8 of budget, >= 4)
+        let recent = (budget / 8).max(4);
+        let kind = match name {
+            "trimkv" => PolicyKind::TrimKv,
+            "streaming_llm" => PolicyKind::StreamingLlm { sinks: 4 },
+            "h2o" => PolicyKind::H2O { recent },
+            "snapkv" => PolicyKind::SnapKv { recent },
+            "rkv" => PolicyKind::RKv { lambda: 0.5, recent },
+            "keydiff" => PolicyKind::KeyDiff,
+            "locret" => PolicyKind::LocRet { recent },
+            "random" => PolicyKind::RandomEvict,
+            "fullkv" => PolicyKind::FullKv,
+            "retrieval" => PolicyKind::Retrieval { recent },
+            other => anyhow::bail!("unknown policy `{other}` (expected one of {POLICY_NAMES:?})"),
+        };
+        Ok(Policy { kind, rng: Rng::new(seed ^ 0x9e37) })
+    }
+
+    /// Gate-weight variant this policy expects (LocRet uses its own heads).
+    pub fn gate_variant(&self) -> &'static str {
+        match self.kind {
+            PolicyKind::LocRet { .. } => "locret",
+            _ => "default",
+        }
+    }
+
+    /// Does victim selection consume the per-step attention statistics?
+    pub fn needs_attention(&self) -> bool {
+        matches!(self.kind,
+                 PolicyKind::H2O { .. } | PolicyKind::SnapKv { .. }
+                 | PolicyKind::RKv { .. } | PolicyKind::Retrieval { .. })
+    }
+
+    pub fn needs_keys(&self) -> bool {
+        matches!(self.kind,
+                 PolicyKind::RKv { .. } | PolicyKind::KeyDiff
+                 | PolicyKind::Retrieval { .. })
+    }
+
+    pub fn is_retrieval(&self) -> bool {
+        matches!(self.kind, PolicyKind::Retrieval { .. })
+    }
+
+    /// Pick the live slot to overwrite; `None` means "do not evict".
+    pub fn select_victim(&mut self, head: &HeadState, now: i64) -> Option<usize> {
+        if head.used == 0 {
+            return None;
+        }
+        match self.kind {
+            PolicyKind::FullKv => None,
+            PolicyKind::TrimKv => argmin_live(head, |h, s| h.retention_score(s, now)),
+            PolicyKind::StreamingLlm { sinks } => {
+                // evict the oldest token that is not one of the first `sinks`
+                let min_kept: Vec<i64> = {
+                    let mut ps: Vec<i64> =
+                        head.live_slots().map(|s| head.entries[s].pos).collect();
+                    ps.sort_unstable();
+                    ps.into_iter().take(sinks).collect()
+                };
+                argmin_live_filtered(
+                    head,
+                    |h, s| h.entries[s].pos as f32,
+                    |h, s| !min_kept.contains(&h.entries[s].pos),
+                )
+                .or_else(|| argmin_live(head, |h, s| h.entries[s].pos as f32))
+            }
+            PolicyKind::H2O { recent } => protected_argmin(
+                head, now, recent, |h, s| h.entries[s].acc_attn),
+            PolicyKind::SnapKv { recent } | PolicyKind::Retrieval { recent } => {
+                protected_argmin(head, now, recent, |h, s| h.entries[s].ema_attn)
+            }
+            PolicyKind::RKv { lambda, recent } => {
+                let sims = max_key_similarity(head);
+                protected_argmin(head, now, recent, |h, s| {
+                    lambda * h.entries[s].ema_attn + (1.0 - lambda) * (1.0 - sims[s])
+                })
+            }
+            PolicyKind::KeyDiff => {
+                let sims = max_key_similarity(head);
+                argmin_live(head, |_, s| 1.0 - sims[s])
+            }
+            PolicyKind::LocRet { recent } => protected_argmin(
+                head, now, recent, |h, s| h.entries[s].log_beta),
+            PolicyKind::RandomEvict => {
+                let live: Vec<usize> = head.live_slots().collect();
+                Some(live[self.rng.below(live.len())])
+            }
+        }
+    }
+}
+
+fn argmin_live<F>(head: &HeadState, score: F) -> Option<usize>
+where
+    F: Fn(&HeadState, usize) -> f32,
+{
+    argmin_live_filtered(head, score, |_, _| true)
+}
+
+fn argmin_live_filtered<F, P>(head: &HeadState, score: F, keep: P) -> Option<usize>
+where
+    F: Fn(&HeadState, usize) -> f32,
+    P: Fn(&HeadState, usize) -> bool,
+{
+    let mut best: Option<(usize, f32, i64)> = None;
+    for s in head.live_slots() {
+        if !keep(head, s) {
+            continue;
+        }
+        let sc = score(head, s);
+        let pos = head.entries[s].pos;
+        // ties break toward the older token (smaller pos)
+        let better = match best {
+            None => true,
+            Some((_, bs, bp)) => sc < bs || (sc == bs && pos < bp),
+        };
+        if better {
+            best = Some((s, sc, pos));
+        }
+    }
+    best.map(|(s, _, _)| s)
+}
+
+/// argmin of `score` among live slots older than the protected recent
+/// window; falls back to a global argmin when everything is protected.
+fn protected_argmin<F>(head: &HeadState, now: i64, recent: usize,
+                       score: F) -> Option<usize>
+where
+    F: Fn(&HeadState, usize) -> f32,
+{
+    let cutoff = now - recent as i64;
+    argmin_live_filtered(head, &score, |h, s| h.entries[s].pos < cutoff)
+        .or_else(|| argmin_live(head, &score))
+}
+
+/// For each live slot, the max cosine similarity of its key to any *other*
+/// live key (R-KV / KeyDiff redundancy signal).  O(live^2 * dh).
+fn max_key_similarity(head: &HeadState) -> Vec<f32> {
+    let m = head.slots();
+    let mut out = vec![0.0f32; m];
+    let live: Vec<usize> = head.live_slots().collect();
+    if head.keys.is_empty() || live.len() < 2 {
+        return out;
+    }
+    let norms: Vec<f32> = live
+        .iter()
+        .map(|&s| head.key(s).iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9))
+        .collect();
+    for (ai, &a) in live.iter().enumerate() {
+        let ka = head.key(a);
+        let mut best = -1.0f32;
+        for (bi, &b) in live.iter().enumerate() {
+            if ai == bi {
+                continue;
+            }
+            let kb = head.key(b);
+            let dot: f32 = ka.iter().zip(kb).map(|(x, y)| x * y).sum();
+            best = best.max(dot / (norms[ai] * norms[bi]));
+        }
+        out[a] = best;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::SlotEntry;
+
+    fn head_with(entries: &[(i64, f32, f32, f32)]) -> HeadState {
+        // (pos, log_beta, acc_attn, ema_attn)
+        let mut h = HeadState::new(entries.len() + 2, 4, true);
+        for (s, &(pos, lb, acc, ema)) in entries.iter().enumerate() {
+            h.insert(
+                s,
+                SlotEntry { pos, token: s as u32, log_beta: lb, acc_attn: acc,
+                            ema_attn: ema, last_attn: ema },
+                Some(&[s as f32, 1.0, 0.0, 0.0]),
+            );
+        }
+        h
+    }
+
+    fn policy(name: &str) -> Policy {
+        Policy::from_name(name, 32, 0).unwrap()
+    }
+
+    #[test]
+    fn trimkv_evicts_lowest_decayed_retention() {
+        // old + weak beta decays to the bottom
+        let h = head_with(&[(0, -0.5, 0., 0.), (0, -0.01, 0., 0.), (9, -0.5, 0., 0.)]);
+        assert_eq!(policy("trimkv").select_victim(&h, 10), Some(0));
+        // a fresh token with terrible beta still outranks an ancient one
+        let h = head_with(&[(0, -0.2, 0., 0.), (10, -0.9, 0., 0.)]);
+        assert_eq!(policy("trimkv").select_victim(&h, 10), Some(0));
+    }
+
+    #[test]
+    fn streaming_llm_protects_sinks_evicts_oldest() {
+        let entries: Vec<(i64, f32, f32, f32)> =
+            (0..8).map(|i| (i as i64, -0.1, 0.0, 0.0)).collect();
+        let h = head_with(&entries);
+        // sinks = 4 -> positions 0..3 protected; oldest evictable is pos 4
+        assert_eq!(policy("streaming_llm").select_victim(&h, 8), Some(4));
+    }
+
+    #[test]
+    fn h2o_evicts_lightest_hitter_outside_recent_window() {
+        let h = head_with(&[
+            (0, 0.0, 5.0, 0.0),  // heavy
+            (1, 0.0, 0.1, 0.0),  // light -> victim
+            (98, 0.0, 0.0, 0.0), // recent, protected
+            (99, 0.0, 0.0, 0.0), // recent, protected
+        ]);
+        assert_eq!(policy("h2o").select_victim(&h, 100), Some(1));
+    }
+
+    #[test]
+    fn h2o_falls_back_when_all_recent() {
+        let h = head_with(&[(99, 0.0, 1.0, 0.0), (100, 0.0, 0.5, 0.0)]);
+        assert_eq!(policy("h2o").select_victim(&h, 101), Some(1));
+    }
+
+    #[test]
+    fn snapkv_uses_ema() {
+        let h = head_with(&[(0, 0.0, 9.0, 0.01), (1, 0.0, 0.0, 0.9)]);
+        assert_eq!(policy("snapkv").select_victim(&h, 100), Some(0));
+    }
+
+    #[test]
+    fn keydiff_evicts_most_redundant() {
+        let mut h = HeadState::new(5, 4, true);
+        h.insert(0, SlotEntry { pos: 0, ..Default::default() }, Some(&[1., 0., 0., 0.]));
+        h.insert(1, SlotEntry { pos: 1, ..Default::default() }, Some(&[1., 0.01, 0., 0.]));
+        h.insert(2, SlotEntry { pos: 2, ..Default::default() }, Some(&[0., 1., 0., 0.]));
+        // slots 0 and 1 are near-duplicates; one of them must go (tie -> older)
+        assert_eq!(policy("keydiff").select_victim(&h, 3), Some(0));
+    }
+
+    #[test]
+    fn locret_ignores_decay() {
+        // locret ranks by raw beta: the low-beta newer token is the victim
+        let h = head_with(&[(0, -0.5, 0., 0.), (90, -2.0, 0., 0.)]);
+        assert_eq!(policy("locret").select_victim(&h, 100), Some(1));
+        // trimkv at the same state evicts the *older* one (decay dominates:
+        // 100 * -0.5 = -50 < 10 * -2.0 = -20)
+        assert_eq!(policy("trimkv").select_victim(&h, 100), Some(0));
+    }
+
+    #[test]
+    fn fullkv_never_evicts_random_always_does() {
+        let h = head_with(&[(0, 0.0, 0.0, 0.0), (1, 0.0, 0.0, 0.0)]);
+        assert_eq!(policy("fullkv").select_victim(&h, 5), None);
+        let v = policy("random").select_victim(&h, 5);
+        assert!(matches!(v, Some(0) | Some(1)));
+    }
+
+    #[test]
+    fn empty_head_yields_none() {
+        let h = HeadState::new(4, 4, false);
+        assert_eq!(policy("trimkv").select_victim(&h, 0), None);
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        assert!(Policy::from_name("nope", 32, 0).is_err());
+        for name in POLICY_NAMES {
+            assert!(Policy::from_name(name, 32, 0).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn needs_keys_only_for_similarity_policies() {
+        assert!(policy("rkv").needs_keys());
+        assert!(policy("keydiff").needs_keys());
+        assert!(policy("retrieval").needs_keys());
+        assert!(!policy("trimkv").needs_keys());
+        assert!(!policy("h2o").needs_keys());
+    }
+}

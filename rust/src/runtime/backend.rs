@@ -1,0 +1,494 @@
+//! ModelBackend: the engine's interface to the AOT-compiled model graphs.
+//!
+//! `PjrtBackend` executes the HLO artifacts on the PJRT CPU client with the
+//! KV caches held device-resident (only logits / gate scores / attention
+//! stats cross the device boundary each step — the paper's O(M) decode).
+//! `MockBackend` is a deterministic stand-in used by unit/property tests so
+//! the scheduler, cache manager and policies are testable without artifacts.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model_meta::{ModelDims, ModelMeta};
+
+/// One decode step over all B lanes.  Layouts are row-major flat slices:
+/// valid `[L,B,H,M]`, write_slot `[L,B,H]`, inject_k/v `[L,B,H,dh]`.
+pub struct DecodeIn<'a> {
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub valid: &'a [f32],
+    pub write_slot: &'a [i32],
+    pub inject_flag: Option<&'a [f32]>,
+    pub inject_slot: Option<&'a [i32]>,
+    pub inject_k: Option<&'a [f32]>,
+    pub inject_v: Option<&'a [f32]>,
+    /// download the attention stats (H2O/SnapKV/R-KV/retrieval only)
+    pub want_attn: bool,
+    /// download k_new/v_new (key-similarity + retrieval policies only)
+    pub want_kv: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub logits: Vec<f32>,   // [B, vocab]
+    pub log_beta: Vec<f32>, // [L, B, H]
+    pub attn: Vec<f32>,     // [L, B, H, M]
+    pub k_new: Vec<f32>,    // [L, B, H, dh]
+    pub v_new: Vec<f32>,    // [L, B, H, dh]
+}
+
+/// One prefill chunk of C tokens per lane.
+pub struct PrefillIn<'a> {
+    pub tokens: &'a [i32],      // [B, C]
+    pub pos: &'a [i32],         // [B, C]
+    pub in_mask: &'a [f32],     // [B, C]
+    pub valid: &'a [f32],       // [L, B, H, M]
+    pub write_slots: &'a [i32], // [L, B, H, C]
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    pub logits: Vec<f32>,     // [B, C, vocab]
+    pub log_beta: Vec<f32>,   // [L, B, H, C]
+    pub attn_slots: Vec<f32>, // [L, B, H, M]
+    pub attn_chunk: Vec<f32>, // [L, B, H, C]
+    pub k_chunk: Vec<f32>,    // [L, B, H, C, dh]
+    pub v_chunk: Vec<f32>,    // [L, B, H, C, dh]
+}
+
+pub trait ModelBackend: Send {
+    fn dims(&self) -> ModelDims;
+    fn batch(&self) -> usize;
+    fn slots(&self) -> usize;
+    fn chunk(&self) -> usize;
+    fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut>;
+    fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut>;
+    /// Zero the device-resident KV caches (new evaluation run).
+    fn reset_cache(&mut self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    decode_exe: xla::PjRtLoadedExecutable,
+    prefill_exe: Option<xla::PjRtLoadedExecutable>,
+    weight_bufs: Vec<xla::PjRtBuffer>, // params ++ gates, device-resident
+    kc: xla::PjRtBuffer,
+    vc: xla::PjRtBuffer,
+    dims: ModelDims,
+    b: usize,
+    m: usize,
+    c: usize,
+}
+
+impl PjrtBackend {
+    /// Load artifacts for batch `b` and budget->slot count `m` (exact match
+    /// against an exported variant chosen by the caller via `meta.pick`).
+    pub fn load(meta: &ModelMeta, b: usize, m: usize, gate_variant: &str,
+                gate_arch: &str, with_prefill: bool) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu()?;
+        let dec = meta
+            .pick("decode", b, m, gate_arch)
+            .with_context(|| format!("no decode artifact for b={b} m>={m}"))?;
+        ensure!(dec.m == m, "caller must pass an exported slot count");
+        let decode_exe = compile_hlo(&client, &meta.dir.join(&dec.file))?;
+        let prefill_exe = if with_prefill {
+            let pre = meta
+                .pick("prefill", b, m, gate_arch)
+                .with_context(|| format!("no prefill artifact for b={b} m={m}"))?;
+            ensure!(pre.m == m, "prefill/decode slot mismatch");
+            Some(compile_hlo(&client, &meta.dir.join(&pre.file))?)
+        } else {
+            None
+        };
+
+        // upload weights once, in the flat order the graphs expect
+        let weights = super::weights::read_weights(&meta.dir.join("weights.bin"))?;
+        let gates = super::weights::read_weights(
+            &meta.dir.join(format!("gates_{gate_variant}.bin")))?;
+        let gate_order: Vec<String> = if gate_arch == "linear" {
+            gates.keys().cloned().collect() // BTreeMap order == gN.{b1,w1}
+        } else {
+            meta.gate_order.iter().map(|t| t.name.clone()).collect()
+        };
+        let mut weight_bufs = Vec::new();
+        for spec in &meta.param_order {
+            let t = weights
+                .get(&spec.name)
+                .with_context(|| format!("weights.bin missing {}", spec.name))?;
+            ensure!(t.shape == spec.shape, "shape mismatch for {}", spec.name);
+            weight_bufs.push(client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+        }
+        for name in &gate_order {
+            let t = gates
+                .get(name)
+                .with_context(|| format!("gates bin missing {name}"))?;
+            weight_bufs.push(client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+        }
+
+        let dims = meta.dims;
+        let cache_shape = [dims.layers, b, dims.hkv, m, dims.dh];
+        let zeros = vec![0.0f32; cache_shape.iter().product()];
+        let kc = client.buffer_from_host_buffer(&zeros, &cache_shape, None)?;
+        let vc = client.buffer_from_host_buffer(&zeros, &cache_shape, None)?;
+        Ok(PjrtBackend {
+            client,
+            decode_exe,
+            prefill_exe,
+            weight_bufs,
+            kc,
+            vc,
+            dims,
+            b,
+            m,
+            c: meta.chunk,
+        })
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn lbh(&self) -> (usize, usize, usize) {
+        (self.dims.layers, self.b, self.dims.hkv)
+    }
+}
+
+pub fn compile_hlo(client: &xla::PjRtClient,
+                   path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+}
+
+impl ModelBackend for PjrtBackend {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+    fn batch(&self) -> usize {
+        self.b
+    }
+    fn slots(&self) -> usize {
+        self.m
+    }
+    fn chunk(&self) -> usize {
+        self.c
+    }
+
+    fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut> {
+        let (l, b, h) = self.lbh();
+        let (m, dh) = (self.m, self.dims.dh);
+        ensure!(ins.tokens.len() == b && ins.pos.len() == b, "bad lane count");
+        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
+        ensure!(ins.write_slot.len() == l * b * h, "bad write_slot len");
+
+        let zero_f = vec![0.0f32; l * b * h];
+        let zero_i = vec![0i32; l * b * h];
+        let zero_k = vec![0.0f32; l * b * h * dh];
+        let token_b = self.upload_i32(ins.tokens, &[b])?;
+        let pos_b = self.upload_i32(ins.pos, &[b])?;
+        let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
+        let ws_b = self.upload_i32(ins.write_slot, &[l, b, h])?;
+        let if_b = self.upload_f32(ins.inject_flag.unwrap_or(&zero_f), &[l, b, h])?;
+        let is_b = self.upload_i32(ins.inject_slot.unwrap_or(&zero_i), &[l, b, h])?;
+        let ik_b = self.upload_f32(ins.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?;
+        let iv_b = self.upload_f32(ins.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&token_b, &pos_b, &self.kc, &self.vc, &valid_b, &ws_b,
+                     &if_b, &is_b, &ik_b, &iv_b]);
+        let mut outs = self.decode_exe.execute_b(&args)?;
+        let mut outs = outs.swap_remove(0);
+        ensure!(outs.len() == 8, "decode graph returned {} outputs", outs.len());
+        // order: logits, kc, vc, valid, log_beta, attn, k_new, v_new
+        // (perf: skip device->host transfers the policy will not consume)
+        let out = DecodeOut {
+            logits: to_host(&outs[0])?,
+            log_beta: to_host(&outs[4])?,
+            attn: if ins.want_attn { to_host(&outs[5])? } else { Vec::new() },
+            k_new: if ins.want_kv { to_host(&outs[6])? } else { Vec::new() },
+            v_new: if ins.want_kv { to_host(&outs[7])? } else { Vec::new() },
+        };
+        self.vc = outs.swap_remove(2);
+        self.kc = outs.swap_remove(1);
+        Ok(out)
+    }
+
+    fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut> {
+        let (l, b, h) = self.lbh();
+        let (m, c) = (self.m, self.c);
+        let exe = self
+            .prefill_exe
+            .as_ref()
+            .context("backend loaded without prefill graph")?;
+        ensure!(ins.tokens.len() == b * c, "bad tokens len");
+        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
+        ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
+
+        let tok_b = self.upload_i32(ins.tokens, &[b, c])?;
+        let pos_b = self.upload_i32(ins.pos, &[b, c])?;
+        let mask_b = self.upload_f32(ins.in_mask, &[b, c])?;
+        let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
+        let ws_b = self.upload_i32(ins.write_slots, &[l, b, h, c])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&tok_b, &pos_b, &mask_b, &self.kc, &self.vc, &valid_b, &ws_b]);
+        let mut outs = exe.execute_b(&args)?;
+        let mut outs = outs.swap_remove(0);
+        ensure!(outs.len() == 9, "prefill graph returned {} outputs", outs.len());
+        // order: logits, kc, vc, valid, log_beta, attn_slots, attn_chunk,
+        //        k_chunk, v_chunk
+        let out = PrefillOut {
+            logits: to_host(&outs[0])?,
+            log_beta: to_host(&outs[4])?,
+            attn_slots: to_host(&outs[5])?,
+            attn_chunk: to_host(&outs[6])?,
+            k_chunk: to_host(&outs[7])?,
+            v_chunk: to_host(&outs[8])?,
+        };
+        self.vc = outs.swap_remove(2);
+        self.kc = outs.swap_remove(1);
+        Ok(out)
+    }
+
+    fn reset_cache(&mut self) -> Result<()> {
+        let (l, b, h) = self.lbh();
+        let shape = [l, b, h, self.m, self.dims.dh];
+        let zeros = vec![0.0f32; shape.iter().product()];
+        self.kc = self.client.buffer_from_host_buffer(&zeros, &shape, None)?;
+        self.vc = self.client.buffer_from_host_buffer(&zeros, &shape, None)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend (tests)
+// ---------------------------------------------------------------------------
+
+/// Deterministic fake model: the next-token distribution peaks at
+/// `(token + 1) % vocab` until `eos_after` tokens have been produced on a
+/// lane, then at EOS (id 2).  Gate scores depend only on (layer, head,
+/// token) so TRIM-KV evictions are reproducible in tests.
+pub struct MockBackend {
+    pub dims: ModelDims,
+    pub b: usize,
+    pub m: usize,
+    pub c: usize,
+    pub eos_after: usize,
+    pub decoded_per_lane: Vec<usize>,
+    pub decode_calls: usize,
+    pub prefill_calls: usize,
+}
+
+impl MockBackend {
+    pub fn new(b: usize, m: usize) -> MockBackend {
+        MockBackend {
+            dims: ModelDims { vocab: 512, d: 128, layers: 4, hq: 4, hkv: 2,
+                              dh: 32, ffn: 256, gate_hidden: 48 },
+            b,
+            m,
+            c: 16,
+            eos_after: usize::MAX,
+            decoded_per_lane: vec![0; b],
+            decode_calls: 0,
+            prefill_calls: 0,
+        }
+    }
+
+    pub fn with_eos_after(mut self, n: usize) -> Self {
+        self.eos_after = n;
+        self
+    }
+
+    /// Deterministic per-token gate score in (0, 1): higher for sym tokens,
+    /// low for word (filler) tokens — crude mirror of the trained gates.
+    pub fn mock_log_beta(l: usize, hh: usize, token: i32) -> f32 {
+        let t = token as u32;
+        let hash = t
+            .wrapping_mul(2654435761)
+            .wrapping_add((l as u32) << 8)
+            .wrapping_add(hh as u32)
+            % 1000;
+        let base = if (32..288).contains(&t) { 0.999 } else { 0.95 };
+        let beta = base - (hash as f32) / 40_000.0;
+        beta.ln()
+    }
+}
+
+impl ModelBackend for MockBackend {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+    fn batch(&self) -> usize {
+        self.b
+    }
+    fn slots(&self) -> usize {
+        self.m
+    }
+    fn chunk(&self) -> usize {
+        self.c
+    }
+
+    fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut> {
+        self.decode_calls += 1;
+        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
+        let (m, dh, v) = (self.m, self.dims.dh, self.dims.vocab);
+        let mut logits = vec![0.0f32; b * v];
+        for lane in 0..b {
+            let tok = ins.tokens[lane];
+            self.decoded_per_lane[lane] += 1;
+            let next = if self.decoded_per_lane[lane] >= self.eos_after {
+                2 // EOS
+            } else {
+                ((tok + 1) as usize) % v
+            };
+            logits[lane * v + next] = 10.0;
+        }
+        let mut log_beta = vec![0.0f32; l * b * h];
+        for li in 0..l {
+            for lane in 0..b {
+                for hh in 0..h {
+                    log_beta[(li * b + lane) * h + hh] =
+                        Self::mock_log_beta(li, hh, ins.tokens[lane]);
+                }
+            }
+        }
+        // uniform attention over live slots
+        let mut attn = vec![0.0f32; l * b * h * m];
+        for i in 0..l * b * h {
+            let row = &ins.valid[i * m..(i + 1) * m];
+            let live: f32 = row.iter().sum();
+            if live > 0.0 {
+                for s in 0..m {
+                    attn[i * m + s] = row[s] / live;
+                }
+            }
+        }
+        let mut k_new = vec![0.0f32; l * b * h * dh];
+        for (i, x) in k_new.iter_mut().enumerate() {
+            *x = ((i % 7) as f32) * 0.1 + ins.tokens[(i / dh / h) % b] as f32 * 1e-3;
+        }
+        let v_new = k_new.clone();
+        Ok(DecodeOut { logits, log_beta, attn, k_new, v_new })
+    }
+
+    fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut> {
+        self.prefill_calls += 1;
+        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
+        let (m, dh, v, c) = (self.m, self.dims.dh, self.dims.vocab, self.c);
+        let mut logits = vec![0.0f32; b * c * v];
+        for lane in 0..b {
+            for ci in 0..c {
+                let tok = ins.tokens[lane * c + ci];
+                logits[(lane * c + ci) * v + ((tok + 1) as usize) % v] = 10.0;
+            }
+        }
+        let mut log_beta = vec![0.0f32; l * b * h * c];
+        for li in 0..l {
+            for lane in 0..b {
+                for hh in 0..h {
+                    for ci in 0..c {
+                        log_beta[((li * b + lane) * h + hh) * c + ci] =
+                            Self::mock_log_beta(li, hh, ins.tokens[lane * c + ci]);
+                    }
+                }
+            }
+        }
+        let attn_slots = vec![1.0 / m as f32; l * b * h * m];
+        let attn_chunk = vec![1.0 / c as f32; l * b * h * c];
+        let k_chunk = vec![0.1f32; l * b * h * c * dh];
+        let v_chunk = k_chunk.clone();
+        Ok(PrefillOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
+    }
+
+    fn reset_cache(&mut self) -> Result<()> {
+        self.decoded_per_lane = vec![0; self.b];
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_decode_emits_successor_then_eos() {
+        let mut mb = MockBackend::new(2, 8).with_eos_after(3);
+        let valid = vec![0.0f32; 4 * 2 * 2 * 8];
+        let ws = vec![0i32; 4 * 2 * 2];
+        for step in 0..4 {
+            let out = mb
+                .decode(&DecodeIn {
+                    tokens: &[10, 20],
+                    pos: &[step, step],
+                    valid: &valid,
+                    write_slot: &ws,
+                    inject_flag: None,
+                    inject_slot: None,
+                    inject_k: None,
+                    inject_v: None,
+                    want_attn: true,
+                    want_kv: true,
+                })
+                .unwrap();
+            let argmax = |lane: usize| {
+                (0..512)
+                    .max_by(|&a, &b| {
+                        out.logits[lane * 512 + a]
+                            .partial_cmp(&out.logits[lane * 512 + b])
+                            .unwrap()
+                    })
+                    .unwrap()
+            };
+            if step < 2 {
+                assert_eq!(argmax(0), 11);
+                assert_eq!(argmax(1), 21);
+            } else {
+                assert_eq!(argmax(0), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn mock_log_beta_prefers_syms() {
+        let sym = MockBackend::mock_log_beta(0, 0, 40);
+        let word = MockBackend::mock_log_beta(0, 0, 300);
+        assert!(sym > word);
+        assert!(sym < 0.0);
+    }
+
+    #[test]
+    fn mock_attention_is_uniform_over_live() {
+        let mut mb = MockBackend::new(1, 4);
+        let mut valid = vec![0.0f32; 4 * 1 * 2 * 4];
+        valid[0] = 1.0;
+        valid[1] = 1.0;
+        let out = mb
+            .decode(&DecodeIn {
+                tokens: &[1],
+                pos: &[0],
+                valid: &valid,
+                write_slot: &[0; 8],
+                inject_flag: None,
+                inject_slot: None,
+                inject_k: None,
+                inject_v: None,
+                want_attn: true,
+                want_kv: true,
+            })
+            .unwrap();
+        assert_eq!(out.attn[0], 0.5);
+        assert_eq!(out.attn[1], 0.5);
+        assert_eq!(out.attn[2], 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Golden-I/O verification: execute the exported HLO graphs on the exact
+//! inputs python ran through `model.decode_fn` / `model.prefill_fn` at
+//! export time, and compare every output tensor elementwise.  This is the
+//! cross-language numerical contract for the whole AOT path.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model_meta::ModelMeta;
+use crate::runtime::weights::{read_weights, HostTensor};
+
+const DECODE_OUTS: &[&str] = &["logits", "kc", "vc", "valid", "log_beta",
+                               "attn", "k_new", "v_new"];
+const PREFILL_OUTS: &[&str] = &["logits", "kc", "vc", "valid", "log_beta",
+                                "attn_slots", "attn_chunk", "k_chunk",
+                                "v_chunk"];
+const DECODE_INS: &[&str] = &["token", "pos", "kc", "vc", "valid",
+                              "write_slot", "inject_flag", "inject_slot",
+                              "inject_k", "inject_v"];
+const PREFILL_INS: &[&str] = &["tokens", "pos", "in_mask", "kc", "vc",
+                               "valid", "write_slots"];
+/// inputs that the graphs expect as i32 (goldens store everything as f32)
+const I32_INPUTS: &[&str] = &["token", "tokens", "pos", "write_slot",
+                              "inject_slot", "write_slots"];
+
+pub fn run_goldens(dir: &Path) -> Result<String> {
+    let meta = ModelMeta::load(dir)?;
+    let client = xla::PjRtClient::cpu()?;
+    let weights = read_weights(&dir.join("weights.bin"))?;
+    let gates = read_weights(&dir.join("gates_default.bin"))?;
+
+    let mut report = String::new();
+    for (kind, ins, outs, golden_file) in [
+        ("decode", DECODE_INS, DECODE_OUTS, "golden_decode.bin"),
+        ("prefill", PREFILL_INS, PREFILL_OUTS, "golden_prefill.bin"),
+    ] {
+        let golden = read_weights(&dir.join(golden_file))?;
+        // goldens were exported at (b=8, m=256)
+        let spec = meta
+            .pick(kind, 8, 256, "mlp")
+            .with_context(|| format!("no {kind} artifact at (8, >=256)"))?;
+        anyhow::ensure!(spec.m == 256, "golden expects m=256, found {}", spec.m);
+        let exe = super::compile_hlo(&client, &meta.dir.join(&spec.file))?;
+
+        let mut args: Vec<xla::PjRtBuffer> = Vec::new();
+        for p in &meta.param_order {
+            args.push(upload(&client, &weights[&p.name], false)?);
+        }
+        for g in &meta.gate_order {
+            args.push(upload(&client, &gates[&g.name], false)?);
+        }
+        for name in ins {
+            let t = golden
+                .get(&format!("in.{name}"))
+                .with_context(|| format!("golden missing in.{name}"))?;
+            args.push(upload(&client, t, I32_INPUTS.contains(name))?);
+        }
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let mut results = exe.execute_b(&arg_refs)?;
+        let results = results.swap_remove(0);
+        anyhow::ensure!(results.len() == outs.len(),
+                        "{kind}: {} outputs, expected {}", results.len(),
+                        outs.len());
+        for (buf, name) in results.iter().zip(outs) {
+            let got = buf.to_literal_sync()?.to_vec::<f32>()?;
+            let want = &golden[&format!("out.{name}")];
+            let max_err = max_abs_err(&got, &want.data);
+            let tol = 2e-3; // logit-scale f32 accumulation across the stack
+            writeln!(report, "{kind:8} {name:12} n={:8} max|err|={max_err:.2e} {}",
+                     got.len(), if max_err < tol { "OK" } else { "FAIL" })?;
+            anyhow::ensure!(max_err < tol,
+                            "{kind} output {name} diverges: {max_err}");
+        }
+    }
+    report.push_str("golden selftest: ALL OK\n");
+    Ok(report)
+}
+
+fn upload(client: &xla::PjRtClient, t: &HostTensor,
+          as_i32: bool) -> Result<xla::PjRtBuffer> {
+    if as_i32 {
+        let ints: Vec<i32> = t.data.iter().map(|&x| x as i32).collect();
+        Ok(client.buffer_from_host_buffer(&ints, &t.shape, None)?)
+    } else {
+        Ok(client.buffer_from_host_buffer(&t.data, &t.shape, None)?)
+    }
+}
+
+fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() != b.len() {
+        return f32::INFINITY;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Sanity for the helpers; the full golden run needs artifacts and lives in
+/// rust/tests/golden.rs.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_err_basics() {
+        assert_eq!(max_abs_err(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_err(&[1.0], &[1.0, 2.0]), f32::INFINITY);
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT client wiring, HLO artifact loading, weight blobs and
+//! the ModelBackend abstraction the engine drives.
+
+pub mod backend;
+pub mod golden;
+pub mod weights;
+
+pub use backend::{compile_hlo, DecodeIn, DecodeOut, MockBackend, ModelBackend,
+                  PjrtBackend, PrefillIn, PrefillOut};
+pub use weights::{read_weights, HostTensor};

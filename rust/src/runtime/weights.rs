@@ -1,0 +1,114 @@
+//! TKVW weight-blob reader (written by python/compile/model.py::save_weights_bin).
+//!
+//! Format (little-endian):
+//!   magic "TKVW" | n:u32 | n x { name_len:u32, name, ndim:u32, dims:u32*,
+//!                                 f32 data }
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub fn read_weights(path: &Path) -> anyhow::Result<BTreeMap<String, HostTensor>> {
+    let data = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+    parse_weights(&data).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+}
+
+pub fn parse_weights(data: &[u8]) -> anyhow::Result<BTreeMap<String, HostTensor>> {
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+        let s = data
+            .get(*off..*off + n)
+            .ok_or_else(|| anyhow::anyhow!("truncated at byte {off}"))?;
+        *off += n;
+        Ok(s)
+    };
+    let u32le = |off: &mut usize| -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(take(off, 4)?.try_into().unwrap()))
+    };
+    anyhow::ensure!(take(&mut off, 4)? == b"TKVW", "bad magic");
+    let n = u32le(&mut off)? as usize;
+    anyhow::ensure!(n < 100_000, "implausible tensor count {n}");
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = u32le(&mut off)? as usize;
+        let name = String::from_utf8(take(&mut off, name_len)?.to_vec())
+            .map_err(|_| anyhow::anyhow!("non-utf8 tensor name"))?;
+        let ndim = u32le(&mut off)? as usize;
+        anyhow::ensure!(ndim <= 8, "implausible rank {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32le(&mut off)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let bytes = take(&mut off, count * 4)?;
+        let data_f32: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.insert(name, HostTensor { shape, data: data_f32 });
+    }
+    anyhow::ensure!(off == data.len(), "{} trailing bytes", data.len() - off);
+    Ok(out)
+}
+
+#[cfg(test)]
+pub fn write_weights(tensors: &[(&str, &HostTensor)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"TKVW");
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &x in &t.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let a = HostTensor { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] };
+        let b = HostTensor { shape: vec![], data: vec![7.0] };
+        let blob = write_weights(&[("w.a", &a), ("b", &b)]);
+        let back = parse_weights(&blob).unwrap();
+        assert_eq!(back["w.a"], a);
+        assert_eq!(back["b"].data, vec![7.0]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let a = HostTensor { shape: vec![4], data: vec![0.; 4] };
+        let blob = write_weights(&[("x", &a)]);
+        assert!(parse_weights(&blob[..blob.len() - 2]).is_err()); // truncated
+        let mut bad = blob.clone();
+        bad[0] = b'X';
+        assert!(parse_weights(&bad).is_err()); // magic
+        let mut extra = blob;
+        extra.push(0);
+        assert!(parse_weights(&extra).is_err()); // trailing
+    }
+}

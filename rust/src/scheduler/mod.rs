@@ -1,0 +1,112 @@
+//! Request admission and continuous batching.
+//!
+//! Requests wait in a bounded FIFO; whenever a batch lane frees up the
+//! batcher assigns the next request to it (vLLM-style continuous batching —
+//! lanes are never drained to a barrier).  Prefill/decode interleaving is
+//! decided per tick by the engine (`prefill_priority` config).
+
+use std::collections::VecDeque;
+
+/// A generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub stop_at_eos: bool,
+    /// free-form tag used by the eval harness to route grading
+    pub tag: String,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, stop_at_eos: true, tag: String::new() }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    Length,
+    Aborted,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tag: String,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub ttft_us: f64,
+    pub e2e_us: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum AdmitError {
+    #[error("queue full (capacity {0})")]
+    QueueFull(usize),
+    #[error("empty prompt")]
+    EmptyPrompt,
+}
+
+/// Bounded FIFO wait queue with admission control.
+#[derive(Debug)]
+pub struct WaitQueue {
+    q: VecDeque<Request>,
+    capacity: usize,
+}
+
+impl WaitQueue {
+    pub fn new(capacity: usize) -> WaitQueue {
+        WaitQueue { q: VecDeque::new(), capacity }
+    }
+    pub fn admit(&mut self, req: Request) -> Result<(), AdmitError> {
+        if req.prompt.is_empty() {
+            return Err(AdmitError::EmptyPrompt);
+        }
+        if self.q.len() >= self.capacity {
+            return Err(AdmitError::QueueFull(self.capacity));
+        }
+        self.q.push_back(req);
+        Ok(())
+    }
+    pub fn pop(&mut self) -> Option<Request> {
+        self.q.pop_front()
+    }
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut q = WaitQueue::new(2);
+        q.admit(Request::new(1, vec![1], 4)).unwrap();
+        q.admit(Request::new(2, vec![1], 4)).unwrap();
+        assert!(matches!(
+            q.admit(Request::new(3, vec![1], 4)),
+            Err(AdmitError::QueueFull(2))
+        ));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn rejects_empty_prompt() {
+        let mut q = WaitQueue::new(2);
+        assert!(matches!(
+            q.admit(Request::new(1, vec![], 4)),
+            Err(AdmitError::EmptyPrompt)
+        ));
+    }
+}

@@ -1,0 +1,135 @@
+//! Serving front-ends.
+//!
+//! `InProcServer` runs the engine on a dedicated thread behind mpsc
+//! channels (the in-process API used by examples and the eval harness when
+//! overlap matters).  `tcp` exposes a line-delimited JSON protocol over a
+//! std TcpListener — one request per line:
+//!   {"id": 1, "prompt": [1, 40, 41], "max_new_tokens": 16}
+//! responses stream back as
+//!   {"id": 1, "tokens": [...], "finish": "eos", "ttft_us": ..., "e2e_us": ...}
+
+pub mod tcp;
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use crate::engine::Engine;
+use crate::runtime::ModelBackend;
+use crate::scheduler::{Request, Response};
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Engine on its own thread; submit requests and poll responses from any
+/// other thread.
+pub struct InProcServer {
+    tx: Sender<Msg>,
+    rx: Receiver<Response>,
+    handle: Option<JoinHandle<anyhow::Result<()>>>,
+}
+
+impl InProcServer {
+    pub fn spawn<B: ModelBackend + 'static>(mut engine: Engine<B>) -> InProcServer {
+        let (tx, req_rx) = channel::<Msg>();
+        let (resp_tx, rx) = channel::<Response>();
+        let handle = std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut shutdown = false;
+            loop {
+                // drain incoming requests without blocking the decode loop
+                loop {
+                    match req_rx.try_recv() {
+                        Ok(Msg::Req(r)) => {
+                            if let Err(e) = engine.submit(r) {
+                                log_admit_error(&e);
+                            }
+                        }
+                        Ok(Msg::Shutdown) => shutdown = true,
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                let worked = engine.tick()?;
+                for resp in engine.take_responses() {
+                    let _ = resp_tx.send(resp);
+                }
+                if shutdown && engine.idle() {
+                    return Ok(());
+                }
+                if !worked && !shutdown {
+                    // idle: block until the next request arrives
+                    match req_rx.recv() {
+                        Ok(Msg::Req(r)) => {
+                            if let Err(e) = engine.submit(r) {
+                                log_admit_error(&e);
+                            }
+                        }
+                        Ok(Msg::Shutdown) => shutdown = true,
+                        Err(_) => return Ok(()),
+                    }
+                }
+            }
+        });
+        InProcServer { tx, rx, handle: Some(handle) }
+    }
+
+    pub fn submit(&self, req: Request) {
+        let _ = self.tx.send(Msg::Req(req));
+    }
+
+    pub fn try_recv(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn recv_blocking(&self) -> Option<Response> {
+        self.rx.recv().ok()
+    }
+
+    /// Finish outstanding work and join the engine thread.
+    pub fn shutdown(mut self) -> Vec<Response> {
+        let _ = self.tx.send(Msg::Shutdown);
+        let mut out = Vec::new();
+        while let Ok(r) = self.rx.recv() {
+            out.push(r);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        out
+    }
+}
+
+fn log_admit_error(e: &crate::scheduler::AdmitError) {
+    eprintln!("[server] request rejected: {e}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::runtime::MockBackend;
+
+    #[test]
+    fn inproc_server_round_trip() {
+        let cfg = EngineConfig {
+            budget: 16,
+            batch: 2,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(2, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        for i in 0..4 {
+            srv.submit(Request::new(i, vec![1, 30 + i as u32], 3));
+        }
+        let responses = srv.shutdown();
+        assert_eq!(responses.len(), 4);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Line-delimited JSON TCP front-end (`trimkv serve --port N`).
+//!
+//! Protocol: each request is one JSON line
+//!   {"id": 1, "prompt": [1, 40, 41], "max_new_tokens": 16, "tag": "x"}
+//! each response is one JSON line
+//!   {"id": 1, "tag": "x", "tokens": [...], "finish": "eos",
+//!    "ttft_us": 123.0, "e2e_us": 456.0}
+//! Closing the connection finishes the session.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::scheduler::{FinishReason, Request, Response};
+use crate::server::InProcServer;
+use crate::util::json::Json;
+
+pub fn parse_request_line(line: &str) -> anyhow::Result<Request> {
+    let j = Json::parse(line)?;
+    let id = j.usize_field("id")? as u64;
+    let prompt: Vec<u32> = j
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing prompt array"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .map(|x| x as u32)
+        .collect();
+    let max_new = j.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(64);
+    let tag = j
+        .get("tag")
+        .and_then(Json::as_str)
+        .unwrap_or_default()
+        .to_string();
+    let mut req = Request::new(id, prompt, max_new);
+    req.tag = tag;
+    Ok(req)
+}
+
+pub fn response_to_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("tag", Json::str(r.tag.clone())),
+        ("tokens", Json::arr_usize(
+            &r.tokens.iter().map(|&t| t as usize).collect::<Vec<_>>())),
+        ("finish", Json::str(match r.finish {
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::Aborted => "aborted",
+        })),
+        ("prompt_len", Json::num(r.prompt_len as f64)),
+        ("ttft_us", Json::num(r.ttft_us)),
+        ("e2e_us", Json::num(r.e2e_us)),
+    ])
+}
+
+/// Serve one client connection: read request lines, stream response lines.
+/// Returns when the client closes its write side and all work is done.
+pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result<usize> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut outstanding = 0usize;
+    let mut served = 0usize;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request_line(&line) {
+            Ok(req) => {
+                srv.submit(req);
+                outstanding += 1;
+            }
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("error", Json::str(e.to_string())),
+                ]))?;
+            }
+        }
+        // drain any completions that are already available
+        while let Some(resp) = srv.try_recv() {
+            writeln!(writer, "{}", response_to_json(&resp))?;
+            outstanding -= 1;
+            served += 1;
+        }
+    }
+    while outstanding > 0 {
+        if let Some(resp) = srv.recv_blocking() {
+            writeln!(writer, "{}", response_to_json(&resp))?;
+            outstanding -= 1;
+            served += 1;
+        } else {
+            break;
+        }
+    }
+    Ok(served)
+}
+
+/// Accept loop: one connection at a time (single engine, single core).
+pub fn listen(addr: &str, srv: &InProcServer) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("[tcp] listening on {addr}");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let peer = s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                match serve_connection(s, srv) {
+                    Ok(n) => eprintln!("[tcp] {peer}: served {n} requests"),
+                    Err(e) => eprintln!("[tcp] {peer}: {e}"),
+                }
+            }
+            Err(e) => eprintln!("[tcp] accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_line() {
+        let r = parse_request_line(
+            r#"{"id": 3, "prompt": [1, 2, 3], "max_new_tokens": 9, "tag": "t"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 9);
+        assert_eq!(r.tag, "t");
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let r = parse_request_line(r#"{"id": 1, "prompt": [5]}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 64);
+        assert!(parse_request_line("{}").is_err());
+        assert!(parse_request_line("not json").is_err());
+    }
+
+    #[test]
+    fn response_json_shape() {
+        let r = Response {
+            id: 9,
+            tag: "x".into(),
+            prompt_len: 2,
+            tokens: vec![7, 8],
+            finish: FinishReason::Eos,
+            ttft_us: 1.0,
+            e2e_us: 2.0,
+        };
+        let j = response_to_json(&r);
+        assert_eq!(j.usize_field("id").unwrap(), 9);
+        assert_eq!(j.str_field("finish").unwrap(), "eos");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        use crate::config::EngineConfig;
+        use crate::engine::Engine;
+        use crate::runtime::MockBackend;
+        use std::io::{BufRead, BufReader, Write};
+
+        let cfg = EngineConfig {
+            budget: 16, batch: 1, chunked_prefill: false, ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            serve_connection(s, &srv).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, r#"{{"id": 1, "prompt": [1, 50], "max_new_tokens": 3}}"#)
+            .unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut line = String::new();
+        BufReader::new(&client).read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.usize_field("id").unwrap(), 1);
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(t.join().unwrap(), 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Bench harness for `cargo bench` targets (criterion is unavailable
+//! offline; benches use `harness = false` and this module).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95 reporting, plus a
+//! plain-text table renderer shared by the paper-table benches.
+
+use std::time::Instant;
+
+use super::stats::{OnlineStats, Percentiles};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub ci95_us: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_us / 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let mut pct = Percentiles::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        stats.push(us);
+        pct.push(us);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats.mean(),
+        p50_us: pct.pct(50.0),
+        p95_us: pct.pct(95.0),
+        ci95_us: stats.ci95(),
+    }
+}
+
+pub fn report(results: &[BenchResult]) {
+    println!("{:<44} {:>10} {:>12} {:>12} {:>12}", "bench", "iters", "mean", "p50", "p95");
+    for r in results {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_us(r.mean_us),
+            fmt_us(r.p50_us),
+            fmt_us(r.p95_us)
+        );
+    }
+}
+
+pub fn fmt_us(us: f64) -> String {
+    if us.is_nan() {
+        "-".into()
+    } else if us < 1e3 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.2}s", us / 1e6)
+    }
+}
+
+/// Fixed-width ASCII table used by the paper-table reproductions.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{:>w$}", s, w = widths[c]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+    /// CSV form for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') { format!("\"{s}\"") } else { s.to_string() }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_us >= 0.0);
+        assert_eq!(r.iters, 10);
+        assert!(r.p50_us <= r.p95_us);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "acc"]);
+        t.row(vec!["trimkv".into(), "0.91".into()]);
+        t.row(vec!["h2o".into(), "0.5".into()]);
+        let s = t.render();
+        assert!(s.contains("trimkv"));
+        assert_eq!(s.lines().count(), 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "method,acc");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn fmt_us_scales() {
+        assert_eq!(fmt_us(12.0), "12.0µs");
+        assert_eq!(fmt_us(2500.0), "2.50ms");
+        assert_eq!(fmt_us(3.2e6), "3.20s");
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args,
+//! and generated `--help` text.  Used by the `trimkv` binary, the examples
+//! and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    spec: Vec<ArgSpec>,
+}
+
+impl Args {
+    pub fn spec() -> SpecBuilder {
+        SpecBuilder { spec: Vec::new() }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values
+            .get(name)
+            .map(String::as_str)
+            .or_else(|| self.default_of(name))
+    }
+    fn default_of(&self, name: &str) -> Option<&str> {
+        self.spec.iter().find(|s| s.name == name).and_then(|s| s.default)
+    }
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn usize(&self, name: &str) -> anyhow::Result<usize> {
+        parse(self.get(name), name)
+    }
+    pub fn u64(&self, name: &str) -> anyhow::Result<u64> {
+        parse(self.get(name), name)
+    }
+    pub fn f64(&self, name: &str) -> anyhow::Result<f64> {
+        parse(self.get(name), name)
+    }
+    pub fn usize_list(&self, name: &str) -> anyhow::Result<Vec<usize>> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        raw.split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad usize in --{name}: `{s}`"))
+            })
+            .collect()
+    }
+
+    pub fn help(&self) -> String {
+        let mut out = format!("usage: {} [options]\n\noptions:\n", self.program);
+        for s in &self.spec {
+            let tail = if s.is_flag {
+                String::new()
+            } else {
+                format!(" <v>{}", s.default.map(|d| format!(" [default {d}]")).unwrap_or_default())
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", s.name, tail, s.help));
+        }
+        out
+    }
+}
+
+fn parse<T: std::str::FromStr>(v: Option<&str>, name: &str) -> anyhow::Result<T> {
+    let v = v.ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+    v.parse()
+        .map_err(|_| anyhow::anyhow!("invalid value for --{name}: `{v}`"))
+}
+
+pub struct SpecBuilder {
+    spec: Vec<ArgSpec>,
+}
+
+impl SpecBuilder {
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.spec.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.spec.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.spec.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn parse_env(self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().collect();
+        self.parse(&argv)
+    }
+
+    pub fn parse(self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            spec: self.spec,
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest == "help" {
+                    println!("{}", args.help());
+                    std::process::exit(0);
+                }
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = args
+                    .spec
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.split_whitespace().map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::spec()
+            .opt("budget", "256", "kv budget")
+            .opt("policy", "trimkv", "eviction policy")
+            .flag("verbose", "chatty")
+            .parse(&argv("--budget 512 --verbose extra"))
+            .unwrap();
+        assert_eq!(a.usize("budget").unwrap(), 512);
+        assert_eq!(a.get("policy"), Some("trimkv")); // default
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::spec()
+            .opt("m", "1", "m")
+            .parse(&argv("--m=42"))
+            .unwrap();
+        assert_eq!(a.usize("m").unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_values() {
+        let s = || Args::spec().opt("m", "1", "m").flag("f", "f");
+        assert!(s().parse(&argv("--nope 1")).is_err());
+        assert!(s().parse(&argv("--m")).is_err());
+        assert!(s().parse(&argv("--f=1")).is_err());
+        let a = s().parse(&argv("--m xyz")).unwrap();
+        assert!(a.usize("m").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::spec()
+            .opt("budgets", "64,128,256", "list")
+            .parse(&argv(""))
+            .unwrap();
+        assert_eq!(a.usize_list("budgets").unwrap(), vec![64, 128, 256]);
+    }
+}

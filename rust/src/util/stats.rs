@@ -1,0 +1,159 @@
+//! Streaming statistics and latency histograms for metrics + bench harness.
+
+/// Welford online mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    /// Half-width of the 95% CI of the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 { f64::NAN } else { 1.96 * self.std() / (self.n as f64).sqrt() }
+    }
+}
+
+/// Exact percentile over a retained sample (fine at our scales).
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+    /// p in [0, 100]; nearest-rank.
+    pub fn pct(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (self.xs.len() - 1) as f64).round() as usize;
+        self.xs[rank.min(self.xs.len() - 1)]
+    }
+}
+
+/// Log-bucketed latency histogram (microseconds), fixed memory.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: [u64; 32],
+    stats: OnlineStats,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: [0; 32], stats: OnlineStats::new() }
+    }
+    pub fn record_us(&mut self, us: f64) {
+        let idx = if us < 1.0 { 0 } else { (us.log2() as usize).min(31) };
+        self.buckets[idx] += 1;
+        self.stats.push(us);
+    }
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.stats.mean()
+    }
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn pct_us(&self, p: f64) -> f64 {
+        let total = self.stats.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        f64::NAN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.std() - 2.138).abs() < 1e-2);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut p = Percentiles::default();
+        for i in 1..=100 {
+            p.push(i as f64);
+        }
+        assert_eq!(p.pct(0.0), 1.0);
+        assert_eq!(p.pct(100.0), 100.0);
+        assert!((p.pct(50.0) - 50.0).abs() <= 1.0);
+        assert!((p.pct(95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_percentile_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..1000 {
+            h.record_us(10.0 + i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.pct_us(50.0) <= h.pct_us(99.0));
+        assert!(h.mean_us() > 10.0);
+    }
+}

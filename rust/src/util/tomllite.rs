@@ -1,0 +1,162 @@
+//! TOML-subset parser for engine config files (the toml crate is
+//! unavailable offline).  Supported: `[section]` headers, `key = value`
+//! with string/int/float/bool/array values, `#` comments.  Values are
+//! surfaced as `Json` so config code shares accessors with meta.json.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse into {"section.key": value}; keys before any section have no prefix.
+pub fn parse(src: &str) -> Result<BTreeMap<String, Json>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(err("empty section name"));
+            }
+            continue;
+        }
+        let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full, parse_value(val.trim(), ln + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, line: usize) -> Result<Json, TomlError> {
+    let err = |msg: String| TomlError { line, msg };
+    if v.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(rest) = v.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    v.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(format!("cannot parse value `{v}`")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let src = r#"
+# engine config
+artifacts_dir = "artifacts"   # where AOT outputs live
+
+[engine]
+budget = 256
+policy = "trimkv"
+stream = true
+temperature = 0.0
+
+[scheduler]
+max_batch = 8
+budgets = [64, 128, 256]
+"#;
+        let m = parse(src).unwrap();
+        assert_eq!(m["artifacts_dir"].as_str().unwrap(), "artifacts");
+        assert_eq!(m["engine.budget"].as_usize().unwrap(), 256);
+        assert_eq!(m["engine.policy"].as_str().unwrap(), "trimkv");
+        assert_eq!(m["engine.stream"].as_bool().unwrap(), true);
+        assert_eq!(m["scheduler.budgets"].as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(m["name"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = what").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let m = parse("x = [[1, 2], [3]]").unwrap();
+        let outer = m["x"].as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_arr().unwrap().len(), 2);
+    }
+}

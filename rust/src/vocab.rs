@@ -1,0 +1,180 @@
+//! Vocabulary layout shared with the python build path (artifacts/vocab.json).
+//!
+//! The synthetic vocabulary is structured: control tokens give the task
+//! grammar, "symbol" tokens carry content (keys/values/tags), "word" tokens
+//! are filler, digits encode numbers.  The rust workload generators and the
+//! tokenizer are derived entirely from this layout, which keeps them
+//! compatible with the corpus the gates were trained on.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Control-token ids (must mirror python/compile/vocab.py).
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub size: usize,
+    pub control: BTreeMap<String, u32>,
+    pub sym_base: u32,
+    pub num_syms: u32,
+    pub word_base: u32,
+    pub num_words: u32,
+    pub digit_base: u32,
+    pub num_digits: u32,
+}
+
+macro_rules! control_getters {
+    ($($fn_name:ident => $key:literal),+ $(,)?) => {
+        $(pub fn $fn_name(&self) -> u32 {
+            self.control[$key]
+        })+
+    };
+}
+
+impl Vocab {
+    pub fn load(path: &Path) -> anyhow::Result<Vocab> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Vocab> {
+        let control = j
+            .get("control")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("vocab.json: missing control map"))?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_usize().unwrap_or(0) as u32))
+            .collect();
+        Ok(Vocab {
+            size: j.usize_field("vocab_size")?,
+            control,
+            sym_base: j.usize_field("sym_base")? as u32,
+            num_syms: j.usize_field("num_syms")? as u32,
+            word_base: j.usize_field("word_base")? as u32,
+            num_words: j.usize_field("num_words")? as u32,
+            digit_base: j.usize_field("digit_base")? as u32,
+            num_digits: j.usize_field("num_digits")? as u32,
+        })
+    }
+
+    /// Built-in layout mirroring python/compile/vocab.py — used by tests and
+    /// as a fallback when artifacts are absent (MockBackend runs).
+    pub fn builtin() -> Vocab {
+        let names = [
+            "<pad>", "<bos>", "<eos>", "<sep>", "<query>", "<ans>", "<key>",
+            "<val>", "<think>", "<row>", "<exec>", "<session>", "<user>",
+            "<assistant>", "<q>", "<update>", "<shot>", "<label>",
+            "<find_min>", "<find_max>", "<choice>", "<correct>", "<niah>",
+            "<sum>", "<count>", "<target>", "<plus>", "<minus>", "<times>",
+            "<equals>", "<hop>", "</think>",
+        ];
+        let control =
+            names.iter().enumerate().map(|(i, n)| (n.to_string(), i as u32)).collect();
+        Vocab {
+            size: 512,
+            control,
+            sym_base: 32,
+            num_syms: 256,
+            word_base: 288,
+            num_words: 192,
+            digit_base: 480,
+            num_digits: 10,
+        }
+    }
+
+    control_getters! {
+        pad => "<pad>", bos => "<bos>", eos => "<eos>", sep => "<sep>",
+        query => "<query>", ans => "<ans>", key => "<key>", val => "<val>",
+        think => "<think>", row => "<row>", exec_tok => "<exec>",
+        session => "<session>", user => "<user>", assistant => "<assistant>",
+        update => "<update>", shot => "<shot>", label => "<label>",
+        find_min => "<find_min>", find_max => "<find_max>", niah => "<niah>",
+        count => "<count>", target => "<target>", plus => "<plus>",
+        minus => "<minus>", equals => "<equals>", hop => "<hop>",
+        end_think => "</think>",
+    }
+
+    pub fn sym(&self, i: u32) -> u32 {
+        debug_assert!(i < self.num_syms);
+        self.sym_base + i
+    }
+    pub fn word(&self, i: u32) -> u32 {
+        debug_assert!(i < self.num_words);
+        self.word_base + i
+    }
+    pub fn digit(&self, i: u32) -> u32 {
+        debug_assert!(i < self.num_digits);
+        self.digit_base + i
+    }
+    pub fn digit_value(&self, tok: u32) -> Option<u32> {
+        (tok >= self.digit_base && tok < self.digit_base + self.num_digits)
+            .then(|| tok - self.digit_base)
+    }
+    pub fn is_sym(&self, tok: u32) -> bool {
+        tok >= self.sym_base && tok < self.sym_base + self.num_syms
+    }
+
+    /// Human-readable token name (Fig 5/13-19 dumps).
+    pub fn name(&self, tok: u32) -> String {
+        for (n, &id) in &self.control {
+            if id == tok {
+                return n.clone();
+            }
+        }
+        if self.is_sym(tok) {
+            format!("s{}", tok - self.sym_base)
+        } else if tok >= self.word_base && tok < self.word_base + self.num_words {
+            format!("w{}", tok - self.word_base)
+        } else if let Some(d) = self.digit_value(tok) {
+            format!("{d}")
+        } else {
+            format!("<aux{tok}>")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_layout_is_consistent() {
+        let v = Vocab::builtin();
+        assert_eq!(v.sym_base + v.num_syms, v.word_base);
+        assert_eq!(v.word_base + v.num_words, v.digit_base);
+        assert_eq!(v.bos(), 1);
+        assert_eq!(v.eos(), 2);
+        assert_eq!(v.query(), 4);
+        assert_eq!(v.name(1), "<bos>");
+        assert_eq!(v.name(v.sym(3)), "s3");
+        assert_eq!(v.name(v.digit(7)), "7");
+        assert_eq!(v.digit_value(v.digit(7)), Some(7));
+        assert_eq!(v.digit_value(v.sym(0)), None);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let src = r#"{
+            "vocab_size": 512,
+            "control": {"<bos>": 1, "<eos>": 2, "<pad>": 0, "<sep>": 3,
+                        "<query>": 4, "<ans>": 5, "<key>": 6, "<val>": 7,
+                        "<think>": 8, "<row>": 9, "<exec>": 10, "<session>": 11,
+                        "<user>": 12, "<assistant>": 13, "<q>": 14,
+                        "<update>": 15, "<shot>": 16, "<label>": 17,
+                        "<find_min>": 18, "<find_max>": 19, "<choice>": 20,
+                        "<correct>": 21, "<niah>": 22, "<sum>": 23,
+                        "<count>": 24, "<target>": 25, "<plus>": 26,
+                        "<minus>": 27, "<times>": 28, "<equals>": 29,
+                        "<hop>": 30, "</think>": 31},
+            "sym_base": 32, "num_syms": 256,
+            "word_base": 288, "num_words": 192,
+            "digit_base": 480, "num_digits": 10
+        }"#;
+        let v = Vocab::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(v.size, 512);
+        assert_eq!(v.bos(), 1);
+        assert_eq!(v.sym(0), 32);
+    }
+}

@@ -1,0 +1,499 @@
+//! Serving-time workload generators + graders — the rust mirror of
+//! python/compile/tasks.py (same vocabulary grammar; the python goldens in
+//! artifacts/golden_episodes.jsonl are parsed and graded by this module as
+//! the cross-language parity check).
+//!
+//! Each generator produces an `Episode`: the prompt fed to the engine, the
+//! expected answer, and the grading rule.  DESIGN.md §2 maps each task to
+//! the paper benchmark it stands in for.
+
+pub mod suites;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::vocab::Vocab;
+
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub task: String,
+    pub prompt: Vec<u32>,
+    pub answer: Vec<u32>,
+    pub grade: GradeRule,
+}
+
+/// How generated tokens are scored against the answer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GradeRule {
+    /// generated must start with `answer` (ignoring anything after)
+    ExactPrefix,
+    /// the tokens right after the first `<ans>` in the generation must
+    /// match `answer` (chain-of-thought tasks generate think tokens first)
+    AfterAns,
+    /// row-level F1 over `<row> tag v...` groups (LongProc HTML->TSV analog)
+    RowF1 { row_width: usize },
+}
+
+/// Score a generation in [0, 1].
+pub fn grade(ep: &Episode, generated: &[u32], vocab: &Vocab) -> f64 {
+    match ep.grade {
+        GradeRule::ExactPrefix => {
+            let ok = generated.len() >= ep.answer.len()
+                && generated[..ep.answer.len()] == ep.answer[..];
+            ok as u8 as f64
+        }
+        GradeRule::AfterAns => {
+            let Some(p) = generated.iter().position(|&t| t == vocab.ans())
+            else { return 0.0 };
+            let tail = &generated[p + 1..];
+            let ok = tail.len() >= ep.answer.len()
+                && tail[..ep.answer.len()] == ep.answer[..];
+            ok as u8 as f64
+        }
+        GradeRule::RowF1 { row_width } => {
+            let want = parse_rows(&ep.answer, vocab, row_width);
+            let got = parse_rows(generated, vocab, row_width);
+            if want.is_empty() {
+                return 0.0;
+            }
+            let hit = got.iter().filter(|r| want.contains(r)).count() as f64;
+            let prec = if got.is_empty() { 0.0 } else { hit / got.len() as f64 };
+            let rec = hit / want.len() as f64;
+            if prec + rec == 0.0 { 0.0 } else { 2.0 * prec * rec / (prec + rec) }
+        }
+    }
+}
+
+fn parse_rows(tokens: &[u32], vocab: &Vocab, row_width: usize) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i] == vocab.row() {
+            let row: Vec<u32> = tokens[i + 1..]
+                .iter()
+                .take(row_width + 1)
+                .copied()
+                .collect();
+            if row.len() == row_width + 1 {
+                out.push(row);
+            }
+            i += row_width + 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Keys/values come from a reduced pool — must match python tasks.SYM_POOL.
+pub const SYM_POOL: u32 = 64;
+
+pub struct Gen<'a> {
+    pub v: &'a Vocab,
+    pub rng: Rng,
+}
+
+impl<'a> Gen<'a> {
+    pub fn new(v: &'a Vocab, seed: u64) -> Gen<'a> {
+        Gen { v, rng: Rng::new(seed) }
+    }
+
+    fn sym(&mut self) -> u32 {
+        self.v.sym(self.rng.below(SYM_POOL as usize) as u32)
+    }
+    fn filler(&mut self, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|_| self.v.word(self.rng.below(self.v.num_words as usize) as u32))
+            .collect()
+    }
+    fn distinct_syms(&mut self, n: usize) -> Vec<u32> {
+        self.rng
+            .sample_indices(SYM_POOL as usize, n)
+            .into_iter()
+            .map(|i| self.v.sym(i as u32))
+            .collect()
+    }
+
+    /// recall (GSM8K/MATH analog): facts `<key> k v`, filler, final query.
+    pub fn recall(&mut self, n_pairs: usize, filler: usize) -> Episode {
+        let keys = self.distinct_syms(n_pairs);
+        let vals: Vec<u32> = (0..n_pairs).map(|_| self.sym()).collect();
+        let mut p = vec![self.v.bos()];
+        for (k, v) in keys.iter().zip(&vals) {
+            p.extend([self.v.key(), *k, *v]);
+            let f = self.rng.below(filler + 1);
+            p.extend(self.filler(f));
+        }
+        let qi = self.rng.below(n_pairs);
+        p.extend([self.v.query(), keys[qi]]);
+        Episode {
+            task: "recall".into(),
+            prompt: p,
+            answer: vec![vals[qi]],
+            grade: GradeRule::ExactPrefix,
+        }
+    }
+
+    /// copy (LongProc copy analog): replay a span after `<sep>`.
+    pub fn copy(&mut self, n: usize) -> Episode {
+        let syms: Vec<u32> = (0..n).map(|_| self.sym()).collect();
+        let mut p = vec![self.v.bos()];
+        p.extend(&syms);
+        p.push(self.v.sep());
+        Episode {
+            task: "copy".into(),
+            prompt: p,
+            answer: syms,
+            grade: GradeRule::ExactPrefix,
+        }
+    }
+
+    /// chain (AIME analog): multi-hop pointer chase with CoT generation.
+    pub fn chain(&mut self, n_pairs: usize, hops: usize, filler: usize) -> Episode {
+        let syms = self.distinct_syms(n_pairs + hops + 1);
+        let chain: Vec<u32> = syms[..hops + 1].to_vec();
+        let distract: Vec<u32> = syms[hops + 1..].to_vec();
+        let mut pairs: Vec<(u32, u32)> =
+            (0..hops).map(|i| (chain[i], chain[i + 1])).collect();
+        for &d in &distract {
+            pairs.push((d, distract[self.rng.below(distract.len())]));
+        }
+        self.rng.shuffle(&mut pairs);
+        let mut p = vec![self.v.bos()];
+        for (a, b) in pairs {
+            p.extend([self.v.key(), a, b]);
+            let f = self.rng.below(filler + 1);
+            p.extend(self.filler(f));
+        }
+        p.extend([self.v.query(), chain[0], self.v.hop(),
+                  self.v.digit(hops as u32), self.v.think()]);
+        Episode {
+            task: "chain".into(),
+            prompt: p,
+            answer: vec![chain[hops]],
+            grade: GradeRule::AfterAns,
+        }
+    }
+
+    /// proc_table (LongProc HTML->TSV analog), graded by row-F1.
+    pub fn proc_table(&mut self, n_rows: usize, row_width: usize,
+                      n_extract: usize) -> Episode {
+        let tags = self.distinct_syms(n_rows);
+        let rows: Vec<Vec<u32>> = (0..n_rows)
+            .map(|_| (0..row_width).map(|_| self.sym()).collect())
+            .collect();
+        let mut p = vec![self.v.bos()];
+        for (t, row) in tags.iter().zip(&rows) {
+            p.extend([self.v.row(), *t]);
+            p.extend(row);
+            let f = self.rng.below(3);
+            p.extend(self.filler(f));
+        }
+        let want = self.rng.sample_indices(n_rows, n_extract);
+        p.push(self.v.exec_tok());
+        for &w in &want {
+            p.push(tags[w]);
+        }
+        p.push(self.v.ans());
+        let mut answer = Vec::new();
+        for &w in &want {
+            answer.push(self.v.row());
+            answer.push(tags[w]);
+            answer.extend(&rows[w]);
+        }
+        Episode {
+            task: "proc_table".into(),
+            prompt: p,
+            answer,
+            grade: GradeRule::RowF1 { row_width },
+        }
+    }
+
+    /// countdown (LongProc Countdown analog): digit-arithmetic trace.
+    pub fn countdown(&mut self, n_steps: usize) -> Episode {
+        let start = self.rng.below(10) as u32;
+        let mut cur = start;
+        let mut p = vec![self.v.bos(), self.v.count(), self.v.digit(start),
+                         self.v.sep()];
+        for _ in 0..n_steps {
+            let plus = self.rng.bool(0.5);
+            let operand = self.rng.range(1, 10) as u32;
+            cur = if plus { (cur + operand) % 10 } else { (cur + 10 - operand) % 10 };
+            p.extend([if plus { self.v.plus() } else { self.v.minus() },
+                      self.v.digit(operand)]);
+        }
+        p.push(self.v.think());
+        Episode {
+            task: "countdown".into(),
+            prompt: p,
+            answer: vec![self.v.digit(cur)],
+            grade: GradeRule::AfterAns,
+        }
+    }
+
+    /// manyshot (SCBench ICL.ManyShot analog).
+    pub fn manyshot(&mut self, domain: usize, n_shots: usize) -> Episode {
+        let dom = self.distinct_syms(domain);
+        let map: Vec<u32> = (0..domain).map(|_| self.sym()).collect();
+        let mut p = vec![self.v.bos()];
+        for _ in 0..n_shots {
+            let i = self.rng.below(domain);
+            p.extend([self.v.shot(), dom[i], map[i]]);
+        }
+        let qi = self.rng.below(domain);
+        p.extend([self.v.query(), dom[qi]]);
+        Episode {
+            task: "manyshot".into(),
+            prompt: p,
+            answer: vec![map[qi]],
+            grade: GradeRule::ExactPrefix,
+        }
+    }
+
+    /// find_minmax (SCBench Math.Find analog).
+    pub fn find_minmax(&mut self, n: usize) -> Episode {
+        let xs: Vec<u32> = (0..n).map(|_| self.rng.below(10) as u32).collect();
+        let want_max = self.rng.bool(0.5);
+        let mut p = vec![self.v.bos(),
+                         if want_max { self.v.find_max() } else { self.v.find_min() }];
+        p.extend(xs.iter().map(|&x| self.v.digit(x)));
+        p.push(self.v.ans());
+        let res = if want_max {
+            *xs.iter().max().unwrap()
+        } else {
+            *xs.iter().min().unwrap()
+        };
+        Episode {
+            task: "find_minmax".into(),
+            prompt: p,
+            answer: vec![self.v.digit(res)],
+            grade: GradeRule::ExactPrefix,
+        }
+    }
+
+    /// multi_session (LongMemEval analog). `qtype`: "single" | "update".
+    pub fn multi_session(&mut self, n_sessions: usize, facts_per: usize,
+                         filler: usize, qtype: &str) -> Episode {
+        let mut store: Vec<(u32, u32)> = Vec::new(); // (key, latest value)
+        let mut updated: Vec<usize> = Vec::new();
+        let mut p = vec![self.v.bos()];
+        for s in 0..n_sessions {
+            p.extend([self.v.session(), self.v.digit((s % 10) as u32)]);
+            for _ in 0..facts_per {
+                if qtype == "update" && !store.is_empty() && self.rng.bool(0.4) {
+                    let i = self.rng.below(store.len());
+                    let v = self.sym();
+                    p.extend([self.v.update(), store[i].0, v]);
+                    store[i].1 = v;
+                    updated.push(i);
+                } else {
+                    let mut k = self.sym();
+                    while store.iter().any(|&(sk, _)| sk == k) {
+                        k = self.sym();
+                    }
+                    let v = self.sym();
+                    p.extend([self.v.key(), k, v]);
+                    store.push((k, v));
+                }
+            }
+            let f1 = self.rng.below(filler + 1);
+            p.push(self.v.user());
+            p.extend(self.filler(f1));
+            let f2 = self.rng.below(filler + 1);
+            p.push(self.v.assistant());
+            p.extend(self.filler(f2));
+        }
+        let qi = if qtype == "update" && !updated.is_empty() {
+            updated[self.rng.below(updated.len())]
+        } else {
+            self.rng.below(store.len())
+        };
+        p.extend([self.v.sep(), self.v.query(), store[qi].0]);
+        Episode {
+            task: format!("multi_session_{qtype}"),
+            prompt: p,
+            answer: vec![store[qi].1],
+            grade: GradeRule::ExactPrefix,
+        }
+    }
+
+    /// niah (SCBench Retr.KV analog): one needle in a filler haystack.
+    pub fn niah(&mut self, haystack: usize) -> Episode {
+        let k = self.sym();
+        let v = self.sym();
+        let pos = self.rng.below(haystack.max(2) - 1);
+        let mut p = vec![self.v.bos()];
+        p.extend(self.filler(pos));
+        p.extend([self.v.niah(), k, v]);
+        p.extend(self.filler(haystack - pos));
+        p.extend([self.v.query(), k]);
+        Episode {
+            task: "niah".into(),
+            prompt: p,
+            answer: vec![v],
+            grade: GradeRule::ExactPrefix,
+        }
+    }
+}
+
+/// Parse one line of artifacts/golden_episodes.jsonl (cross-language parity:
+/// python-generated episodes must be gradeable by the rust rules).
+pub fn parse_golden_line(line: &str)
+    -> anyhow::Result<(String, Vec<u32>, usize, Vec<u32>)> {
+    let j = Json::parse(line)?;
+    let to_tokens = |key: &str| -> anyhow::Result<Vec<u32>> {
+        Ok(j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing {key}"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .map(|x| x as u32)
+            .collect())
+    };
+    Ok((
+        j.str_field("task")?.to_string(),
+        to_tokens("tokens")?,
+        j.usize_field("prompt_end")?,
+        to_tokens("answer")?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> (Vocab, Gen<'static>) {
+        let v: &'static Vocab = Box::leak(Box::new(Vocab::builtin()));
+        (v.clone(), Gen::new(v, 42))
+    }
+
+    #[test]
+    fn recall_answer_follows_queried_key() {
+        let (v, mut g) = gen();
+        for _ in 0..30 {
+            let ep = g.recall(6, 4);
+            let q = *ep.prompt.last().unwrap();
+            let idx = ep
+                .prompt
+                .windows(2)
+                .position(|w| w[0] == v.key() && w[1] == q)
+                .unwrap();
+            assert_eq!(ep.prompt[idx + 2], ep.answer[0]);
+        }
+    }
+
+    #[test]
+    fn chain_answer_reachable() {
+        let (v, mut g) = gen();
+        for _ in 0..20 {
+            let ep = g.chain(6, 3, 2);
+            let mut map = std::collections::BTreeMap::new();
+            let toks = &ep.prompt;
+            for i in 0..toks.len() - 2 {
+                if toks[i] == v.key() {
+                    map.insert(toks[i + 1], toks[i + 2]);
+                }
+            }
+            let qpos = toks.iter().position(|&t| t == v.query()).unwrap();
+            let mut cur = toks[qpos + 1];
+            for _ in 0..3 {
+                cur = map[&cur];
+            }
+            assert_eq!(cur, ep.answer[0]);
+        }
+    }
+
+    #[test]
+    fn countdown_answer_matches_ops() {
+        let (v, mut g) = gen();
+        for _ in 0..20 {
+            let ep = g.countdown(4);
+            let toks = &ep.prompt;
+            let mut cur = toks[2] - v.digit(0);
+            let mut i = 4;
+            while toks[i] != v.think() {
+                let operand = toks[i + 1] - v.digit(0);
+                cur = if toks[i] == v.plus() {
+                    (cur + operand) % 10
+                } else {
+                    (cur + 10 - operand) % 10
+                };
+                i += 2;
+            }
+            assert_eq!(v.digit(cur), ep.answer[0]);
+        }
+    }
+
+    #[test]
+    fn multi_session_update_wins() {
+        let (v, mut g) = gen();
+        for _ in 0..30 {
+            let ep = g.multi_session(3, 3, 4, "update");
+            let toks = &ep.prompt;
+            let q = *toks.last().unwrap();
+            let mut latest = None;
+            for i in 0..toks.len() - 2 {
+                if (toks[i] == v.key() || toks[i] == v.update()) && toks[i + 1] == q {
+                    latest = Some(toks[i + 2]);
+                }
+            }
+            assert_eq!(latest, Some(ep.answer[0]));
+        }
+    }
+
+    #[test]
+    fn grade_exact_prefix() {
+        let (v, mut g) = gen();
+        let ep = g.recall(4, 2);
+        let mut gen_ok = ep.answer.clone();
+        gen_ok.push(v.eos());
+        assert_eq!(grade(&ep, &gen_ok, &v), 1.0);
+        assert_eq!(grade(&ep, &[499], &v), 0.0);
+        assert_eq!(grade(&ep, &[], &v), 0.0);
+    }
+
+    #[test]
+    fn grade_after_ans() {
+        let (v, mut g) = gen();
+        let ep = g.chain(5, 2, 2);
+        let gen_toks = vec![v.sym(1), v.sym(2), v.end_think(), v.ans(),
+                            ep.answer[0], v.eos()];
+        assert_eq!(grade(&ep, &gen_toks, &v), 1.0);
+        let bad = vec![v.ans(), ep.answer[0] + 1];
+        assert_eq!(grade(&ep, &bad, &v), 0.0);
+        assert_eq!(grade(&ep, &[v.eos()], &v), 0.0); // no <ans> at all
+    }
+
+    #[test]
+    fn grade_row_f1_partial_credit() {
+        let (v, mut g) = gen();
+        let ep = g.proc_table(5, 2, 2);
+        assert_eq!(grade(&ep, &ep.answer, &v), 1.0);
+        // half the rows -> F1 = 2 * 0.5 / 1.5
+        let half = &ep.answer[..4];
+        let f1 = grade(&ep, half, &v);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-9, "f1 {f1}");
+        assert_eq!(grade(&ep, &[], &v), 0.0);
+    }
+
+    #[test]
+    fn prompts_are_bounded_and_clean() {
+        let (v, mut g) = gen();
+        for _ in 0..50 {
+            let ep = g.multi_session(4, 3, 6, "single");
+            assert!(ep.prompt.len() < 400);
+            assert_eq!(ep.prompt[0], v.bos());
+            assert!(ep.prompt.iter().all(|&t| (t as usize) < v.size));
+        }
+    }
+
+    #[test]
+    fn parse_golden_line_works() {
+        let line = r#"{"task": "recall", "tokens": [1, 6, 40, 41, 2],
+                       "prompt_end": 3, "answer_start": 3, "answer": [41]}"#;
+        let (task, tokens, pe, ans) = parse_golden_line(line).unwrap();
+        assert_eq!(task, "recall");
+        assert_eq!(tokens.len(), 5);
+        assert_eq!(pe, 3);
+        assert_eq!(ans, vec![41]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Benchmark suites mirroring the paper's evaluation section — each suite
+//! fixes the workload mix and difficulty tiers for one paper exhibit
+//! (DESIGN.md §6 maps suite -> table/figure -> bench target).
+
+use crate::vocab::Vocab;
+
+use super::{Episode, Gen};
+
+/// A named, seeded collection of episodes.
+pub struct Suite {
+    pub name: &'static str,
+    pub episodes: Vec<Episode>,
+    /// generation budget per request
+    pub max_new_tokens: usize,
+}
+
+/// Math suite (Fig. 3/6/7 analog): three difficulty tiers standing in for
+/// GSM8K / MATH-500 / AIME24.
+pub fn math(v: &Vocab, tier: &str, n: usize, seed: u64) -> Suite {
+    let mut g = Gen::new(v, seed ^ 0x11);
+    let mut eps = Vec::with_capacity(n);
+    for _ in 0..n {
+        // tiers sit at the trained backbone's capability frontier
+        // (DESIGN.md §2: contexts <= ~150 tokens, 1-2 retrievable facts)
+        let ep = match tier {
+            // gsm8k analog: single fact, light filler
+            "gsm8k" => {
+                if g.rng.bool(0.6) {
+                    g.recall(1, 45)
+                } else {
+                    let hay = g.rng.range(35, 60);
+                    g.niah(hay)
+                }
+            }
+            // math500 analog: two facts / mid haystack
+            "math500" => {
+                if g.rng.bool(0.5) {
+                    g.recall(2, 20)
+                } else {
+                    let hay = g.rng.range(50, 90);
+                    g.niah(hay)
+                }
+            }
+            // aime analog: long haystack near the context frontier
+            "aime" => {
+                if g.rng.bool(0.4) {
+                    g.recall(2, 40)
+                } else {
+                    let hay = g.rng.range(90, 140);
+                    g.niah(hay)
+                }
+            }
+            other => panic!("unknown math tier {other}"),
+        };
+        eps.push(ep);
+    }
+    Suite { name: "math", episodes: eps, max_new_tokens: 6 }
+}
+
+/// LongProc suite (Tables 1/7 analog): per-task, with an output-length tier.
+pub fn longproc(v: &Vocab, task: &str, tier: usize, n: usize, seed: u64) -> Suite {
+    let mut g = Gen::new(v, seed ^ 0x22);
+    let mut eps = Vec::with_capacity(n);
+    let mut max_new = 64;
+    for _ in 0..n {
+        let ep = match task {
+            "table" => {
+                // tier scales rows to extract (output length driver)
+                let rows = 3 + 2 * tier;
+                let extract = (1 + tier).min(rows);
+                max_new = extract * 5 + 12;
+                g.proc_table(rows, 2, extract)
+            }
+            "countdown" => {
+                let steps = 2 + 2 * tier;
+                max_new = steps * 4 + 10;
+                g.countdown(steps)
+            }
+            "copy" => {
+                let len = 6 + 10 * tier;
+                max_new = len + 6;
+                g.copy(len)
+            }
+            other => panic!("unknown longproc task {other}"),
+        };
+        eps.push(ep);
+    }
+    Suite { name: "longproc", episodes: eps, max_new_tokens: max_new }
+}
+
+/// LongMemEval suite (Tables 3/8 analog) with per-question-type splits.
+pub fn longmem(v: &Vocab, qtype: &str, n: usize, seed: u64) -> Suite {
+    let mut g = Gen::new(v, seed ^ 0x33);
+    let eps = (0..n)
+        .map(|_| {
+            let sessions = g.rng.range(2, 4);
+            g.multi_session(sessions, 1, 12, qtype)
+        })
+        .collect();
+    Suite { name: "longmem", episodes: eps, max_new_tokens: 6 }
+}
+
+/// SCBench suite (Table 2 analog): one entry per task family.
+pub fn scbench(v: &Vocab, task: &str, n: usize, seed: u64) -> Suite {
+    let mut g = Gen::new(v, seed ^ 0x44);
+    let mut eps = Vec::with_capacity(n);
+    let mut max_new = 8;
+    for _ in 0..n {
+        let ep = match task {
+            "retr_kv" => {
+                let hay = g.rng.range(60, 130);
+                g.niah(hay)
+            }
+            "manyshot" => {
+                let shots = g.rng.range(10, 20);
+                g.manyshot(3, shots)
+            }
+            "math_find" => {
+                let n = g.rng.range(20, 45);
+                g.find_minmax(n)
+            }
+            "multi_session" => g.multi_session(2, 1, 10, "single"),
+            "summary" => {
+                max_new = 40;
+                let rows = g.rng.range(6, 10);
+                g.proc_table(rows, 2, 4)
+            }
+            other => panic!("unknown scbench task {other}"),
+        };
+        eps.push(ep);
+    }
+    Suite { name: "scbench", episodes: eps, max_new_tokens: max_new }
+}
+
+/// Long-prompt QA for the chunked-prefill comparison (Tables 4/9/10 analog):
+/// prompts long enough to span several prefill chunks.
+pub fn longqa(v: &Vocab, n: usize, seed: u64) -> Suite {
+    let mut g = Gen::new(v, seed ^ 0x55);
+    let eps = (0..n)
+        .map(|_| {
+            if g.rng.bool(0.6) {
+                let hay = g.rng.range(90, 140);
+                g.niah(hay)
+            } else {
+                let sessions = g.rng.range(2, 4);
+                g.multi_session(sessions, 1, 14, "single")
+            }
+        })
+        .collect();
+    Suite { name: "longqa", episodes: eps, max_new_tokens: 8 }
+}
+
+/// Throughput workload (Table 6 analog): fixed context and generation
+/// lengths, content irrelevant.
+pub fn throughput(v: &Vocab, ctx: usize, n: usize, seed: u64) -> Suite {
+    let mut g = Gen::new(v, seed ^ 0x66);
+    let eps = (0..n)
+        .map(|_| {
+            let mut ep = g.niah(ctx.saturating_sub(8).max(4));
+            ep.task = "throughput".into();
+            ep
+        })
+        .collect();
+    Suite { name: "throughput", episodes: eps, max_new_tokens: 64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_generate_requested_sizes() {
+        let v = Vocab::builtin();
+        for tier in ["gsm8k", "math500", "aime"] {
+            let s = math(&v, tier, 5, 1);
+            assert_eq!(s.episodes.len(), 5);
+        }
+        for task in ["table", "countdown", "copy"] {
+            for tier in 0..3 {
+                let s = longproc(&v, task, tier, 3, 1);
+                assert_eq!(s.episodes.len(), 3);
+                assert!(s.max_new_tokens >= 8);
+            }
+        }
+        for q in ["single", "update"] {
+            assert_eq!(longmem(&v, q, 4, 1).episodes.len(), 4);
+        }
+        for t in ["retr_kv", "manyshot", "math_find", "multi_session", "summary"] {
+            assert_eq!(scbench(&v, t, 3, 1).episodes.len(), 3);
+        }
+        assert_eq!(longqa(&v, 3, 1).episodes.len(), 3);
+        assert_eq!(throughput(&v, 128, 2, 1).episodes.len(), 2);
+    }
+
+    #[test]
+    fn tiers_scale_difficulty() {
+        let v = Vocab::builtin();
+        let easy: usize = math(&v, "gsm8k", 20, 7).episodes.iter()
+            .map(|e| e.prompt.len()).sum();
+        let hard: usize = math(&v, "aime", 20, 7).episodes.iter()
+            .map(|e| e.prompt.len()).sum();
+        assert!(hard > 2 * easy, "hard {hard} vs easy {easy}");
+    }
+
+    #[test]
+    fn throughput_prompts_near_requested_ctx() {
+        let v = Vocab::builtin();
+        let s = throughput(&v, 200, 4, 3);
+        for ep in &s.episodes {
+            assert!((ep.prompt.len() as i64 - 200).abs() < 20,
+                    "len {}", ep.prompt.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let v = Vocab::builtin();
+        let a = math(&v, "gsm8k", 3, 9).episodes;
+        let b = math(&v, "gsm8k", 3, 9).episodes;
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Property tests over the cache manager, policies, scheduler and engine
+//! (seeded mini-framework in util::proptest; no artifacts needed).
+
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::kvcache::{HeadState, SlotEntry};
+use trimkv::policy::Policy;
+use trimkv::runtime::MockBackend;
+use trimkv::scheduler::Request;
+use trimkv::util::proptest::forall;
+use trimkv::util::rng::Rng;
+use trimkv::{prop_assert, prop_assert_eq};
+
+fn random_head(rng: &mut Rng, slots: usize, fill: usize) -> HeadState {
+    let mut h = HeadState::new(slots, 8, true);
+    for s in 0..fill.min(slots - 1) {
+        let key: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        h.insert(
+            s,
+            SlotEntry {
+                pos: s as i64,
+                token: rng.below(512) as u32,
+                log_beta: -(rng.f32() * 3.0 + 1e-4),
+                acc_attn: rng.f32(),
+                ema_attn: rng.f32(),
+                last_attn: rng.f32(),
+            },
+            Some(&key),
+        );
+    }
+    h
+}
+
+#[test]
+fn prop_victim_is_always_live_and_not_trash() {
+    forall("victim live", 300, |rng| {
+        let slots = rng.range(4, 40);
+        let fill = rng.range(1, slots);
+        let head = random_head(rng, slots, fill);
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret", "random"];
+        let name = names[rng.below(names.len())];
+        let mut pol = Policy::from_name(name, 16, rng.next_u64()).unwrap();
+        let now = rng.range(fill, fill + 100) as i64;
+        let v = pol.select_victim(&head, now);
+        let v = match v {
+            Some(v) => v,
+            None => return Err(format!("{name} returned None on non-empty head")),
+        };
+        prop_assert!(head.live[v], "{name} picked dead slot {v}");
+        prop_assert!(v != head.slots() - 1, "{name} picked the trash slot");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trimkv_victim_is_true_argmin() {
+    forall("trimkv argmin", 300, |rng| {
+        let slots = rng.range(4, 40);
+        let fill = rng.range(2, slots);
+        let head = random_head(rng, slots, fill);
+        let now = (fill + rng.below(50)) as i64;
+        let mut pol = Policy::from_name("trimkv", 16, 0).unwrap();
+        let v = pol.select_victim(&head, now).unwrap();
+        let vs = head.retention_score(v, now);
+        for s in head.live_slots() {
+            prop_assert!(
+                head.retention_score(s, now) >= vs,
+                "slot {s} scores below victim {v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eviction_preserves_occupancy_count() {
+    forall("occupancy", 200, |rng| {
+        let slots = rng.range(4, 32);
+        let mut head = random_head(rng, slots, slots - 1);
+        let mut expected = head.used;
+        let mut pol = Policy::from_name("trimkv", 8, 0).unwrap();
+        for step in 0..rng.range(1, expected) {
+            let v = pol.select_victim(&head, (slots + step) as i64).unwrap();
+            head.evict(v);
+            expected -= 1;
+            prop_assert_eq!(head.used, expected);
+            head.check_invariants();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_budget_invariant_all_policies() {
+    // the core paper invariant: the live set never exceeds the budget after
+    // a tick, for every policy, prompt length and budget
+    forall("engine budget", 40, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "random", "retrieval", "locret"];
+        let policy = names[rng.below(names.len())];
+        let budget = rng.range(8, 24);
+        let cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch: 1,
+            chunked_prefill: rng.bool(0.5),
+            ..Default::default()
+        };
+        let backend = MockBackend::new(1, budget + 20);
+        let mut engine = Engine::new(backend, cfg, 2).unwrap();
+        let plen = rng.range(5, 60);
+        let prompt: Vec<u32> = (0..plen).map(|_| 32 + rng.below(64) as u32).collect();
+        engine
+            .submit(Request::new(1, prompt, rng.range(1, 12)))
+            .map_err(|e| format!("{e}"))?;
+        while !engine.idle() {
+            engine.tick().map_err(|e| format!("{e}"))?;
+            if let Some(snap) = engine.retention_snapshot(0) {
+                for (hi, head) in snap.iter().enumerate() {
+                    prop_assert!(
+                        head.len() <= budget,
+                        "policy {policy}: head {hi} holds {} > budget {budget}",
+                        head.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eviction_monotonicity() {
+    // paper constraint alpha_ti >= alpha_(t+1)i: once evicted, a token's
+    // position never reappears in the cache (except via retrieval inject,
+    // excluded here)
+    forall("monotonicity", 30, |rng| {
+        let budget = rng.range(6, 16);
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget,
+            batch: 1,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let backend = MockBackend::new(1, budget + 8);
+        let mut engine = Engine::new(backend, cfg, 2).unwrap();
+        let prompt: Vec<u32> = (0..40).map(|_| 32 + rng.below(64) as u32).collect();
+        engine.submit(Request::new(1, prompt, 8)).map_err(|e| format!("{e}"))?;
+        let nheads = 4 * 2;
+        let mut dead: Vec<std::collections::BTreeSet<i64>> =
+            vec![Default::default(); nheads];
+        let mut prev_live: Vec<std::collections::BTreeSet<i64>> =
+            vec![Default::default(); nheads];
+        while !engine.idle() {
+            engine.tick().map_err(|e| format!("{e}"))?;
+            if let Some(snap) = engine.retention_snapshot(0) {
+                for (hi, head) in snap.iter().enumerate() {
+                    let live: std::collections::BTreeSet<i64> =
+                        head.iter().map(|&(p, _, _)| p).collect();
+                    for gone in prev_live[hi].difference(&live) {
+                        dead[hi].insert(*gone);
+                    }
+                    for p in &live {
+                        prop_assert!(!dead[hi].contains(p),
+                                     "head {hi}: evicted pos {p} came back");
+                    }
+                    prev_live[hi] = live;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_serves_all_requests_exactly_once() {
+    forall("scheduler completeness", 25, |rng| {
+        let batch = rng.range(1, 4);
+        let cfg = EngineConfig {
+            policy: "streaming_llm".into(),
+            budget: 16,
+            batch,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let backend = MockBackend::new(batch, 24);
+        let mut engine = Engine::new(backend, cfg, 2).unwrap();
+        let n = rng.range(1, 12);
+        for i in 0..n {
+            let plen = rng.range(2, 20);
+            let prompt: Vec<u32> =
+                (0..plen).map(|_| 32 + rng.below(64) as u32).collect();
+            engine
+                .submit(Request::new(i as u64, prompt, rng.range(1, 6)))
+                .map_err(|e| format!("{e}"))?;
+        }
+        let rs = engine.run_to_completion().map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(rs.len(), n);
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        prop_assert_eq!(ids.len(), n);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use trimkv::util::json::Json;
+    forall("json roundtrip", 200, |rng| {
+        fn random_json(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::Num((rng.below(100000) as f64) / 8.0),
+                3 => Json::Str(format!("s{}-\"x\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect()),
+                _ => Json::Obj((0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect()),
+            }
+        }
+        let v = random_json(rng, 3);
+        let back = Json::parse(&v.to_string()).map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(v, back);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grading_never_rewards_wrong_prefix() {
+    use trimkv::vocab::Vocab;
+    use trimkv::workload::{grade, Gen};
+    let vocab = Vocab::builtin();
+    forall("grade soundness", 100, |rng| {
+        let mut g = Gen::new(&vocab, rng.next_u64());
+        let ep = g.recall(rng.range(2, 10), rng.range(0, 6));
+        // a generation starting with a wrong token never scores
+        let wrong = vec![ep.answer[0] ^ 1, ep.answer[0]];
+        prop_assert_eq!(grade(&ep, &wrong, &vocab), 0.0);
+        let mut right = ep.answer.clone();
+        right.push(vocab.eos());
+        prop_assert_eq!(grade(&ep, &right, &vocab), 1.0);
+        Ok(())
+    });
+}
