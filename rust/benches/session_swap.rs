@@ -1,0 +1,101 @@
+//! Session subsystem microbench: cost of serving one extra dialogue turn
+//! with KV snapshot/swap versus re-prefilling the whole history (what a
+//! session-less engine must do every turn).  Host-side mechanics only —
+//! runs on the MockBackend, so it measures the engine + swap-path overhead
+//! (slot-table snapshot, lane slab download/upload, store bookkeeping),
+//! not model FLOPs.  With real artifacts the gap widens further: re-prefill
+//! pays a graph execution per history token.
+//!
+//!   cargo bench --bench session_swap
+
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::runtime::MockBackend;
+use trimkv::scheduler::Request;
+use trimkv::util::benchkit::{bench, report, BenchResult};
+
+fn engine(budget: usize, swap_policy: &str) -> Engine<MockBackend> {
+    let cfg = EngineConfig {
+        policy: "trimkv".into(),
+        budget,
+        batch: 1,
+        chunked_prefill: false,
+        swap_policy: swap_policy.into(),
+        ..Default::default()
+    };
+    Engine::new(MockBackend::new(1, budget + 20), cfg, 2).unwrap()
+}
+
+fn history_prompt(len: usize) -> Vec<u32> {
+    (0..len).map(|i| 32 + (i as u32 % 64)).collect()
+}
+
+fn main() {
+    let budget = 48usize;
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut ratios: Vec<(usize, f64)> = Vec::new();
+    for &ctx in &[128usize, 512, 1024] {
+        // build a session whose history is `ctx` tokens, swapped out to host
+        let mut e = engine(budget, "eager");
+        e.submit(Request::new(0, history_prompt(ctx), 1).with_session("bench"))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        let template = e.sessions().get("bench").unwrap().clone();
+        let turn: Vec<u32> = vec![40, 41];
+
+        // (a) session turn: swap-in + ~3 decode ticks + swap-out
+        let mut id = 1u64;
+        let r = bench(&format!("session_turn/ctx={ctx}"), 5, 50, || {
+            // reset to the template so history does not grow across iters
+            e.sessions_mut().insert("bench".into(), template.clone());
+            e.submit(Request::new(id, turn.clone(), 1).with_session("bench"))
+                .unwrap();
+            id += 1;
+            e.run_to_completion().unwrap();
+        });
+        let session_mean = r.mean_us;
+        results.push(r);
+
+        // (b) swap-out + swap-in round-trip with a minimal turn between
+        let mut e2 = engine(budget, "lazy");
+        e2.submit(Request::new(0, history_prompt(ctx), 1).with_session("rt"))
+            .unwrap();
+        e2.run_to_completion().unwrap();
+        let r = bench(&format!("swap_roundtrip/ctx={ctx}"), 5, 100, || {
+            e2.flush_sessions().unwrap(); // parked -> host (swap-out)
+            // next turn swaps back in and re-parks
+            e2.submit(Request::new(99, vec![40], 1).with_session("rt"))
+                .unwrap();
+            e2.run_to_completion().unwrap();
+        });
+        results.push(r);
+
+        // (c) the session-less alternative: re-prefill all ctx tokens
+        let mut e3 = engine(budget, "lazy");
+        let full: Vec<u32> = {
+            let mut p = history_prompt(ctx);
+            p.extend(&turn);
+            p
+        };
+        let r = bench(&format!("reprefill_turn/ctx={ctx}"), 2, 10, || {
+            e3.submit(Request::new(7, full.clone(), 1)).unwrap();
+            e3.run_to_completion().unwrap();
+        });
+        ratios.push((ctx, r.mean_us / session_mean.max(1e-9)));
+        results.push(r);
+    }
+    println!("=== session swap vs re-prefill (budget {budget}, mock backend) ===");
+    report(&results);
+    println!();
+    for (ctx, ratio) in ratios {
+        let verdict = if ratio > 1.0 { "session wins" } else { "re-prefill wins" };
+        println!("ctx {ctx:5}: re-prefill / session-turn = {ratio:6.1}x  ({verdict})");
+    }
+    // snapshot footprint is O(budget), not O(history): the whole point of
+    // swapping a memory-bounded cache
+    use trimkv::runtime::ModelBackend;
+    let mb = MockBackend::new(1, budget + 20);
+    let slab_bytes = 2 * mb.lane_kv_len() * 4; // K + V, f32
+    println!("\nper-session K/V slab at budget {budget}: {} KiB \
+              (independent of ctx)", slab_bytes / 1024);
+}

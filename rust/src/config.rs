@@ -15,6 +15,11 @@
 //! [scheduler]
 //! queue_capacity = 1024
 //! prefill_priority = false
+//!
+//! [session]
+//! max_sessions = 256      # host-side snapshot store capacity (LRU beyond)
+//! swap_policy = "lazy"    # lazy: park on the lane, swap out on demand
+//!                         # eager: snapshot to host as soon as a turn ends
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -36,6 +41,13 @@ pub struct EngineConfig {
     /// Use chunked prefill (prefill graph) for prompts; otherwise prompts
     /// are fed token-by-token through the decode graph.
     pub chunked_prefill: bool,
+    /// Capacity of the host-side session snapshot store; beyond it the
+    /// least-recently-used conversation is dropped.
+    pub max_sessions: usize,
+    /// "lazy": a finished turn parks on its lane (KV stays device-resident)
+    /// and is swapped to host only when the lane is preempted.
+    /// "eager": every finished turn snapshots to host immediately.
+    pub swap_policy: String,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +64,8 @@ impl Default for EngineConfig {
             queue_capacity: 1024,
             prefill_priority: false,
             chunked_prefill: true,
+            max_sessions: 256,
+            swap_policy: "lazy".into(),
         }
     }
 }
@@ -94,6 +108,12 @@ impl EngineConfig {
                 "scheduler.prefill_priority" => {
                     cfg.prefill_priority = val.as_bool().ok_or_else(|| bad(key))?
                 }
+                "session.max_sessions" => {
+                    cfg.max_sessions = val.as_usize().ok_or_else(|| bad(key))?
+                }
+                "session.swap_policy" => {
+                    cfg.swap_policy = val.as_str().ok_or_else(|| bad(key))?.into()
+                }
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -122,6 +142,13 @@ impl EngineConfig {
         if let Some(v) = args.get("seed") {
             self.seed = v.parse().map_err(|_| anyhow::anyhow!("bad --seed"))?;
         }
+        if let Some(v) = args.get("max-sessions") {
+            self.max_sessions =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --max-sessions"))?;
+        }
+        if let Some(v) = args.get("swap-policy") {
+            self.swap_policy = v.to_string();
+        }
         self.validate()
     }
 
@@ -132,6 +159,11 @@ impl EngineConfig {
         anyhow::ensure!(
             crate::policy::POLICY_NAMES.contains(&self.policy.as_str()),
             "unknown policy `{}`", self.policy
+        );
+        anyhow::ensure!(self.max_sessions >= 1, "max_sessions must be >= 1");
+        anyhow::ensure!(
+            matches!(self.swap_policy.as_str(), "lazy" | "eager"),
+            "swap_policy must be `lazy` or `eager` (got `{}`)", self.swap_policy
         );
         Ok(())
     }
@@ -182,5 +214,17 @@ prefill_priority = true
         assert!(EngineConfig::from_toml_str("[engine]\npolicy = \"bogus\"").is_err());
         assert!(EngineConfig::from_toml_str("[engine]\nbudget = 2").is_err());
         assert!(EngineConfig::from_toml_str("[engine]\nbudget = \"s\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "[session]\nswap_policy = \"sometimes\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "[session]\nmax_sessions = 0").is_err());
+    }
+
+    #[test]
+    fn parses_session_keys() {
+        let cfg = EngineConfig::from_toml_str(
+            "[session]\nmax_sessions = 9\nswap_policy = \"eager\"").unwrap();
+        assert_eq!(cfg.max_sessions, 9);
+        assert_eq!(cfg.swap_policy, "eager");
     }
 }

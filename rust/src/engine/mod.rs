@@ -17,6 +17,15 @@
 //! Prompts run through the chunked prefill graph (compress-after-each-chunk,
 //! the LocRet protocol used in paper §B.3) or token-by-token through the
 //! decode graph (`chunked_prefill = false`).
+//!
+//! Multi-turn serving: a request carrying a `session` id retains its lane
+//! state after the turn.  Under the `lazy` swap policy the finished turn
+//! *parks* on the lane (KV stays device-resident) and is preempted to the
+//! host `SessionStore` only when a new request needs the lane; under
+//! `eager` every finished turn snapshots to host immediately.  The next
+//! turn of a session resumes in place, or swaps its snapshot back into any
+//! free lane — decoding continues from the retained cache with zero
+//! re-prefill of prior turns.
 
 pub mod sampler;
 
@@ -25,23 +34,16 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::config::EngineConfig;
-use crate::kvcache::{LaneCache, SlotEntry};
+use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::metrics::EngineMetrics;
 use crate::policy::Policy;
 use crate::runtime::{DecodeIn, ModelBackend, PrefillIn};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
+use crate::session::{SessionSnapshot, SessionStore};
 use sampler::Sampler;
 
 /// EMA factor for the SnapKV-style attention statistic.
 const ATTN_EMA: f32 = 0.9;
-
-/// Host mirror of an evicted token (retrieval baseline re-admission pool).
-#[derive(Debug, Clone)]
-struct MirrorEntry {
-    entry: SlotEntry,
-    key: Vec<f32>,
-    val: Vec<f32>,
-}
 
 #[derive(Debug, Clone, Default)]
 struct PendingInject {
@@ -63,12 +65,18 @@ pub struct SeqRecord {
 struct SeqState {
     id: u64,
     tag: String,
+    /// conversation this turn belongs to (None: one-shot request)
+    session: Option<String>,
+    /// for session turns, `prompt` is the full fed stream: prior turns +
+    /// their replies + this turn's new tokens; `fed` starts past history
     prompt: Vec<u32>,
     generated: Vec<u32>,
     max_new: usize,
     stop_at_eos: bool,
     /// tokens fed to the model so far (== position of the next input)
     fed: usize,
+    /// completed prior turns of this session
+    turns: u64,
     cache: LaneCache,
     mirror: Vec<Vec<MirrorEntry>>, // per (l*h); retrieval only
     inject: PendingInject,
@@ -87,9 +95,21 @@ impl SeqState {
     }
 }
 
+/// A finished session turn still occupying its lane: the KV slabs remain
+/// device-resident so the session's next turn can resume without any host
+/// round-trip.  Preempted (snapshotted to the `SessionStore`) on demand.
+struct ParkedSession {
+    session_id: String,
+    /// Retained state; `snap.k`/`snap.v` stay empty while the slabs are
+    /// device-resident and are filled at swap-out.  `snap.last_used` holds
+    /// the engine clock at park time (LRU preemption order).
+    snap: SessionSnapshot,
+}
+
 enum Lane {
     Idle,
     Busy(Box<SeqState>),
+    Parked(Box<ParkedSession>),
 }
 
 pub struct Engine<B: ModelBackend> {
@@ -106,6 +126,13 @@ pub struct Engine<B: ModelBackend> {
     pub record_gates: bool,
     /// trace of the most recently finished sequence (when record_gates)
     pub last_record: Option<SeqRecord>,
+    /// host-side store of swapped-out sessions (LRU-bounded)
+    sessions: SessionStore,
+    /// close barriers: (session id, pre-close turns still to drain);
+    /// the close applies when the count reaches zero
+    pending_closes: Vec<(String, u64)>,
+    /// logical clock stamping parked sessions for LRU preemption
+    clock: u64,
     // scratch buffers reused across ticks (perf: no per-step allocation)
     valid_buf: Vec<f32>,
     ws_buf: Vec<i32>,
@@ -139,6 +166,9 @@ impl<B: ModelBackend> Engine<B> {
             metrics: EngineMetrics::new(),
             record_gates: false,
             last_record: None,
+            sessions: SessionStore::new(cfg.max_sessions),
+            pending_closes: Vec::new(),
+            clock: 0,
             valid_buf: vec![0.0; lbhm],
             ws_buf: vec![0; dims.layers * b * dims.hkv],
             cfg,
@@ -164,9 +194,67 @@ impl<B: ModelBackend> Engine<B> {
         std::mem::take(&mut self.responses)
     }
 
+    /// No queued work and no lane decoding.  Parked sessions do not count:
+    /// they are passive residents awaiting their next turn.
     pub fn idle(&self) -> bool {
         self.queue.is_empty()
-            && self.lanes.iter().all(|l| matches!(l, Lane::Idle))
+            && self.lanes.iter().all(|l| !matches!(l, Lane::Busy(_)))
+    }
+
+    /// Host session store (swapped-out conversations).
+    pub fn sessions(&self) -> &SessionStore {
+        &self.sessions
+    }
+
+    /// Mutable store access (checkpoint restore / migration tooling).
+    pub fn sessions_mut(&mut self) -> &mut SessionStore {
+        &mut self.sessions
+    }
+
+    /// Force every parked lane out to the host store (drain / checkpoint).
+    pub fn flush_sessions(&mut self) -> Result<()> {
+        for lane_idx in 0..self.lanes.len() {
+            if matches!(self.lanes[lane_idx], Lane::Parked(_)) {
+                self.swap_out_lane(lane_idx)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a conversation: its host snapshot and its parked lane.  The
+    /// close is a *barrier*: turns already decoding or queued at close time
+    /// finish normally (with the retained cache), then the state is
+    /// dropped; a turn submitted with the same id *after* the close starts
+    /// a brand-new conversation.
+    pub fn close_session(&mut self, id: &str) {
+        let active = self.lanes.iter().filter(|l| {
+            matches!(l, Lane::Busy(s) if s.session.as_deref() == Some(id))
+        }).count();
+        let outstanding = (active + self.queue.session_count(id)) as u64;
+        self.pending_closes.push((id.to_string(), outstanding));
+        self.process_pending_closes();
+    }
+
+    fn process_pending_closes(&mut self) {
+        if self.pending_closes.is_empty() {
+            return;
+        }
+        let mut remaining = Vec::new();
+        for (id, outstanding) in std::mem::take(&mut self.pending_closes) {
+            if outstanding > 0 {
+                remaining.push((id, outstanding));
+                continue;
+            }
+            let mut closed = self.sessions.remove(&id);
+            for lane in self.lanes.iter_mut() {
+                if matches!(lane, Lane::Parked(p) if p.session_id == id) {
+                    *lane = Lane::Idle;
+                    closed = true;
+                }
+            }
+            self.metrics.sessions_closed += closed as u64;
+        }
+        self.pending_closes = remaining;
     }
 
     /// Run until every submitted request has finished; returns all responses.
@@ -179,55 +267,182 @@ impl<B: ModelBackend> Engine<B> {
 
     /// One scheduling step. Returns false when there was nothing to do.
     pub fn tick(&mut self) -> Result<bool> {
-        self.admit_waiting();
+        self.process_pending_closes();
+        self.admit_waiting()?;
         let any_prefill = self.lanes.iter().any(|l| match l {
             Lane::Busy(s) => self.cfg.chunked_prefill && s.fed < s.prompt.len(),
-            Lane::Idle => false,
+            _ => false,
         });
         let any_decode = self.lanes.iter().any(|l| match l {
             Lane::Busy(s) => !self.cfg.chunked_prefill || s.fed >= s.prompt.len(),
-            Lane::Idle => false,
+            _ => false,
         });
-        if any_prefill && (self.cfg.prefill_priority || !any_decode) {
+        let worked = if any_prefill && (self.cfg.prefill_priority || !any_decode) {
             self.prefill_tick()?;
-            Ok(true)
+            true
         } else if any_decode || any_prefill {
             self.decode_tick()?;
-            Ok(true)
+            true
         } else {
-            Ok(false)
-        }
+            false
+        };
+        // turns that finished this tick may unblock a deferred close
+        self.process_pending_closes();
+        Ok(worked)
     }
 
-    fn admit_waiting(&mut self) {
+    /// Session-aware admission.  Per waiting request (FIFO, skipping turns
+    /// whose session is already decoding): prefer the lane where the session
+    /// is parked (in-place resume), else any idle lane, else preempt the
+    /// least-recently-used parked session to the host store.
+    fn admit_waiting(&mut self) -> Result<()> {
+        loop {
+            let lanes = &self.lanes;
+            let Some(qidx) = self.queue.find_admissible(|r| match &r.session {
+                None => true,
+                Some(sid) => !lanes.iter().any(|l| {
+                    matches!(l, Lane::Busy(s)
+                             if s.session.as_deref() == Some(sid.as_str()))
+                }),
+            }) else {
+                break;
+            };
+            let want_sid = self.queue.get(qidx).and_then(|r| r.session.clone());
+            let own_parked = want_sid.as_deref().and_then(|sid| {
+                self.lanes.iter().position(|l| {
+                    matches!(l, Lane::Parked(p) if p.session_id == sid)
+                })
+            });
+            let lane_idx = own_parked
+                .or_else(|| self.lanes.iter().position(|l| matches!(l, Lane::Idle)))
+                .or_else(|| self.lru_parked_lane());
+            let Some(lane_idx) = lane_idx else {
+                break; // every lane is decoding
+            };
+            // preempt before popping the request: a swap-out error must not
+            // silently drop a queued turn
+            if own_parked.is_none()
+                && matches!(self.lanes[lane_idx], Lane::Parked(_))
+            {
+                self.swap_out_lane(lane_idx)?;
+                self.metrics.preemptions += 1;
+            }
+            let req = self.queue.take(qidx).expect("index from find_admissible");
+            self.place(lane_idx, req)?;
+        }
+        Ok(())
+    }
+
+    /// Least-recently-parked lane (preemption victim), preferring sessions
+    /// with no queued turn — preempting a session that is about to resume
+    /// would pay a swap-out plus an immediate swap-in for nothing.
+    fn lru_parked_lane(&self) -> Option<usize> {
+        let pick = |idle_only: bool| {
+            self.lanes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| match l {
+                    Lane::Parked(p)
+                        if !idle_only
+                            || self.queue.session_count(&p.session_id) == 0 =>
+                    {
+                        Some((i, p.snap.last_used))
+                    }
+                    _ => None,
+                })
+                .min_by_key(|&(_, t)| t)
+                .map(|(i, _)| i)
+        };
+        pick(true).or_else(|| pick(false))
+    }
+
+    /// Snapshot a parked lane (slot tables + device K/V slabs) into the
+    /// host store and free the lane.
+    fn swap_out_lane(&mut self, lane_idx: usize) -> Result<()> {
+        let Lane::Parked(_) = &self.lanes[lane_idx] else {
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        let (k, v) = self.backend.download_lane_kv(lane_idx)?;
+        let Lane::Parked(p) =
+            std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle)
+        else {
+            unreachable!("checked above");
+        };
+        let ParkedSession { session_id, mut snap } = *p;
+        snap.k = k;
+        snap.v = v;
+        let dropped = self.sessions.insert(session_id, snap);
+        self.metrics.swap_out_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        self.metrics.swap_outs += 1;
+        self.metrics.sessions_dropped += dropped as u64;
+        Ok(())
+    }
+
+    /// Start a request on `lane_idx` (idle, or parked on its own session).
+    fn place(&mut self, lane_idx: usize, req: Request) -> Result<()> {
+        let record_gates = self.record_gates;
+        if let Some(sid) = req.session.as_deref() {
+            // in-place resume: previous turn still parked on this lane
+            if matches!(&self.lanes[lane_idx],
+                        Lane::Parked(p) if p.session_id == sid)
+            {
+                let Lane::Parked(p) =
+                    std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle)
+                else {
+                    unreachable!("checked above");
+                };
+                self.metrics.resumes_in_place += 1;
+                self.lanes[lane_idx] = Lane::Busy(Box::new(resume_seq(
+                    req, p.snap, record_gates,
+                )));
+                return Ok(());
+            }
+            // swap in: upload the host snapshot's K/V into this lane.
+            // Upload first, take after — a backend error must not destroy
+            // the store's only copy of the session.
+            if self.sessions.contains(sid) {
+                let t0 = Instant::now();
+                {
+                    let snap = self.sessions.get(sid).expect("checked above");
+                    self.backend.upload_lane_kv(lane_idx, &snap.k, &snap.v)?;
+                }
+                let snap = self.sessions.take(sid).expect("checked above");
+                self.metrics.swap_in_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                self.metrics.swap_ins += 1;
+                self.lanes[lane_idx] = Lane::Busy(Box::new(resume_seq(
+                    req, snap, record_gates,
+                )));
+                return Ok(());
+            }
+            self.metrics.sessions_opened += 1;
+        }
+        // fresh sequence on a clean slot table (device garbage in dead
+        // slots is masked by the valid bits)
         let dims = self.backend.dims();
         let slots = self.backend.slots();
-        let record_gates = self.record_gates;
-        for lane in self.lanes.iter_mut() {
-            if matches!(lane, Lane::Idle) {
-                if let Some(req) = self.queue.pop() {
-                    let cache = LaneCache::with_mirrors(
-                        &dims, slots, self.policy.needs_keys(),
-                        self.policy.is_retrieval());
-                    let nheads = dims.layers * dims.hkv;
-                    *lane = Lane::Busy(Box::new(SeqState {
-                        id: req.id,
-                        tag: req.tag,
-                        prompt: req.prompt,
-                        generated: Vec::new(),
-                        max_new: req.max_new_tokens,
-                        stop_at_eos: req.stop_at_eos,
-                        fed: 0,
-                        cache,
-                        mirror: vec![Vec::new(); nheads],
-                        inject: PendingInject { plans: vec![None; nheads] },
-                        t_submit: Instant::now(),
-                        ttft_us: None,
-                        record: record_gates.then(SeqRecord::default),
-                    }));
-                }
-            }
-        }
+        let cache = LaneCache::with_mirrors(&dims, slots,
+                                            self.policy.needs_keys(),
+                                            self.policy.is_retrieval());
+        let nheads = dims.layers * dims.hkv;
+        self.lanes[lane_idx] = Lane::Busy(Box::new(SeqState {
+            id: req.id,
+            tag: req.tag,
+            session: req.session,
+            prompt: req.prompt,
+            generated: Vec::new(),
+            max_new: req.max_new_tokens,
+            stop_at_eos: req.stop_at_eos,
+            fed: 0,
+            turns: 0,
+            cache,
+            mirror: vec![Vec::new(); nheads],
+            inject: PendingInject { plans: vec![None; nheads] },
+            t_submit: Instant::now(),
+            ttft_us: None,
+            record: record_gates.then(SeqRecord::default),
+        }));
+        Ok(())
     }
 
     // -----------------------------------------------------------------
@@ -405,7 +620,7 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
         for lane_idx in finished {
-            self.finish_lane(lane_idx);
+            self.finish_lane(lane_idx)?;
         }
         Ok(())
     }
@@ -561,14 +776,15 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
         for lane_idx in finished {
-            self.finish_lane(lane_idx);
+            self.finish_lane(lane_idx)?;
         }
         Ok(())
     }
 
-    fn finish_lane(&mut self, lane_idx: usize) {
+    fn finish_lane(&mut self, lane_idx: usize) -> Result<()> {
         let lane = std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle);
-        let Lane::Busy(mut seq) = lane else { return };
+        let Lane::Busy(seq) = lane else { return Ok(()) };
+        let mut seq = *seq;
         if let Some(rec) = seq.record.take() {
             self.last_record = Some(rec);
         }
@@ -585,35 +801,129 @@ impl<B: ModelBackend> Engine<B> {
         self.responses.push(Response {
             id: seq.id,
             tag: seq.tag,
+            session: seq.session.clone(),
             prompt_len: seq.prompt.len(),
-            tokens: seq.generated,
+            // only the session-park branch still needs the tokens; the
+            // common one-shot path keeps its zero-copy move
+            tokens: if seq.session.is_some() {
+                seq.generated.clone()
+            } else {
+                std::mem::take(&mut seq.generated)
+            },
             finish,
             ttft_us: seq.ttft_us.unwrap_or(e2e),
             e2e_us: e2e,
         });
+        // a finished turn drains one slot of EVERY close barrier on its id
+        // (each barrier counted this turn as outstanding at its close time)
+        let mut doomed = false;
+        if let Some(sid) = seq.session.as_deref() {
+            for entry in self
+                .pending_closes
+                .iter_mut()
+                .filter(|(cid, _)| cid == sid)
+            {
+                if entry.1 > 0 {
+                    entry.1 -= 1;
+                }
+                doomed |= entry.1 == 0;
+            }
+            if doomed {
+                // the barrier drained: drop the retained state right here
+                // instead of parking (and possibly eager-swapping) a doomed
+                // session — which could LRU-evict an innocent stored one
+                self.pending_closes
+                    .retain(|(cid, n)| !(cid == sid && *n == 0));
+                self.sessions.remove(sid);
+                self.metrics.sessions_closed += 1;
+            }
+        }
+        // a surviving session turn retains its cache for the next turn:
+        // park on the lane (lazy) or snapshot to the host store (eager)
+        if !doomed {
+            if let Some(sid) = seq.session {
+                // un-executed retrieval injections go back to the mirror pool
+                for (flat, plan) in seq.inject.plans.iter_mut().enumerate() {
+                    if let Some((_, me)) = plan.take() {
+                        seq.mirror[flat].push(me);
+                    }
+                }
+                let mut history = seq.prompt;
+                history.extend(&seq.generated);
+                self.clock += 1;
+                self.lanes[lane_idx] = Lane::Parked(Box::new(ParkedSession {
+                    session_id: sid,
+                    snap: SessionSnapshot {
+                        cache: seq.cache,
+                        mirror: seq.mirror,
+                        k: Vec::new(), // device-resident until swap-out
+                        v: Vec::new(),
+                        fed: seq.fed,
+                        history,
+                        turns: seq.turns + 1,
+                        last_used: self.clock,
+                    },
+                }));
+                if self.cfg.swap_policy == "eager" {
+                    self.swap_out_lane(lane_idx)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Live cache snapshot of a lane for the retention-inspection tooling
     /// (Figs 4/5/13-19): per (layer, head) the live (pos, token, log_beta).
+    /// Covers decoding *and* parked lanes (a parked session's retained set
+    /// is exactly what its next turn will attend over).
     pub fn retention_snapshot(&self, lane_idx: usize)
         -> Option<Vec<Vec<(i64, u32, f32)>>> {
-        match &self.lanes[lane_idx] {
-            Lane::Idle => None,
-            Lane::Busy(seq) => Some(
-                seq.cache
-                    .heads
-                    .iter()
-                    .map(|head| {
-                        head.live_slots()
-                            .map(|s| {
-                                let e = &head.entries[s];
-                                (e.pos, e.token, e.log_beta)
-                            })
-                            .collect()
-                    })
-                    .collect(),
-            ),
-        }
+        let cache = match &self.lanes[lane_idx] {
+            Lane::Idle => return None,
+            Lane::Busy(seq) => &seq.cache,
+            Lane::Parked(p) => &p.snap.cache,
+        };
+        Some(
+            cache
+                .heads
+                .iter()
+                .map(|head| {
+                    head.live_slots()
+                        .map(|s| {
+                            let e = &head.entries[s];
+                            (e.pos, e.token, e.log_beta)
+                        })
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Rebuild a decoding sequence from a retained session: `history` (every
+/// token fed or sampled in prior turns) extends with the new turn's prompt,
+/// and `fed` resumes past the retained prefix — zero re-prefill.
+fn resume_seq(req: Request, snap: SessionSnapshot,
+              record_gates: bool) -> SeqState {
+    let SessionSnapshot { cache, mirror, fed, mut history, turns, .. } = snap;
+    let nheads = cache.layers * cache.hkv;
+    history.extend(&req.prompt);
+    SeqState {
+        id: req.id,
+        tag: req.tag,
+        session: req.session,
+        prompt: history,
+        generated: Vec::new(),
+        max_new: req.max_new_tokens,
+        stop_at_eos: req.stop_at_eos,
+        fed,
+        turns,
+        cache,
+        mirror,
+        inject: PendingInject { plans: vec![None; nheads] },
+        t_submit: Instant::now(),
+        ttft_us: None,
+        record: record_gates.then(SeqRecord::default),
     }
 }
 
@@ -777,6 +1087,188 @@ mod tests {
         assert_eq!(e.metrics.tokens_decoded, 6);
         assert_eq!(e.metrics.tokens_prefilled, 5);
         assert_eq!(e.metrics.requests_finished, 1);
+    }
+
+    #[test]
+    fn session_second_turn_skips_history() {
+        let mut e = engine("trimkv", 16, 1); // lazy swap policy (default)
+        let prompt: Vec<u32> = (0..20).map(|i| 32 + i).collect();
+        e.submit(Request::new(1, prompt, 2).with_session("s")).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].session.as_deref(), Some("s"));
+        let steps_t1 = e.metrics.decode_steps; // 20 prompt + 1 generation tick
+        assert!(e.idle(), "parked lane must not keep the engine busy");
+        // second turn: only the retained-cache gap is fed, never the history
+        e.submit(Request::new(2, vec![60, 61], 2).with_session("s")).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(e.metrics.resumes_in_place, 1);
+        assert_eq!(e.metrics.swap_outs, 0, "lazy: turn stays on its lane");
+        let t2 = e.metrics.decode_steps - steps_t1;
+        assert!(t2 <= 5, "second turn re-prefilled history: {t2} steps");
+        // positions continue across turns: newest cached pos > first turn len
+        let snap = e.retention_snapshot(0).unwrap();
+        let max_pos = snap[0].iter().map(|&(p, _, _)| p).max().unwrap();
+        assert!(max_pos >= 21, "cache does not span both turns: {max_pos}");
+    }
+
+    #[test]
+    fn parked_sessions_are_preempted_under_lane_pressure() {
+        let mut e = engine("trimkv", 16, 2);
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![1, 40 + i as u32], 2)
+                     .with_session(format!("s{i}")))
+                .unwrap();
+        }
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 4);
+        // 4 sessions over 2 lanes: the early finishers were pushed to host
+        assert_eq!(e.metrics.preemptions, 2);
+        assert_eq!(e.metrics.swap_outs, 2);
+        assert_eq!(e.sessions().len(), 2);
+        // a swapped-out session's next turn swaps back into a lane
+        e.submit(Request::new(10, vec![50], 1).with_session("s0")).unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.swap_ins >= 1, "s0 should return via swap-in");
+    }
+
+    #[test]
+    fn eager_swap_policy_snapshots_every_turn() {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 16,
+            batch: 1,
+            chunked_prefill: false,
+            swap_policy: "eager".into(),
+            ..Default::default()
+        };
+        let backend = MockBackend::new(1, 20);
+        let mut e = Engine::new(backend, cfg, 2).unwrap();
+        e.submit(Request::new(1, vec![1, 40, 41], 2).with_session("s")).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.swap_outs, 1);
+        {
+            let snap = e.sessions().get("s").unwrap();
+            assert_eq!(snap.history.len(), 5); // 3 prompt + 2 generated
+            assert_eq!(snap.fed, 4);           // last sample never fed
+            assert_eq!(snap.turns, 1);
+            assert_eq!(snap.k.len(), 4 * 2 * 20 * 32); // [L, H, M, dh]
+            assert!(snap.cache.total_live() > 0);
+        }
+        e.submit(Request::new(2, vec![50], 2).with_session("s")).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.swap_ins, 1);
+        assert_eq!(e.metrics.swap_outs, 2);
+        assert_eq!(e.sessions().get("s").unwrap().turns, 2);
+    }
+
+    #[test]
+    fn close_session_drops_state_everywhere() {
+        let mut e = engine("trimkv", 16, 1);
+        e.submit(Request::new(1, vec![1, 40], 2).with_session("s")).unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.retention_snapshot(0).is_some(), "session parked on lane");
+        e.close_session("s");
+        assert!(e.retention_snapshot(0).is_none());
+        assert_eq!(e.sessions().len(), 0);
+        assert_eq!(e.metrics.sessions_closed, 1);
+        // the id can be reused as a brand-new conversation
+        e.submit(Request::new(2, vec![1, 40], 1).with_session("s")).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.sessions_opened, 2);
+    }
+
+    #[test]
+    fn close_is_deferred_until_turns_drain() {
+        let mut e = engine("trimkv", 16, 1);
+        e.submit(Request::new(1, vec![1, 40], 2).with_session("s")).unwrap();
+        e.close_session("s"); // turn still queued: must not be dropped
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].session.as_deref(), Some("s"));
+        // once the turn drained, the close applied
+        assert!(e.retention_snapshot(0).is_none());
+        assert_eq!(e.sessions().len(), 0);
+        assert_eq!(e.metrics.sessions_closed, 1);
+    }
+
+    #[test]
+    fn close_is_a_barrier_for_later_turns() {
+        let mut e = engine("trimkv", 16, 1);
+        e.submit(Request::new(1, vec![1, 50], 2).with_session("s")).unwrap();
+        e.close_session("s");
+        // submitted AFTER the close: must start a brand-new conversation,
+        // not resume the doomed cache
+        e.submit(Request::new(2, vec![60], 2).with_session("s")).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[1].prompt_len, 1,
+                   "post-close turn inherited the closed session's history");
+        assert_eq!(rs[1].tokens, vec![61, 62]);
+        assert_eq!(e.metrics.sessions_opened, 2);
+        assert_eq!(e.metrics.sessions_closed, 1);
+    }
+
+    #[test]
+    fn flush_sessions_moves_parked_lanes_to_store() {
+        let mut e = engine("trimkv", 16, 2);
+        e.submit(Request::new(1, vec![1, 40], 1).with_session("a")).unwrap();
+        e.submit(Request::new(2, vec![1, 41], 1).with_session("b")).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.sessions().len(), 0); // both parked on lanes
+        e.flush_sessions().unwrap();
+        assert_eq!(e.sessions().len(), 2);
+        assert!(e.sessions().contains("a") && e.sessions().contains("b"));
+        assert_eq!(e.metrics.swap_outs, 2);
+        assert!(e.sessions().host_bytes() > 0);
+    }
+
+    #[test]
+    fn store_lru_drops_over_capacity() {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 16,
+            batch: 1,
+            chunked_prefill: false,
+            swap_policy: "eager".into(),
+            max_sessions: 1,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        e.submit(Request::new(1, vec![1, 40], 1).with_session("a")).unwrap();
+        e.run_to_completion().unwrap();
+        e.submit(Request::new(2, vec![1, 41], 1).with_session("b")).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.sessions().len(), 1);
+        assert!(e.sessions().contains("b"));
+        assert_eq!(e.metrics.sessions_dropped, 1);
+    }
+
+    #[test]
+    fn session_works_with_chunked_prefill() {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 24,
+            batch: 1,
+            chunked_prefill: true,
+            ..Default::default()
+        };
+        // mock chunk = 16 -> slots must cover budget + chunk + 1
+        let mut e = Engine::new(MockBackend::new(1, 24 + 20), cfg, 2).unwrap();
+        let t1: Vec<u32> = (0..30).map(|i| 32 + i).collect();
+        e.submit(Request::new(1, t1, 2).with_session("s")).unwrap();
+        e.run_to_completion().unwrap();
+        let chunks_t1 = e.metrics.prefill_chunks;
+        assert!(chunks_t1 >= 2);
+        // the second turn's 20 tokens prefill in fresh chunks from the
+        // retained position; history is not re-chunked
+        let t2: Vec<u32> = (0..20).map(|i| 40 + i).collect();
+        e.submit(Request::new(2, t2, 2).with_session("s")).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs[0].tokens.len(), 2);
+        let chunks_t2 = e.metrics.prefill_chunks - chunks_t1;
+        assert!(chunks_t2 <= 2, "history re-chunked: {chunks_t2} chunks");
     }
 
     #[test]

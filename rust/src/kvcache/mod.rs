@@ -16,7 +16,7 @@
 use crate::model_meta::ModelDims;
 
 /// Host bookkeeping for one cached token in one head.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SlotEntry {
     pub pos: i64,       // token index i in the sequence
     pub token: u32,     // token id (for retention dumps / debugging)
@@ -26,8 +26,17 @@ pub struct SlotEntry {
     pub last_attn: f32, // attention received on the latest step
 }
 
+/// Host mirror of an evicted token (retrieval baseline re-admission pool;
+/// also part of a session snapshot so retrieval state survives a swap).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MirrorEntry {
+    pub entry: SlotEntry,
+    pub key: Vec<f32>,
+    pub val: Vec<f32>,
+}
+
 /// One (layer, head) slot table for one lane.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HeadState {
     pub entries: Vec<SlotEntry>,
     pub live: Vec<bool>,
@@ -37,6 +46,9 @@ pub struct HeadState {
     /// value-vector mirror (retrieval baseline only)
     pub vals: Vec<f32>,
     pub dh: usize,
+    /// smallest non-live slot index in `0..slots-1` (== slots-1 when full);
+    /// maintained on insert/evict/clear so `free_slot` is O(1)
+    free_hint: usize,
 }
 
 impl HeadState {
@@ -53,6 +65,7 @@ impl HeadState {
             keys: if mirror_keys { vec![0.0; slots * dh] } else { Vec::new() },
             vals: if mirror_values { vec![0.0; slots * dh] } else { Vec::new() },
             dh,
+            free_hint: 0,
         }
     }
 
@@ -61,8 +74,11 @@ impl HeadState {
     }
 
     /// First free slot, skipping the reserved trash slot (last index).
+    /// O(1): `free_hint` always points at the smallest free slot.
     pub fn free_slot(&self) -> Option<usize> {
-        (0..self.slots() - 1).find(|&s| !self.live[s])
+        debug_assert!(self.free_hint >= self.slots() - 1
+                      || !self.live[self.free_hint]);
+        (self.free_hint < self.slots() - 1).then_some(self.free_hint)
     }
 
     pub fn insert(&mut self, slot: usize, entry: SlotEntry, key: Option<&[f32]>) {
@@ -75,6 +91,15 @@ impl HeadState {
         if !self.live[slot] {
             self.used += 1;
             self.live[slot] = true;
+            if slot == self.free_hint {
+                // advance to the next free slot (amortized O(1): each slot
+                // is walked over at most once per occupancy cycle)
+                while self.free_hint < self.slots() - 1
+                    && self.live[self.free_hint]
+                {
+                    self.free_hint += 1;
+                }
+            }
         }
         self.entries[slot] = entry;
         if let (Some(k), false) = (key, self.keys.is_empty()) {
@@ -93,11 +118,15 @@ impl HeadState {
         debug_assert!(self.live[slot], "evicting a dead slot");
         self.live[slot] = false;
         self.used -= 1;
+        if slot < self.free_hint {
+            self.free_hint = slot;
+        }
     }
 
     pub fn clear(&mut self) {
         self.live.iter_mut().for_each(|b| *b = false);
         self.used = 0;
+        self.free_hint = 0;
     }
 
     pub fn live_slots(&self) -> impl Iterator<Item = usize> + '_ {
@@ -116,8 +145,13 @@ impl HeadState {
     }
 
     /// Fold this step's attention row into the running statistics.
+    /// Hot path (per head per decode step): walks the live bitvec directly,
+    /// no temporary slot list.
     pub fn update_attention(&mut self, attn_row: &[f32], ema: f32) {
-        for s in self.live_slots().collect::<Vec<_>>() {
+        for (s, &is_live) in self.live.iter().enumerate() {
+            if !is_live {
+                continue;
+            }
             let a = attn_row[s];
             let e = &mut self.entries[s];
             e.acc_attn += a;
@@ -130,13 +164,18 @@ impl HeadState {
     pub fn check_invariants(&self) {
         assert_eq!(self.used, self.live.iter().filter(|&&b| b).count());
         assert!(!self.live[self.slots() - 1], "trash slot went live");
+        assert!(self.free_hint >= self.slots() - 1 || !self.live[self.free_hint],
+                "free_hint points at a live slot");
+        assert!((0..self.free_hint.min(self.slots() - 1))
+                    .all(|s| self.live[s]),
+                "free slot below free_hint");
     }
     #[cfg(not(debug_assertions))]
     pub fn check_invariants(&self) {}
 }
 
 /// All (layer, head) tables for one batch lane.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LaneCache {
     pub heads: Vec<HeadState>, // layers * hkv, row-major (l, h)
     pub layers: usize,
@@ -253,6 +292,28 @@ mod tests {
         assert_eq!(h.entries[1].acc_attn, 0.0); // dead slot untouched
         assert_eq!(h.entries[2].last_attn, 0.25);
         assert!((h.entries[2].ema_attn - 0.025).abs() < 1e-6);
+    }
+
+    #[test]
+    fn free_hint_tracks_lowest_free_slot() {
+        let mut h = HeadState::new(6, 4, false);
+        for s in 0..5 {
+            assert_eq!(h.free_slot(), Some(s));
+            h.insert(s, SlotEntry::default(), None);
+            h.check_invariants();
+        }
+        assert_eq!(h.free_slot(), None);
+        // out-of-order evictions: hint must fall back to the smallest hole
+        h.evict(3);
+        assert_eq!(h.free_slot(), Some(3));
+        h.evict(1);
+        assert_eq!(h.free_slot(), Some(1));
+        h.insert(1, SlotEntry::default(), None);
+        assert_eq!(h.free_slot(), Some(3));
+        h.check_invariants();
+        h.clear();
+        assert_eq!(h.free_slot(), Some(0));
+        h.check_invariants();
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! - [`vocab`] / [`model_meta`] — artifact interchange contracts with python
 //! - [`runtime`] — PJRT client, HLO loading, the ModelBackend abstraction
 //! - [`kvcache`] / [`policy`] — slot cache manager + eviction policies
+//! - [`session`] — host-side KV snapshot/swap store for multi-turn serving
 //! - [`engine`] / [`scheduler`] / [`server`] — the serving coordinator
 //! - [`workload`] / [`eval`] — paper benchmark suites and table harnesses
 
@@ -20,6 +21,7 @@ pub mod policy;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod session;
 pub mod util;
 pub mod vocab;
 pub mod workload;

@@ -52,6 +52,10 @@ fn common_spec() -> trimkv::util::cli::SpecBuilder {
         .opt("batch", "8", "batch lanes (must match an exported artifact)")
         .opt("max-new-tokens", "64", "generation cap")
         .opt("seed", "0", "rng seed")
+        .opt("max-sessions", "256",
+             "host-side session snapshot store capacity (LRU beyond)")
+        .opt("swap-policy", "lazy",
+             "session swap policy: lazy (park on lane) | eager (snapshot)")
 }
 
 fn load_engine(args: &Args) -> Result<(Engine<PjrtBackend>, Vocab, ModelMeta)> {

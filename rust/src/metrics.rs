@@ -15,10 +15,20 @@ pub struct EngineMetrics {
     pub injections: u64,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
+    // session subsystem (KV snapshot/swap)
+    pub sessions_opened: u64,            // first turn of a new session
+    pub sessions_closed: u64,            // explicit client close
+    pub sessions_dropped: u64,           // LRU pressure in the host store
+    pub swap_outs: u64,                  // lane KV downloaded to host
+    pub swap_ins: u64,                   // host snapshot uploaded to a lane
+    pub preemptions: u64,                // parked lane evicted for new work
+    pub resumes_in_place: u64,           // next turn hit its parked lane
     pub ttft_us: LatencyHistogram,       // time to first token
     pub e2e_us: LatencyHistogram,        // request end-to-end
     pub step_us: OnlineStats,            // decode-step wall time
     pub lane_occupancy: OnlineStats,     // live lanes per step
+    pub swap_out_us: OnlineStats,        // lane download + store insert
+    pub swap_in_us: OnlineStats,         // store take + lane upload
 }
 
 impl Default for EngineMetrics {
@@ -39,10 +49,19 @@ impl EngineMetrics {
             injections: 0,
             decode_steps: 0,
             prefill_chunks: 0,
+            sessions_opened: 0,
+            sessions_closed: 0,
+            sessions_dropped: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            preemptions: 0,
+            resumes_in_place: 0,
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
             step_us: OnlineStats::new(),
             lane_occupancy: OnlineStats::new(),
+            swap_out_us: OnlineStats::new(),
+            swap_in_us: OnlineStats::new(),
         }
     }
 
@@ -69,6 +88,24 @@ impl EngineMetrics {
             self.lane_occupancy.mean(),
         )
     }
+
+    /// One-line session/swap summary (multi-turn serving).
+    pub fn session_summary(&self) -> String {
+        format!(
+            "sessions {} opened / {} closed / {} dropped | swaps {} out \
+             (mean {:.1} us) / {} in (mean {:.1} us) | preemptions {} | \
+             in-place resumes {}",
+            self.sessions_opened,
+            self.sessions_closed,
+            self.sessions_dropped,
+            self.swap_outs,
+            self.swap_out_us.mean(),
+            self.swap_ins,
+            self.swap_in_us.mean(),
+            self.preemptions,
+            self.resumes_in_place,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -89,5 +126,18 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests 2/3"));
         assert!(s.contains("decode 100 tok"));
+    }
+
+    #[test]
+    fn session_summary_renders() {
+        let mut m = EngineMetrics::new();
+        m.sessions_opened = 5;
+        m.swap_outs = 3;
+        m.swap_ins = 2;
+        m.preemptions = 1;
+        let s = m.session_summary();
+        assert!(s.contains("sessions 5 opened"));
+        assert!(s.contains("swaps 3 out"));
+        assert!(s.contains("preemptions 1"));
     }
 }

@@ -64,6 +64,21 @@ pub trait ModelBackend: Send {
     fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut>;
     /// Zero the device-resident KV caches (new evaluation run).
     fn reset_cache(&mut self) -> Result<()>;
+
+    /// Download one lane's K/V slabs to the host as two flat `[L, H, M, dh]`
+    /// row-major buffers (session swap-out).
+    fn download_lane_kv(&mut self, lane: usize) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Upload host `[L, H, M, dh]` slabs into one lane of the device K/V
+    /// cache, leaving every other lane untouched (session swap-in).
+    fn upload_lane_kv(&mut self, lane: usize, k: &[f32], v: &[f32])
+        -> Result<()>;
+
+    /// Elements in one lane's `[L, H, M, dh]` slab (sizing for swap buffers).
+    fn lane_kv_len(&self) -> usize {
+        let d = self.dims();
+        d.layers * d.hkv * self.slots() * d.dh
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -156,6 +171,29 @@ impl PjrtBackend {
 
     fn lbh(&self) -> (usize, usize, usize) {
         (self.dims.layers, self.b, self.dims.hkv)
+    }
+}
+
+/// Gather one lane's `[L, H, M, dh]` rows out of a flat `[L, B, H, M, dh]`
+/// cache (`stride` = H * M * dh).
+fn gather_lane(cache: &[f32], lane: usize, l: usize, b: usize,
+               stride: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(l * stride);
+    for li in 0..l {
+        let off = (li * b + lane) * stride;
+        out.extend_from_slice(&cache[off..off + stride]);
+    }
+    out
+}
+
+/// Scatter one lane's `[L, H, M, dh]` rows back into a flat
+/// `[L, B, H, M, dh]` cache, leaving other lanes untouched.
+fn scatter_lane(cache: &mut [f32], lane: usize, l: usize, b: usize,
+                stride: usize, src: &[f32]) {
+    for li in 0..l {
+        let off = (li * b + lane) * stride;
+        cache[off..off + stride]
+            .copy_from_slice(&src[li * stride..(li + 1) * stride]);
     }
 }
 
@@ -269,6 +307,37 @@ impl ModelBackend for PjrtBackend {
         self.vc = self.client.buffer_from_host_buffer(&zeros, &shape, None)?;
         Ok(())
     }
+
+    fn download_lane_kv(&mut self, lane: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (l, b, h) = self.lbh();
+        ensure!(lane < b, "lane {lane} out of range (batch {b})");
+        // PJRT CPU exposes no partial-buffer reads/writes, and the graphs
+        // take kc/vc as single buffers, so a lane swap round-trips the full
+        // [L,B,H,M,dh] cache (see ROADMAP: per-lane cache buffers or a
+        // batched swap API would make this O(lane)).
+        let kc = to_host(&self.kc)?;
+        let vc = to_host(&self.vc)?;
+        let stride = h * self.m * self.dims.dh;
+        Ok((gather_lane(&kc, lane, l, b, stride),
+            gather_lane(&vc, lane, l, b, stride)))
+    }
+
+    fn upload_lane_kv(&mut self, lane: usize, k: &[f32], v: &[f32])
+        -> Result<()> {
+        let (l, b, h) = self.lbh();
+        ensure!(lane < b, "lane {lane} out of range (batch {b})");
+        let stride = h * self.m * self.dims.dh;
+        ensure!(k.len() == l * stride && v.len() == l * stride,
+                "lane kv slab has {} elems, expected {}", k.len(), l * stride);
+        let mut kc = to_host(&self.kc)?;
+        let mut vc = to_host(&self.vc)?;
+        scatter_lane(&mut kc, lane, l, b, stride, k);
+        scatter_lane(&mut vc, lane, l, b, stride, v);
+        let shape = [l, b, h, self.m, self.dims.dh];
+        self.kc = self.client.buffer_from_host_buffer(&kc, &shape, None)?;
+        self.vc = self.client.buffer_from_host_buffer(&vc, &shape, None)?;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -288,13 +357,20 @@ pub struct MockBackend {
     pub decoded_per_lane: Vec<usize>,
     pub decode_calls: usize,
     pub prefill_calls: usize,
+    /// Host mirror of the device K/V slot arenas, `[L, B, H, M, dh]` —
+    /// written exactly where the real graphs would scatter, so the session
+    /// swap path (download/upload of lane slabs) is testable end-to-end.
+    pub kc: Vec<f32>,
+    pub vc: Vec<f32>,
 }
 
 impl MockBackend {
     pub fn new(b: usize, m: usize) -> MockBackend {
+        let dims = ModelDims { vocab: 512, d: 128, layers: 4, hq: 4, hkv: 2,
+                               dh: 32, ffn: 256, gate_hidden: 48 };
+        let cache = dims.layers * b * dims.hkv * m * dims.dh;
         MockBackend {
-            dims: ModelDims { vocab: 512, d: 128, layers: 4, hq: 4, hkv: 2,
-                              dh: 32, ffn: 256, gate_hidden: 48 },
+            dims,
             b,
             m,
             c: 16,
@@ -302,6 +378,8 @@ impl MockBackend {
             decoded_per_lane: vec![0; b],
             decode_calls: 0,
             prefill_calls: 0,
+            kc: vec![0.0; cache],
+            vc: vec![0.0; cache],
         }
     }
 
@@ -379,6 +457,28 @@ impl ModelBackend for MockBackend {
             *x = ((i % 7) as f32) * 0.1 + ins.tokens[(i / dh / h) % b] as f32 * 1e-3;
         }
         let v_new = k_new.clone();
+        // scatter into the mock K/V arenas exactly as the decode graph
+        // would: pending injects first, then the step's write_slot
+        for base in 0..l * b * h {
+            if let (Some(flag), Some(islot)) = (ins.inject_flag, ins.inject_slot) {
+                if flag[base] > 0.0 {
+                    let s = islot[base] as usize;
+                    let dst = (base * m + s) * dh;
+                    if let (Some(ik), Some(iv)) = (ins.inject_k, ins.inject_v) {
+                        self.kc[dst..dst + dh]
+                            .copy_from_slice(&ik[base * dh..(base + 1) * dh]);
+                        self.vc[dst..dst + dh]
+                            .copy_from_slice(&iv[base * dh..(base + 1) * dh]);
+                    }
+                }
+            }
+            let s = ins.write_slot[base] as usize;
+            let dst = (base * m + s) * dh;
+            self.kc[dst..dst + dh]
+                .copy_from_slice(&k_new[base * dh..(base + 1) * dh]);
+            self.vc[dst..dst + dh]
+                .copy_from_slice(&v_new[base * dh..(base + 1) * dh]);
+        }
         Ok(DecodeOut { logits, log_beta, attn, k_new, v_new })
     }
 
@@ -406,13 +506,57 @@ impl ModelBackend for MockBackend {
         }
         let attn_slots = vec![1.0 / m as f32; l * b * h * m];
         let attn_chunk = vec![1.0 / c as f32; l * b * h * c];
-        let k_chunk = vec![0.1f32; l * b * h * c * dh];
+        // token-dependent chunk K/V (same formula as decode) so swapped
+        // slabs carry distinguishable content in tests
+        let mut k_chunk = vec![0.0f32; l * b * h * c * dh];
+        for (i, x) in k_chunk.iter_mut().enumerate() {
+            let lane = (i / (h * c * dh)) % b;
+            let ci = (i / dh) % c;
+            *x = ((i % 7) as f32) * 0.1
+                + ins.tokens[lane * c + ci] as f32 * 1e-3;
+        }
         let v_chunk = k_chunk.clone();
+        // scatter the chunk into the mock arenas at the planned write slots
+        for base in 0..l * b * h {
+            let lane = (base / h) % b;
+            for ci in 0..c {
+                if ins.in_mask[lane * c + ci] <= 0.0 {
+                    continue;
+                }
+                let s = ins.write_slots[base * c + ci] as usize;
+                let dst = (base * m + s) * dh;
+                let src = (base * c + ci) * dh;
+                self.kc[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
+                self.vc[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
+            }
+        }
         Ok(PrefillOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
     }
 
     fn reset_cache(&mut self) -> Result<()> {
         self.decoded_per_lane = vec![0; self.b];
+        self.kc.iter_mut().for_each(|x| *x = 0.0);
+        self.vc.iter_mut().for_each(|x| *x = 0.0);
+        Ok(())
+    }
+
+    fn download_lane_kv(&mut self, lane: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
+        ensure!(lane < b, "lane {lane} out of range (batch {b})");
+        let stride = h * self.m * self.dims.dh;
+        Ok((gather_lane(&self.kc, lane, l, b, stride),
+            gather_lane(&self.vc, lane, l, b, stride)))
+    }
+
+    fn upload_lane_kv(&mut self, lane: usize, k: &[f32], v: &[f32])
+        -> Result<()> {
+        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
+        ensure!(lane < b, "lane {lane} out of range (batch {b})");
+        let stride = h * self.m * self.dims.dh;
+        ensure!(k.len() == l * stride && v.len() == l * stride,
+                "lane kv slab has {} elems, expected {}", k.len(), l * stride);
+        scatter_lane(&mut self.kc, lane, l, b, stride, k);
+        scatter_lane(&mut self.vc, lane, l, b, stride, v);
         Ok(())
     }
 }
@@ -465,6 +609,49 @@ mod tests {
         let word = MockBackend::mock_log_beta(0, 0, 300);
         assert!(sym > word);
         assert!(sym < 0.0);
+    }
+
+    #[test]
+    fn mock_lane_kv_download_upload_roundtrip() {
+        let mut mb = MockBackend::new(2, 8);
+        let valid = vec![0.0f32; 4 * 2 * 2 * 8];
+        // decode writes lane 0 into slot 1, lane 1 into slot 3
+        let mut ws = vec![0i32; 4 * 2 * 2];
+        for li in 0..4 {
+            for hh in 0..2 {
+                ws[(li * 2) * 2 + hh] = 1;
+                ws[(li * 2 + 1) * 2 + hh] = 3;
+            }
+        }
+        mb.decode(&DecodeIn {
+            tokens: &[10, 77],
+            pos: &[0, 0],
+            valid: &valid,
+            write_slot: &ws,
+            inject_flag: None,
+            inject_slot: None,
+            inject_k: None,
+            inject_v: None,
+            want_attn: false,
+            want_kv: true,
+        })
+        .unwrap();
+        let (k0, v0) = mb.download_lane_kv(0).unwrap();
+        let (k1, _) = mb.download_lane_kv(1).unwrap();
+        assert_eq!(k0.len(), mb.lane_kv_len());
+        assert_ne!(k0, k1, "lanes with different tokens share a slab");
+        // roundtrip: upload lane 0's slab into lane 1, download, compare
+        let k0c = k0.clone();
+        let v0c = v0.clone();
+        mb.upload_lane_kv(1, &k0c, &v0c).unwrap();
+        let (k1b, v1b) = mb.download_lane_kv(1).unwrap();
+        assert_eq!(k1b, k0);
+        assert_eq!(v1b, v0);
+        // lane 0 untouched by the lane-1 upload
+        let (k0b, _) = mb.download_lane_kv(0).unwrap();
+        assert_eq!(k0b, k0);
+        assert!(mb.upload_lane_kv(1, &k0c[1..], &v0c).is_err());
+        assert!(mb.download_lane_kv(9).is_err());
     }
 
     #[test]

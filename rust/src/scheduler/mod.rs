@@ -16,11 +16,21 @@ pub struct Request {
     pub stop_at_eos: bool,
     /// free-form tag used by the eval harness to route grading
     pub tag: String,
+    /// Conversation this turn belongs to. Turns of one session run in
+    /// submission order; between turns the session's KV cache is retained
+    /// (parked on its lane or swapped to the host `SessionStore`).
+    pub session: Option<String>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, stop_at_eos: true, tag: String::new() }
+        Request { id, prompt, max_new_tokens, stop_at_eos: true,
+                  tag: String::new(), session: None }
+    }
+
+    pub fn with_session(mut self, session: impl Into<String>) -> Request {
+        self.session = Some(session.into());
+        self
     }
 }
 
@@ -36,6 +46,9 @@ pub enum FinishReason {
 pub struct Response {
     pub id: u64,
     pub tag: String,
+    /// Session this turn belonged to, when session-routed.
+    pub session: Option<String>,
+    /// Length of the full fed stream (all turns) for session requests.
     pub prompt_len: usize,
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
@@ -43,15 +56,27 @@ pub struct Response {
     pub e2e_us: f64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AdmitError {
-    #[error("queue full (capacity {0})")]
     QueueFull(usize),
-    #[error("empty prompt")]
     EmptyPrompt,
 }
 
-/// Bounded FIFO wait queue with admission control.
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull(cap) => write!(f, "queue full (capacity {cap})"),
+            AdmitError::EmptyPrompt => write!(f, "empty prompt"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Bounded FIFO wait queue with admission control, session-aware: the
+/// engine pops the first request whose session is *admissible* (not already
+/// decoding on a lane), which keeps per-session turn order while letting
+/// unrelated conversations overtake a blocked one.
 #[derive(Debug)]
 pub struct WaitQueue {
     q: VecDeque<Request>,
@@ -74,6 +99,28 @@ impl WaitQueue {
     }
     pub fn pop(&mut self) -> Option<Request> {
         self.q.pop_front()
+    }
+    /// Index of the first queued request accepted by `admissible`
+    /// (FIFO within and across sessions).
+    pub fn find_admissible<F: Fn(&Request) -> bool>(&self, admissible: F)
+        -> Option<usize> {
+        self.q.iter().position(admissible)
+    }
+    /// Peek a queued request by index.
+    pub fn get(&self, idx: usize) -> Option<&Request> {
+        self.q.get(idx)
+    }
+    /// Remove a specific queued request (paired with `find_admissible`).
+    pub fn take(&mut self, idx: usize) -> Option<Request> {
+        self.q.remove(idx)
+    }
+    /// Queued turns for this session (close-barrier accounting).
+    pub fn session_count(&self, id: &str) -> usize {
+        self.q.iter().filter(|r| r.session.as_deref() == Some(id)).count()
+    }
+    /// Is any queued turn waiting on this session?
+    pub fn has_session(&self, id: &str) -> bool {
+        self.session_count(id) > 0
     }
     pub fn len(&self) -> usize {
         self.q.len()
@@ -99,6 +146,27 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 1);
         assert_eq!(q.pop().unwrap().id, 2);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn session_admissibility_preserves_turn_order() {
+        let mut q = WaitQueue::new(8);
+        q.admit(Request::new(1, vec![1], 4).with_session("a")).unwrap();
+        q.admit(Request::new(2, vec![1], 4).with_session("a")).unwrap();
+        q.admit(Request::new(3, vec![1], 4)).unwrap();
+        assert!(q.has_session("a"));
+        assert!(!q.has_session("b"));
+        // session "a" busy on a lane: first admissible is the sessionless #3
+        let idx = q
+            .find_admissible(|r| r.session.as_deref() != Some("a"))
+            .unwrap();
+        assert_eq!(q.get(idx).unwrap().id, 3);
+        assert_eq!(q.take(idx).unwrap().id, 3);
+        // "a" free again: its turns come out in submission order
+        let idx = q.find_admissible(|_| true).unwrap();
+        assert_eq!(q.take(idx).unwrap().id, 1);
+        assert_eq!(q.take(0).unwrap().id, 2);
+        assert!(q.is_empty());
     }
 
     #[test]

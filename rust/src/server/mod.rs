@@ -19,6 +19,7 @@ use crate::scheduler::{Request, Response};
 
 enum Msg {
     Req(Request),
+    CloseSession(String),
     Shutdown,
 }
 
@@ -45,6 +46,7 @@ impl InProcServer {
                                 log_admit_error(&e);
                             }
                         }
+                        Ok(Msg::CloseSession(id)) => engine.close_session(&id),
                         Ok(Msg::Shutdown) => shutdown = true,
                         Err(TryRecvError::Empty) => break,
                         Err(TryRecvError::Disconnected) => {
@@ -61,13 +63,15 @@ impl InProcServer {
                     return Ok(());
                 }
                 if !worked && !shutdown {
-                    // idle: block until the next request arrives
+                    // idle: block until the next request arrives (parked
+                    // sessions wait here without burning a core)
                     match req_rx.recv() {
                         Ok(Msg::Req(r)) => {
                             if let Err(e) = engine.submit(r) {
                                 log_admit_error(&e);
                             }
                         }
+                        Ok(Msg::CloseSession(id)) => engine.close_session(&id),
                         Ok(Msg::Shutdown) => shutdown = true,
                         Err(_) => return Ok(()),
                     }
@@ -79,6 +83,11 @@ impl InProcServer {
 
     pub fn submit(&self, req: Request) {
         let _ = self.tx.send(Msg::Req(req));
+    }
+
+    /// Drop a conversation's retained state (host snapshot + parked lane).
+    pub fn close_session(&self, id: impl Into<String>) {
+        let _ = self.tx.send(Msg::CloseSession(id.into()));
     }
 
     pub fn try_recv(&self) -> Option<Response> {
@@ -131,5 +140,27 @@ mod tests {
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn inproc_server_session_turns_in_order() {
+        let cfg = EngineConfig {
+            budget: 16,
+            batch: 1,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        srv.submit(Request::new(1, vec![1, 50], 2).with_session("s"));
+        srv.submit(Request::new(2, vec![60], 2).with_session("s"));
+        srv.close_session("s");
+        let responses = srv.shutdown();
+        assert_eq!(responses.len(), 2);
+        // turn order is preserved within a session, cache carries across
+        assert_eq!(responses[0].id, 1);
+        assert_eq!(responses[0].tokens, vec![51, 52]);
+        assert_eq!(responses[1].id, 2);
+        assert_eq!(responses[1].tokens, vec![61, 62]);
     }
 }

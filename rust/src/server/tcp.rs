@@ -2,10 +2,16 @@
 //!
 //! Protocol: each request is one JSON line
 //!   {"id": 1, "prompt": [1, 40, 41], "max_new_tokens": 16, "tag": "x"}
+//! multi-turn requests add a session id; the engine retains the KV cache
+//! between turns (no re-prefill of prior turns):
+//!   {"id": 2, "session": "abc", "prompt": [44, 45], "max_new_tokens": 4}
+//! a conversation is dropped with a close message (acked with one line):
+//!   {"session": "abc", "close": true}
 //! each response is one JSON line
-//!   {"id": 1, "tag": "x", "tokens": [...], "finish": "eos",
-//!    "ttft_us": 123.0, "e2e_us": 456.0}
-//! Closing the connection finishes the session.
+//!   {"id": 1, "tag": "x", "session": "abc", "tokens": [...],
+//!    "finish": "eos", "ttft_us": 123.0, "e2e_us": 456.0}
+//! Closing the connection ends the client; retained sessions survive it and
+//! can be resumed from a later connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -14,8 +20,26 @@ use crate::scheduler::{FinishReason, Request, Response};
 use crate::server::InProcServer;
 use crate::util::json::Json;
 
-pub fn parse_request_line(line: &str) -> anyhow::Result<Request> {
+/// One parsed client line.
+pub enum ClientMsg {
+    Req(Request),
+    Close(String),
+}
+
+pub fn parse_client_line(line: &str) -> anyhow::Result<ClientMsg> {
     let j = Json::parse(line)?;
+    if j.get("close").and_then(Json::as_bool) == Some(true) {
+        let sid = j.str_field("session")?;
+        return Ok(ClientMsg::Close(sid.to_string()));
+    }
+    request_from_json(&j).map(ClientMsg::Req)
+}
+
+pub fn parse_request_line(line: &str) -> anyhow::Result<Request> {
+    request_from_json(&Json::parse(line)?)
+}
+
+fn request_from_json(j: &Json) -> anyhow::Result<Request> {
     let id = j.usize_field("id")? as u64;
     let prompt: Vec<u32> = j
         .get("prompt")
@@ -33,11 +57,12 @@ pub fn parse_request_line(line: &str) -> anyhow::Result<Request> {
         .to_string();
     let mut req = Request::new(id, prompt, max_new);
     req.tag = tag;
+    req.session = j.get("session").and_then(Json::as_str).map(str::to_string);
     Ok(req)
 }
 
 pub fn response_to_json(r: &Response) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("id", Json::num(r.id as f64)),
         ("tag", Json::str(r.tag.clone())),
         ("tokens", Json::arr_usize(
@@ -50,7 +75,11 @@ pub fn response_to_json(r: &Response) -> Json {
         ("prompt_len", Json::num(r.prompt_len as f64)),
         ("ttft_us", Json::num(r.ttft_us)),
         ("e2e_us", Json::num(r.e2e_us)),
-    ])
+    ];
+    if let Some(sid) = &r.session {
+        pairs.push(("session", Json::str(sid.clone())));
+    }
+    Json::obj(pairs)
 }
 
 /// Serve one client connection: read request lines, stream response lines.
@@ -66,10 +95,17 @@ pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request_line(&line) {
-            Ok(req) => {
+        match parse_client_line(&line) {
+            Ok(ClientMsg::Req(req)) => {
                 srv.submit(req);
                 outstanding += 1;
+            }
+            Ok(ClientMsg::Close(sid)) => {
+                srv.close_session(sid.clone());
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("session", Json::str(sid)),
+                    ("closed", Json::Bool(true)),
+                ]))?;
             }
             Err(e) => {
                 writeln!(writer, "{}", Json::obj(vec![
@@ -135,15 +171,32 @@ mod tests {
     fn defaults_and_errors() {
         let r = parse_request_line(r#"{"id": 1, "prompt": [5]}"#).unwrap();
         assert_eq!(r.max_new_tokens, 64);
+        assert_eq!(r.session, None);
         assert!(parse_request_line("{}").is_err());
         assert!(parse_request_line("not json").is_err());
     }
 
     #[test]
+    fn parses_session_and_close_messages() {
+        let m = parse_client_line(
+            r#"{"id": 4, "session": "abc", "prompt": [9], "max_new_tokens": 2}"#,
+        )
+        .unwrap();
+        let ClientMsg::Req(r) = m else { panic!("expected request") };
+        assert_eq!(r.session.as_deref(), Some("abc"));
+        let m = parse_client_line(r#"{"session": "abc", "close": true}"#).unwrap();
+        let ClientMsg::Close(sid) = m else { panic!("expected close") };
+        assert_eq!(sid, "abc");
+        // close without a session id is a protocol error
+        assert!(parse_client_line(r#"{"close": true}"#).is_err());
+    }
+
+    #[test]
     fn response_json_shape() {
-        let r = Response {
+        let mut r = Response {
             id: 9,
             tag: "x".into(),
+            session: None,
             prompt_len: 2,
             tokens: vec![7, 8],
             finish: FinishReason::Eos,
@@ -154,6 +207,10 @@ mod tests {
         assert_eq!(j.usize_field("id").unwrap(), 9);
         assert_eq!(j.str_field("finish").unwrap(), "eos");
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("session").is_none());
+        r.session = Some("abc".into());
+        let j = response_to_json(&r);
+        assert_eq!(j.str_field("session").unwrap(), "abc");
     }
 
     #[test]
@@ -184,5 +241,58 @@ mod tests {
         assert_eq!(j.usize_field("id").unwrap(), 1);
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(t.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn tcp_multi_turn_session_and_close() {
+        use crate::config::EngineConfig;
+        use crate::engine::Engine;
+        use crate::runtime::MockBackend;
+        use std::io::{BufRead, BufReader, Write};
+
+        let cfg = EngineConfig {
+            budget: 16, batch: 1, chunked_prefill: false, ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            serve_connection(s, &srv).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(
+            client,
+            r#"{{"id": 1, "session": "s", "prompt": [1, 50], "max_new_tokens": 2}}"#
+        )
+        .unwrap();
+        writeln!(
+            client,
+            r#"{{"id": 2, "session": "s", "prompt": [60], "max_new_tokens": 2}}"#
+        )
+        .unwrap();
+        writeln!(client, r#"{{"session": "s", "close": true}}"#).unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let reader = BufReader::new(&client);
+        let mut turn_tokens: Vec<Vec<usize>> = Vec::new();
+        let mut saw_close_ack = false;
+        for line in reader.lines() {
+            let j = Json::parse(line.unwrap().trim()).unwrap();
+            if j.get("closed").and_then(Json::as_bool) == Some(true) {
+                saw_close_ack = true;
+            } else {
+                assert_eq!(j.str_field("session").unwrap(), "s");
+                let toks = j.get("tokens").unwrap().as_arr().unwrap()
+                    .iter().filter_map(Json::as_usize).collect();
+                turn_tokens.push(toks);
+            }
+        }
+        assert!(saw_close_ack);
+        assert_eq!(turn_tokens.len(), 2);
+        // mock emits successors; turn 2 continues from the retained cache
+        assert_eq!(turn_tokens[0], vec![51, 52]);
+        assert_eq!(turn_tokens[1], vec![61, 62]);
+        assert_eq!(t.join().unwrap(), 2);
     }
 }

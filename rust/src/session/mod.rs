@@ -1,0 +1,211 @@
+//! Session subsystem: conversations that outlive their batch lane.
+//!
+//! The paper's headline scenario (LongMemEval, §5.2) is long-horizon
+//! multi-session dialogue.  The engine has a handful of device lanes; a
+//! deployment has thousands of concurrent conversations.  This module holds
+//! the host side of that gap: when a turn completes (or the scheduler
+//! preempts an idle session under lane pressure) the lane's entire retention
+//! state — per-head slot tables with `log beta` scores and attention
+//! statistics, the retrieval mirror, and the device-resident K/V slabs —
+//! is captured as a [`SessionSnapshot`] and parked in a [`SessionStore`].
+//! When the session's next turn arrives the snapshot is swapped back into a
+//! free lane and decoding continues from the retained cache: **no re-prefill
+//! of prior turns**, and the memory-bounded cache means a snapshot is
+//! O(budget), not O(history).
+//!
+//! The store is LRU-bounded (`EngineConfig::max_sessions`): under pressure
+//! the coldest conversation is dropped, exactly the trade the paper's
+//! retention gates make per token, lifted to whole dialogues.
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::{LaneCache, MirrorEntry};
+
+/// Everything needed to resume a conversation on any free lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    /// Per-(layer, head) slot tables: live bits, token entries, retention
+    /// scores, attention statistics, optional key/value mirrors.
+    pub cache: LaneCache,
+    /// Retrieval-policy re-admission pool, per (layer * head).
+    pub mirror: Vec<Vec<MirrorEntry>>,
+    /// Device K/V slab for the lane, flat `[L, H, M, dh]`.
+    pub k: Vec<f32>,
+    /// Device V slab for the lane, flat `[L, H, M, dh]`.
+    pub v: Vec<f32>,
+    /// Tokens already fed through the model (== next position to feed).
+    pub fed: usize,
+    /// Full token stream so far: all turn prompts plus generated replies.
+    /// `history.len() == fed + 1` (the final sampled token is never fed).
+    pub history: Vec<u32>,
+    /// Completed turns.
+    pub turns: u64,
+    /// LRU stamp.  Two clock domains use this field and never cross: the
+    /// engine stamps lane-parked snapshots with its own clock (preemption
+    /// order among parked lanes); the store re-stamps on every insert
+    /// (eviction order among stored snapshots).
+    pub last_used: u64,
+}
+
+impl SessionSnapshot {
+    /// Approximate host bytes held by this snapshot (observability).
+    pub fn host_bytes(&self) -> usize {
+        let slab = (self.k.len() + self.v.len()) * 4;
+        let tables: usize = self
+            .cache
+            .heads
+            .iter()
+            .map(|h| {
+                h.entries.len() * std::mem::size_of::<crate::kvcache::SlotEntry>()
+                    + h.live.len()
+                    + (h.keys.len() + h.vals.len()) * 4
+            })
+            .sum();
+        let mirror: usize = self
+            .mirror
+            .iter()
+            .flat_map(|m| m.iter())
+            .map(|e| (e.key.len() + e.val.len()) * 4 + 32)
+            .sum();
+        slab + tables + mirror + self.history.len() * 4
+    }
+}
+
+/// Host-side store of swapped-out sessions, LRU-bounded.
+#[derive(Debug)]
+pub struct SessionStore {
+    max_sessions: usize,
+    clock: u64,
+    map: BTreeMap<String, SessionSnapshot>,
+}
+
+impl SessionStore {
+    pub fn new(max_sessions: usize) -> SessionStore {
+        SessionStore { max_sessions: max_sessions.max(1), clock: 0, map: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_sessions
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.map.contains_key(id)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&SessionSnapshot> {
+        self.map.get(id)
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    /// Total host bytes across stored snapshots.
+    pub fn host_bytes(&self) -> usize {
+        self.map.values().map(SessionSnapshot::host_bytes).sum()
+    }
+
+    /// Remove and return a snapshot (swap-in takes ownership).
+    pub fn take(&mut self, id: &str) -> Option<SessionSnapshot> {
+        self.map.remove(id)
+    }
+
+    /// Drop a session outright (client close). Returns whether it existed.
+    pub fn remove(&mut self, id: &str) -> bool {
+        self.map.remove(id).is_some()
+    }
+
+    /// Insert (or replace) a snapshot, stamping it most-recently-used.
+    /// Returns the number of LRU victims dropped to stay under capacity.
+    pub fn insert(&mut self, id: String, mut snap: SessionSnapshot) -> usize {
+        self.clock += 1;
+        snap.last_used = self.clock;
+        self.map.insert(id, snap);
+        let mut dropped = 0;
+        while self.map.len() > self.max_sessions {
+            let lru = self
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map over capacity");
+            self.map.remove(&lru);
+            dropped += 1;
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{LaneCache, SlotEntry};
+    use crate::model_meta::ModelDims;
+
+    fn snap(tag: u32) -> SessionSnapshot {
+        let dims = ModelDims { vocab: 512, d: 128, layers: 2, hq: 4, hkv: 2,
+                               dh: 4, ffn: 256, gate_hidden: 48 };
+        let mut cache = LaneCache::new(&dims, 6, true);
+        cache.head_mut(0, 0).insert(
+            0,
+            SlotEntry { pos: 0, token: tag, log_beta: -0.2, ..Default::default() },
+            Some(&[tag as f32, 0.0, 0.0, 0.0]),
+        );
+        SessionSnapshot {
+            cache,
+            mirror: vec![Vec::new(); 4],
+            k: vec![tag as f32; 2 * 2 * 6 * 4],
+            v: vec![tag as f32; 2 * 2 * 6 * 4],
+            fed: 3,
+            history: vec![1, tag, tag + 1, tag + 2],
+            turns: 1,
+            last_used: 0,
+        }
+    }
+
+    #[test]
+    fn insert_take_roundtrip_is_identity() {
+        let mut store = SessionStore::new(4);
+        let s = snap(40);
+        store.insert("a".into(), s.clone());
+        assert!(store.contains("a"));
+        let mut back = store.take("a").unwrap();
+        assert!(!store.contains("a"));
+        // last_used is store metadata; everything else must be untouched
+        back.last_used = s.last_used;
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn lru_eviction_drops_coldest() {
+        let mut store = SessionStore::new(2);
+        assert_eq!(store.insert("a".into(), snap(1)), 0);
+        assert_eq!(store.insert("b".into(), snap(2)), 0);
+        // touching "a" (take + reinsert) makes "b" the LRU victim
+        let a = store.take("a").unwrap();
+        store.insert("a".into(), a);
+        assert_eq!(store.insert("c".into(), snap(3)), 1);
+        assert_eq!(store.len(), 2);
+        assert!(store.contains("a") && store.contains("c"));
+        assert!(!store.contains("b"));
+    }
+
+    #[test]
+    fn remove_and_bytes() {
+        let mut store = SessionStore::new(4);
+        store.insert("a".into(), snap(9));
+        assert!(store.host_bytes() > 0);
+        assert!(store.remove("a"));
+        assert!(!store.remove("a"));
+        assert!(store.is_empty());
+        assert_eq!(store.host_bytes(), 0);
+    }
+}

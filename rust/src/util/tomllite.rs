@@ -7,12 +7,19 @@ use std::collections::BTreeMap;
 
 use super::json::Json;
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse into {"section.key": value}; keys before any section have no prefix.
 pub fn parse(src: &str) -> Result<BTreeMap<String, Json>, TomlError> {

@@ -175,6 +175,133 @@ fn prop_eviction_monotonicity() {
 }
 
 #[test]
+fn prop_session_swap_is_identity_on_lane_state() {
+    // the session tentpole invariant: running the same dialogue with eager
+    // swapping (host round-trip after every turn) and lazy parking (no
+    // swap unless preempted) must be indistinguishable — same tokens, same
+    // slot tables (live bits, entries, retention scores, attention stats),
+    // same K/V slabs
+    forall("session swap identity", 15, |rng| {
+        let budget = rng.range(8, 20);
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm"];
+        let policy = names[rng.below(names.len())];
+        let chunked = rng.bool(0.5);
+        let nturns = rng.range(2, 5);
+        let turns: Vec<Vec<u32>> = (0..nturns)
+            .map(|_| {
+                (0..rng.range(3, 25))
+                    .map(|_| 32 + rng.below(64) as u32)
+                    .collect()
+            })
+            .collect();
+        let mut outs = Vec::new();
+        for swap_policy in ["eager", "lazy"] {
+            let cfg = EngineConfig {
+                policy: policy.into(),
+                budget,
+                batch: 1,
+                chunked_prefill: chunked,
+                swap_policy: swap_policy.into(),
+                ..Default::default()
+            };
+            let backend = MockBackend::new(1, budget + 20);
+            let mut engine = Engine::new(backend, cfg, 2).unwrap();
+            let mut toks = Vec::new();
+            for (i, t) in turns.iter().enumerate() {
+                engine
+                    .submit(Request::new(i as u64, t.clone(), 3)
+                            .with_session("s"))
+                    .map_err(|e| format!("{e}"))?;
+                let rs = engine.run_to_completion().map_err(|e| format!("{e}"))?;
+                prop_assert_eq!(rs.len(), 1);
+                toks.push(rs[0].tokens.clone());
+            }
+            engine.flush_sessions().map_err(|e| format!("{e}"))?;
+            let snap = engine
+                .sessions()
+                .get("s")
+                .ok_or("no snapshot after flush")?
+                .clone();
+            outs.push((toks, snap));
+        }
+        let (t_eager, s_eager) = &outs[0];
+        let (t_lazy, s_lazy) = &outs[1];
+        prop_assert_eq!(t_eager, t_lazy);
+        prop_assert!(s_eager.cache == s_lazy.cache,
+                     "slot tables diverged across swap ({policy})");
+        prop_assert_eq!(s_eager.fed, s_lazy.fed);
+        prop_assert_eq!(&s_eager.history, &s_lazy.history);
+        prop_assert_eq!(&s_eager.k, &s_lazy.k);
+        prop_assert_eq!(&s_eager.v, &s_lazy.v);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swapped_session_matches_flattened_run() {
+    // a dialogue served turn-by-turn through sessions (with host swaps
+    // between turns) generates the same tokens and converges to the same
+    // cache state as one uninterrupted request over the identical stream
+    forall("session vs flattened", 15, |rng| {
+        let budget = rng.range(8, 20);
+        let names = ["trimkv", "snapkv", "streaming_llm"];
+        let policy = names[rng.below(names.len())];
+        let cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch: 1,
+            chunked_prefill: false,
+            swap_policy: "eager".into(),
+            ..Default::default()
+        };
+        let nturns = rng.range(2, 4);
+        let turns: Vec<Vec<u32>> = (0..nturns)
+            .map(|_| {
+                (0..rng.range(3, 20))
+                    .map(|_| 32 + rng.below(64) as u32)
+                    .collect()
+            })
+            .collect();
+        // session-served: every turn swaps out to host and back in
+        let mut engine =
+            Engine::new(MockBackend::new(1, budget + 20), cfg.clone(), 2).unwrap();
+        let mut last_tokens = Vec::new();
+        for (i, t) in turns.iter().enumerate() {
+            let max_new = if i + 1 == turns.len() { 4 } else { 1 };
+            engine
+                .submit(Request::new(i as u64, t.clone(), max_new)
+                        .with_session("s"))
+                .map_err(|e| format!("{e}"))?;
+            let rs = engine.run_to_completion().map_err(|e| format!("{e}"))?;
+            prop_assert_eq!(rs.len(), 1);
+            last_tokens = rs[0].tokens.clone();
+        }
+        prop_assert!(engine.metrics.swap_ins as usize == nturns - 1,
+                     "every later turn must swap in");
+        let snap_s = engine.sessions().get("s").ok_or("no snapshot")?.clone();
+        // uninterrupted baseline: one request over the identical stream
+        // (history minus the final turn's generation)
+        let flat: Vec<u32> =
+            snap_s.history[..snap_s.history.len() - last_tokens.len()].to_vec();
+        let mut e2 =
+            Engine::new(MockBackend::new(1, budget + 20), cfg, 2).unwrap();
+        e2.submit(Request::new(9, flat, 4).with_session("f"))
+            .map_err(|e| format!("{e}"))?;
+        let rs = e2.run_to_completion().map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(&rs[0].tokens, &last_tokens);
+        let snap_f = e2.sessions().get("f").ok_or("no flat snapshot")?.clone();
+        prop_assert!(snap_s.cache == snap_f.cache,
+                     "swapped session's slot tables diverged from the \
+                      uninterrupted run ({policy})");
+        prop_assert_eq!(snap_s.fed, snap_f.fed);
+        prop_assert_eq!(&snap_s.history, &snap_f.history);
+        prop_assert_eq!(&snap_s.k, &snap_f.k);
+        prop_assert_eq!(&snap_s.v, &snap_f.v);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_scheduler_serves_all_requests_exactly_once() {
     forall("scheduler completeness", 25, |rng| {
         let batch = rng.range(1, 4);

@@ -1,0 +1,121 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The real PJRT runtime (XLA C API + compiled HLO execution) is not
+//! vendorable in this environment, so this crate provides the exact API
+//! surface `trimkv::runtime` compiles against.  Every entry point that would
+//! touch a device returns `Err(XlaError::Unavailable)` at runtime; the
+//! engine's artifact checks mean these paths are only reached when a user
+//! explicitly points the binary at exported artifacts.  Swap this crate for
+//! the real bindings (same module paths) to run on hardware.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum XlaError {
+    Unavailable,
+    Io(String),
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable => write!(
+                f,
+                "PJRT runtime unavailable: this build uses the vendored xla \
+                 stub; link the real xla-rs bindings to execute artifacts"
+            ),
+            XlaError::Io(m) => write!(f, "xla stub io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Host element types accepted by `buffer_from_host_buffer`.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+pub struct PjRtDevice;
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::Unavailable)
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(XlaError::Unavailable)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        // surface a useful error before the (unreachable) compile step
+        if !path.exists() {
+            return Err(XlaError::Io(format!("no such HLO file: {path:?}")));
+        }
+        Err(XlaError::Unavailable)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("unavailable"));
+    }
+}
