@@ -5,8 +5,8 @@ engine.  Interchange contract (consumed by rust/src/model_meta.rs and
 rust/src/runtime/):
 
   artifacts/
-    decode_b{B}_m{M}[_lin].hlo.txt    one decode step (model.decode_fn)
-    prefill_b{B}_m{M}[_lin].hlo.txt   one chunk prefill (model.prefill_fn)
+    decode_b{B}_m{M}[_pl][_lin].hlo.txt   one decode step (model.decode_fn)
+    prefill_b{B}_m{M}[_pl][_lin].hlo.txt  one chunk prefill (model.prefill_fn)
     weights.bin                       base parameters (TKVW format)
     gates_<variant>.bin               gate parameters per trained variant
     meta.json                         dims, artifact table, tensor orders
@@ -18,6 +18,15 @@ rust/src/runtime/):
 HLO *text* is the interchange format (not serialized protos): jax >= 0.5
 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 parser reassigns ids (see /opt/xla-example/README.md).
+
+Cache layouts (`--cache-layout`, per artifact in meta.json):
+  per_lane    (default) kc/vc are B separate [L,Hkv,M,dh] operands, one per
+              batch lane, returned the same way — the runtime can swap one
+              lane's session KV in O(lane) without touching the others
+  monolithic  legacy single [L,B,Hkv,M,dh] kc/vc pair; the runtime falls
+              back to a staged-host-shadow swap (one full round-trip per
+              batched swap call)
+  both        export every variant in both layouts
 
 Usage: cd python && python -m compile.aot [--out ../artifacts] [--quick]
 """
@@ -36,8 +45,9 @@ from jax._src.lib import xla_client as xc
 
 from . import tasks
 from . import vocab as V
-from .model import (CONFIG, decode_fn, gate_names, init_gates, param_names,
-                    prefill_fn, save_weights_bin)
+from .model import (CONFIG, decode_fn, decode_fn_lanes, gate_names,
+                    init_gates, param_names, prefill_fn, prefill_fn_lanes,
+                    save_weights_bin)
 
 CHUNK = 64  # prefill chunk length C
 
@@ -59,13 +69,25 @@ def spec(shape, dtype=jnp.float32):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def decode_specs(cfg, b, m):
+def cache_specs(cfg, b, m, cache_layout):
+    """kc/vc runtime-input specs: one [L,B,H,M,dh] pair (monolithic) or B
+    per-lane [L,H,M,dh] pairs (per_lane, keyed kc0..kc{B-1}/vc0..)."""
     L, H, dh = cfg.layers, cfg.hkv, cfg.dh
-    return dict(
+    if cache_layout == "per_lane":
+        sp = {f"kc{i}": spec((L, H, m, dh)) for i in range(b)}
+        sp.update({f"vc{i}": spec((L, H, m, dh)) for i in range(b)})
+        return sp
+    return dict(kc=spec((L, b, H, m, dh)), vc=spec((L, b, H, m, dh)))
+
+
+def decode_specs(cfg, b, m, cache_layout="monolithic"):
+    L, H, dh = cfg.layers, cfg.hkv, cfg.dh
+    sp = dict(
         token=spec((b,), jnp.int32),
         pos=spec((b,), jnp.int32),
-        kc=spec((L, b, H, m, dh)),
-        vc=spec((L, b, H, m, dh)),
+    )
+    sp.update(cache_specs(cfg, b, m, cache_layout))
+    sp.update(
         valid=spec((L, b, H, m)),
         write_slot=spec((L, b, H), jnp.int32),
         inject_flag=spec((L, b, H)),
@@ -73,19 +95,22 @@ def decode_specs(cfg, b, m):
         inject_k=spec((L, b, H, dh)),
         inject_v=spec((L, b, H, dh)),
     )
+    return sp
 
 
-def prefill_specs(cfg, b, m, c=CHUNK):
+def prefill_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
     L, H, dh = cfg.layers, cfg.hkv, cfg.dh
-    return dict(
+    sp = dict(
         tokens=spec((b, c), jnp.int32),
         pos=spec((b, c), jnp.int32),
         in_mask=spec((b, c)),
-        kc=spec((L, b, H, m, dh)),
-        vc=spec((L, b, H, m, dh)),
+    )
+    sp.update(cache_specs(cfg, b, m, cache_layout))
+    sp.update(
         valid=spec((L, b, H, m)),
         write_slots=spec((L, b, H, c), jnp.int32),
     )
+    return sp
 
 
 DECODE_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn",
@@ -94,14 +119,37 @@ PREFILL_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn_slots",
                      "attn_chunk", "k_chunk", "v_chunk"]
 
 
-def build_fn(kind, cfg, pnames, gnames, attn_impl):
-    """Flat-signature wrapper: fn(*params, *gates, *runtime) -> tuple."""
+def build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout):
+    """Flat-signature wrapper: fn(*params, *gates, *runtime) -> tuple.
+
+    In the per_lane layout the runtime cache operands are B kc buffers then
+    B vc buffers (each [L,Hkv,M,dh]); the output tuple expands the same
+    way, in the DECODE/PREFILL_OUT_ORDER position of kc/vc."""
     np_, ng = len(pnames), len(gnames)
 
     def fn(*args):
         params = dict(zip(pnames, args[:np_]))
         gates = dict(zip(gnames, args[np_:np_ + ng]))
         rt = args[np_ + ng:]
+        if cache_layout == "per_lane":
+            lead = 2 if kind == "decode" else 3  # (token[s], pos[, in_mask])
+            head, rest = rt[:lead], rt[lead:]
+            kcs, vcs, tail = rest[:b], rest[b:2 * b], rest[2 * b:]
+            if kind == "decode":
+                out = decode_fn_lanes(params, gates, *head, kcs, vcs, *tail,
+                                      cfg=cfg, attn_impl=attn_impl)
+                names = DECODE_OUT_ORDER
+            else:
+                out = prefill_fn_lanes(params, gates, *head, kcs, vcs, *tail,
+                                       cfg=cfg)
+                names = PREFILL_OUT_ORDER
+            outs = []
+            for k in names:
+                if k in ("kc", "vc"):
+                    outs.extend(out[k])  # B per-lane buffers
+                else:
+                    outs.append(out[k])
+            return tuple(outs)
         if kind == "decode":
             out = decode_fn(params, gates, *rt, cfg=cfg, attn_impl=attn_impl)
             return tuple(out[k] for k in DECODE_OUT_ORDER)
@@ -111,14 +159,15 @@ def build_fn(kind, cfg, pnames, gnames, attn_impl):
     return fn
 
 
-def lower_variant(kind, cfg, b, m, params_np, gates_np, linear, attn_impl):
+def lower_variant(kind, cfg, b, m, params_np, gates_np, linear, attn_impl,
+                  cache_layout="monolithic"):
     pnames = param_names(cfg)
     gnames = gate_names(cfg, linear=linear)
-    fn = build_fn(kind, cfg, pnames, gnames, attn_impl)
+    fn = build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout)
     pspecs = [spec(params_np[n].shape) for n in pnames]
     gspecs = [spec(gates_np[n].shape) for n in gnames]
-    rspecs = (decode_specs(cfg, b, m) if kind == "decode"
-              else prefill_specs(cfg, b, m))
+    rspecs = (decode_specs(cfg, b, m, cache_layout) if kind == "decode"
+              else prefill_specs(cfg, b, m, cache_layout=cache_layout))
     lowered = jax.jit(fn).lower(*pspecs, *gspecs, *rspecs.values())
     return to_hlo_text(lowered), list(rspecs.keys())
 
@@ -182,6 +231,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="only export the (8,256) pair (fast iteration)")
     ap.add_argument("--attn-impl", default="pallas", choices=["pallas", "ref"])
+    ap.add_argument("--cache-layout", default="per_lane",
+                    choices=["per_lane", "monolithic", "both"],
+                    help="kc/vc operand layout: per-lane buffers (O(lane) "
+                         "session swap), legacy monolithic pair, or both")
     args = ap.parse_args()
     out = args.out
     cfg = CONFIG
@@ -210,20 +263,26 @@ def main() -> None:
 
     dec_vars = [(8, 256)] if args.quick else DECODE_VARIANTS
     pre_vars = [(8, 256)] if args.quick else PREFILL_VARIANTS
+    layouts = (["per_lane", "monolithic"] if args.cache_layout == "both"
+               else [args.cache_layout])
     artifacts = []
     for kind, variants in (("decode", dec_vars), ("prefill", pre_vars)):
         for b, m in variants:
-            fname = f"{kind}_b{b}_m{m}.hlo.txt"
-            hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
-                                          gates_np, False, args.attn_impl)
-            with open(f"{out}/{fname}", "w") as f:
-                f.write(hlo)
-            artifacts.append({"kind": kind, "b": b, "m": m,
-                              "c": CHUNK if kind == "prefill" else 1,
-                              "file": fname, "gate_arch": "mlp",
-                              "runtime_inputs": rt_order})
-            print(f"lowered {fname} ({len(hlo)//1024} KiB, "
-                  f"{time.time()-t0:.0f}s)", flush=True)
+            for layout in layouts:
+                suffix = "_pl" if layout == "per_lane" else ""
+                fname = f"{kind}_b{b}_m{m}{suffix}.hlo.txt"
+                hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
+                                              gates_np, False,
+                                              args.attn_impl, layout)
+                with open(f"{out}/{fname}", "w") as f:
+                    f.write(hlo)
+                artifacts.append({"kind": kind, "b": b, "m": m,
+                                  "c": CHUNK if kind == "prefill" else 1,
+                                  "file": fname, "gate_arch": "mlp",
+                                  "cache_layout": layout,
+                                  "runtime_inputs": rt_order})
+                print(f"lowered {fname} ({len(hlo)//1024} KiB, "
+                      f"{time.time()-t0:.0f}s)", flush=True)
 
     # linear-gate ablation graphs, if that variant was trained
     lin_files = [f for f in gate_files if "linear" in f]
@@ -231,15 +290,19 @@ def main() -> None:
         lin_np = dict(np.load(lin_files[0]))
         for kind in ("decode", "prefill"):
             for b, m in LIN_VARIANTS:
-                fname = f"{kind}_b{b}_m{m}_lin.hlo.txt"
-                hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
-                                              lin_np, True, args.attn_impl)
-                with open(f"{out}/{fname}", "w") as f:
-                    f.write(hlo)
-                artifacts.append({"kind": kind, "b": b, "m": m,
-                                  "c": CHUNK if kind == "prefill" else 1,
-                                  "file": fname, "gate_arch": "linear",
-                                  "runtime_inputs": rt_order})
+                for layout in layouts:
+                    suffix = "_pl" if layout == "per_lane" else ""
+                    fname = f"{kind}_b{b}_m{m}{suffix}_lin.hlo.txt"
+                    hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
+                                                  lin_np, True,
+                                                  args.attn_impl, layout)
+                    with open(f"{out}/{fname}", "w") as f:
+                        f.write(hlo)
+                    artifacts.append({"kind": kind, "b": b, "m": m,
+                                      "c": CHUNK if kind == "prefill" else 1,
+                                      "file": fname, "gate_arch": "linear",
+                                      "cache_layout": layout,
+                                      "runtime_inputs": rt_order})
 
     meta = {
         "model": {"vocab": cfg.vocab, "d": cfg.d, "layers": cfg.layers,

@@ -412,6 +412,40 @@ def prefill_fn(params: dict, gates: dict, tokens: jax.Array, pos: jax.Array,
     }
 
 
+def decode_fn_lanes(params, gates, token, pos, kc_lanes, vc_lanes, valid,
+                    write_slot, inject_flag, inject_slot, inject_k, inject_v,
+                    cfg: ModelConfig = CONFIG, attn_impl: str = "pallas"):
+    """Per-lane cache-residency variant of `decode_fn` (the O(lane) session
+    swap): kc/vc arrive as B separate `[L, Hkv, M, dh]` buffers — one per
+    batch lane — and the updated caches return the same way, so the serving
+    runtime can download/upload one lane's buffers without touching any
+    other lane.  XLA fuses the stack/split with the in-graph scatter, so
+    steady-state decode cost is unchanged; only residency changes."""
+    kc = jnp.stack(list(kc_lanes), axis=1)       # [L, B, Hkv, M, dh]
+    vc = jnp.stack(list(vc_lanes), axis=1)
+    out = decode_fn(params, gates, token, pos, kc, vc, valid, write_slot,
+                    inject_flag, inject_slot, inject_k, inject_v, cfg=cfg,
+                    attn_impl=attn_impl)
+    b = token.shape[0]
+    out["kc"] = [out["kc"][:, i] for i in range(b)]
+    out["vc"] = [out["vc"][:, i] for i in range(b)]
+    return out
+
+
+def prefill_fn_lanes(params, gates, tokens, pos, in_mask, kc_lanes, vc_lanes,
+                     valid, write_slots, cfg: ModelConfig = CONFIG):
+    """Per-lane cache-residency variant of `prefill_fn`; see
+    `decode_fn_lanes` for the layout contract."""
+    kc = jnp.stack(list(kc_lanes), axis=1)
+    vc = jnp.stack(list(vc_lanes), axis=1)
+    out = prefill_fn(params, gates, tokens, pos, in_mask, kc, vc, valid,
+                     write_slots, cfg=cfg)
+    b = tokens.shape[0]
+    out["kc"] = [out["kc"][:, i] for i in range(b)]
+    out["vc"] = [out["vc"][:, i] for i in range(b)]
+    return out
+
+
 # --------------------------------------------------------------------------
 # weight (de)serialization — flat order contract shared with rust
 # --------------------------------------------------------------------------

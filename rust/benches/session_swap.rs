@@ -1,18 +1,24 @@
 //! Session subsystem microbench: cost of serving one extra dialogue turn
 //! with KV snapshot/swap versus re-prefilling the whole history (what a
-//! session-less engine must do every turn).  Host-side mechanics only —
-//! runs on the MockBackend, so it measures the engine + swap-path overhead
-//! (slot-table snapshot, lane slab download/upload, store bookkeeping),
-//! not model FLOPs.  With real artifacts the gap widens further: re-prefill
-//! pays a graph execution per history token.
+//! session-less engine must do every turn), plus the batched-swap scaling
+//! law: swap time/traffic is O(swapped lanes) and flat in batch size.
+//! Host-side mechanics only — runs on the MockBackend, so it measures the
+//! engine + swap-path overhead (slot-table snapshot, per-lane slab
+//! transfer, store bookkeeping), not model FLOPs.  With real artifacts the
+//! gap widens further: re-prefill pays a graph execution per history token.
+//!
+//! Emits `BENCH_session_swap.json` (util::benchkit) so the perf trajectory
+//! is tracked across PRs.
 //!
 //!   cargo bench --bench session_swap
 
 use trimkv::config::EngineConfig;
 use trimkv::engine::Engine;
-use trimkv::runtime::MockBackend;
+use trimkv::runtime::{LaneKv, MockBackend, ModelBackend};
 use trimkv::scheduler::Request;
-use trimkv::util::benchkit::{bench, report, BenchResult};
+use trimkv::util::benchkit::{bench, report, results_json, write_bench_json,
+                             BenchResult};
+use trimkv::util::json::Json;
 
 fn engine(budget: usize, swap_policy: &str) -> Engine<MockBackend> {
     let cfg = EngineConfig {
@@ -87,15 +93,76 @@ fn main() {
     println!("=== session swap vs re-prefill (budget {budget}, mock backend) ===");
     report(&results);
     println!();
-    for (ctx, ratio) in ratios {
-        let verdict = if ratio > 1.0 { "session wins" } else { "re-prefill wins" };
+    for (ctx, ratio) in &ratios {
+        let verdict = if *ratio > 1.0 { "session wins" } else { "re-prefill wins" };
         println!("ctx {ctx:5}: re-prefill / session-turn = {ratio:6.1}x  ({verdict})");
     }
+
+    // --- batched swap scaling: O(swapped lanes), flat in batch size ------
+    // one mixed swap_lanes call per iteration (n lanes out + n lanes in);
+    // transfer counters give exact per-call element traffic
+    let mut scaling: Vec<(usize, usize, f64, f64, f64)> = Vec::new();
+    let mut scaling_results: Vec<BenchResult> = Vec::new();
+    for &batch in &[2usize, 4, 8] {
+        let mut mb = MockBackend::new(batch, budget + 20);
+        let lane_len = mb.lane_kv_len();
+        let slab = LaneKv { k: vec![0.5; lane_len], v: vec![0.25; lane_len] };
+        for n in [1usize, 2, batch] {
+            let lanes: Vec<usize> = (0..n).collect();
+            let inn: Vec<(usize, &LaneKv)> =
+                lanes.iter().map(|&i| (i, &slab)).collect();
+            let before = mb.swap_traffic();
+            let r = bench(&format!("swap_lanes/b={batch}/n={n}"), 3, 200, || {
+                mb.swap_lanes(&lanes, &inn).unwrap();
+            });
+            let after = mb.swap_traffic();
+            let calls = (after.swap_calls - before.swap_calls) as f64;
+            let eo = (after.elems_out - before.elems_out) as f64 / calls;
+            let ei = (after.elems_in - before.elems_in) as f64 / calls;
+            assert_eq!(eo as usize, n * 2 * lane_len,
+                       "swap traffic is not O(swapped lanes)");
+            scaling.push((batch, n, r.mean_us, eo, ei));
+            scaling_results.push(r);
+        }
+    }
+    println!("\n=== batched swap scaling (elements moved per call) ===");
+    report(&scaling_results);
+    let one_lane: Vec<f64> = scaling
+        .iter()
+        .filter(|&&(_, n, ..)| n == 1)
+        .map(|&(_, _, _, eo, _)| eo)
+        .collect();
+    assert!(one_lane.windows(2).all(|w| w[0] == w[1]),
+            "single-lane swap traffic varies with batch size: {one_lane:?}");
+    println!("\nswapping 1 lane moves {} elements at every batch size \
+              (flat in B; linear in swapped-lane count)", one_lane[0]);
+    results.extend(scaling_results);
+
     // snapshot footprint is O(budget), not O(history): the whole point of
     // swapping a memory-bounded cache
-    use trimkv::runtime::ModelBackend;
     let mb = MockBackend::new(1, budget + 20);
     let slab_bytes = 2 * mb.lane_kv_len() * 4; // K + V, f32
     println!("\nper-session K/V slab at budget {budget}: {} KiB \
               (independent of ctx)", slab_bytes / 1024);
+
+    // machine-readable record for cross-PR perf tracking
+    let payload = Json::obj(vec![
+        ("budget", Json::num(budget as f64)),
+        ("results", results_json(&results)),
+        ("reprefill_over_session", Json::Arr(
+            ratios.iter().map(|&(ctx, ratio)| Json::obj(vec![
+                ("ctx", Json::num(ctx as f64)),
+                ("ratio", Json::num(ratio)),
+            ])).collect())),
+        ("swap_scaling", Json::Arr(
+            scaling.iter().map(|&(b, n, mean_us, eo, ei)| Json::obj(vec![
+                ("batch", Json::num(b as f64)),
+                ("lanes_swapped", Json::num(n as f64)),
+                ("mean_us", Json::num(mean_us)),
+                ("elems_out_per_call", Json::num(eo)),
+                ("elems_in_per_call", Json::num(ei)),
+            ])).collect())),
+    ]);
+    let path = write_bench_json("session_swap", payload).expect("bench json");
+    println!("wrote {}", path.display());
 }

@@ -3,13 +3,38 @@
 //! bounded-cache methods (TRIM-KV, SnapKV) beat FullKV at long context, and
 //! TRIM-KV's O(M) policy is no slower than SnapKV's heuristic; the
 //! retrieval baseline gains no throughput over FullKV.
+//!
+//! Emits `BENCH_throughput.json` (util::benchkit) so the perf trajectory is
+//! tracked across PRs; without artifacts the record is marked skipped.
 
 use trimkv::eval::bench_support::{bench_n, load_ctx};
-use trimkv::eval::{run_suite, throughput_table};
+use trimkv::eval::{run_suite, throughput_table, SuiteResult};
+use trimkv::util::benchkit::write_bench_json;
+use trimkv::util::json::Json;
 use trimkv::workload::suites;
 
+fn results_json(results: &[SuiteResult]) -> Json {
+    Json::Arr(results.iter().map(|r| Json::obj(vec![
+        ("method", Json::str(r.policy.clone())),
+        ("budget", Json::num(r.budget as f64)),
+        ("ctx", Json::str(r.task.clone())),
+        ("n", Json::num(r.n as f64)),
+        ("tok_s", Json::num(r.tok_s)),
+        ("decode_ms_p50", Json::num(r.decode_ms_p50)),
+        ("wall_s", Json::num(r.wall_s)),
+    ])).collect())
+}
+
 fn main() {
-    let Some(ctx) = load_ctx("throughput") else { return };
+    let Some(ctx) = load_ctx("throughput") else {
+        let payload = Json::obj(vec![
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::str("no artifacts; run `make artifacts`")),
+        ]);
+        let path = write_bench_json("throughput", payload).expect("bench json");
+        println!("wrote {} (skipped marker)", path.display());
+        return;
+    };
     let n = bench_n(6);
     let budget = 96usize;
     let grid = [(256usize, 8usize), (512, 8)];
@@ -44,4 +69,10 @@ fn main() {
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/throughput.csv",
                    throughput_table(&results).to_csv()).ok();
+    let payload = Json::obj(vec![
+        ("budget", Json::num(budget as f64)),
+        ("results", results_json(&results)),
+    ]);
+    let path = write_bench_json("throughput", payload).expect("bench json");
+    println!("wrote {}", path.display());
 }

@@ -1,0 +1,291 @@
+//! Lane-residency machinery for the engine: which sequence occupies each
+//! batch lane, parked sessions awaiting their next turn, sequence-state
+//! construction/resumption, and the incrementally-maintained validity mask
+//! the serving graphs consume.
+//!
+//! The engine's event loop (`engine::mod`) stays in charge of *when* lanes
+//! change hands; this module owns *what* a lane can hold and the
+//! device-facing bookkeeping that must stay consistent when it does.
+
+use std::time::Instant;
+
+use crate::kvcache::{LaneCache, MirrorEntry};
+use crate::model_meta::ModelDims;
+use crate::scheduler::Request;
+use crate::session::SessionSnapshot;
+
+use super::SeqRecord;
+
+#[derive(Debug, Clone, Default)]
+pub(crate) struct PendingInject {
+    /// per (l, h): (slot, mirror entry) scheduled for the next decode tick
+    pub plans: Vec<Option<(usize, MirrorEntry)>>,
+}
+
+pub(crate) struct SeqState {
+    pub id: u64,
+    pub tag: String,
+    /// conversation this turn belongs to (None: one-shot request)
+    pub session: Option<String>,
+    /// for session turns, `prompt` is the full fed stream: prior turns +
+    /// their replies + this turn's new tokens; `fed` starts past history
+    pub prompt: Vec<u32>,
+    pub generated: Vec<u32>,
+    pub max_new: usize,
+    pub stop_at_eos: bool,
+    /// tokens fed to the model so far (== position of the next input)
+    pub fed: usize,
+    /// completed prior turns of this session
+    pub turns: u64,
+    pub cache: LaneCache,
+    pub mirror: Vec<Vec<MirrorEntry>>, // per (l*h); retrieval only
+    pub inject: PendingInject,
+    pub t_submit: Instant,
+    pub ttft_us: Option<f64>,
+    pub record: Option<SeqRecord>,
+}
+
+impl SeqState {
+    pub fn stream_token(&self, idx: usize) -> u32 {
+        if idx < self.prompt.len() {
+            self.prompt[idx]
+        } else {
+            self.generated[idx - self.prompt.len()]
+        }
+    }
+
+    /// Fresh sequence on a clean slot table (device garbage in dead slots
+    /// is masked by the valid bits once the lane's mask region refreshes).
+    pub fn fresh(req: Request, cache: LaneCache, record_gates: bool)
+        -> SeqState {
+        let nheads = cache.layers * cache.hkv;
+        SeqState {
+            id: req.id,
+            tag: req.tag,
+            session: req.session,
+            prompt: req.prompt,
+            generated: Vec::new(),
+            max_new: req.max_new_tokens,
+            stop_at_eos: req.stop_at_eos,
+            fed: 0,
+            turns: 0,
+            cache,
+            mirror: vec![Vec::new(); nheads],
+            inject: PendingInject { plans: vec![None; nheads] },
+            t_submit: Instant::now(),
+            ttft_us: None,
+            record: record_gates.then(SeqRecord::default),
+        }
+    }
+
+    /// Rebuild a decoding sequence from a retained session: `history`
+    /// (every token fed or sampled in prior turns) extends with the new
+    /// turn's prompt, and `fed` resumes past the retained prefix — zero
+    /// re-prefill.
+    pub fn resume(req: Request, snap: SessionSnapshot, record_gates: bool)
+        -> SeqState {
+        let SessionSnapshot { cache, mirror, fed, mut history, turns, .. } = snap;
+        let nheads = cache.layers * cache.hkv;
+        history.extend(&req.prompt);
+        SeqState {
+            id: req.id,
+            tag: req.tag,
+            session: req.session,
+            prompt: history,
+            generated: Vec::new(),
+            max_new: req.max_new_tokens,
+            stop_at_eos: req.stop_at_eos,
+            fed,
+            turns,
+            cache,
+            mirror,
+            inject: PendingInject { plans: vec![None; nheads] },
+            t_submit: Instant::now(),
+            ttft_us: None,
+            record: record_gates.then(SeqRecord::default),
+        }
+    }
+}
+
+/// A finished session turn still occupying its lane: the KV slabs remain
+/// device-resident so the session's next turn can resume without any host
+/// round-trip.  Preempted (snapshotted to the `SessionStore`) on demand.
+pub(crate) struct ParkedSession {
+    pub session_id: String,
+    /// Retained state; `snap.kv` stays empty while the slabs are
+    /// device-resident and is filled by the batched swap-out download.
+    /// `snap.last_used` holds the engine clock at park time (LRU
+    /// preemption order).
+    pub snap: SessionSnapshot,
+}
+
+pub(crate) enum Lane {
+    Idle,
+    Busy(Box<SeqState>),
+    Parked(Box<ParkedSession>),
+}
+
+/// Lane availability during admission planning: a snapshot of each lane's
+/// role that the planner mutates as it claims lanes, so one batched swap
+/// can execute every preemption/load at once afterwards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum LaneAvail {
+    Busy,
+    Free,
+    Parked,
+    Claimed,
+}
+
+impl LaneAvail {
+    pub fn of(lane: &Lane) -> LaneAvail {
+        match lane {
+            Lane::Idle => LaneAvail::Free,
+            Lane::Busy(_) => LaneAvail::Busy,
+            Lane::Parked(_) => LaneAvail::Parked,
+        }
+    }
+}
+
+/// The flat `[L, B, H, M]` validity mask the graphs consume, maintained
+/// incrementally: individual bits flip exactly when the host slot tables
+/// change (insert / evict / inject), and a whole lane region is rewritten
+/// from its slot tables only when the lane's *occupant* changed (fresh
+/// placement, session swap-in) — never once per lane per tick as the old
+/// zero-then-rebuild did (O(L*H*M) per active lane per step).
+///
+/// Regions of idle/parked lanes may hold stale bits between occupants;
+/// they are never attended on behalf of an active lane (attention is
+/// per-lane) and are fully rewritten before the lane decodes again.
+#[derive(Debug)]
+pub(crate) struct ValidMask {
+    buf: Vec<f32>,
+    dirty: Vec<bool>,
+    batch: usize,
+    hkv: usize,
+    slots: usize,
+    /// full lane-region rewrites performed (diagnostics: steady-state
+    /// decode should add none of these per tick)
+    pub refreshes: u64,
+}
+
+impl ValidMask {
+    pub fn new(dims: &ModelDims, batch: usize, slots: usize) -> ValidMask {
+        ValidMask {
+            buf: vec![0.0; dims.layers * batch * dims.hkv * slots],
+            dirty: vec![true; batch],
+            batch,
+            hkv: dims.hkv,
+            slots,
+            refreshes: 0,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// The lane's occupant changed: rewrite its whole region on next sync.
+    pub fn mark_dirty(&mut self, lane: usize) {
+        self.dirty[lane] = true;
+    }
+
+    /// Rewrite the lane's region from its slot tables if marked dirty.
+    pub fn sync(&mut self, lane: usize, cache: &LaneCache) {
+        if self.dirty[lane] {
+            cache.fill_valid(lane, self.batch, &mut self.buf);
+            self.dirty[lane] = false;
+            self.refreshes += 1;
+        }
+    }
+
+    /// Flip one (layer, head, slot) liveness bit of `lane`.
+    pub fn set(&mut self, lane: usize, l: usize, h: usize, slot: usize,
+               live: bool) {
+        let idx = ((l * self.batch + lane) * self.hkv + h) * self.slots + slot;
+        self.buf[idx] = if live { 1.0 } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::SlotEntry;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 512, d: 128, layers: 2, hq: 4, hkv: 2, dh: 4,
+                    ffn: 256, gate_hidden: 48 }
+    }
+
+    #[test]
+    fn valid_mask_incremental_matches_full_rebuild() {
+        let d = dims();
+        let (batch, slots) = (3usize, 6usize);
+        let mut cache = LaneCache::new(&d, slots, false);
+        let mut mask = ValidMask::new(&d, batch, slots);
+        mask.sync(1, &cache); // fresh lane: all-zero region
+        assert_eq!(mask.refreshes, 1);
+        mask.sync(1, &cache); // clean: no rewrite
+        assert_eq!(mask.refreshes, 1);
+        // incremental path: insert + set must equal a full rebuild
+        cache.head_mut(1, 0).insert(2, SlotEntry::default(), None);
+        mask.set(1, 1, 0, 2, true);
+        let mut full = vec![0.0; d.layers * batch * d.hkv * slots];
+        cache.fill_valid(1, batch, &mut full);
+        assert_eq!(mask.as_slice(), &full[..]);
+        // evict clears the same bit
+        cache.head_mut(1, 0).evict(2);
+        mask.set(1, 1, 0, 2, false);
+        cache.fill_valid(1, batch, &mut full);
+        assert_eq!(mask.as_slice(), &full[..]);
+    }
+
+    #[test]
+    fn valid_mask_dirty_rewrites_whole_lane_region() {
+        let d = dims();
+        let (batch, slots) = (2usize, 4usize);
+        let mut mask = ValidMask::new(&d, batch, slots);
+        // lane 0 carries stale bits from a departed occupant
+        mask.set(0, 0, 0, 1, true);
+        mask.set(0, 1, 1, 3, true);
+        let empty = LaneCache::new(&d, slots, false);
+        mask.mark_dirty(0);
+        mask.sync(0, &empty);
+        assert!(mask.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn lane_avail_maps_roles() {
+        assert_eq!(LaneAvail::of(&Lane::Idle), LaneAvail::Free);
+        let seq = SeqState::fresh(Request::new(1, vec![1], 4),
+                                  LaneCache::new(&dims(), 4, false), false);
+        assert_eq!(LaneAvail::of(&Lane::Busy(Box::new(seq))), LaneAvail::Busy);
+    }
+
+    #[test]
+    fn fresh_and_resume_build_consistent_state() {
+        let d = dims();
+        let cache = LaneCache::new(&d, 6, false);
+        let seq = SeqState::fresh(Request::new(7, vec![1, 2, 3], 5), cache,
+                                  true);
+        assert_eq!(seq.fed, 0);
+        assert_eq!(seq.prompt, vec![1, 2, 3]);
+        assert!(seq.record.is_some());
+        assert_eq!(seq.inject.plans.len(), d.layers * d.hkv);
+        // resume extends history with the new turn and keeps `fed`
+        let snap = SessionSnapshot {
+            cache: LaneCache::new(&d, 6, false),
+            mirror: vec![Vec::new(); d.layers * d.hkv],
+            kv: Default::default(),
+            fed: 4,
+            history: vec![1, 2, 3, 4, 9],
+            turns: 2,
+            last_used: 0,
+        };
+        let seq = SeqState::resume(
+            Request::new(8, vec![40, 41], 5).with_session("s"), snap, false);
+        assert_eq!(seq.fed, 4);
+        assert_eq!(seq.prompt, vec![1, 2, 3, 4, 9, 40, 41]);
+        assert_eq!(seq.turns, 2);
+        assert_eq!(seq.session.as_deref(), Some("s"));
+    }
+}

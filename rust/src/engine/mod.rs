@@ -3,11 +3,16 @@
 //! policy (paper Algorithm 1, generalized over all baselines).
 //!
 //! Per decode tick:
-//!   1. idle lanes admit waiting requests (continuous batching)
+//!   1. idle lanes admit waiting requests (continuous batching); any lane
+//!      residency changes — LRU preemptions of parked sessions and session
+//!      swap-ins from the host store — execute as ONE batched
+//!      `swap_lanes` backend call (O(lane) per lane moved, never a
+//!      round-trip per lane)
 //!   2. each running lane picks, per (layer, head), the slot its new token
 //!      will occupy — a free slot (the arena keeps `slots > budget` so one
 //!      always exists after the previous tick's eviction)
-//!   3. one batched decode-graph execution (KV stays device-resident)
+//!   3. one batched decode-graph execution (KV stays device-resident; the
+//!      validity mask is maintained incrementally, not rebuilt per tick)
 //!   4. per lane/head: record the new token's retention score beta (gate
 //!      output), fold attention stats, then — if the head now exceeds the
 //!      budget — evict the policy's victim (provisional-add-then-evict,
@@ -25,8 +30,10 @@
 //! `eager` every finished turn snapshots to host immediately.  The next
 //! turn of a session resumes in place, or swaps its snapshot back into any
 //! free lane — decoding continues from the retained cache with zero
-//! re-prefill of prior turns.
+//! re-prefill of prior turns.  The lane state machine itself lives in
+//! `engine::lanes`.
 
+pub(crate) mod lanes;
 pub mod sampler;
 
 use std::time::Instant;
@@ -37,19 +44,14 @@ use crate::config::EngineConfig;
 use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::metrics::EngineMetrics;
 use crate::policy::Policy;
-use crate::runtime::{DecodeIn, ModelBackend, PrefillIn};
+use crate::runtime::{DecodeIn, LaneKv, ModelBackend, PrefillIn};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
 use crate::session::{SessionSnapshot, SessionStore};
+use lanes::{Lane, LaneAvail, ParkedSession, SeqState, ValidMask};
 use sampler::Sampler;
 
 /// EMA factor for the SnapKV-style attention statistic.
 const ATTN_EMA: f32 = 0.9;
-
-#[derive(Debug, Clone, Default)]
-struct PendingInject {
-    /// per (l, h): (slot, mirror entry) scheduled for the next decode tick
-    plans: Vec<Option<(usize, MirrorEntry)>>,
-}
 
 /// Full gate/eviction trace of one sequence (inspect tooling, Figs 4/5/11-19).
 #[derive(Debug, Clone, Default)]
@@ -60,56 +62,6 @@ pub struct SeqRecord {
     pub log_betas: Vec<Vec<f32>>,
     /// (head index, evicted token pos, eviction step)
     pub evictions: Vec<(usize, i64, i64)>,
-}
-
-struct SeqState {
-    id: u64,
-    tag: String,
-    /// conversation this turn belongs to (None: one-shot request)
-    session: Option<String>,
-    /// for session turns, `prompt` is the full fed stream: prior turns +
-    /// their replies + this turn's new tokens; `fed` starts past history
-    prompt: Vec<u32>,
-    generated: Vec<u32>,
-    max_new: usize,
-    stop_at_eos: bool,
-    /// tokens fed to the model so far (== position of the next input)
-    fed: usize,
-    /// completed prior turns of this session
-    turns: u64,
-    cache: LaneCache,
-    mirror: Vec<Vec<MirrorEntry>>, // per (l*h); retrieval only
-    inject: PendingInject,
-    t_submit: Instant,
-    ttft_us: Option<f64>,
-    record: Option<SeqRecord>,
-}
-
-impl SeqState {
-    fn stream_token(&self, idx: usize) -> u32 {
-        if idx < self.prompt.len() {
-            self.prompt[idx]
-        } else {
-            self.generated[idx - self.prompt.len()]
-        }
-    }
-}
-
-/// A finished session turn still occupying its lane: the KV slabs remain
-/// device-resident so the session's next turn can resume without any host
-/// round-trip.  Preempted (snapshotted to the `SessionStore`) on demand.
-struct ParkedSession {
-    session_id: String,
-    /// Retained state; `snap.k`/`snap.v` stay empty while the slabs are
-    /// device-resident and are filled at swap-out.  `snap.last_used` holds
-    /// the engine clock at park time (LRU preemption order).
-    snap: SessionSnapshot,
-}
-
-enum Lane {
-    Idle,
-    Busy(Box<SeqState>),
-    Parked(Box<ParkedSession>),
 }
 
 pub struct Engine<B: ModelBackend> {
@@ -133,8 +85,9 @@ pub struct Engine<B: ModelBackend> {
     pending_closes: Vec<(String, u64)>,
     /// logical clock stamping parked sessions for LRU preemption
     clock: u64,
-    // scratch buffers reused across ticks (perf: no per-step allocation)
-    valid_buf: Vec<f32>,
+    /// `[L, B, H, M]` validity mask, incrementally maintained
+    valid: ValidMask,
+    /// write-slot scratch reused across ticks (perf: no per-step allocation)
     ws_buf: Vec<i32>,
 }
 
@@ -154,7 +107,6 @@ impl<B: ModelBackend> Engine<B> {
         );
         let policy = Policy::from_name(&cfg.policy, cfg.budget, cfg.seed)?;
         let b = backend.batch();
-        let lbhm = dims.layers * b * dims.hkv * slots;
         Ok(Engine {
             sampler: Sampler::new(cfg.temperature, cfg.top_k, cfg.seed),
             queue: WaitQueue::new(cfg.queue_capacity),
@@ -169,7 +121,7 @@ impl<B: ModelBackend> Engine<B> {
             sessions: SessionStore::new(cfg.max_sessions),
             pending_closes: Vec::new(),
             clock: 0,
-            valid_buf: vec![0.0; lbhm],
+            valid: ValidMask::new(&dims, b, slots),
             ws_buf: vec![0; dims.layers * b * dims.hkv],
             cfg,
         })
@@ -211,13 +163,23 @@ impl<B: ModelBackend> Engine<B> {
         &mut self.sessions
     }
 
-    /// Force every parked lane out to the host store (drain / checkpoint).
+    /// Full validity-mask lane rewrites performed so far (diagnostics:
+    /// steady-state decode maintains the mask incrementally and should add
+    /// none of these per tick).
+    pub fn valid_refreshes(&self) -> u64 {
+        self.valid.refreshes
+    }
+
+    /// Force every parked lane out to the host store (drain / checkpoint)
+    /// in one batched swap.
     pub fn flush_sessions(&mut self) -> Result<()> {
-        for lane_idx in 0..self.lanes.len() {
-            if matches!(self.lanes[lane_idx], Lane::Parked(_)) {
-                self.swap_out_lane(lane_idx)?;
-            }
-        }
+        let parked: Vec<usize> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| matches!(l, Lane::Parked(_)).then_some(i))
+            .collect();
+        self.execute_swap(&parked, &[])?;
         Ok(())
     }
 
@@ -291,56 +253,115 @@ impl<B: ModelBackend> Engine<B> {
         Ok(worked)
     }
 
-    /// Session-aware admission.  Per waiting request (FIFO, skipping turns
-    /// whose session is already decoding): prefer the lane where the session
-    /// is parked (in-place resume), else any idle lane, else preempt the
-    /// least-recently-used parked session to the host store.
+    /// Session-aware admission, batched.  Plan every placement first —
+    /// waiting requests in FIFO order, skipping turns whose session is
+    /// already decoding or already planned; per request prefer the lane
+    /// where its session is parked (in-place resume), else any idle lane,
+    /// else the least-recently-used parked lane — then execute EVERY
+    /// residency change (preempt-to-store, load-from-store) as one batched
+    /// `swap_lanes` call, and finally seat the requests.  Preempting and
+    /// restoring N lanes costs N lane-sized transfers in one backend call.
     fn admit_waiting(&mut self) -> Result<()> {
-        loop {
-            let lanes = &self.lanes;
-            let Some(qidx) = self.queue.find_admissible(|r| match &r.session {
-                None => true,
-                Some(sid) => !lanes.iter().any(|l| {
-                    matches!(l, Lane::Busy(s)
-                             if s.session.as_deref() == Some(sid.as_str()))
-                }),
-            }) else {
-                break;
-            };
-            let want_sid = self.queue.get(qidx).and_then(|r| r.session.clone());
-            let own_parked = want_sid.as_deref().and_then(|sid| {
-                self.lanes.iter().position(|l| {
-                    matches!(l, Lane::Parked(p) if p.session_id == sid)
-                })
-            });
-            let lane_idx = own_parked
-                .or_else(|| self.lanes.iter().position(|l| matches!(l, Lane::Idle)))
-                .or_else(|| self.lru_parked_lane());
-            let Some(lane_idx) = lane_idx else {
-                break; // every lane is decoding
-            };
-            // preempt before popping the request: a swap-out error must not
-            // silently drop a queued turn
-            if own_parked.is_none()
-                && matches!(self.lanes[lane_idx], Lane::Parked(_))
-            {
-                self.swap_out_lane(lane_idx)?;
-                self.metrics.preemptions += 1;
+        if self.queue.is_empty() {
+            return Ok(()); // steady-state decode: stay allocation-free
+        }
+        // --- plan -------------------------------------------------------
+        let mut avail: Vec<LaneAvail> =
+            self.lanes.iter().map(LaneAvail::of).collect();
+        let mut busy_sessions: Vec<String> = self
+            .lanes
+            .iter()
+            .filter_map(|l| match l {
+                Lane::Busy(s) => s.session.clone(),
+                _ => None,
+            })
+            .collect();
+        let mut placements: Vec<(usize, usize)> = Vec::new(); // (lane, q idx)
+        let mut evict: Vec<usize> = Vec::new();
+        for qi in 0..self.queue.len() {
+            let req = self.queue.get(qi).expect("index in range");
+            let sid = req.session.clone();
+            if let Some(s) = sid.as_deref() {
+                // per-session turn order: one in flight at a time
+                if busy_sessions.iter().any(|x| x == s) {
+                    continue;
+                }
             }
-            let req = self.queue.take(qidx).expect("index from find_admissible");
-            self.place(lane_idx, req)?;
+            let own_parked = sid.as_deref().and_then(|s| {
+                self.lanes.iter().position(
+                    |l| matches!(l, Lane::Parked(p) if p.session_id == s))
+            });
+            if let Some(i) = own_parked {
+                if avail[i] != LaneAvail::Parked {
+                    // its retained lane was claimed earlier in this plan;
+                    // the snapshot reaches the host store only once the
+                    // batched swap executes — defer the turn one tick
+                    continue;
+                }
+            }
+            let lane_idx = own_parked
+                .or_else(|| avail.iter().position(|&a| a == LaneAvail::Free))
+                .or_else(|| self.lru_parked_lane(&avail));
+            let Some(lane_idx) = lane_idx else {
+                break; // every lane is decoding (head-of-line wait)
+            };
+            if own_parked != Some(lane_idx)
+                && avail[lane_idx] == LaneAvail::Parked
+            {
+                evict.push(lane_idx);
+            }
+            avail[lane_idx] = LaneAvail::Claimed;
+            placements.push((lane_idx, qi));
+            if let Some(s) = sid {
+                busy_sessions.push(s);
+            }
+        }
+        if placements.is_empty() {
+            return Ok(());
+        }
+        // --- execute all residency changes in one batched swap ----------
+        let load: Vec<(usize, String)> = placements
+            .iter()
+            .filter_map(|&(lane, qi)| {
+                let sid = self.queue.get(qi)?.session.as_deref()?;
+                if matches!(&self.lanes[lane],
+                            Lane::Parked(p) if p.session_id == sid)
+                {
+                    return None; // in-place resume: no transfer at all
+                }
+                self.sessions.contains(sid).then(|| (lane, sid.to_string()))
+            })
+            .collect();
+        let loaded = self.execute_swap(&evict, &load)?;
+        self.metrics.preemptions += evict.len() as u64;
+        let mut loaded_by_lane: std::collections::BTreeMap<usize, SessionSnapshot> =
+            load.iter().map(|&(lane, _)| lane).zip(loaded).collect();
+        // --- seat the requests ------------------------------------------
+        // pop planned requests in descending queue order (indices stay
+        // valid), then place
+        let mut seats: Vec<(usize, Request)> = Vec::with_capacity(placements.len());
+        placements.sort_by_key(|&(_, qi)| std::cmp::Reverse(qi));
+        for (lane_idx, qi) in placements {
+            let req = self.queue.take(qi).expect("planned index");
+            seats.push((lane_idx, req));
+        }
+        for (lane_idx, req) in seats {
+            let snap = loaded_by_lane.remove(&lane_idx);
+            self.place(lane_idx, req, snap)?;
         }
         Ok(())
     }
 
-    /// Least-recently-parked lane (preemption victim), preferring sessions
-    /// with no queued turn — preempting a session that is about to resume
-    /// would pay a swap-out plus an immediate swap-in for nothing.
-    fn lru_parked_lane(&self) -> Option<usize> {
+    /// Least-recently-parked lane still available to the planner
+    /// (preemption victim), preferring sessions with no queued turn —
+    /// preempting a session that is about to resume would pay a swap-out
+    /// plus an immediate swap-in for nothing.
+    fn lru_parked_lane(&self, avail: &[LaneAvail]) -> Option<usize> {
         let pick = |idle_only: bool| {
             self.lanes
                 .iter()
                 .enumerate()
+                .filter(|&(i, _)| avail[i] == LaneAvail::Parked)
                 .filter_map(|(i, l)| match l {
                     Lane::Parked(p)
                         if !idle_only
@@ -356,34 +377,79 @@ impl<B: ModelBackend> Engine<B> {
         pick(true).or_else(|| pick(false))
     }
 
-    /// Snapshot a parked lane (slot tables + device K/V slabs) into the
-    /// host store and free the lane.
-    fn swap_out_lane(&mut self, lane_idx: usize) -> Result<()> {
-        let Lane::Parked(_) = &self.lanes[lane_idx] else {
-            return Ok(());
-        };
+    /// Execute one batched lane-residency change: snapshot every `evict`ed
+    /// parked lane into the host store and load every `(lane, session)` of
+    /// `load` out of it, all through a single `ModelBackend::swap_lanes`
+    /// call.  Returns the loaded snapshots in `load` order.
+    ///
+    /// Failure safety: slabs are uploaded from borrowed store snapshots and
+    /// only *taken* after the backend call succeeds, and parked lanes are
+    /// only vacated after their download is in hand — a backend error
+    /// leaves every session exactly where it was.
+    fn execute_swap(&mut self, evict: &[usize], load: &[(usize, String)])
+        -> Result<Vec<SessionSnapshot>> {
+        if evict.is_empty() && load.is_empty() {
+            return Ok(Vec::new());
+        }
         let t0 = Instant::now();
-        let (k, v) = self.backend.download_lane_kv(lane_idx)?;
-        let Lane::Parked(p) =
-            std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle)
-        else {
-            unreachable!("checked above");
+        let downloaded = {
+            let Engine { backend, sessions, .. } = self;
+            let mut inn: Vec<(usize, &LaneKv)> = Vec::with_capacity(load.len());
+            for (lane, sid) in load {
+                let snap = sessions
+                    .get(sid)
+                    .with_context(|| format!("session {sid} not in store"))?;
+                inn.push((*lane, &snap.kv));
+            }
+            backend.swap_lanes(evict, &inn)?
         };
-        let ParkedSession { session_id, mut snap } = *p;
-        snap.k = k;
-        snap.v = v;
-        let dropped = self.sessions.insert(session_id, snap);
-        self.metrics.swap_out_us.push(t0.elapsed().as_secs_f64() * 1e6);
-        self.metrics.swap_outs += 1;
-        self.metrics.sessions_dropped += dropped as u64;
-        Ok(())
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        // commit loads first: take them out of the store before the evicted
+        // snapshots are inserted (an insert may LRU-drop the coldest entry)
+        let mut loaded = Vec::with_capacity(load.len());
+        for (_, sid) in load {
+            loaded.push(self.sessions.take(sid).expect("present above"));
+        }
+        for (&lane_idx, kv) in evict.iter().zip(downloaded) {
+            let lane = std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle);
+            let Lane::Parked(p) = lane else {
+                anyhow::bail!("swap-out of lane {lane_idx} which is not parked");
+            };
+            let ParkedSession { session_id, mut snap } = *p;
+            snap.kv = kv;
+            let dropped = self.sessions.insert(session_id, snap);
+            self.metrics.sessions_dropped += dropped as u64;
+        }
+        if !evict.is_empty() {
+            self.metrics.swap_out_us.push(us);
+            self.metrics.swap_outs += evict.len() as u64;
+        }
+        if !load.is_empty() {
+            self.metrics.swap_in_us.push(us);
+            self.metrics.swap_ins += load.len() as u64;
+        }
+        self.metrics.swap_batches += 1;
+        Ok(loaded)
     }
 
-    /// Start a request on `lane_idx` (idle, or parked on its own session).
-    fn place(&mut self, lane_idx: usize, req: Request) -> Result<()> {
+    /// Seat a request on `lane_idx`.  `loaded` carries its session's
+    /// snapshot when the batched swap just pulled it from the host store;
+    /// otherwise the lane is idle, or parked on the request's own session
+    /// (in-place resume).
+    fn place(&mut self, lane_idx: usize, req: Request,
+             loaded: Option<SessionSnapshot>) -> Result<()> {
         let record_gates = self.record_gates;
+        if let Some(snap) = loaded {
+            // swapped in from the host store: slabs are already on the
+            // lane, the mask region must rebuild from the snapshot's tables
+            self.valid.mark_dirty(lane_idx);
+            self.lanes[lane_idx] =
+                Lane::Busy(Box::new(SeqState::resume(req, snap, record_gates)));
+            return Ok(());
+        }
         if let Some(sid) = req.session.as_deref() {
-            // in-place resume: previous turn still parked on this lane
+            // in-place resume: previous turn still parked on this lane —
+            // cache, device slabs AND mask region are all still valid
             if matches!(&self.lanes[lane_idx],
                         Lane::Parked(p) if p.session_id == sid)
             {
@@ -393,55 +459,23 @@ impl<B: ModelBackend> Engine<B> {
                     unreachable!("checked above");
                 };
                 self.metrics.resumes_in_place += 1;
-                self.lanes[lane_idx] = Lane::Busy(Box::new(resume_seq(
+                self.lanes[lane_idx] = Lane::Busy(Box::new(SeqState::resume(
                     req, p.snap, record_gates,
-                )));
-                return Ok(());
-            }
-            // swap in: upload the host snapshot's K/V into this lane.
-            // Upload first, take after — a backend error must not destroy
-            // the store's only copy of the session.
-            if self.sessions.contains(sid) {
-                let t0 = Instant::now();
-                {
-                    let snap = self.sessions.get(sid).expect("checked above");
-                    self.backend.upload_lane_kv(lane_idx, &snap.k, &snap.v)?;
-                }
-                let snap = self.sessions.take(sid).expect("checked above");
-                self.metrics.swap_in_us.push(t0.elapsed().as_secs_f64() * 1e6);
-                self.metrics.swap_ins += 1;
-                self.lanes[lane_idx] = Lane::Busy(Box::new(resume_seq(
-                    req, snap, record_gates,
                 )));
                 return Ok(());
             }
             self.metrics.sessions_opened += 1;
         }
         // fresh sequence on a clean slot table (device garbage in dead
-        // slots is masked by the valid bits)
+        // slots is masked once the lane's mask region refreshes)
         let dims = self.backend.dims();
         let slots = self.backend.slots();
         let cache = LaneCache::with_mirrors(&dims, slots,
                                             self.policy.needs_keys(),
                                             self.policy.is_retrieval());
-        let nheads = dims.layers * dims.hkv;
-        self.lanes[lane_idx] = Lane::Busy(Box::new(SeqState {
-            id: req.id,
-            tag: req.tag,
-            session: req.session,
-            prompt: req.prompt,
-            generated: Vec::new(),
-            max_new: req.max_new_tokens,
-            stop_at_eos: req.stop_at_eos,
-            fed: 0,
-            turns: 0,
-            cache,
-            mirror: vec![Vec::new(); nheads],
-            inject: PendingInject { plans: vec![None; nheads] },
-            t_submit: Instant::now(),
-            ttft_us: None,
-            record: record_gates.then(SeqRecord::default),
-        }));
+        self.valid.mark_dirty(lane_idx);
+        self.lanes[lane_idx] =
+            Lane::Busy(Box::new(SeqState::fresh(req, cache, record_gates)));
         Ok(())
     }
 
@@ -455,7 +489,6 @@ impl<B: ModelBackend> Engine<B> {
         let trash = (m - 1) as i32;
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        self.valid_buf.iter_mut().for_each(|x| *x = 0.0);
         self.ws_buf.iter_mut().for_each(|x| *x = trash);
         let mut chosen: Vec<Option<Vec<usize>>> = vec![None; b];
         let mut inj_flag = vec![0.0f32; l * b * h];
@@ -474,7 +507,8 @@ impl<B: ModelBackend> Engine<B> {
             active += 1;
             tokens[lane_idx] = seq.stream_token(seq.fed) as i32;
             pos[lane_idx] = seq.fed as i32;
-            seq.cache.fill_valid(lane_idx, b, &mut self.valid_buf);
+            // rebuild this lane's mask region only if its occupant changed
+            self.valid.sync(lane_idx, &seq.cache);
             // apply pending retrieval injections: mark live *before* the
             // call (the graph writes inject k/v ahead of attention)
             let mut slots_per_head = Vec::with_capacity(l * h);
@@ -490,8 +524,7 @@ impl<B: ModelBackend> Engine<B> {
                         inj_v[kb..kb + dims.dh].copy_from_slice(&me.val);
                         seq.cache.head_mut(li, hi).insert_kv(
                             slot, me.entry, Some(&me.key), Some(&me.val));
-                        let vb = ((li * b + lane_idx) * h + hi) * m + slot;
-                        self.valid_buf[vb] = 1.0;
+                        self.valid.set(lane_idx, li, hi, slot, true);
                         any_inject = true;
                         self.metrics.injections += 1;
                     }
@@ -515,7 +548,7 @@ impl<B: ModelBackend> Engine<B> {
         let out = self.backend.decode(&DecodeIn {
             tokens: &tokens,
             pos: &pos,
-            valid: &self.valid_buf,
+            valid: self.valid.as_slice(),
             write_slot: &self.ws_buf,
             inject_flag: any_inject.then_some(&inj_flag[..]),
             inject_slot: any_inject.then_some(&inj_slot[..]),
@@ -550,6 +583,7 @@ impl<B: ModelBackend> Engine<B> {
                         slot, entry,
                         want_kv.then(|| &out.k_new[kb..kb + dims.dh]).as_deref(),
                         want_kv.then(|| &out.v_new[kb..kb + dims.dh]).as_deref());
+                    self.valid.set(lane_idx, li, hi, slot, true);
                     if want_attn {
                         let arow = &out.attn[base * m..(base + 1) * m];
                         head.update_attention(arow, ATTN_EMA);
@@ -568,6 +602,7 @@ impl<B: ModelBackend> Engine<B> {
                         }
                         let vpos = head.entries[victim].pos;
                         head.evict(victim);
+                        self.valid.set(lane_idx, li, hi, victim, false);
                         self.metrics.evictions += 1;
                         if let Some(rec) = seq.record.as_mut() {
                             rec.evictions.push((li * h + hi, vpos, now));
@@ -619,9 +654,7 @@ impl<B: ModelBackend> Engine<B> {
                 }
             }
         }
-        for lane_idx in finished {
-            self.finish_lane(lane_idx)?;
-        }
+        self.finish_lanes(finished)?;
         Ok(())
     }
 
@@ -637,7 +670,6 @@ impl<B: ModelBackend> Engine<B> {
         let mut pos = vec![0i32; b * c];
         let mut in_mask = vec![0.0f32; b * c];
         let mut ws = vec![trash; l * b * h * c];
-        self.valid_buf.iter_mut().for_each(|x| *x = 0.0);
         // per lane: (real_c, per-(l,h) slot lists)
         let mut chunk_info: Vec<Option<(usize, Vec<Vec<usize>>)>> = vec![None; b];
 
@@ -653,7 +685,7 @@ impl<B: ModelBackend> Engine<B> {
                 pos[lane_idx * c + ci] = (start + ci) as i32;
                 in_mask[lane_idx * c + ci] = 1.0;
             }
-            seq.cache.fill_valid(lane_idx, b, &mut self.valid_buf);
+            self.valid.sync(lane_idx, &seq.cache);
             let mut per_head = Vec::with_capacity(l * h);
             for li in 0..l {
                 for hi in 0..h {
@@ -684,7 +716,7 @@ impl<B: ModelBackend> Engine<B> {
             tokens: &tokens,
             pos: &pos,
             in_mask: &in_mask,
-            valid: &self.valid_buf,
+            valid: self.valid.as_slice(),
             write_slots: &ws,
         })?;
         self.metrics.prefill_chunks += 1;
@@ -720,6 +752,7 @@ impl<B: ModelBackend> Engine<B> {
                         head.insert_kv(slot, entry,
                                        Some(&out.k_chunk[kb..kb + dims.dh]),
                                        Some(&out.v_chunk[kb..kb + dims.dh]));
+                        self.valid.set(lane_idx, li, hi, slot, true);
                     }
                     // compress down to budget (LocRet chunked protocol)
                     let now = (start + real_c) as i64;
@@ -736,6 +769,7 @@ impl<B: ModelBackend> Engine<B> {
                         }
                         let vpos = head.entries[victim].pos;
                         head.evict(victim);
+                        self.valid.set(lane_idx, li, hi, victim, false);
                         self.metrics.evictions += 1;
                         if let Some(rec) = seq.record.as_mut() {
                             rec.evictions.push((li * h + hi, vpos, now));
@@ -775,15 +809,16 @@ impl<B: ModelBackend> Engine<B> {
                 }
             }
         }
-        for lane_idx in finished {
-            self.finish_lane(lane_idx)?;
-        }
+        self.finish_lanes(finished)?;
         Ok(())
     }
 
-    fn finish_lane(&mut self, lane_idx: usize) -> Result<()> {
+    /// Retire the finished sequence on `lane_idx`.  Returns true when the
+    /// lane parked a surviving session turn — the caller batches any eager
+    /// swap-outs of a tick into one `execute_swap` call.
+    fn finish_lane(&mut self, lane_idx: usize) -> Result<bool> {
         let lane = std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle);
-        let Lane::Busy(seq) = lane else { return Ok(()) };
+        let Lane::Busy(seq) = lane else { return Ok(false) };
         let mut seq = *seq;
         if let Some(rec) = seq.record.take() {
             self.last_record = Some(rec);
@@ -839,7 +874,7 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
         // a surviving session turn retains its cache for the next turn:
-        // park on the lane (lazy) or snapshot to the host store (eager)
+        // park on the lane (lazy; eager callers batch the swap-out)
         if !doomed {
             if let Some(sid) = seq.session {
                 // un-executed retrieval injections go back to the mirror pool
@@ -856,18 +891,30 @@ impl<B: ModelBackend> Engine<B> {
                     snap: SessionSnapshot {
                         cache: seq.cache,
                         mirror: seq.mirror,
-                        k: Vec::new(), // device-resident until swap-out
-                        v: Vec::new(),
+                        kv: LaneKv::default(), // device-resident until swap-out
                         fed: seq.fed,
                         history,
                         turns: seq.turns + 1,
                         last_used: self.clock,
                     },
                 }));
-                if self.cfg.swap_policy == "eager" {
-                    self.swap_out_lane(lane_idx)?;
-                }
+                return Ok(true);
             }
+        }
+        Ok(false)
+    }
+
+    /// Retire every lane in `finished`; under the eager swap policy, all
+    /// freshly parked lanes snapshot to the host store in ONE batched swap.
+    fn finish_lanes(&mut self, finished: Vec<usize>) -> Result<()> {
+        let mut parked: Vec<usize> = Vec::new();
+        for lane_idx in finished {
+            if self.finish_lane(lane_idx)? {
+                parked.push(lane_idx);
+            }
+        }
+        if self.cfg.swap_policy == "eager" {
+            self.execute_swap(&parked, &[])?;
         }
         Ok(())
     }
@@ -897,33 +944,6 @@ impl<B: ModelBackend> Engine<B> {
                 })
                 .collect(),
         )
-    }
-}
-
-/// Rebuild a decoding sequence from a retained session: `history` (every
-/// token fed or sampled in prior turns) extends with the new turn's prompt,
-/// and `fed` resumes past the retained prefix — zero re-prefill.
-fn resume_seq(req: Request, snap: SessionSnapshot,
-              record_gates: bool) -> SeqState {
-    let SessionSnapshot { cache, mirror, fed, mut history, turns, .. } = snap;
-    let nheads = cache.layers * cache.hkv;
-    history.extend(&req.prompt);
-    SeqState {
-        id: req.id,
-        tag: req.tag,
-        session: req.session,
-        prompt: history,
-        generated: Vec::new(),
-        max_new: req.max_new_tokens,
-        stop_at_eos: req.stop_at_eos,
-        fed,
-        turns,
-        cache,
-        mirror,
-        inject: PendingInject { plans: vec![None; nheads] },
-        t_submit: Instant::now(),
-        ttft_us: None,
-        record: record_gates.then(SeqRecord::default),
     }
 }
 
@@ -1026,6 +1046,22 @@ mod tests {
     }
 
     #[test]
+    fn valid_mask_refreshes_only_on_occupancy_change() {
+        // the incremental-mask win: a full lane rewrite happens exactly once
+        // per lane occupancy change, never per decode tick
+        let mut e = engine("trimkv", 8, 1);
+        e.submit(Request::new(1, (0..30).map(|i| 32 + i).collect(), 10)).unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.evictions > 0);
+        assert_eq!(e.valid_refreshes(), 1,
+                   "steady-state decode must not rebuild the mask");
+        // a second one-shot request reuses the lane: exactly one more
+        e.submit(Request::new(2, vec![1, 40], 2)).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.valid_refreshes(), 2);
+    }
+
+    #[test]
     fn continuous_batching_fills_lanes() {
         let mut e = engine("streaming_llm", 16, 2);
         for i in 0..5 {
@@ -1105,6 +1141,9 @@ mod tests {
         assert_eq!(rs.len(), 1);
         assert_eq!(e.metrics.resumes_in_place, 1);
         assert_eq!(e.metrics.swap_outs, 0, "lazy: turn stays on its lane");
+        // an in-place resume keeps the lane's mask region: exactly the one
+        // rewrite from the first placement
+        assert_eq!(e.valid_refreshes(), 1);
         let t2 = e.metrics.decode_steps - steps_t1;
         assert!(t2 <= 5, "second turn re-prefilled history: {t2} steps");
         // positions continue across turns: newest cached pos > first turn len
@@ -1126,11 +1165,33 @@ mod tests {
         // 4 sessions over 2 lanes: the early finishers were pushed to host
         assert_eq!(e.metrics.preemptions, 2);
         assert_eq!(e.metrics.swap_outs, 2);
+        // ...through ONE batched swap_lanes call, not one per lane
+        assert_eq!(e.metrics.swap_batches, 1,
+                   "simultaneous preemptions must batch");
         assert_eq!(e.sessions().len(), 2);
         // a swapped-out session's next turn swaps back into a lane
         e.submit(Request::new(10, vec![50], 1).with_session("s0")).unwrap();
         e.run_to_completion().unwrap();
         assert!(e.metrics.swap_ins >= 1, "s0 should return via swap-in");
+    }
+
+    #[test]
+    fn preemption_traffic_is_o_lane_in_batch() {
+        // the acceptance criterion: swapping one lane moves exactly
+        // 2 * lane_kv_len() elements, independent of the batch size
+        let mut per_batch = Vec::new();
+        for batch in [2usize, 8] {
+            let mut e = engine("trimkv", 16, batch);
+            e.submit(Request::new(1, vec![1, 40], 1).with_session("s")).unwrap();
+            e.run_to_completion().unwrap();
+            e.flush_sessions().unwrap();
+            let t = e.backend().swap_traffic();
+            assert_eq!(t.lanes_out, 1);
+            assert_eq!(t.elems_out as usize, 2 * e.backend().lane_kv_len());
+            per_batch.push(t.elems_out);
+        }
+        assert_eq!(per_batch[0], per_batch[1],
+                   "swap traffic must not scale with batch size");
     }
 
     #[test]
@@ -1153,7 +1214,7 @@ mod tests {
             assert_eq!(snap.history.len(), 5); // 3 prompt + 2 generated
             assert_eq!(snap.fed, 4);           // last sample never fed
             assert_eq!(snap.turns, 1);
-            assert_eq!(snap.k.len(), 4 * 2 * 20 * 32); // [L, H, M, dh]
+            assert_eq!(snap.kv.k.len(), 4 * 2 * 20 * 32); // [L, H, M, dh]
             assert!(snap.cache.total_live() > 0);
         }
         e.submit(Request::new(2, vec![50], 2).with_session("s")).unwrap();
@@ -1221,6 +1282,7 @@ mod tests {
         assert_eq!(e.sessions().len(), 2);
         assert!(e.sessions().contains("a") && e.sessions().contains("b"));
         assert_eq!(e.metrics.swap_outs, 2);
+        assert_eq!(e.metrics.swap_batches, 1, "flush is one batched swap");
         assert!(e.sessions().host_bytes() > 0);
     }
 

@@ -1,8 +1,13 @@
 //! Serving metrics: request latencies, token throughput, cache occupancy.
+//!
+//! Every latency series uses a bounded streaming summary (`StreamSummary`:
+//! Welford moments + a fixed reservoir for percentiles) — a serving engine
+//! records one sample per event forever, so nothing here may grow with
+//! uptime.
 
 use std::time::Instant;
 
-use crate::util::stats::{LatencyHistogram, OnlineStats};
+use crate::util::stats::{LatencyHistogram, StreamSummary};
 
 #[derive(Debug)]
 pub struct EngineMetrics {
@@ -19,16 +24,17 @@ pub struct EngineMetrics {
     pub sessions_opened: u64,            // first turn of a new session
     pub sessions_closed: u64,            // explicit client close
     pub sessions_dropped: u64,           // LRU pressure in the host store
-    pub swap_outs: u64,                  // lane KV downloaded to host
-    pub swap_ins: u64,                   // host snapshot uploaded to a lane
+    pub swap_outs: u64,                  // lanes preempted to the host store
+    pub swap_ins: u64,                   // lanes restored from the host store
+    pub swap_batches: u64,               // batched swap_lanes calls executed
     pub preemptions: u64,                // parked lane evicted for new work
     pub resumes_in_place: u64,           // next turn hit its parked lane
     pub ttft_us: LatencyHistogram,       // time to first token
     pub e2e_us: LatencyHistogram,        // request end-to-end
-    pub step_us: OnlineStats,            // decode-step wall time
-    pub lane_occupancy: OnlineStats,     // live lanes per step
-    pub swap_out_us: OnlineStats,        // lane download + store insert
-    pub swap_in_us: OnlineStats,         // store take + lane upload
+    pub step_us: StreamSummary,          // decode-step wall time
+    pub lane_occupancy: StreamSummary,   // live lanes per step
+    pub swap_out_us: StreamSummary,      // batched swap call incl. evictions
+    pub swap_in_us: StreamSummary,       // batched swap call incl. loads
 }
 
 impl Default for EngineMetrics {
@@ -54,14 +60,15 @@ impl EngineMetrics {
             sessions_dropped: 0,
             swap_outs: 0,
             swap_ins: 0,
+            swap_batches: 0,
             preemptions: 0,
             resumes_in_place: 0,
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
-            step_us: OnlineStats::new(),
-            lane_occupancy: OnlineStats::new(),
-            swap_out_us: OnlineStats::new(),
-            swap_in_us: OnlineStats::new(),
+            step_us: StreamSummary::new(),
+            lane_occupancy: StreamSummary::new(),
+            swap_out_us: StreamSummary::new(),
+            swap_in_us: StreamSummary::new(),
         }
     }
 
@@ -73,8 +80,9 @@ impl EngineMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests {}/{} finished | prefill {} tok | decode {} tok \
-             ({:.1} tok/s) | steps {} (mean {:.2} ms) | evictions {} | \
-             ttft p50 {:.1} ms | e2e p50 {:.1} ms | lanes {:.2}",
+             ({:.1} tok/s) | steps {} (mean {:.2} ms, p95 {:.2} ms) | \
+             evictions {} | ttft p50 {:.1} ms | e2e p50 {:.1} ms | \
+             lanes {:.2}",
             self.requests_finished,
             self.requests_admitted,
             self.tokens_prefilled,
@@ -82,6 +90,7 @@ impl EngineMetrics {
             self.decode_throughput_tok_s(),
             self.decode_steps,
             self.step_us.mean() / 1e3,
+            self.step_us.pct(95.0) / 1e3,
             self.evictions,
             self.ttft_us.pct_us(50.0) / 1e3,
             self.e2e_us.pct_us(50.0) / 1e3,
@@ -93,15 +102,19 @@ impl EngineMetrics {
     pub fn session_summary(&self) -> String {
         format!(
             "sessions {} opened / {} closed / {} dropped | swaps {} out \
-             (mean {:.1} us) / {} in (mean {:.1} us) | preemptions {} | \
-             in-place resumes {}",
+             (mean {:.1} us, p95 {:.1} us) / {} in (mean {:.1} us, p95 \
+             {:.1} us) over {} batched calls | preemptions {} | in-place \
+             resumes {}",
             self.sessions_opened,
             self.sessions_closed,
             self.sessions_dropped,
             self.swap_outs,
             self.swap_out_us.mean(),
+            self.swap_out_us.pct(95.0),
             self.swap_ins,
             self.swap_in_us.mean(),
+            self.swap_in_us.pct(95.0),
+            self.swap_batches,
             self.preemptions,
             self.resumes_in_place,
         )
@@ -134,10 +147,25 @@ mod tests {
         m.sessions_opened = 5;
         m.swap_outs = 3;
         m.swap_ins = 2;
+        m.swap_batches = 2;
         m.preemptions = 1;
         let s = m.session_summary();
         assert!(s.contains("sessions 5 opened"));
         assert!(s.contains("swaps 3 out"));
+        assert!(s.contains("2 batched calls"));
         assert!(s.contains("preemptions 1"));
+    }
+
+    #[test]
+    fn latency_series_stay_bounded() {
+        // the regression this module guards against: per-event pushes must
+        // not grow memory with uptime
+        let mut m = EngineMetrics::new();
+        for i in 0..100_000 {
+            m.step_us.push(i as f64);
+            m.swap_out_us.push(i as f64);
+        }
+        assert_eq!(m.step_us.count(), 100_000);
+        assert!(m.step_us.pct(95.0) > m.step_us.pct(5.0));
     }
 }

@@ -34,6 +34,10 @@ pub struct ArtifactSpec {
     pub c: usize,
     pub file: String,
     pub gate_arch: String, // "mlp" | "linear"
+    /// "per_lane": the graph takes/returns one kc/vc buffer per batch lane
+    /// (O(lane) session swap); "monolithic": single [L,B,H,M,dh] pair
+    /// (legacy artifacts; swap stages through a host shadow).
+    pub cache_layout: String,
 }
 
 #[derive(Debug, Clone)]
@@ -105,6 +109,12 @@ impl ModelMeta {
                     c: a.usize_field("c")?,
                     file: a.str_field("file")?.to_string(),
                     gate_arch: a.str_field("gate_arch")?.to_string(),
+                    // absent in pre-refactor exports -> monolithic
+                    cache_layout: a
+                        .get("cache_layout")
+                        .and_then(Json::as_str)
+                        .unwrap_or("monolithic")
+                        .to_string(),
                 })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
@@ -121,14 +131,15 @@ impl ModelMeta {
         })
     }
 
-    /// Smallest exported variant with b == `b` and m >= `budget`.
+    /// Smallest exported variant with b == `b` and m >= `budget`; at equal
+    /// m, per-lane cache layouts win (O(lane) session swap).
     pub fn pick(&self, kind: &str, b: usize, budget: usize,
                 gate_arch: &str) -> Option<&ArtifactSpec> {
         self.artifacts
             .iter()
             .filter(|a| a.kind == kind && a.b == b && a.m >= budget
                         && a.gate_arch == gate_arch)
-            .min_by_key(|a| a.m)
+            .min_by_key(|a| (a.m, (a.cache_layout != "per_lane") as usize))
     }
 
     /// All batch-lane counts available for a given kind.
@@ -158,10 +169,16 @@ pub fn test_meta() -> ModelMeta {
         artifacts: vec![
             ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
                            file: "decode_b8_m128.hlo.txt".into(),
-                           gate_arch: "mlp".into() },
+                           gate_arch: "mlp".into(),
+                           cache_layout: "monolithic".into() },
+            ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
+                           file: "decode_b8_m128_pl.hlo.txt".into(),
+                           gate_arch: "mlp".into(),
+                           cache_layout: "per_lane".into() },
             ArtifactSpec { kind: "decode".into(), b: 8, m: 768, c: 1,
                            file: "decode_b8_m768.hlo.txt".into(),
-                           gate_arch: "mlp".into() },
+                           gate_arch: "mlp".into(),
+                           cache_layout: "monolithic".into() },
         ],
     }
 }
@@ -171,10 +188,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn pick_chooses_smallest_sufficient_m() {
+    fn pick_chooses_smallest_sufficient_m_preferring_per_lane() {
         let meta = test_meta();
         assert_eq!(meta.pick("decode", 8, 100, "mlp").unwrap().m, 128);
         assert_eq!(meta.pick("decode", 8, 128, "mlp").unwrap().m, 128);
+        // at equal m, the per-lane layout wins (O(lane) swap)
+        assert_eq!(meta.pick("decode", 8, 128, "mlp").unwrap().cache_layout,
+                   "per_lane");
         assert_eq!(meta.pick("decode", 8, 200, "mlp").unwrap().m, 768);
         assert!(meta.pick("decode", 8, 1000, "mlp").is_none());
         assert!(meta.pick("decode", 1, 64, "mlp").is_none());
@@ -199,6 +219,8 @@ mod tests {
         assert_eq!(meta.dims.layers, 4);
         assert_eq!(meta.param_order[0].shape, vec![512, 128]);
         assert_eq!(meta.artifacts.len(), 1);
+        // pre-refactor exports carry no cache_layout key -> monolithic
+        assert_eq!(meta.artifacts[0].cache_layout, "monolithic");
         assert_eq!(meta.available_batches("decode"), vec![8]);
     }
 }

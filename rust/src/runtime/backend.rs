@@ -3,11 +3,16 @@
 //! `PjrtBackend` executes the HLO artifacts on the PJRT CPU client with the
 //! KV caches held device-resident (only logits / gate scores / attention
 //! stats cross the device boundary each step — the paper's O(M) decode).
+//! Cache residency is owned by [`DeviceKvCache`]: per-lane buffer pairs for
+//! `cache_layout = "per_lane"` artifacts (O(lane) session swap) or a single
+//! monolithic pair with a staged host shadow for legacy artifacts.
 //! `MockBackend` is a deterministic stand-in used by unit/property tests so
 //! the scheduler, cache manager and policies are testable without artifacts.
 
 use anyhow::{ensure, Context, Result};
 
+use super::devcache::{CacheShape, DeviceKvCache, HostLaneArena, LaneKv,
+                      SwapTraffic};
 use crate::model_meta::{ModelDims, ModelMeta};
 
 /// One decode step over all B lanes.  Layouts are row-major flat slices:
@@ -65,14 +70,21 @@ pub trait ModelBackend: Send {
     /// Zero the device-resident KV caches (new evaluation run).
     fn reset_cache(&mut self) -> Result<()>;
 
-    /// Download one lane's K/V slabs to the host as two flat `[L, H, M, dh]`
-    /// row-major buffers (session swap-out).
-    fn download_lane_kv(&mut self, lane: usize) -> Result<(Vec<f32>, Vec<f32>)>;
+    /// Batched lane-level session swap: download the current `[L, H, M, dh]`
+    /// K/V slabs of every lane in `out` (returned in `out` order), then
+    /// upload the `inn` slabs into their lanes, leaving every other lane
+    /// untouched.  Downloads happen before uploads, so a lane may appear in
+    /// both — preempting it and installing another session in one step.
+    ///
+    /// Cost contract: swapping N lanes moves O(N * lane_kv_len()) elements
+    /// on per-lane residency; a monolithic fallback may stage through one
+    /// full-cache round-trip per *call* (never per lane).
+    fn swap_lanes(&mut self, out: &[usize], inn: &[(usize, &LaneKv)])
+        -> Result<Vec<LaneKv>>;
 
-    /// Upload host `[L, H, M, dh]` slabs into one lane of the device K/V
-    /// cache, leaving every other lane untouched (session swap-in).
-    fn upload_lane_kv(&mut self, lane: usize, k: &[f32], v: &[f32])
-        -> Result<()>;
+    /// Cumulative transfer accounting for `swap_lanes` (tests/benches
+    /// assert the O(lane) property on these counters).
+    fn swap_traffic(&self) -> SwapTraffic;
 
     /// Elements in one lane's `[L, H, M, dh]` slab (sizing for swap buffers).
     fn lane_kv_len(&self) -> usize {
@@ -90,8 +102,7 @@ pub struct PjrtBackend {
     decode_exe: xla::PjRtLoadedExecutable,
     prefill_exe: Option<xla::PjRtLoadedExecutable>,
     weight_bufs: Vec<xla::PjRtBuffer>, // params ++ gates, device-resident
-    kc: xla::PjRtBuffer,
-    vc: xla::PjRtBuffer,
+    cache: DeviceKvCache,
     dims: ModelDims,
     b: usize,
     m: usize,
@@ -110,10 +121,17 @@ impl PjrtBackend {
         ensure!(dec.m == m, "caller must pass an exported slot count");
         let decode_exe = compile_hlo(&client, &meta.dir.join(&dec.file))?;
         let prefill_exe = if with_prefill {
+            // the prefill graph must share the decode graph's cache layout:
+            // both operate on the same resident buffers
             let pre = meta
-                .pick("prefill", b, m, gate_arch)
-                .with_context(|| format!("no prefill artifact for b={b} m={m}"))?;
-            ensure!(pre.m == m, "prefill/decode slot mismatch");
+                .artifacts
+                .iter()
+                .find(|a| a.kind == "prefill" && a.b == b && a.m == m
+                          && a.gate_arch == gate_arch
+                          && a.cache_layout == dec.cache_layout)
+                .with_context(|| format!(
+                    "no prefill artifact for b={b} m={m} layout={}",
+                    dec.cache_layout))?;
             Some(compile_hlo(&client, &meta.dir.join(&pre.file))?)
         } else {
             None
@@ -144,17 +162,16 @@ impl PjrtBackend {
         }
 
         let dims = meta.dims;
-        let cache_shape = [dims.layers, b, dims.hkv, m, dims.dh];
-        let zeros = vec![0.0f32; cache_shape.iter().product()];
-        let kc = client.buffer_from_host_buffer(&zeros, &cache_shape, None)?;
-        let vc = client.buffer_from_host_buffer(&zeros, &cache_shape, None)?;
+        let shape = CacheShape { layers: dims.layers, batch: b, hkv: dims.hkv,
+                                 slots: m, dh: dims.dh };
+        let cache = DeviceKvCache::new_zeroed(&client, shape,
+                                             dec.cache_layout == "per_lane")?;
         Ok(PjrtBackend {
             client,
             decode_exe,
             prefill_exe,
             weight_bufs,
-            kc,
-            vc,
+            cache,
             dims,
             b,
             m,
@@ -171,29 +188,6 @@ impl PjrtBackend {
 
     fn lbh(&self) -> (usize, usize, usize) {
         (self.dims.layers, self.b, self.dims.hkv)
-    }
-}
-
-/// Gather one lane's `[L, H, M, dh]` rows out of a flat `[L, B, H, M, dh]`
-/// cache (`stride` = H * M * dh).
-fn gather_lane(cache: &[f32], lane: usize, l: usize, b: usize,
-               stride: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(l * stride);
-    for li in 0..l {
-        let off = (li * b + lane) * stride;
-        out.extend_from_slice(&cache[off..off + stride]);
-    }
-    out
-}
-
-/// Scatter one lane's `[L, H, M, dh]` rows back into a flat
-/// `[L, B, H, M, dh]` cache, leaving other lanes untouched.
-fn scatter_lane(cache: &mut [f32], lane: usize, l: usize, b: usize,
-                stride: usize, src: &[f32]) {
-    for li in 0..l {
-        let off = (li * b + lane) * stride;
-        cache[off..off + stride]
-            .copy_from_slice(&src[li * stride..(li + 1) * stride]);
     }
 }
 
@@ -242,33 +236,35 @@ impl ModelBackend for PjrtBackend {
         let ik_b = self.upload_f32(ins.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?;
         let iv_b = self.upload_f32(ins.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?;
 
+        let ncache = self.cache.num_operands();
         let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.extend([&token_b, &pos_b, &self.kc, &self.vc, &valid_b, &ws_b,
-                     &if_b, &is_b, &ik_b, &iv_b]);
+        args.extend([&token_b, &pos_b]);
+        args.extend(self.cache.arg_refs());
+        args.extend([&valid_b, &ws_b, &if_b, &is_b, &ik_b, &iv_b]);
         let mut outs = self.decode_exe.execute_b(&args)?;
+        drop(args);
         let mut outs = outs.swap_remove(0);
-        ensure!(outs.len() == 8, "decode graph returned {} outputs", outs.len());
-        // order: logits, kc, vc, valid, log_beta, attn, k_new, v_new
+        ensure!(outs.len() == 6 + ncache,
+                "decode graph returned {} outputs, expected {}", outs.len(),
+                6 + ncache);
+        // order: logits, kc.., vc.., valid, log_beta, attn, k_new, v_new
         // (perf: skip device->host transfers the policy will not consume)
+        let iv = 1 + ncache; // index of the (unused) valid output
         let out = DecodeOut {
             logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[4])?,
-            attn: if ins.want_attn { to_host(&outs[5])? } else { Vec::new() },
-            k_new: if ins.want_kv { to_host(&outs[6])? } else { Vec::new() },
-            v_new: if ins.want_kv { to_host(&outs[7])? } else { Vec::new() },
+            log_beta: to_host(&outs[iv + 1])?,
+            attn: if ins.want_attn { to_host(&outs[iv + 2])? } else { Vec::new() },
+            k_new: if ins.want_kv { to_host(&outs[iv + 3])? } else { Vec::new() },
+            v_new: if ins.want_kv { to_host(&outs[iv + 4])? } else { Vec::new() },
         };
-        self.vc = outs.swap_remove(2);
-        self.kc = outs.swap_remove(1);
+        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
+        self.cache.update_from_outputs(cache_bufs)?;
         Ok(out)
     }
 
     fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut> {
         let (l, b, h) = self.lbh();
         let (m, c) = (self.m, self.c);
-        let exe = self
-            .prefill_exe
-            .as_ref()
-            .context("backend loaded without prefill graph")?;
         ensure!(ins.tokens.len() == b * c, "bad tokens len");
         ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
         ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
@@ -279,64 +275,48 @@ impl ModelBackend for PjrtBackend {
         let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
         let ws_b = self.upload_i32(ins.write_slots, &[l, b, h, c])?;
 
+        let exe = self
+            .prefill_exe
+            .as_ref()
+            .context("backend loaded without prefill graph")?;
+        let ncache = self.cache.num_operands();
         let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.extend([&tok_b, &pos_b, &mask_b, &self.kc, &self.vc, &valid_b, &ws_b]);
+        args.extend([&tok_b, &pos_b, &mask_b]);
+        args.extend(self.cache.arg_refs());
+        args.extend([&valid_b, &ws_b]);
         let mut outs = exe.execute_b(&args)?;
+        drop(args);
         let mut outs = outs.swap_remove(0);
-        ensure!(outs.len() == 9, "prefill graph returned {} outputs", outs.len());
-        // order: logits, kc, vc, valid, log_beta, attn_slots, attn_chunk,
-        //        k_chunk, v_chunk
+        ensure!(outs.len() == 7 + ncache,
+                "prefill graph returned {} outputs, expected {}", outs.len(),
+                7 + ncache);
+        // order: logits, kc.., vc.., valid, log_beta, attn_slots,
+        //        attn_chunk, k_chunk, v_chunk
+        let iv = 1 + ncache;
         let out = PrefillOut {
             logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[4])?,
-            attn_slots: to_host(&outs[5])?,
-            attn_chunk: to_host(&outs[6])?,
-            k_chunk: to_host(&outs[7])?,
-            v_chunk: to_host(&outs[8])?,
+            log_beta: to_host(&outs[iv + 1])?,
+            attn_slots: to_host(&outs[iv + 2])?,
+            attn_chunk: to_host(&outs[iv + 3])?,
+            k_chunk: to_host(&outs[iv + 4])?,
+            v_chunk: to_host(&outs[iv + 5])?,
         };
-        self.vc = outs.swap_remove(2);
-        self.kc = outs.swap_remove(1);
+        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
+        self.cache.update_from_outputs(cache_bufs)?;
         Ok(out)
     }
 
     fn reset_cache(&mut self) -> Result<()> {
-        let (l, b, h) = self.lbh();
-        let shape = [l, b, h, self.m, self.dims.dh];
-        let zeros = vec![0.0f32; shape.iter().product()];
-        self.kc = self.client.buffer_from_host_buffer(&zeros, &shape, None)?;
-        self.vc = self.client.buffer_from_host_buffer(&zeros, &shape, None)?;
-        Ok(())
+        self.cache.reset(&self.client)
     }
 
-    fn download_lane_kv(&mut self, lane: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        let (l, b, h) = self.lbh();
-        ensure!(lane < b, "lane {lane} out of range (batch {b})");
-        // PJRT CPU exposes no partial-buffer reads/writes, and the graphs
-        // take kc/vc as single buffers, so a lane swap round-trips the full
-        // [L,B,H,M,dh] cache (see ROADMAP: per-lane cache buffers or a
-        // batched swap API would make this O(lane)).
-        let kc = to_host(&self.kc)?;
-        let vc = to_host(&self.vc)?;
-        let stride = h * self.m * self.dims.dh;
-        Ok((gather_lane(&kc, lane, l, b, stride),
-            gather_lane(&vc, lane, l, b, stride)))
+    fn swap_lanes(&mut self, out: &[usize], inn: &[(usize, &LaneKv)])
+        -> Result<Vec<LaneKv>> {
+        self.cache.swap_lanes(&self.client, out, inn)
     }
 
-    fn upload_lane_kv(&mut self, lane: usize, k: &[f32], v: &[f32])
-        -> Result<()> {
-        let (l, b, h) = self.lbh();
-        ensure!(lane < b, "lane {lane} out of range (batch {b})");
-        let stride = h * self.m * self.dims.dh;
-        ensure!(k.len() == l * stride && v.len() == l * stride,
-                "lane kv slab has {} elems, expected {}", k.len(), l * stride);
-        let mut kc = to_host(&self.kc)?;
-        let mut vc = to_host(&self.vc)?;
-        scatter_lane(&mut kc, lane, l, b, stride, k);
-        scatter_lane(&mut vc, lane, l, b, stride, v);
-        let shape = [l, b, h, self.m, self.dims.dh];
-        self.kc = self.client.buffer_from_host_buffer(&kc, &shape, None)?;
-        self.vc = self.client.buffer_from_host_buffer(&vc, &shape, None)?;
-        Ok(())
+    fn swap_traffic(&self) -> SwapTraffic {
+        self.cache.traffic
     }
 }
 
@@ -347,7 +327,9 @@ impl ModelBackend for PjrtBackend {
 /// Deterministic fake model: the next-token distribution peaks at
 /// `(token + 1) % vocab` until `eos_after` tokens have been produced on a
 /// lane, then at EOS (id 2).  Gate scores depend only on (layer, head,
-/// token) so TRIM-KV evictions are reproducible in tests.
+/// token), and the fake K/V content only on (layer, head, position-in-lane,
+/// token) — never on the lane index or batch size — so TRIM-KV evictions
+/// and swapped lane slabs are reproducible across engine shapes in tests.
 pub struct MockBackend {
     pub dims: ModelDims,
     pub b: usize,
@@ -357,18 +339,17 @@ pub struct MockBackend {
     pub decoded_per_lane: Vec<usize>,
     pub decode_calls: usize,
     pub prefill_calls: usize,
-    /// Host mirror of the device K/V slot arenas, `[L, B, H, M, dh]` —
-    /// written exactly where the real graphs would scatter, so the session
-    /// swap path (download/upload of lane slabs) is testable end-to-end.
-    pub kc: Vec<f32>,
-    pub vc: Vec<f32>,
+    /// Host twin of the per-lane device K/V arenas — written exactly where
+    /// the real graphs would scatter, so the batched session-swap path is
+    /// testable end-to-end with exact transfer accounting.
+    pub arena: HostLaneArena,
 }
 
 impl MockBackend {
     pub fn new(b: usize, m: usize) -> MockBackend {
         let dims = ModelDims { vocab: 512, d: 128, layers: 4, hq: 4, hkv: 2,
                                dh: 32, ffn: 256, gate_hidden: 48 };
-        let cache = dims.layers * b * dims.hkv * m * dims.dh;
+        let lane_len = dims.layers * dims.hkv * m * dims.dh;
         MockBackend {
             dims,
             b,
@@ -378,8 +359,7 @@ impl MockBackend {
             decoded_per_lane: vec![0; b],
             decode_calls: 0,
             prefill_calls: 0,
-            kc: vec![0.0; cache],
-            vc: vec![0.0; cache],
+            arena: HostLaneArena::new(b, lane_len),
         }
     }
 
@@ -400,6 +380,15 @@ impl MockBackend {
         let base = if (32..288).contains(&t) { 0.999 } else { 0.95 };
         let beta = base - (hash as f32) / 40_000.0;
         beta.ln()
+    }
+
+    /// Fake K/V element for head-dim position `d` of `(layer, head, token)`
+    /// (+ chunk offset `ci` on the prefill path).  Deliberately independent
+    /// of lane index and batch size.
+    fn mock_kv(li: usize, hh: usize, hkv: usize, ci: usize, c: usize,
+               d: usize, dh: usize, token: i32) -> f32 {
+        let j = (((li * hkv + hh) * c + ci) * dh) + d;
+        ((j % 7) as f32) * 0.1 + token as f32 * 1e-3
     }
 }
 
@@ -453,31 +442,50 @@ impl ModelBackend for MockBackend {
             }
         }
         let mut k_new = vec![0.0f32; l * b * h * dh];
-        for (i, x) in k_new.iter_mut().enumerate() {
-            *x = ((i % 7) as f32) * 0.1 + ins.tokens[(i / dh / h) % b] as f32 * 1e-3;
-        }
-        let v_new = k_new.clone();
-        // scatter into the mock K/V arenas exactly as the decode graph
-        // would: pending injects first, then the step's write_slot
-        for base in 0..l * b * h {
-            if let (Some(flag), Some(islot)) = (ins.inject_flag, ins.inject_slot) {
-                if flag[base] > 0.0 {
-                    let s = islot[base] as usize;
-                    let dst = (base * m + s) * dh;
-                    if let (Some(ik), Some(iv)) = (ins.inject_k, ins.inject_v) {
-                        self.kc[dst..dst + dh]
-                            .copy_from_slice(&ik[base * dh..(base + 1) * dh]);
-                        self.vc[dst..dst + dh]
-                            .copy_from_slice(&iv[base * dh..(base + 1) * dh]);
+        for li in 0..l {
+            for lane in 0..b {
+                for hh in 0..h {
+                    let base = (li * b + lane) * h + hh;
+                    for d in 0..dh {
+                        k_new[base * dh + d] = Self::mock_kv(
+                            li, hh, h, 0, 1, d, dh, ins.tokens[lane]);
                     }
                 }
             }
-            let s = ins.write_slot[base] as usize;
-            let dst = (base * m + s) * dh;
-            self.kc[dst..dst + dh]
-                .copy_from_slice(&k_new[base * dh..(base + 1) * dh]);
-            self.vc[dst..dst + dh]
-                .copy_from_slice(&v_new[base * dh..(base + 1) * dh]);
+        }
+        let v_new = k_new.clone();
+        // scatter into the per-lane K/V arenas exactly as the decode graph
+        // would: pending injects first, then the step's write_slot
+        for lane in 0..b {
+            let slab = self.arena.lane_mut(lane);
+            for li in 0..l {
+                for hh in 0..h {
+                    let base = (li * b + lane) * h + hh; // flat [L,B,H] index
+                    let row = (li * h + hh) * m;         // in-lane [L,H,M] row
+                    if let (Some(flag), Some(islot)) =
+                        (ins.inject_flag, ins.inject_slot)
+                    {
+                        if flag[base] > 0.0 {
+                            let s = islot[base] as usize;
+                            let dst = (row + s) * dh;
+                            if let (Some(ik), Some(ivv)) =
+                                (ins.inject_k, ins.inject_v)
+                            {
+                                slab.k[dst..dst + dh].copy_from_slice(
+                                    &ik[base * dh..(base + 1) * dh]);
+                                slab.v[dst..dst + dh].copy_from_slice(
+                                    &ivv[base * dh..(base + 1) * dh]);
+                            }
+                        }
+                    }
+                    let s = ins.write_slot[base] as usize;
+                    let dst = (row + s) * dh;
+                    slab.k[dst..dst + dh]
+                        .copy_from_slice(&k_new[base * dh..(base + 1) * dh]);
+                    slab.v[dst..dst + dh]
+                        .copy_from_slice(&v_new[base * dh..(base + 1) * dh]);
+                }
+            }
         }
         Ok(DecodeOut { logits, log_beta, attn, k_new, v_new })
     }
@@ -506,28 +514,44 @@ impl ModelBackend for MockBackend {
         }
         let attn_slots = vec![1.0 / m as f32; l * b * h * m];
         let attn_chunk = vec![1.0 / c as f32; l * b * h * c];
-        // token-dependent chunk K/V (same formula as decode) so swapped
+        // token-dependent chunk K/V (lane-invariant, like decode) so swapped
         // slabs carry distinguishable content in tests
         let mut k_chunk = vec![0.0f32; l * b * h * c * dh];
-        for (i, x) in k_chunk.iter_mut().enumerate() {
-            let lane = (i / (h * c * dh)) % b;
-            let ci = (i / dh) % c;
-            *x = ((i % 7) as f32) * 0.1
-                + ins.tokens[lane * c + ci] as f32 * 1e-3;
+        for li in 0..l {
+            for lane in 0..b {
+                for hh in 0..h {
+                    for ci in 0..c {
+                        let cb = ((li * b + lane) * h + hh) * c + ci;
+                        for d in 0..dh {
+                            k_chunk[cb * dh + d] = Self::mock_kv(
+                                li, hh, h, ci, c, d, dh,
+                                ins.tokens[lane * c + ci]);
+                        }
+                    }
+                }
+            }
         }
         let v_chunk = k_chunk.clone();
-        // scatter the chunk into the mock arenas at the planned write slots
-        for base in 0..l * b * h {
-            let lane = (base / h) % b;
-            for ci in 0..c {
-                if ins.in_mask[lane * c + ci] <= 0.0 {
-                    continue;
+        // scatter the chunk into the per-lane arenas at the planned slots
+        for lane in 0..b {
+            let slab = self.arena.lane_mut(lane);
+            for li in 0..l {
+                for hh in 0..h {
+                    let base = (li * b + lane) * h + hh;
+                    let row = (li * h + hh) * m;
+                    for ci in 0..c {
+                        if ins.in_mask[lane * c + ci] <= 0.0 {
+                            continue;
+                        }
+                        let s = ins.write_slots[base * c + ci] as usize;
+                        let dst = (row + s) * dh;
+                        let src = (base * c + ci) * dh;
+                        slab.k[dst..dst + dh]
+                            .copy_from_slice(&k_chunk[src..src + dh]);
+                        slab.v[dst..dst + dh]
+                            .copy_from_slice(&v_chunk[src..src + dh]);
+                    }
                 }
-                let s = ins.write_slots[base * c + ci] as usize;
-                let dst = (base * m + s) * dh;
-                let src = (base * c + ci) * dh;
-                self.kc[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
-                self.vc[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
             }
         }
         Ok(PrefillOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
@@ -535,29 +559,17 @@ impl ModelBackend for MockBackend {
 
     fn reset_cache(&mut self) -> Result<()> {
         self.decoded_per_lane = vec![0; self.b];
-        self.kc.iter_mut().for_each(|x| *x = 0.0);
-        self.vc.iter_mut().for_each(|x| *x = 0.0);
+        self.arena.reset();
         Ok(())
     }
 
-    fn download_lane_kv(&mut self, lane: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
-        ensure!(lane < b, "lane {lane} out of range (batch {b})");
-        let stride = h * self.m * self.dims.dh;
-        Ok((gather_lane(&self.kc, lane, l, b, stride),
-            gather_lane(&self.vc, lane, l, b, stride)))
+    fn swap_lanes(&mut self, out: &[usize], inn: &[(usize, &LaneKv)])
+        -> Result<Vec<LaneKv>> {
+        self.arena.swap_lanes(out, inn)
     }
 
-    fn upload_lane_kv(&mut self, lane: usize, k: &[f32], v: &[f32])
-        -> Result<()> {
-        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
-        ensure!(lane < b, "lane {lane} out of range (batch {b})");
-        let stride = h * self.m * self.dims.dh;
-        ensure!(k.len() == l * stride && v.len() == l * stride,
-                "lane kv slab has {} elems, expected {}", k.len(), l * stride);
-        scatter_lane(&mut self.kc, lane, l, b, stride, k);
-        scatter_lane(&mut self.vc, lane, l, b, stride, v);
-        Ok(())
+    fn swap_traffic(&self) -> SwapTraffic {
+        self.arena.traffic
     }
 }
 
@@ -611,21 +623,21 @@ mod tests {
         assert!(sym < 0.0);
     }
 
-    #[test]
-    fn mock_lane_kv_download_upload_roundtrip() {
-        let mut mb = MockBackend::new(2, 8);
-        let valid = vec![0.0f32; 4 * 2 * 2 * 8];
-        // decode writes lane 0 into slot 1, lane 1 into slot 3
-        let mut ws = vec![0i32; 4 * 2 * 2];
-        for li in 0..4 {
-            for hh in 0..2 {
-                ws[(li * 2) * 2 + hh] = 1;
-                ws[(li * 2 + 1) * 2 + hh] = 3;
+    fn decode_write(mb: &mut MockBackend, tokens: &[i32], slots: &[usize]) {
+        let (l, b, h, m) = (mb.dims.layers, mb.b, mb.dims.hkv, mb.m);
+        let valid = vec![0.0f32; l * b * h * m];
+        let pos = vec![0i32; b];
+        let mut ws = vec![0i32; l * b * h];
+        for li in 0..l {
+            for (lane, &slot) in slots.iter().enumerate() {
+                for hh in 0..h {
+                    ws[(li * b + lane) * h + hh] = slot as i32;
+                }
             }
         }
         mb.decode(&DecodeIn {
-            tokens: &[10, 77],
-            pos: &[0, 0],
+            tokens,
+            pos: &pos,
             valid: &valid,
             write_slot: &ws,
             inject_flag: None,
@@ -636,22 +648,61 @@ mod tests {
             want_kv: true,
         })
         .unwrap();
-        let (k0, v0) = mb.download_lane_kv(0).unwrap();
-        let (k1, _) = mb.download_lane_kv(1).unwrap();
-        assert_eq!(k0.len(), mb.lane_kv_len());
-        assert_ne!(k0, k1, "lanes with different tokens share a slab");
-        // roundtrip: upload lane 0's slab into lane 1, download, compare
-        let k0c = k0.clone();
-        let v0c = v0.clone();
-        mb.upload_lane_kv(1, &k0c, &v0c).unwrap();
-        let (k1b, v1b) = mb.download_lane_kv(1).unwrap();
-        assert_eq!(k1b, k0);
-        assert_eq!(v1b, v0);
-        // lane 0 untouched by the lane-1 upload
-        let (k0b, _) = mb.download_lane_kv(0).unwrap();
-        assert_eq!(k0b, k0);
-        assert!(mb.upload_lane_kv(1, &k0c[1..], &v0c).is_err());
-        assert!(mb.download_lane_kv(9).is_err());
+    }
+
+    #[test]
+    fn mock_batched_lane_swap_roundtrip() {
+        let mut mb = MockBackend::new(2, 8);
+        // decode writes lane 0 into slot 1, lane 1 into slot 3
+        decode_write(&mut mb, &[10, 77], &[1, 3]);
+        let down = mb.swap_lanes(&[0, 1], &[]).unwrap();
+        assert_eq!(down[0].k.len(), mb.lane_kv_len());
+        assert_ne!(down[0].k, down[1].k,
+                   "lanes with different tokens share a slab");
+        // mixed call: lane 1 is downloaded *and* overwritten by lane 0's
+        // slab — the preempt-and-restore-in-one-step case
+        let prev = mb.swap_lanes(&[1], &[(1, &down[0])]).unwrap();
+        assert_eq!(prev[0], down[1], "mixed swap must download before upload");
+        let now = mb.swap_lanes(&[0, 1], &[]).unwrap();
+        assert_eq!(now[1], down[0]);
+        assert_eq!(now[0], down[0], "lane 0 clobbered by the lane-1 upload");
+        // size/range validation
+        let short = LaneKv { k: down[0].k[1..].to_vec(), v: down[0].v.clone() };
+        assert!(mb.swap_lanes(&[], &[(1, &short)]).is_err());
+        assert!(mb.swap_lanes(&[9], &[]).is_err());
+    }
+
+    #[test]
+    fn swap_traffic_is_o_lane_not_o_batch() {
+        // swapping 1 lane moves exactly 2 * lane_kv_len() elements no
+        // matter how many lanes the batch has (the acceptance criterion)
+        let mut per_batch = Vec::new();
+        for b in [2usize, 4, 8] {
+            let mut mb = MockBackend::new(b, 8);
+            let down = mb.swap_lanes(&[0], &[]).unwrap();
+            assert_eq!(down[0].k.len(), mb.lane_kv_len());
+            let t = mb.swap_traffic();
+            assert_eq!(t.elems_out as usize, 2 * mb.lane_kv_len());
+            assert_eq!(t.lanes_out, 1);
+            per_batch.push(t.elems_out);
+        }
+        assert!(per_batch.windows(2).all(|w| w[0] == w[1]),
+                "swap traffic grew with batch size: {per_batch:?}");
+    }
+
+    #[test]
+    fn mock_kv_content_is_lane_and_batch_invariant() {
+        // the same token written to the same slot must produce an identical
+        // slab through any lane of any batch size (cross-shape swap tests
+        // rely on this)
+        let mut a = MockBackend::new(1, 8);
+        decode_write(&mut a, &[42], &[2]);
+        let mut b = MockBackend::new(3, 8);
+        decode_write(&mut b, &[7, 42, 9], &[2, 2, 2]);
+        let la = a.swap_lanes(&[0], &[]).unwrap();
+        let lb = b.swap_lanes(&[1], &[]).unwrap();
+        assert_eq!(la[0], lb[0],
+                   "lane content depends on lane index or batch size");
     }
 
     #[test]

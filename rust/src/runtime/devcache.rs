@@ -1,0 +1,469 @@
+//! Device cache residency: who owns the K/V slot arenas and how lane-sized
+//! pieces of them cross the host/device boundary.
+//!
+//! The serving graphs attend over `[L, B, Hkv, M, dh]` K/V slot arenas.  A
+//! session swap moves exactly one lane's `[L, Hkv, M, dh]` slice of them —
+//! and how much *actually* crosses the boundary depends on residency:
+//!
+//!   * **per-lane** artifacts take (and return) one kc/vc buffer *per batch
+//!     lane*, so [`DeviceKvCache`] holds B independent buffer pairs and a
+//!     swap touches only the buffers of the swapped lanes — O(lane), the
+//!     cost model the paper's memory-bounded serving story needs.
+//!   * **monolithic** artifacts (legacy single-buffer graphs, and PJRT CPU
+//!     which has no partial-buffer reads) fall back to a *staged host
+//!     shadow*: the whole cache is downloaded once per batched swap call,
+//!     every requested lane is gathered/scattered against that staging
+//!     buffer, and the whole cache is uploaded once — O(batch) per call,
+//!     but amortized over all lanes swapped in the call instead of paid per
+//!     lane as the old `download_lane_kv`/`upload_lane_kv` pair did.
+//!
+//! [`HostLaneArena`] is the host-memory twin used by `MockBackend`: the same
+//! per-lane layout and the same batched-swap semantics, plus exact transfer
+//! accounting ([`SwapTraffic`]) so tests can assert the O(lane) property.
+
+use anyhow::{ensure, Result};
+
+/// One lane's K/V slabs on the host, flat `[L, Hkv, M, dh]` row-major.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LaneKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl LaneKv {
+    pub fn zeros(lane_len: usize) -> LaneKv {
+        LaneKv { k: vec![0.0; lane_len], v: vec![0.0; lane_len] }
+    }
+
+    /// Total f32 elements across both slabs.
+    pub fn elems(&self) -> usize {
+        self.k.len() + self.v.len()
+    }
+
+    pub fn host_bytes(&self) -> usize {
+        self.elems() * std::mem::size_of::<f32>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty() && self.v.is_empty()
+    }
+}
+
+/// Cumulative transfer accounting for swap operations.  `elems_*` count f32
+/// elements that crossed the host/device boundary (both K and V), which is
+/// what the O(lane) acceptance tests assert on: swapping one lane must move
+/// `2 * lane_kv_len()` elements regardless of batch size.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwapTraffic {
+    /// batched `swap_lanes` calls
+    pub swap_calls: u64,
+    /// lanes downloaded (device -> host)
+    pub lanes_out: u64,
+    /// lanes uploaded (host -> device)
+    pub lanes_in: u64,
+    /// f32 elements moved device -> host by swaps
+    pub elems_out: u64,
+    /// f32 elements moved host -> device by swaps
+    pub elems_in: u64,
+}
+
+/// Validate a batched swap request against lane count and slab sizes.
+fn check_swap_args(batch: usize, lane_len: usize, out: &[usize],
+                   inn: &[(usize, &LaneKv)]) -> Result<()> {
+    for &lane in out {
+        ensure!(lane < batch, "swap-out lane {lane} out of range (batch {batch})");
+    }
+    for (lane, kv) in inn {
+        ensure!(*lane < batch, "swap-in lane {lane} out of range (batch {batch})");
+        ensure!(kv.k.len() == lane_len && kv.v.len() == lane_len,
+                "lane kv slab has {}+{} elems, expected {lane_len} each",
+                kv.k.len(), kv.v.len());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Host arena (MockBackend storage)
+// ---------------------------------------------------------------------------
+
+/// Per-lane K/V arenas in host memory.  `MockBackend` writes its fake model
+/// scatter directly into these; the engine's swap path exercises the exact
+/// same batched semantics as the device residency manager.
+#[derive(Debug, Clone)]
+pub struct HostLaneArena {
+    lanes: Vec<LaneKv>,
+    lane_len: usize,
+    pub traffic: SwapTraffic,
+}
+
+impl HostLaneArena {
+    pub fn new(batch: usize, lane_len: usize) -> HostLaneArena {
+        HostLaneArena {
+            lanes: (0..batch).map(|_| LaneKv::zeros(lane_len)).collect(),
+            lane_len,
+            traffic: SwapTraffic::default(),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_len(&self) -> usize {
+        self.lane_len
+    }
+
+    pub fn lane(&self, lane: usize) -> &LaneKv {
+        &self.lanes[lane]
+    }
+
+    pub fn lane_mut(&mut self, lane: usize) -> &mut LaneKv {
+        &mut self.lanes[lane]
+    }
+
+    /// Zero every lane (cache reset); transfer accounting is preserved.
+    pub fn reset(&mut self) {
+        for kv in &mut self.lanes {
+            kv.k.iter_mut().for_each(|x| *x = 0.0);
+            kv.v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Batched lane swap: download every `out` lane's current slabs (in
+    /// order), then upload the `inn` slabs.  A lane may appear in both —
+    /// its pre-swap content is downloaded before the upload overwrites it.
+    pub fn swap_lanes(&mut self, out: &[usize], inn: &[(usize, &LaneKv)])
+        -> Result<Vec<LaneKv>> {
+        check_swap_args(self.batch(), self.lane_len, out, inn)?;
+        let downloaded: Vec<LaneKv> =
+            out.iter().map(|&lane| self.lanes[lane].clone()).collect();
+        for (lane, kv) in inn {
+            self.lanes[*lane] = (*kv).clone();
+        }
+        self.traffic.swap_calls += 1;
+        self.traffic.lanes_out += out.len() as u64;
+        self.traffic.lanes_in += inn.len() as u64;
+        self.traffic.elems_out += (out.len() * 2 * self.lane_len) as u64;
+        self.traffic.elems_in += (inn.len() * 2 * self.lane_len) as u64;
+        Ok(downloaded)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Device residency manager (PjrtBackend storage)
+// ---------------------------------------------------------------------------
+
+/// Shape of the device cache, shared by both residency modes.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheShape {
+    pub layers: usize,
+    pub batch: usize,
+    pub hkv: usize,
+    pub slots: usize,
+    pub dh: usize,
+}
+
+impl CacheShape {
+    /// Elements in one lane's `[L, Hkv, M, dh]` slab.
+    pub fn lane_len(&self) -> usize {
+        self.layers * self.hkv * self.slots * self.dh
+    }
+
+    fn lane_dims(&self) -> [usize; 4] {
+        [self.layers, self.hkv, self.slots, self.dh]
+    }
+
+    fn full_dims(&self) -> [usize; 5] {
+        [self.layers, self.batch, self.hkv, self.slots, self.dh]
+    }
+
+    /// Per-lane stride (Hkv * M * dh) inside the flat monolithic layout.
+    fn stride(&self) -> usize {
+        self.hkv * self.slots * self.dh
+    }
+}
+
+/// Gather one lane's `[L, Hkv, M, dh]` rows out of a flat
+/// `[L, B, Hkv, M, dh]` cache.
+pub fn gather_lane(cache: &[f32], lane: usize, layers: usize, batch: usize,
+                   stride: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(layers * stride);
+    for li in 0..layers {
+        let off = (li * batch + lane) * stride;
+        out.extend_from_slice(&cache[off..off + stride]);
+    }
+    out
+}
+
+/// Scatter one lane's `[L, Hkv, M, dh]` rows back into a flat
+/// `[L, B, Hkv, M, dh]` cache, leaving other lanes untouched.
+pub fn scatter_lane(cache: &mut [f32], lane: usize, layers: usize,
+                    batch: usize, stride: usize, src: &[f32]) {
+    for li in 0..layers {
+        let off = (li * batch + lane) * stride;
+        cache[off..off + stride]
+            .copy_from_slice(&src[li * stride..(li + 1) * stride]);
+    }
+}
+
+enum Residency {
+    /// One device buffer pair per batch lane, each `[L, Hkv, M, dh]`.
+    PerLane { kc: Vec<xla::PjRtBuffer>, vc: Vec<xla::PjRtBuffer> },
+    /// Single `[L, B, Hkv, M, dh]` pair (legacy artifacts).
+    Monolithic { kc: xla::PjRtBuffer, vc: xla::PjRtBuffer },
+}
+
+/// Owner of the device-resident K/V arenas for `PjrtBackend`.
+pub struct DeviceKvCache {
+    shape: CacheShape,
+    res: Residency,
+    pub traffic: SwapTraffic,
+}
+
+fn to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+}
+
+impl DeviceKvCache {
+    /// Allocate zeroed device arenas in the residency mode the artifact's
+    /// `cache_layout` asks for (`per_lane` | `monolithic`).
+    pub fn new_zeroed(client: &xla::PjRtClient, shape: CacheShape,
+                      per_lane: bool) -> Result<DeviceKvCache> {
+        let res = if per_lane {
+            let zeros = vec![0.0f32; shape.lane_len()];
+            let dims = shape.lane_dims();
+            let mut kc = Vec::with_capacity(shape.batch);
+            let mut vc = Vec::with_capacity(shape.batch);
+            for _ in 0..shape.batch {
+                kc.push(client.buffer_from_host_buffer(&zeros, &dims, None)?);
+                vc.push(client.buffer_from_host_buffer(&zeros, &dims, None)?);
+            }
+            Residency::PerLane { kc, vc }
+        } else {
+            let dims = shape.full_dims();
+            let zeros = vec![0.0f32; dims.iter().product()];
+            Residency::Monolithic {
+                kc: client.buffer_from_host_buffer(&zeros, &dims, None)?,
+                vc: client.buffer_from_host_buffer(&zeros, &dims, None)?,
+            }
+        };
+        Ok(DeviceKvCache { shape, res, traffic: SwapTraffic::default() })
+    }
+
+    pub fn per_lane(&self) -> bool {
+        matches!(self.res, Residency::PerLane { .. })
+    }
+
+    pub fn shape(&self) -> CacheShape {
+        self.shape
+    }
+
+    /// Number of cache operands the graph takes (and returns): 2 per lane
+    /// in per-lane mode, 2 in monolithic mode.
+    pub fn num_operands(&self) -> usize {
+        if self.per_lane() { 2 * self.shape.batch } else { 2 }
+    }
+
+    /// Cache operands in graph order: all kc buffers, then all vc buffers.
+    pub fn arg_refs(&self) -> Vec<&xla::PjRtBuffer> {
+        match &self.res {
+            Residency::PerLane { kc, vc } => kc.iter().chain(vc.iter()).collect(),
+            Residency::Monolithic { kc, vc } => vec![kc, vc],
+        }
+    }
+
+    /// Adopt the updated cache buffers a graph execution returned (same
+    /// order as `arg_refs`, length `num_operands`).
+    pub fn update_from_outputs(&mut self, bufs: Vec<xla::PjRtBuffer>)
+        -> Result<()> {
+        ensure!(bufs.len() == self.num_operands(),
+                "graph returned {} cache buffers, expected {}", bufs.len(),
+                self.num_operands());
+        match &mut self.res {
+            Residency::PerLane { kc, vc } => {
+                let b = kc.len();
+                let mut it = bufs.into_iter();
+                for buf in kc.iter_mut() {
+                    *buf = it.next().expect("length checked");
+                }
+                for buf in vc.iter_mut() {
+                    *buf = it.next().expect("length checked");
+                }
+                debug_assert_eq!(b, vc.len());
+            }
+            Residency::Monolithic { kc, vc } => {
+                let mut it = bufs.into_iter();
+                *kc = it.next().expect("length checked");
+                *vc = it.next().expect("length checked");
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-zero the arenas (new evaluation run).
+    pub fn reset(&mut self, client: &xla::PjRtClient) -> Result<()> {
+        let traffic = self.traffic;
+        *self = DeviceKvCache::new_zeroed(client, self.shape, self.per_lane())?;
+        self.traffic = traffic;
+        Ok(())
+    }
+
+    /// Batched lane swap (session preempt/restore).  Downloads every `out`
+    /// lane first, then uploads the `inn` slabs.
+    ///
+    /// Per-lane residency touches only the swapped lanes' buffers: O(lane)
+    /// per lane moved.  Monolithic residency stages through one full-cache
+    /// download + upload per *call* — O(batch) once, shared by all lanes in
+    /// the call (the traffic counters record that cost honestly).
+    pub fn swap_lanes(&mut self, client: &xla::PjRtClient, out: &[usize],
+                      inn: &[(usize, &LaneKv)]) -> Result<Vec<LaneKv>> {
+        let shape = self.shape;
+        check_swap_args(shape.batch, shape.lane_len(), out, inn)?;
+        self.traffic.swap_calls += 1;
+        self.traffic.lanes_out += out.len() as u64;
+        self.traffic.lanes_in += inn.len() as u64;
+        match &mut self.res {
+            Residency::PerLane { kc, vc } => {
+                let mut downloaded = Vec::with_capacity(out.len());
+                for &lane in out {
+                    let kv = LaneKv { k: to_host(&kc[lane])?,
+                                      v: to_host(&vc[lane])? };
+                    self.traffic.elems_out += kv.elems() as u64;
+                    downloaded.push(kv);
+                }
+                // stage every upload before installing any: a mid-call
+                // allocation failure must leave the device cache exactly as
+                // it was (the engine keeps sessions parked on error)
+                let dims = shape.lane_dims();
+                let mut staged = Vec::with_capacity(inn.len());
+                for (lane, kv) in inn {
+                    staged.push((
+                        *lane,
+                        client.buffer_from_host_buffer(&kv.k, &dims, None)?,
+                        client.buffer_from_host_buffer(&kv.v, &dims, None)?,
+                        kv.elems() as u64,
+                    ));
+                }
+                for (lane, k_buf, v_buf, elems) in staged {
+                    kc[lane] = k_buf;
+                    vc[lane] = v_buf;
+                    self.traffic.elems_in += elems;
+                }
+                Ok(downloaded)
+            }
+            Residency::Monolithic { kc, vc } => {
+                // staged host shadow: one full round-trip per call, with all
+                // lane gathers/scatters applied against the staging copy
+                let mut k_host = to_host(kc)?;
+                let mut v_host = to_host(vc)?;
+                self.traffic.elems_out += (k_host.len() + v_host.len()) as u64;
+                let (l, b, stride) = (shape.layers, shape.batch, shape.stride());
+                let downloaded = out
+                    .iter()
+                    .map(|&lane| LaneKv {
+                        k: gather_lane(&k_host, lane, l, b, stride),
+                        v: gather_lane(&v_host, lane, l, b, stride),
+                    })
+                    .collect();
+                if !inn.is_empty() {
+                    for (lane, kv) in inn {
+                        scatter_lane(&mut k_host, *lane, l, b, stride, &kv.k);
+                        scatter_lane(&mut v_host, *lane, l, b, stride, &kv.v);
+                    }
+                    // stage both uploads, then install (atomic on error)
+                    let dims = shape.full_dims();
+                    let k_buf =
+                        client.buffer_from_host_buffer(&k_host, &dims, None)?;
+                    let v_buf =
+                        client.buffer_from_host_buffer(&v_host, &dims, None)?;
+                    *kc = k_buf;
+                    *vc = v_buf;
+                    self.traffic.elems_in += (k_host.len() + v_host.len()) as u64;
+                }
+                Ok(downloaded)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(arena: &mut HostLaneArena, lane: usize, tag: f32) {
+        let kv = arena.lane_mut(lane);
+        kv.k.iter_mut().enumerate().for_each(|(i, x)| *x = tag + i as f32);
+        kv.v.iter_mut().enumerate().for_each(|(i, x)| *x = -tag - i as f32);
+    }
+
+    #[test]
+    fn arena_swap_roundtrip_and_traffic() {
+        let mut a = HostLaneArena::new(3, 8);
+        fill(&mut a, 0, 100.0);
+        fill(&mut a, 1, 200.0);
+        fill(&mut a, 2, 300.0);
+        let lane1 = a.lane(1).clone();
+        // download lanes 0 and 2 in one call
+        let down = a.swap_lanes(&[0, 2], &[]).unwrap();
+        assert_eq!(down.len(), 2);
+        assert_eq!(down[0].k[0], 100.0);
+        assert_eq!(down[1].k[0], 300.0);
+        assert_eq!(a.traffic.swap_calls, 1);
+        assert_eq!(a.traffic.lanes_out, 2);
+        assert_eq!(a.traffic.elems_out, 2 * 2 * 8);
+        assert_eq!(a.traffic.elems_in, 0);
+        // cross-upload: lane 0 gets lane 2's old content and vice versa
+        let back = a
+            .swap_lanes(&[], &[(0, &down[1]), (2, &down[0])])
+            .unwrap();
+        assert!(back.is_empty());
+        assert_eq!(a.lane(0).k[0], 300.0);
+        assert_eq!(a.lane(2).k[0], 100.0);
+        assert_eq!(a.lane(1), &lane1, "untouched lane changed");
+        assert_eq!(a.traffic.elems_in, 2 * 2 * 8);
+    }
+
+    #[test]
+    fn arena_mixed_swap_downloads_before_upload() {
+        let mut a = HostLaneArena::new(2, 4);
+        fill(&mut a, 0, 10.0);
+        let incoming = LaneKv { k: vec![7.0; 4], v: vec![8.0; 4] };
+        // lane 0 appears in both: must get its *old* content back
+        let down = a.swap_lanes(&[0], &[(0, &incoming)]).unwrap();
+        assert_eq!(down[0].k[0], 10.0);
+        assert_eq!(a.lane(0).k, vec![7.0; 4]);
+    }
+
+    #[test]
+    fn arena_rejects_bad_args() {
+        let mut a = HostLaneArena::new(2, 4);
+        assert!(a.swap_lanes(&[5], &[]).is_err());
+        let short = LaneKv { k: vec![0.0; 3], v: vec![0.0; 4] };
+        assert!(a.swap_lanes(&[], &[(0, &short)]).is_err());
+        let ok = LaneKv::zeros(4);
+        assert!(a.swap_lanes(&[], &[(5, &ok)]).is_err());
+    }
+
+    #[test]
+    fn gather_scatter_are_inverse() {
+        let (l, b, stride) = (2usize, 3usize, 4usize);
+        let cache: Vec<f32> = (0..l * b * stride).map(|i| i as f32).collect();
+        for lane in 0..b {
+            let slab = gather_lane(&cache, lane, l, b, stride);
+            assert_eq!(slab.len(), l * stride);
+            let mut copy = vec![0.0; cache.len()];
+            scatter_lane(&mut copy, lane, l, b, stride, &slab);
+            let back = gather_lane(&copy, lane, l, b, stride);
+            assert_eq!(back, slab);
+        }
+    }
+
+    #[test]
+    fn lane_kv_sizes() {
+        let kv = LaneKv::zeros(10);
+        assert_eq!(kv.elems(), 20);
+        assert_eq!(kv.host_bytes(), 80);
+        assert!(!kv.is_empty());
+        assert!(LaneKv::default().is_empty());
+    }
+}

@@ -9,6 +9,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::model_meta::ModelMeta;
+use crate::runtime::devcache::gather_lane;
 use crate::runtime::weights::{read_weights, HostTensor};
 
 const DECODE_OUTS: &[&str] = &["logits", "kc", "vc", "valid", "log_beta",
@@ -43,6 +44,12 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
             .with_context(|| format!("no {kind} artifact at (8, >=256)"))?;
         anyhow::ensure!(spec.m == 256, "golden expects m=256, found {}", spec.m);
         let exe = super::compile_hlo(&client, &meta.dir.join(&spec.file))?;
+        // goldens store caches monolithically ([L,B,H,M,dh]); per-lane
+        // artifacts take and return one [L,H,M,dh] slab per batch lane
+        let per_lane = spec.cache_layout == "per_lane";
+        let dims = meta.dims;
+        let stride = dims.hkv * spec.m * dims.dh;
+        let lane_shape = [dims.layers, dims.hkv, spec.m, dims.dh];
 
         let mut args: Vec<xla::PjRtBuffer> = Vec::new();
         for p in &meta.param_order {
@@ -55,18 +62,45 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
             let t = golden
                 .get(&format!("in.{name}"))
                 .with_context(|| format!("golden missing in.{name}"))?;
-            args.push(upload(&client, t, I32_INPUTS.contains(name))?);
+            if per_lane && (*name == "kc" || *name == "vc") {
+                for lane in 0..spec.b {
+                    let slab = gather_lane(&t.data, lane, dims.layers,
+                                           spec.b, stride);
+                    args.push(client.buffer_from_host_buffer(
+                        &slab, &lane_shape, None)?);
+                }
+            } else {
+                args.push(upload(&client, t, I32_INPUTS.contains(name))?);
+            }
         }
         let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
         let mut results = exe.execute_b(&arg_refs)?;
         let results = results.swap_remove(0);
-        anyhow::ensure!(results.len() == outs.len(),
+
+        // expected output tensors, with per-lane caches expanded to match
+        let mut expected: Vec<(String, Vec<f32>)> = Vec::new();
+        for name in outs {
+            let want = golden
+                .get(&format!("out.{name}"))
+                .with_context(|| format!("golden missing out.{name}"))?;
+            if per_lane && (*name == "kc" || *name == "vc") {
+                for lane in 0..spec.b {
+                    expected.push((
+                        format!("{name}[{lane}]"),
+                        gather_lane(&want.data, lane, dims.layers, spec.b,
+                                    stride),
+                    ));
+                }
+            } else {
+                expected.push((name.to_string(), want.data.clone()));
+            }
+        }
+        anyhow::ensure!(results.len() == expected.len(),
                         "{kind}: {} outputs, expected {}", results.len(),
-                        outs.len());
-        for (buf, name) in results.iter().zip(outs) {
+                        expected.len());
+        for (buf, (name, want)) in results.iter().zip(&expected) {
             let got = buf.to_literal_sync()?.to_vec::<f32>()?;
-            let want = &golden[&format!("out.{name}")];
-            let max_err = max_abs_err(&got, &want.data);
+            let max_err = max_abs_err(&got, want);
             let tol = 2e-3; // logit-scale f32 accumulation across the stack
             writeln!(report, "{kind:8} {name:12} n={:8} max|err|={max_err:.2e} {}",
                      got.len(), if max_err < tol { "OK" } else { "FAIL" })?;

@@ -2,9 +2,12 @@
 //! the ModelBackend abstraction the engine drives.
 
 pub mod backend;
+pub mod devcache;
 pub mod golden;
 pub mod weights;
 
 pub use backend::{compile_hlo, DecodeIn, DecodeOut, MockBackend, ModelBackend,
                   PjrtBackend, PrefillIn, PrefillOut};
+pub use devcache::{CacheShape, DeviceKvCache, HostLaneArena, LaneKv,
+                   SwapTraffic};
 pub use weights::{read_weights, HostTensor};

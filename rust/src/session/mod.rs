@@ -20,6 +20,7 @@
 use std::collections::BTreeMap;
 
 use crate::kvcache::{LaneCache, MirrorEntry};
+use crate::runtime::LaneKv;
 
 /// Everything needed to resume a conversation on any free lane.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,10 +30,10 @@ pub struct SessionSnapshot {
     pub cache: LaneCache,
     /// Retrieval-policy re-admission pool, per (layer * head).
     pub mirror: Vec<Vec<MirrorEntry>>,
-    /// Device K/V slab for the lane, flat `[L, H, M, dh]`.
-    pub k: Vec<f32>,
-    /// Device V slab for the lane, flat `[L, H, M, dh]`.
-    pub v: Vec<f32>,
+    /// The lane's K/V slabs, each flat `[L, H, M, dh]`.  Empty while the
+    /// session is parked on a lane (slabs still device-resident); filled by
+    /// the batched `swap_lanes` download at preemption.
+    pub kv: LaneKv,
     /// Tokens already fed through the model (== next position to feed).
     pub fed: usize,
     /// Full token stream so far: all turn prompts plus generated replies.
@@ -50,7 +51,7 @@ pub struct SessionSnapshot {
 impl SessionSnapshot {
     /// Approximate host bytes held by this snapshot (observability).
     pub fn host_bytes(&self) -> usize {
-        let slab = (self.k.len() + self.v.len()) * 4;
+        let slab = self.kv.host_bytes();
         let tables: usize = self
             .cache
             .heads
@@ -162,8 +163,8 @@ mod tests {
         SessionSnapshot {
             cache,
             mirror: vec![Vec::new(); 4],
-            k: vec![tag as f32; 2 * 2 * 6 * 4],
-            v: vec![tag as f32; 2 * 2 * 6 * 4],
+            kv: LaneKv { k: vec![tag as f32; 2 * 2 * 6 * 4],
+                         v: vec![tag as f32; 2 * 2 * 6 * 4] },
             fed: 3,
             history: vec![1, tag, tag + 1, tag + 2],
             turns: 1,

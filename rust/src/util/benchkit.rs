@@ -1,11 +1,15 @@
 //! Bench harness for `cargo bench` targets (criterion is unavailable
 //! offline; benches use `harness = false` and this module).
 //!
-//! Provides warmup + timed iterations with mean/p50/p95 reporting, plus a
-//! plain-text table renderer shared by the paper-table benches.
+//! Provides warmup + timed iterations with mean/p50/p95 reporting, a
+//! plain-text table renderer shared by the paper-table benches, and a
+//! machine-readable `BENCH_<name>.json` emitter so the perf trajectory is
+//! tracked across PRs.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::{OnlineStats, Percentiles};
 
 pub struct BenchResult {
@@ -21,6 +25,44 @@ impl BenchResult {
     pub fn throughput_per_s(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_us / 1e6)
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_us", num_or_null(self.mean_us)),
+            ("p50_us", num_or_null(self.p50_us)),
+            ("p95_us", num_or_null(self.p95_us)),
+            ("ci95_us", num_or_null(self.ci95_us)),
+        ])
+    }
+}
+
+/// JSON numbers cannot hold NaN/inf (single-iteration CIs produce them).
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::num(x) } else { Json::Null }
+}
+
+/// Timed results as a JSON array (one object per `BenchResult`).
+pub fn results_json(results: &[BenchResult]) -> Json {
+    Json::Arr(results.iter().map(BenchResult::to_json).collect())
+}
+
+/// Write `BENCH_<name>.json` into the working directory (repo root under
+/// `cargo bench`): the machine-readable perf record tracked across PRs.
+/// `payload` should be an object; a "bench" field with the name is added.
+pub fn write_bench_json(name: &str, payload: Json) -> std::io::Result<PathBuf> {
+    let wrapped = match payload {
+        Json::Obj(mut map) => {
+            map.insert("bench".into(), Json::str(name));
+            Json::Obj(map)
+        }
+        other => Json::obj(vec![("bench", Json::str(name)),
+                                ("results", other)]),
+    };
+    let path = PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{wrapped}\n"))?;
+    Ok(path)
 }
 
 /// Time `f` for `iters` iterations after `warmup` untimed runs.

@@ -1,5 +1,7 @@
 //! Streaming statistics and latency histograms for metrics + bench harness.
 
+use super::rng::Rng;
+
 /// Welford online mean/variance plus min/max.
 #[derive(Debug, Clone, Default)]
 pub struct OnlineStats {
@@ -67,6 +69,88 @@ impl Percentiles {
         self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = ((p / 100.0) * (self.xs.len() - 1) as f64).round() as usize;
         self.xs[rank.min(self.xs.len() - 1)]
+    }
+}
+
+/// Bounded streaming summary: Welford moments plus a fixed-size uniform
+/// reservoir (Vitter's Algorithm R) for approximate percentiles.  Memory is
+/// O(capacity) no matter how many samples are pushed — long-lived engines
+/// record one sample per event forever, so metric series must never grow
+/// with uptime.  The reservoir RNG is seeded deterministically: summaries
+/// are reproducible run-to-run.
+#[derive(Debug, Clone)]
+pub struct StreamSummary {
+    stats: OnlineStats,
+    sample: Vec<f64>,
+    cap: usize,
+    rng: Rng,
+}
+
+impl Default for StreamSummary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamSummary {
+    /// Default capacity comfortably bounds memory (4 KiB of f64) while
+    /// keeping p95/p99 estimates stable at serving sample rates.
+    pub fn new() -> Self {
+        Self::with_capacity(512)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        StreamSummary {
+            stats: OnlineStats::new(),
+            sample: Vec::with_capacity(cap.min(1024)),
+            cap,
+            rng: Rng::new(0x5eed_0f_5a_a7_1e5),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.stats.push(x);
+        if self.sample.len() < self.cap {
+            self.sample.push(x);
+        } else {
+            // Algorithm R: element n replaces a reservoir slot w.p. cap/n
+            let j = self.rng.below(self.stats.count() as usize);
+            if j < self.cap {
+                self.sample[j] = x;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+    pub fn std(&self) -> f64 {
+        self.stats.std()
+    }
+    pub fn min(&self) -> f64 {
+        self.stats.min()
+    }
+    pub fn max(&self) -> f64 {
+        self.stats.max()
+    }
+    pub fn ci95(&self) -> f64 {
+        self.stats.ci95()
+    }
+
+    /// Approximate percentile (exact until `capacity` samples, reservoir
+    /// estimate beyond); p in [0, 100], nearest-rank.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.sample.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.sample.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[rank.min(xs.len() - 1)]
     }
 }
 
@@ -144,6 +228,48 @@ mod tests {
         assert_eq!(p.pct(100.0), 100.0);
         assert!((p.pct(50.0) - 50.0).abs() <= 1.0);
         assert!((p.pct(95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn stream_summary_is_bounded_and_tracks_percentiles() {
+        let mut s = StreamSummary::with_capacity(64);
+        for i in 0..10_000 {
+            s.push((i % 1000) as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        // memory stays at capacity no matter how many samples arrived
+        assert!(s.sample.len() <= 64);
+        assert!((s.mean() - 499.5).abs() < 1.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 999.0);
+        // reservoir percentiles approximate the uniform distribution
+        let p50 = s.pct(50.0);
+        assert!((200.0..800.0).contains(&p50), "p50 {p50}");
+        assert!(s.pct(10.0) <= s.pct(90.0));
+    }
+
+    #[test]
+    fn stream_summary_exact_under_capacity() {
+        let mut s = StreamSummary::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.pct(0.0), 1.0);
+        assert_eq!(s.pct(100.0), 100.0);
+        assert!((s.pct(50.0) - 50.0).abs() <= 1.0);
+        assert!(StreamSummary::new().pct(50.0).is_nan());
+    }
+
+    #[test]
+    fn stream_summary_is_deterministic() {
+        let run = || {
+            let mut s = StreamSummary::with_capacity(32);
+            for i in 0..5_000 {
+                s.push((i * 7 % 997) as f64);
+            }
+            (s.pct(50.0), s.pct(95.0))
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -231,8 +231,7 @@ fn prop_session_swap_is_identity_on_lane_state() {
                      "slot tables diverged across swap ({policy})");
         prop_assert_eq!(s_eager.fed, s_lazy.fed);
         prop_assert_eq!(&s_eager.history, &s_lazy.history);
-        prop_assert_eq!(&s_eager.k, &s_lazy.k);
-        prop_assert_eq!(&s_eager.v, &s_lazy.v);
+        prop_assert_eq!(&s_eager.kv, &s_lazy.kv);
         Ok(())
     });
 }
@@ -295,8 +294,218 @@ fn prop_swapped_session_matches_flattened_run() {
                       uninterrupted run ({policy})");
         prop_assert_eq!(snap_s.fed, snap_f.fed);
         prop_assert_eq!(&snap_s.history, &snap_f.history);
-        prop_assert_eq!(&snap_s.k, &snap_f.k);
-        prop_assert_eq!(&snap_s.v, &snap_f.v);
+        prop_assert_eq!(&snap_s.kv, &snap_f.kv);
+        Ok(())
+    });
+}
+
+/// One decode step writing `tokens[lane]` into slot `slots[lane]` of every
+/// (layer, head) — fills lanes with distinct, reproducible content.
+fn seed_lanes(mb: &mut MockBackend, rng_tag: i32, slots: &[usize]) {
+    use trimkv::runtime::{DecodeIn, ModelBackend};
+    let d = mb.dims;
+    let (l, b, h, m) = (d.layers, mb.b, d.hkv, mb.m);
+    let tokens: Vec<i32> = (0..b as i32).map(|i| 100 + rng_tag + i).collect();
+    let pos = vec![0i32; b];
+    let valid = vec![0.0f32; l * b * h * m];
+    let mut ws = vec![0i32; l * b * h];
+    for li in 0..l {
+        for (lane, &slot) in slots.iter().enumerate() {
+            for hh in 0..h {
+                ws[(li * b + lane) * h + hh] = slot as i32;
+            }
+        }
+    }
+    mb.decode(&DecodeIn {
+        tokens: &tokens,
+        pos: &pos,
+        valid: &valid,
+        write_slot: &ws,
+        inject_flag: None,
+        inject_slot: None,
+        inject_k: None,
+        inject_v: None,
+        want_attn: false,
+        want_kv: true,
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_batched_swap_subsets_roundtrip() {
+    // swapping arbitrary lane subsets out and back in, in any interleaving
+    // of mixed swap_lanes calls, reproduces lane K/V bit-exactly — and the
+    // transfer counters account exactly O(lane) per lane moved
+    use trimkv::runtime::{LaneKv, ModelBackend};
+    forall("batched swap roundtrip", 25, |rng| {
+        let b = rng.range(2, 6);
+        let m = rng.range(6, 12);
+        let mut mb = MockBackend::new(b, m);
+        let slots: Vec<usize> = (0..b).map(|i| i % (m - 1)).collect();
+        seed_lanes(&mut mb, rng.below(50) as i32, &slots);
+        let all: Vec<usize> = (0..b).collect();
+        // host model of what every lane must contain
+        let mut expect: Vec<LaneKv> = mb.swap_lanes(&all, &[]).unwrap();
+        let lane_elems = 2 * mb.lane_kv_len() as u64;
+        for _ in 0..rng.range(2, 8) {
+            let n_out = rng.below(b + 1);
+            let out = rng.sample_indices(b, n_out);
+            let n_in = rng.below(b + 1);
+            let in_lanes = rng.sample_indices(b, n_in);
+            let slabs: Vec<LaneKv> = in_lanes
+                .iter()
+                .map(|_| expect[rng.below(b)].clone())
+                .collect();
+            let inn: Vec<(usize, &LaneKv)> =
+                in_lanes.iter().zip(&slabs).map(|(&l, s)| (l, s)).collect();
+            let before = mb.swap_traffic();
+            let down = mb.swap_lanes(&out, &inn).map_err(|e| format!("{e}"))?;
+            let after = mb.swap_traffic();
+            // downloads must reflect pre-call content, even for lanes that
+            // the same call also overwrites
+            for (i, &lane) in out.iter().enumerate() {
+                prop_assert_eq!(&down[i], &expect[lane]);
+            }
+            for (&lane, slab) in in_lanes.iter().zip(&slabs) {
+                expect[lane] = slab.clone();
+            }
+            prop_assert_eq!(after.swap_calls - before.swap_calls, 1);
+            prop_assert_eq!(after.elems_out - before.elems_out,
+                            out.len() as u64 * lane_elems);
+            prop_assert_eq!(after.elems_in - before.elems_in,
+                            inn.len() as u64 * lane_elems);
+        }
+        let fin = mb.swap_lanes(&all, &[]).unwrap();
+        for lane in 0..b {
+            prop_assert_eq!(&fin[lane], &expect[lane]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixed_swap_equals_sequential_pair() {
+    // one mixed swap_lanes(out, in) must equal swap_lanes(out, []) followed
+    // by swap_lanes([], in) — both in what it returns and in the state it
+    // leaves behind
+    use trimkv::runtime::{LaneKv, ModelBackend};
+    forall("mixed swap equivalence", 25, |rng| {
+        let b = rng.range(2, 6);
+        let m = rng.range(6, 10);
+        let tag = rng.below(50) as i32;
+        let slots: Vec<usize> = (0..b).map(|i| (i * 2) % (m - 1)).collect();
+        let mut mixed = MockBackend::new(b, m);
+        let mut seq = MockBackend::new(b, m);
+        seed_lanes(&mut mixed, tag, &slots);
+        seed_lanes(&mut seq, tag, &slots);
+        let n_out = rng.below(b + 1);
+        let out = rng.sample_indices(b, n_out);
+        let n_in = rng.below(b + 1);
+        let in_lanes = rng.sample_indices(b, n_in);
+        let fill = rng.f32();
+        let slab = LaneKv {
+            k: vec![fill; mixed.lane_kv_len()],
+            v: vec![-fill; mixed.lane_kv_len()],
+        };
+        let inn: Vec<(usize, &LaneKv)> =
+            in_lanes.iter().map(|&l| (l, &slab)).collect();
+        let d_mixed = mixed.swap_lanes(&out, &inn).map_err(|e| format!("{e}"))?;
+        let d_seq = seq.swap_lanes(&out, &[]).map_err(|e| format!("{e}"))?;
+        seq.swap_lanes(&[], &inn).map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(&d_mixed, &d_seq);
+        let all: Vec<usize> = (0..b).collect();
+        let f_mixed = mixed.swap_lanes(&all, &[]).unwrap();
+        let f_seq = seq.swap_lanes(&all, &[]).unwrap();
+        prop_assert_eq!(&f_mixed, &f_seq);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_interleaved_sessions_match_dedicated_engines() {
+    // serving S dialogues interleaved over 2 lanes — with all the parking,
+    // batched preemption and swap-in that forces — must leave every session
+    // in exactly the state it reaches on a dedicated single-lane engine:
+    // same slot tables, same history, and bit-identical K/V for every LIVE
+    // slot (dead slots are garbage by contract: they hold leftovers of
+    // whatever occupied the lane before, masked by the valid bits)
+    use trimkv::runtime::ModelBackend;
+    use trimkv::session::SessionSnapshot;
+    let live_content = |snap: &SessionSnapshot, m: usize, dh: usize| {
+        let mut out: Vec<f32> = Vec::new();
+        for (hi, head) in snap.cache.heads.iter().enumerate() {
+            for s in head.live_slots() {
+                let off = (hi * m + s) * dh;
+                out.extend_from_slice(&snap.kv.k[off..off + dh]);
+                out.extend_from_slice(&snap.kv.v[off..off + dh]);
+            }
+        }
+        out
+    };
+    forall("interleaved sessions", 10, |rng| {
+        let budget = rng.range(8, 16);
+        let names = ["trimkv", "snapkv", "streaming_llm"];
+        let policy = names[rng.below(names.len())];
+        let nsess = 3usize;
+        let nturns = rng.range(2, 4);
+        let dialogs: Vec<Vec<Vec<u32>>> = (0..nsess)
+            .map(|_| {
+                (0..nturns)
+                    .map(|_| {
+                        (0..rng.range(2, 12))
+                            .map(|_| 32 + rng.below(64) as u32)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk_cfg = |batch: usize| EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let mut shared =
+            Engine::new(MockBackend::new(2, budget + 20), mk_cfg(2), 2).unwrap();
+        for j in 0..nturns {
+            for (s, d) in dialogs.iter().enumerate() {
+                shared
+                    .submit(Request::new((j * nsess + s) as u64, d[j].clone(), 2)
+                            .with_session(format!("s{s}")))
+                    .map_err(|e| format!("{e}"))?;
+            }
+            shared.run_to_completion().map_err(|e| format!("{e}"))?;
+        }
+        prop_assert!(shared.metrics.preemptions > 0,
+                     "3 sessions over 2 lanes must preempt");
+        shared.flush_sessions().map_err(|e| format!("{e}"))?;
+        let dims = shared.backend().dims();
+        let (m, dh) = (budget + 20, dims.dh);
+        for (s, d) in dialogs.iter().enumerate() {
+            let mut solo =
+                Engine::new(MockBackend::new(1, budget + 20), mk_cfg(1), 2)
+                    .unwrap();
+            for (j, t) in d.iter().enumerate() {
+                solo.submit(Request::new(j as u64, t.clone(), 2)
+                            .with_session("x"))
+                    .map_err(|e| format!("{e}"))?;
+                solo.run_to_completion().map_err(|e| format!("{e}"))?;
+            }
+            solo.flush_sessions().map_err(|e| format!("{e}"))?;
+            let a = shared
+                .sessions()
+                .get(&format!("s{s}"))
+                .ok_or("missing shared snapshot")?;
+            let b = solo.sessions().get("x").ok_or("missing solo snapshot")?;
+            prop_assert!(a.cache == b.cache,
+                         "slot tables diverged ({policy}, session {s})");
+            prop_assert_eq!(a.fed, b.fed);
+            prop_assert_eq!(&a.history, &b.history);
+            prop_assert!(!live_content(a, m, dh).is_empty(),
+                         "live-slot comparison must cover something");
+            prop_assert_eq!(live_content(a, m, dh), live_content(b, m, dh));
+        }
         Ok(())
     });
 }
