@@ -46,8 +46,9 @@ from jax._src.lib import xla_client as xc
 from . import tasks
 from . import vocab as V
 from .model import (CONFIG, decode_fn, decode_fn_lanes, gate_names,
-                    init_gates, param_names, prefill_fn, prefill_fn_lanes,
-                    save_weights_bin)
+                    init_gates, init_params, param_names, prefill_fn,
+                    prefill_fn_lanes, save_weights_bin, step_fn_mixed,
+                    step_fn_mixed_lanes)
 
 CHUNK = 64  # prefill chunk length C
 
@@ -55,6 +56,9 @@ CHUNK = 64  # prefill chunk length C
 # M >= its configured budget, and B by its batching mode.
 DECODE_VARIANTS = [(1, 256), (1, 768), (8, 128), (8, 256), (8, 768)]
 PREFILL_VARIANTS = [(1, 256), (1, 768), (8, 128), (8, 256), (8, 768)]
+# mixed-tick graphs (decode + chunk-fill fused per lane); b=1 has no
+# prefill/decode contention, so only batched variants are exported
+MIXED_VARIANTS = [(8, 128), (8, 256), (8, 768)]
 LIN_VARIANTS = [(8, 256)]  # gate-architecture ablation (Fig. 9)
 
 
@@ -113,10 +117,29 @@ def prefill_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
     return sp
 
 
+def mixed_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
+    """Like prefill, plus the per-lane `mode` operand (1.0 = decode lane)
+    inserted after in_mask (the runtime's step_mixed operand contract)."""
+    L, H, dh = cfg.layers, cfg.hkv, cfg.dh
+    sp = dict(
+        tokens=spec((b, c), jnp.int32),
+        pos=spec((b, c), jnp.int32),
+        in_mask=spec((b, c)),
+        mode=spec((b,)),
+    )
+    sp.update(cache_specs(cfg, b, m, cache_layout))
+    sp.update(
+        valid=spec((L, b, H, m)),
+        write_slots=spec((L, b, H, c), jnp.int32),
+    )
+    return sp
+
+
 DECODE_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn",
                     "k_new", "v_new"]
 PREFILL_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn_slots",
                      "attn_chunk", "k_chunk", "v_chunk"]
+MIXED_OUT_ORDER = PREFILL_OUT_ORDER  # same tuple; attn_slots is mode-fused
 
 
 def build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout):
@@ -124,21 +147,28 @@ def build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout):
 
     In the per_lane layout the runtime cache operands are B kc buffers then
     B vc buffers (each [L,Hkv,M,dh]); the output tuple expands the same
-    way, in the DECODE/PREFILL_OUT_ORDER position of kc/vc."""
+    way, in the DECODE/PREFILL/MIXED_OUT_ORDER position of kc/vc."""
     np_, ng = len(pnames), len(gnames)
+    # leading runtime operands before the caches, per kind:
+    #   decode  (token, pos) | prefill (tokens, pos, in_mask)
+    #   mixed   (tokens, pos, in_mask, mode)
+    lead_n = {"decode": 2, "prefill": 3, "mixed": 4}[kind]
 
     def fn(*args):
         params = dict(zip(pnames, args[:np_]))
         gates = dict(zip(gnames, args[np_:np_ + ng]))
         rt = args[np_ + ng:]
         if cache_layout == "per_lane":
-            lead = 2 if kind == "decode" else 3  # (token[s], pos[, in_mask])
-            head, rest = rt[:lead], rt[lead:]
+            head, rest = rt[:lead_n], rt[lead_n:]
             kcs, vcs, tail = rest[:b], rest[b:2 * b], rest[2 * b:]
             if kind == "decode":
                 out = decode_fn_lanes(params, gates, *head, kcs, vcs, *tail,
                                       cfg=cfg, attn_impl=attn_impl)
                 names = DECODE_OUT_ORDER
+            elif kind == "mixed":
+                out = step_fn_mixed_lanes(params, gates, *head, kcs, vcs,
+                                          *tail, cfg=cfg)
+                names = MIXED_OUT_ORDER
             else:
                 out = prefill_fn_lanes(params, gates, *head, kcs, vcs, *tail,
                                        cfg=cfg)
@@ -153,6 +183,9 @@ def build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout):
         if kind == "decode":
             out = decode_fn(params, gates, *rt, cfg=cfg, attn_impl=attn_impl)
             return tuple(out[k] for k in DECODE_OUT_ORDER)
+        if kind == "mixed":
+            out = step_fn_mixed(params, gates, *rt, cfg=cfg)
+            return tuple(out[k] for k in MIXED_OUT_ORDER)
         out = prefill_fn(params, gates, *rt, cfg=cfg)
         return tuple(out[k] for k in PREFILL_OUT_ORDER)
 
@@ -166,8 +199,11 @@ def lower_variant(kind, cfg, b, m, params_np, gates_np, linear, attn_impl,
     fn = build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout)
     pspecs = [spec(params_np[n].shape) for n in pnames]
     gspecs = [spec(gates_np[n].shape) for n in gnames]
-    rspecs = (decode_specs(cfg, b, m, cache_layout) if kind == "decode"
-              else prefill_specs(cfg, b, m, cache_layout=cache_layout))
+    rspecs = {
+        "decode": lambda: decode_specs(cfg, b, m, cache_layout),
+        "prefill": lambda: prefill_specs(cfg, b, m, cache_layout=cache_layout),
+        "mixed": lambda: mixed_specs(cfg, b, m, cache_layout=cache_layout),
+    }[kind]()
     lowered = jax.jit(fn).lower(*pspecs, *gspecs, *rspecs.values())
     return to_hlo_text(lowered), list(rspecs.keys())
 
@@ -211,6 +247,22 @@ def export_goldens(out, cfg, params, gates, b, m):
                  for k in PREFILL_OUT_ORDER})
     save_weights_bin(f"{out}/golden_prefill.bin", blob)
 
+    # mixed tick: first half of the lanes decode one token (1-token chunks,
+    # padding pointed at the trash slot m-1 as the engine does), second half
+    # prefill a full chunk
+    nd = b // 2
+    mode = jnp.concatenate([jnp.ones((nd,)), jnp.zeros((b - nd,))])
+    mtoks = toks.at[:nd, 1:].set(0)
+    mmask = in_mask.at[:nd, 1:].set(0.0)
+    mws = ws.at[:, :nd, :, 1:].set(m - 1)
+    mins = dict(tokens=mtoks, pos=posc, in_mask=mmask, mode=mode, kc=kc,
+                vc=vc, valid=valid, write_slots=mws)
+    mouts = step_fn_mixed(params, gates, *mins.values(), cfg=cfg)
+    blob = {f"in.{k}": np.asarray(v, np.float32) for k, v in mins.items()}
+    blob.update({f"out.{k}": np.asarray(mouts[k], np.float32)
+                 for k in MIXED_OUT_ORDER})
+    save_weights_bin(f"{out}/golden_mixed.bin", blob)
+
 
 def export_episodes(out, n_per: int = 6):
     rng = random.Random(2024)
@@ -235,38 +287,58 @@ def main() -> None:
                     choices=["per_lane", "monolithic", "both"],
                     help="kc/vc operand layout: per-lane buffers (O(lane) "
                          "session swap), legacy monolithic pair, or both")
+    ap.add_argument("--smoke", action="store_true",
+                    help="initialize random params/gates instead of loading "
+                         "trained checkpoints (CI export smoke test; the "
+                         "graphs and goldens stay numerically consistent, "
+                         "only untrained)")
     args = ap.parse_args()
     out = args.out
     cfg = CONFIG
     t0 = time.time()
 
-    params_np = dict(np.load(f"{out}/base.npz"))
-    params = {k: jnp.asarray(v) for k, v in params_np.items()}
-
-    # all trained gate variants -> .bin; 'default' also drives the goldens
     import glob
     import os
-    gate_files = sorted(glob.glob(f"{out}/gates_*.npz"))
-    if not gate_files:
-        raise SystemExit("no gates_*.npz found; run train_gates first")
-    gates_np = None
-    for gf in gate_files:
-        name = os.path.basename(gf)[len("gates_"):-len(".npz")]
-        g = dict(np.load(gf))
-        save_weights_bin(f"{out}/gates_{name}.bin", g)
-        if name == "default":
-            gates_np = g
-    if gates_np is None:
-        gates_np = dict(np.load(gate_files[0]))
+    os.makedirs(out, exist_ok=True)
+    if args.smoke:
+        # CI smoke path: no training run available — random weights keep
+        # every downstream contract (shapes, operand order, goldens) intact
+        params_np = {k: np.asarray(v) for k, v in
+                     init_params(cfg, jax.random.PRNGKey(0)).items()}
+        gates_np = {k: np.asarray(v) for k, v in
+                    init_gates(cfg, jax.random.PRNGKey(1)).items()}
+        save_weights_bin(f"{out}/gates_default.bin", gates_np)
+        gate_files = []
+        gate_variants = ["default"]
+    else:
+        params_np = dict(np.load(f"{out}/base.npz"))
+        # all trained gate variants -> .bin; 'default' drives the goldens
+        gate_files = sorted(glob.glob(f"{out}/gates_*.npz"))
+        if not gate_files:
+            raise SystemExit("no gates_*.npz found; run train_gates first")
+        gates_np = None
+        for gf in gate_files:
+            name = os.path.basename(gf)[len("gates_"):-len(".npz")]
+            g = dict(np.load(gf))
+            save_weights_bin(f"{out}/gates_{name}.bin", g)
+            if name == "default":
+                gates_np = g
+        if gates_np is None:
+            gates_np = dict(np.load(gate_files[0]))
+        gate_variants = [os.path.basename(f)[len("gates_"):-len(".npz")]
+                         for f in gate_files]
+    params = {k: jnp.asarray(v) for k, v in params_np.items()}
     gates = {k: jnp.asarray(v) for k, v in gates_np.items()}
     save_weights_bin(f"{out}/weights.bin", params_np)
 
     dec_vars = [(8, 256)] if args.quick else DECODE_VARIANTS
     pre_vars = [(8, 256)] if args.quick else PREFILL_VARIANTS
+    mix_vars = [(8, 256)] if args.quick else MIXED_VARIANTS
     layouts = (["per_lane", "monolithic"] if args.cache_layout == "both"
                else [args.cache_layout])
     artifacts = []
-    for kind, variants in (("decode", dec_vars), ("prefill", pre_vars)):
+    for kind, variants in (("decode", dec_vars), ("prefill", pre_vars),
+                           ("mixed", mix_vars)):
         for b, m in variants:
             for layout in layouts:
                 suffix = "_pl" if layout == "per_lane" else ""
@@ -277,7 +349,7 @@ def main() -> None:
                 with open(f"{out}/{fname}", "w") as f:
                     f.write(hlo)
                 artifacts.append({"kind": kind, "b": b, "m": m,
-                                  "c": CHUNK if kind == "prefill" else 1,
+                                  "c": 1 if kind == "decode" else CHUNK,
                                   "file": fname, "gate_arch": "mlp",
                                   "cache_layout": layout,
                                   "runtime_inputs": rt_order})
@@ -318,8 +390,8 @@ def main() -> None:
                               for n in gate_names(cfg, linear=True)],
         "decode_outputs": DECODE_OUT_ORDER,
         "prefill_outputs": PREFILL_OUT_ORDER,
-        "gate_variants": [os.path.basename(f)[len("gates_"):-len(".npz")]
-                          for f in gate_files],
+        "mixed_outputs": MIXED_OUT_ORDER,
+        "gate_variants": gate_variants,
         "artifacts": artifacts,
     }
     with open(f"{out}/meta.json", "w") as f:

@@ -412,6 +412,36 @@ def prefill_fn(params: dict, gates: dict, tokens: jax.Array, pos: jax.Array,
     }
 
 
+def step_fn_mixed(params, gates, tokens, pos, in_mask, mode, kc, vc,
+                  valid, write_slots, cfg: ModelConfig = CONFIG):
+    """One fused *mixed tick*: every lane advances in a single graph call —
+    decoding lanes by one token, mid-prefill lanes by a budgeted chunk — so
+    a long prompt admission never stalls the decode stream (TRIM-KV scores
+    tokens at creation time, so fusing the phases changes no eviction
+    semantics; Sarathi-style stall-free batching).
+
+    The chunk formulation subsumes decode: a decoding lane feeds a 1-token
+    chunk (`in_mask` = [1, 0, ...]), which attends to its live resident
+    slots plus itself — exactly `decode_fn`'s provisional-write semantics.
+
+    tokens/pos/in_mask  [B,C] as in `prefill_fn`; decode lanes use column 0
+    mode                [B] f32, 1.0 = decode lane, 0.0 = chunk-fill lane
+    kc/vc/valid/write_slots  as in `prefill_fn`
+
+    Returns the `prefill_fn` dict with one change: for decode lanes the
+    token's self-attention mass (attn_chunk[..., 0]) is folded into its
+    write slot of `attn_slots`, so the engine consumes one [M] row per
+    decode lane exactly as it consumes `decode_fn`'s `attn` output."""
+    out = prefill_fn(params, gates, tokens, pos, in_mask, kc, vc, valid,
+                     write_slots, cfg=cfg)
+    m = kc.shape[3]
+    self_slot = write_slots[:, :, :, 0]                     # [L,B,Hkv]
+    oh = jax.nn.one_hot(self_slot, m, dtype=out["attn_slots"].dtype)
+    self_mass = out["attn_chunk"][:, :, :, 0] * mode[None, :, None]
+    out["attn_slots"] = out["attn_slots"] + oh * self_mass[..., None]
+    return out
+
+
 def decode_fn_lanes(params, gates, token, pos, kc_lanes, vc_lanes, valid,
                     write_slot, inject_flag, inject_slot, inject_k, inject_v,
                     cfg: ModelConfig = CONFIG, attn_impl: str = "pallas"):
@@ -440,6 +470,21 @@ def prefill_fn_lanes(params, gates, tokens, pos, in_mask, kc_lanes, vc_lanes,
     vc = jnp.stack(list(vc_lanes), axis=1)
     out = prefill_fn(params, gates, tokens, pos, in_mask, kc, vc, valid,
                      write_slots, cfg=cfg)
+    b = tokens.shape[0]
+    out["kc"] = [out["kc"][:, i] for i in range(b)]
+    out["vc"] = [out["vc"][:, i] for i in range(b)]
+    return out
+
+
+def step_fn_mixed_lanes(params, gates, tokens, pos, in_mask, mode, kc_lanes,
+                        vc_lanes, valid, write_slots,
+                        cfg: ModelConfig = CONFIG):
+    """Per-lane cache-residency variant of `step_fn_mixed`; see
+    `decode_fn_lanes` for the layout contract."""
+    kc = jnp.stack(list(kc_lanes), axis=1)
+    vc = jnp.stack(list(vc_lanes), axis=1)
+    out = step_fn_mixed(params, gates, tokens, pos, in_mask, mode, kc, vc,
+                        valid, write_slots, cfg=cfg)
     b = tokens.shape[0]
     out["kc"] = [out["kc"][:, i] for i in range(b)]
     out["vc"] = [out["vc"][:, i] for i in range(b)]

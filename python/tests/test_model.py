@@ -162,6 +162,109 @@ def test_eviction_hole_is_masked(params, gates):
     assert jnp.abs(out1["logits"] - out3["logits"]).max() > 1e-4
 
 
+def test_mixed_step_decode_lane_matches_decode_fn(params, gates):
+    """A decode lane of the fused mixed tick (1-token chunk, mode=1) equals
+    `decode_fn`: logits, gate scores, k/v of the new token, and the fused
+    attn_slots row (self mass folded into the write slot)."""
+    B, C, Msl = 2, 8, 32
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    n_live = 6
+    kc = jax.random.normal(ks[0], (L, B, H, Msl, dh)) * 0.3
+    vc = jax.random.normal(ks[1], (L, B, H, Msl, dh)) * 0.3
+    valid = jnp.zeros((L, B, H, Msl)).at[..., :n_live].set(1.0)
+    toks = jax.random.randint(ks[2], (B, C), 0, CFG.vocab)
+
+    # mixed call: lane 0 decodes token toks[0,0]; lane 1 prefills a chunk
+    mode = jnp.array([1.0, 0.0])
+    in_mask = jnp.ones((B, C)).at[0, 1:].set(0.0)
+    pos = jnp.broadcast_to(jnp.arange(n_live, n_live + C)[None],
+                           (B, C)).astype(jnp.int32)
+    ws = jnp.broadcast_to(jnp.arange(n_live, n_live + C)[None, None, None],
+                          (L, B, H, C)).astype(jnp.int32)
+    ws = ws.at[:, 0, :, 1:].set(Msl - 1)  # decode-lane padding -> trash
+    mixed = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode,
+                            kc, vc, valid, ws, cfg=CFG)
+
+    # reference decode step over the same caches (lane 1's token ignored)
+    dec = M.decode_fn(params, gates, toks[:, 0],
+                      jnp.full((B,), n_live, jnp.int32), kc, vc, valid,
+                      jnp.full((L, B, H), n_live, jnp.int32),
+                      jnp.zeros((L, B, H)), jnp.zeros((L, B, H), jnp.int32),
+                      jnp.zeros((L, B, H, dh)), jnp.zeros((L, B, H, dh)),
+                      cfg=CFG)
+    assert jnp.abs(mixed["logits"][0, 0] - dec["logits"][0]).max() < 2e-3
+    assert jnp.abs(mixed["log_beta"][:, 0, :, 0]
+                   - dec["log_beta"][:, 0]).max() < 1e-5
+    assert jnp.abs(mixed["k_chunk"][:, 0, :, 0] - dec["k_new"][:, 0]).max() < 1e-5
+    assert jnp.abs(mixed["v_chunk"][:, 0, :, 0] - dec["v_new"][:, 0]).max() < 1e-5
+    # the fused attention row: residents + the new token at its write slot
+    assert jnp.abs(mixed["attn_slots"][:, 0] - dec["attn"][:, 0]).max() < 1e-4
+    # decode-lane cache state advanced identically (pads only touched trash)
+    assert jnp.abs(mixed["kc"][:, 0, :, :Msl - 1]
+                   - dec["kc"][:, 0, :, :Msl - 1]).max() < 1e-5
+    assert jnp.abs(mixed["valid"][:, 0, :, :Msl - 1]
+                   - dec["valid"][:, 0, :, :Msl - 1]).max() == 0.0
+
+
+def test_mixed_step_chunk_lane_matches_prefill_fn(params, gates):
+    """A chunk-fill lane of the mixed tick is bit-compatible with
+    `prefill_fn` on the same inputs (mode only affects decode lanes)."""
+    B, C, Msl = 2, 8, 32
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    n_live = 5
+    kc = jax.random.normal(ks[0], (L, B, H, Msl, dh)) * 0.3
+    vc = jax.random.normal(ks[1], (L, B, H, Msl, dh)) * 0.3
+    valid = jnp.zeros((L, B, H, Msl)).at[..., :n_live].set(1.0)
+    toks = jax.random.randint(ks[2], (B, C), 0, CFG.vocab)
+    in_mask = jnp.ones((B, C)).at[0, 1:].set(0.0)
+    pos = jnp.broadcast_to(jnp.arange(n_live, n_live + C)[None],
+                           (B, C)).astype(jnp.int32)
+    ws = jnp.broadcast_to(jnp.arange(n_live, n_live + C)[None, None, None],
+                          (L, B, H, C)).astype(jnp.int32)
+    ws = ws.at[:, 0, :, 1:].set(Msl - 1)
+    mode = jnp.array([1.0, 0.0])
+    mixed = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode,
+                            kc, vc, valid, ws, cfg=CFG)
+    pre = M.prefill_fn(params, gates, toks, pos, in_mask, kc, vc, valid,
+                       ws, cfg=CFG)
+    # chunk lane (lane 1, mode=0): every output identical to prefill_fn
+    assert jnp.abs(mixed["logits"][1] - pre["logits"][1]).max() == 0.0
+    assert jnp.abs(mixed["attn_slots"][:, 1] - pre["attn_slots"][:, 1]).max() == 0.0
+    assert jnp.abs(mixed["kc"][:, 1] - pre["kc"][:, 1]).max() == 0.0
+    assert jnp.abs(mixed["valid"][:, 1] - pre["valid"][:, 1]).max() == 0.0
+
+
+def test_mixed_lanes_variant_matches_monolithic(params, gates):
+    """The per-lane cache layout of the mixed graph returns the same
+    numbers as the monolithic formulation, split per lane."""
+    B, C, Msl = 2, 4, 16
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    kc = jax.random.normal(ks[0], (L, B, H, Msl, dh)) * 0.3
+    vc = jax.random.normal(ks[1], (L, B, H, Msl, dh)) * 0.3
+    valid = jnp.zeros((L, B, H, Msl)).at[..., :3].set(1.0)
+    toks = jax.random.randint(ks[2], (B, C), 0, CFG.vocab)
+    in_mask = jnp.ones((B, C)).at[0, 1:].set(0.0)
+    pos = jnp.broadcast_to(jnp.arange(3, 3 + C)[None], (B, C)).astype(jnp.int32)
+    ws = jnp.broadcast_to(jnp.arange(3, 3 + C)[None, None, None],
+                          (L, B, H, C)).astype(jnp.int32)
+    ws = ws.at[:, 0, :, 1:].set(Msl - 1)
+    mode = jnp.array([1.0, 0.0])
+    mono = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode, kc, vc,
+                           valid, ws, cfg=CFG)
+    kcs = [kc[:, i] for i in range(B)]
+    vcs = [vc[:, i] for i in range(B)]
+    lanes = M.step_fn_mixed_lanes(params, gates, toks, pos, in_mask, mode,
+                                  kcs, vcs, valid, ws, cfg=CFG)
+    assert jnp.abs(lanes["logits"] - mono["logits"]).max() < 1e-6
+    for i in range(B):
+        assert jnp.abs(lanes["kc"][i] - mono["kc"][:, i]).max() < 1e-6
+        assert jnp.abs(lanes["vc"][i] - mono["vc"][:, i]).max() < 1e-6
+
+
 def test_weights_bin_roundtrip(tmp_path, params):
     arrays = {k: np.asarray(v) for k, v in params.items()}
     p = str(tmp_path / "w.bin")

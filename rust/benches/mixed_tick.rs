@@ -1,0 +1,168 @@
+//! Mixed-tick scheduler bench: decode latency under a long-prompt
+//! admission, alternating vs fused scheduling.
+//!
+//! The serving regime the ROADMAP north-star targets: a decode-heavy batch
+//! (7 of 8 lanes streaming tokens) takes one 256-token prompt.  The
+//! alternating scheduler must pick a phase per tick — `prefill_priority`
+//! stalls every decoder for the whole prefill, `!prefill_priority` starves
+//! the prompt until the decoders drain — while the mixed scheduler fuses a
+//! decode token for every streaming lane *and* a budgeted prefill chunk
+//! into each backend step.  Host-side mechanics on the MockBackend, so the
+//! numbers isolate scheduling, not model FLOPs; the tick-denominated
+//! metrics (tokens per tick, TTFT in ticks) are fully deterministic and
+//! machine-independent — those are what CI gates on.
+//!
+//! Emits `BENCH_mixed_tick.json` (util::benchkit) with a `regress_on`
+//! block for the CI bench-smoke job.
+//!
+//!   cargo bench --bench mixed_tick [-- --quick]
+
+use std::time::Instant;
+
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::runtime::MockBackend;
+use trimkv::scheduler::Request;
+use trimkv::util::benchkit::{bench, gate, iters, report, results_json,
+                             write_bench_json, BenchResult};
+use trimkv::util::json::Json;
+
+const BATCH: usize = 8;
+const BUDGET: usize = 48;
+const DECODERS: u64 = 7;
+const LONG_PROMPT: usize = 256; // 16 chunks of the mock's c = 16
+
+struct ModeStats {
+    name: &'static str,
+    /// ticks from the long admission until its prompt is fully prefilled
+    /// (== its TTFT in ticks; the first sample lands on the last one)
+    ttft_ticks: u64,
+    ttft_ms: f64,
+    /// tokens the 7 streaming lanes decoded inside that window
+    decode_tokens_during_prefill: u64,
+    /// the stall-free criterion: 7.0 means every decoder progressed every
+    /// tick of the prefill window
+    decode_tok_per_tick_under_prefill: f64,
+    /// worst tick gap between any lane's consecutive tokens
+    tbt_ticks_max: f64,
+    wall_ms: f64,
+}
+
+fn run_mode(name: &'static str, mixed: bool, priority: bool,
+            tick_budget: usize) -> ModeStats {
+    let cfg = EngineConfig {
+        policy: "trimkv".into(),
+        budget: BUDGET,
+        batch: BATCH,
+        max_new_tokens: 64,
+        chunked_prefill: true,
+        mixed_ticks: mixed,
+        prefill_priority: priority,
+        tick_token_budget: tick_budget,
+        ..Default::default()
+    };
+    let mut e = Engine::new(MockBackend::new(BATCH, BUDGET + 20), cfg, 2)
+        .expect("engine");
+    for i in 0..DECODERS {
+        e.submit(Request::new(i, vec![1, 40 + i as u32], 64)).unwrap();
+    }
+    // reach steady decode on the streaming lanes
+    while e.metrics.tokens_decoded < DECODERS {
+        e.tick().unwrap();
+    }
+    let long: Vec<u32> = (0..LONG_PROMPT).map(|i| 32 + (i % 64) as u32).collect();
+    e.submit(Request::new(100, long, 4)).unwrap();
+    let total_prefill = DECODERS as u64 * 2 + LONG_PROMPT as u64;
+    let (ticks0, dec0) = (e.ticks(), e.metrics.tokens_decoded);
+    let t0 = Instant::now();
+    while e.metrics.tokens_prefilled < total_prefill {
+        e.tick().unwrap();
+    }
+    let window_ticks = e.ticks() - ticks0;
+    // the long lane samples its first token on the window's last tick;
+    // everything else decoded in the window came from the streaming lanes
+    let dec_tokens = (e.metrics.tokens_decoded - dec0).saturating_sub(1);
+    let rs = e.run_to_completion().unwrap();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ttft_ms = rs
+        .iter()
+        .find(|r| r.id == 100)
+        .map(|r| r.ttft_us / 1e3)
+        .expect("long request response");
+    ModeStats {
+        name,
+        ttft_ticks: window_ticks,
+        ttft_ms,
+        decode_tokens_during_prefill: dec_tokens,
+        decode_tok_per_tick_under_prefill: dec_tokens as f64
+            / window_ticks.max(1) as f64,
+        tbt_ticks_max: e.metrics.tbt_ticks.max(),
+        wall_ms,
+    }
+}
+
+fn main() {
+    let modes: Vec<ModeStats> = vec![
+        run_mode("mixed", true, false, 0),
+        // tight budget: 7 decoders reserved, 3 prompt tokens per tick —
+        // prefill stretches out, decode throughput is untouched
+        run_mode("mixed_budget10", true, false, 10),
+        run_mode("alternating_prefill_priority", false, true, 0),
+        run_mode("alternating_decode_first", false, false, 0),
+    ];
+    println!("=== decode progress under a {LONG_PROMPT}-token admission \
+              ({DECODERS} streaming lanes, mock backend) ===");
+    println!("{:<30} {:>10} {:>10} {:>12} {:>12} {:>8}",
+             "mode", "ttft_tk", "ttft_ms", "dec_in_win", "dec/tick", "gap_max");
+    for s in &modes {
+        println!("{:<30} {:>10} {:>10.2} {:>12} {:>12.2} {:>8.0}",
+                 s.name, s.ttft_ticks, s.ttft_ms,
+                 s.decode_tokens_during_prefill,
+                 s.decode_tok_per_tick_under_prefill, s.tbt_ticks_max);
+    }
+    let mixed = &modes[0];
+    assert_eq!(mixed.decode_tok_per_tick_under_prefill, DECODERS as f64,
+               "mixed scheduling must keep every decoder moving every tick");
+    assert_eq!(mixed.tbt_ticks_max, 1.0, "mixed tick stalled a decoder");
+
+    // wall-time distribution of the full contended workload per scheduler
+    let (warmup, n) = iters(3, 15);
+    let mut results: Vec<BenchResult> = Vec::new();
+    for (name, mixed_on, prio) in [
+        ("workload/mixed", true, false),
+        ("workload/alternating", false, true),
+    ] {
+        results.push(bench(name, warmup, n, || {
+            std::hint::black_box(run_mode("timed", mixed_on, prio, 0));
+        }));
+    }
+    report(&results);
+
+    let payload = Json::obj(vec![
+        ("batch", Json::num(BATCH as f64)),
+        ("budget", Json::num(BUDGET as f64)),
+        ("long_prompt", Json::num(LONG_PROMPT as f64)),
+        ("results", results_json(&results)),
+        ("modes", Json::Arr(modes.iter().map(|s| Json::obj(vec![
+            ("mode", Json::str(s.name)),
+            ("ttft_ticks", Json::num(s.ttft_ticks as f64)),
+            ("ttft_ms", Json::num(s.ttft_ms)),
+            ("decode_tokens_during_prefill",
+             Json::num(s.decode_tokens_during_prefill as f64)),
+            ("decode_tok_per_tick_under_prefill",
+             Json::num(s.decode_tok_per_tick_under_prefill)),
+            ("tbt_ticks_max", Json::num(s.tbt_ticks_max)),
+            ("wall_ms", Json::num(s.wall_ms)),
+        ])).collect())),
+        // CI gate: tick-denominated metrics are deterministic; the wall
+        // time gate catches engine-side slowdowns of the fused path
+        ("regress_on", Json::obj(vec![
+            ("mixed_decode_tok_per_tick_under_prefill",
+             gate(mixed.decode_tok_per_tick_under_prefill, true)),
+            ("mixed_ttft_ticks", gate(mixed.ttft_ticks as f64, false)),
+            ("mixed_workload_mean_us", gate(results[0].mean_us, false)),
+        ])),
+    ]);
+    let path = write_bench_json("mixed_tick", payload).expect("bench json");
+    println!("wrote {}", path.display());
+}

@@ -16,8 +16,8 @@ use trimkv::config::EngineConfig;
 use trimkv::engine::Engine;
 use trimkv::runtime::{LaneKv, MockBackend, ModelBackend};
 use trimkv::scheduler::Request;
-use trimkv::util::benchkit::{bench, report, results_json, write_bench_json,
-                             BenchResult};
+use trimkv::util::benchkit::{bench, gate, iters, report, results_json,
+                             write_bench_json, BenchResult};
 use trimkv::util::json::Json;
 
 fn engine(budget: usize, swap_policy: &str) -> Engine<MockBackend> {
@@ -50,8 +50,9 @@ fn main() {
         let turn: Vec<u32> = vec![40, 41];
 
         // (a) session turn: swap-in + ~3 decode ticks + swap-out
+        let (w, n) = iters(5, 50);
         let mut id = 1u64;
-        let r = bench(&format!("session_turn/ctx={ctx}"), 5, 50, || {
+        let r = bench(&format!("session_turn/ctx={ctx}"), w, n, || {
             // reset to the template so history does not grow across iters
             e.sessions_mut().insert("bench".into(), template.clone());
             e.submit(Request::new(id, turn.clone(), 1).with_session("bench"))
@@ -67,7 +68,8 @@ fn main() {
         e2.submit(Request::new(0, history_prompt(ctx), 1).with_session("rt"))
             .unwrap();
         e2.run_to_completion().unwrap();
-        let r = bench(&format!("swap_roundtrip/ctx={ctx}"), 5, 100, || {
+        let (w, n) = iters(5, 100);
+        let r = bench(&format!("swap_roundtrip/ctx={ctx}"), w, n, || {
             e2.flush_sessions().unwrap(); // parked -> host (swap-out)
             // next turn swaps back in and re-parks
             e2.submit(Request::new(99, vec![40], 1).with_session("rt"))
@@ -83,7 +85,8 @@ fn main() {
             p.extend(&turn);
             p
         };
-        let r = bench(&format!("reprefill_turn/ctx={ctx}"), 2, 10, || {
+        let (w, n) = iters(2, 10);
+        let r = bench(&format!("reprefill_turn/ctx={ctx}"), w, n, || {
             e3.submit(Request::new(7, full.clone(), 1)).unwrap();
             e3.run_to_completion().unwrap();
         });
@@ -112,7 +115,8 @@ fn main() {
             let inn: Vec<(usize, &LaneKv)> =
                 lanes.iter().map(|&i| (i, &slab)).collect();
             let before = mb.swap_traffic();
-            let r = bench(&format!("swap_lanes/b={batch}/n={n}"), 3, 200, || {
+            let (w, it) = iters(3, 200);
+            let r = bench(&format!("swap_lanes/b={batch}/n={n}"), w, it, || {
                 mb.swap_lanes(&lanes, &inn).unwrap();
             });
             let after = mb.swap_traffic();
@@ -162,6 +166,13 @@ fn main() {
                 ("elems_out_per_call", Json::num(eo)),
                 ("elems_in_per_call", Json::num(ei)),
             ])).collect())),
+        // CI gate: one-lane swap traffic is exact and machine-independent;
+        // the ratio catches a session path that stops beating re-prefill
+        ("regress_on", Json::obj(vec![
+            ("one_lane_swap_elems", gate(one_lane[0], false)),
+            ("reprefill_over_session_ctx1024",
+             gate(ratios.last().map(|&(_, r)| r).unwrap_or(f64::NAN), true)),
+        ])),
     ]);
     let path = write_bench_json("session_swap", payload).expect("bench json");
     println!("wrote {}", path.display());

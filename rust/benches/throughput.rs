@@ -9,7 +9,7 @@
 
 use trimkv::eval::bench_support::{bench_n, load_ctx};
 use trimkv::eval::{run_suite, throughput_table, SuiteResult};
-use trimkv::util::benchkit::write_bench_json;
+use trimkv::util::benchkit::{gate, quick, write_bench_json};
 use trimkv::util::json::Json;
 use trimkv::workload::suites;
 
@@ -35,12 +35,13 @@ fn main() {
         println!("wrote {} (skipped marker)", path.display());
         return;
     };
-    let n = bench_n(6);
+    let n = if quick() { 2 } else { bench_n(6) };
     let budget = 96usize;
-    let grid = [(256usize, 8usize), (512, 8)];
+    let grid: &[(usize, usize)] =
+        if quick() { &[(256, 8)] } else { &[(256, 8), (512, 8)] };
     let methods = ["fullkv", "retrieval", "snapkv", "trimkv"];
     let mut results = Vec::new();
-    for (ctx_len, batch) in grid {
+    for &(ctx_len, batch) in grid {
         // fullkv/retrieval keep everything resident; bounded methods load
         // the smallest artifact that fits their budget (that IS the win)
         for method in methods {
@@ -69,9 +70,18 @@ fn main() {
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/throughput.csv",
                    throughput_table(&results).to_csv()).ok();
+    // CI gate: bounded-cache decode throughput at the first grid cell
+    let trimkv_tok_s = results
+        .iter()
+        .find(|r| r.policy == "trimkv")
+        .map(|r| r.tok_s)
+        .unwrap_or(f64::NAN);
     let payload = Json::obj(vec![
         ("budget", Json::num(budget as f64)),
         ("results", results_json(&results)),
+        ("regress_on", Json::obj(vec![
+            ("trimkv_tok_s", gate(trimkv_tok_s, true)),
+        ])),
     ]);
     let path = write_bench_json("throughput", payload).expect("bench json");
     println!("wrote {}", path.display());

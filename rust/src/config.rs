@@ -14,7 +14,12 @@
 //!
 //! [scheduler]
 //! queue_capacity = 1024
-//! prefill_priority = false
+//! prefill_priority = false   # alternating fallback only; mixed ticks
+//!                            # never face the prefill/decode choice
+//! mixed_ticks = true         # fuse decode + chunked prefill into one
+//!                            # backend step when the artifact supports it
+//! tick_token_budget = 0      # Sarathi-style cap on tokens per mixed tick
+//!                            # (decoders reserved first; 0 = unbounded)
 //!
 //! [session]
 //! max_sessions = 256      # host-side snapshot store capacity (LRU beyond)
@@ -41,6 +46,15 @@ pub struct EngineConfig {
     /// Use chunked prefill (prefill graph) for prompts; otherwise prompts
     /// are fed token-by-token through the decode graph.
     pub chunked_prefill: bool,
+    /// Fuse decode steps and prefill chunks into one mixed backend step per
+    /// tick (no prefill/decode head-of-line blocking).  Requires
+    /// `chunked_prefill` and a backend with a mixed-step graph; otherwise
+    /// the engine falls back to alternating ticks.
+    pub mixed_ticks: bool,
+    /// Token budget per mixed tick (Sarathi-style): decoding lanes are
+    /// reserved one token each first, the remainder splits across
+    /// mid-prefill lanes.  0 = unbounded (full chunk per filling lane).
+    pub tick_token_budget: usize,
     /// Capacity of the host-side session snapshot store; beyond it the
     /// least-recently-used conversation is dropped.
     pub max_sessions: usize,
@@ -64,6 +78,8 @@ impl Default for EngineConfig {
             queue_capacity: 1024,
             prefill_priority: false,
             chunked_prefill: true,
+            mixed_ticks: true,
+            tick_token_budget: 0,
             max_sessions: 256,
             swap_policy: "lazy".into(),
         }
@@ -108,6 +124,13 @@ impl EngineConfig {
                 "scheduler.prefill_priority" => {
                     cfg.prefill_priority = val.as_bool().ok_or_else(|| bad(key))?
                 }
+                "scheduler.mixed_ticks" => {
+                    cfg.mixed_ticks = val.as_bool().ok_or_else(|| bad(key))?
+                }
+                "scheduler.tick_token_budget" => {
+                    cfg.tick_token_budget =
+                        val.as_usize().ok_or_else(|| bad(key))?
+                }
                 "session.max_sessions" => {
                     cfg.max_sessions = val.as_usize().ok_or_else(|| bad(key))?
                 }
@@ -148,6 +171,17 @@ impl EngineConfig {
         }
         if let Some(v) = args.get("swap-policy") {
             self.swap_policy = v.to_string();
+        }
+        if let Some(v) = args.get("mixed-ticks") {
+            self.mixed_ticks = match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                _ => anyhow::bail!("bad --mixed-ticks (true|false)"),
+            };
+        }
+        if let Some(v) = args.get("tick-token-budget") {
+            self.tick_token_budget =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --tick-token-budget"))?;
         }
         self.validate()
     }
@@ -218,6 +252,20 @@ prefill_priority = true
             "[session]\nswap_policy = \"sometimes\"").is_err());
         assert!(EngineConfig::from_toml_str(
             "[session]\nmax_sessions = 0").is_err());
+    }
+
+    #[test]
+    fn parses_mixed_tick_keys() {
+        let cfg = EngineConfig::from_toml_str(
+            "[scheduler]\nmixed_ticks = false\ntick_token_budget = 96")
+            .unwrap();
+        assert!(!cfg.mixed_ticks);
+        assert_eq!(cfg.tick_token_budget, 96);
+        let d = EngineConfig::default();
+        assert!(d.mixed_ticks, "mixed scheduling is the default");
+        assert_eq!(d.tick_token_budget, 0);
+        assert!(EngineConfig::from_toml_str(
+            "[scheduler]\ntick_token_budget = \"lots\"").is_err());
     }
 
     #[test]

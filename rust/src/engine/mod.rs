@@ -44,10 +44,11 @@ use crate::config::EngineConfig;
 use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::metrics::EngineMetrics;
 use crate::policy::Policy;
-use crate::runtime::{DecodeIn, LaneKv, ModelBackend, PrefillIn};
+use crate::runtime::{DecodeIn, LaneKv, MixedIn, ModelBackend, PrefillIn};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
 use crate::session::{SessionSnapshot, SessionStore};
-use lanes::{Lane, LaneAvail, ParkedSession, SeqState, ValidMask};
+use lanes::{split_prefill_budget, Lane, LaneAvail, LaneWork, ParkedSession,
+            SeqState, ValidMask};
 use sampler::Sampler;
 
 /// EMA factor for the SnapKV-style attention statistic.
@@ -85,18 +86,26 @@ pub struct Engine<B: ModelBackend> {
     pending_closes: Vec<(String, u64)>,
     /// logical clock stamping parked sessions for LRU preemption
     clock: u64,
+    /// scheduling ticks executed (stamps token arrivals for the
+    /// deterministic time-between-tokens gap metric)
+    tick_no: u64,
     /// `[L, B, H, M]` validity mask, incrementally maintained
     valid: ValidMask,
     /// write-slot scratch reused across ticks (perf: no per-step allocation)
     ws_buf: Vec<i32>,
+    /// `[L, B, H, C]` write-slot scratch for mixed ticks (the largest fused
+    /// buffer — reused like `ws_buf` so contended steady state stays off
+    /// the allocator's hot path)
+    ws_mixed: Vec<i32>,
 }
 
 impl<B: ModelBackend> Engine<B> {
     pub fn new(backend: B, cfg: EngineConfig, eos_token: u32) -> Result<Engine<B>> {
         let dims = backend.dims();
         let slots = backend.slots();
+        let chunk = backend.chunk();
         let needed = if cfg.chunked_prefill {
-            cfg.budget + backend.chunk() + 1
+            cfg.budget + chunk + 1
         } else {
             cfg.budget + 2
         };
@@ -121,8 +130,10 @@ impl<B: ModelBackend> Engine<B> {
             sessions: SessionStore::new(cfg.max_sessions),
             pending_closes: Vec::new(),
             clock: 0,
+            tick_no: 0,
             valid: ValidMask::new(&dims, b, slots),
             ws_buf: vec![0; dims.layers * b * dims.hkv],
+            ws_mixed: vec![0; dims.layers * b * dims.hkv * chunk],
             cfg,
         })
     }
@@ -227,10 +238,18 @@ impl<B: ModelBackend> Engine<B> {
         Ok(self.take_responses())
     }
 
-    /// One scheduling step. Returns false when there was nothing to do.
+    /// Scheduling ticks executed so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick_no
+    }
+
+    /// One scheduling step. Returns false when there was nothing to do
+    /// (no backend step was issued — `run_to_completion` must never spin
+    /// on no-op ticks).
     pub fn tick(&mut self) -> Result<bool> {
         self.process_pending_closes();
         self.admit_waiting()?;
+        self.tick_no += 1;
         let any_prefill = self.lanes.iter().any(|l| match l {
             Lane::Busy(s) => self.cfg.chunked_prefill && s.fed < s.prompt.len(),
             _ => false,
@@ -239,12 +258,23 @@ impl<B: ModelBackend> Engine<B> {
             Lane::Busy(s) => !self.cfg.chunked_prefill || s.fed >= s.prompt.len(),
             _ => false,
         });
-        let worked = if any_prefill && (self.cfg.prefill_priority || !any_decode) {
-            self.prefill_tick()?;
-            true
+        // Mixed tick: when decoders and mid-prefill lanes coexist, run one
+        // fused backend step for both — no prefill/decode head-of-line
+        // blocking.  Retrieval's KV re-injection rides the decode graph,
+        // and legacy artifacts carry no mixed graph: both fall back to the
+        // alternating prefill/decode ticks below.
+        let fuse = self.cfg.mixed_ticks
+            && self.cfg.chunked_prefill
+            && any_prefill
+            && any_decode
+            && !self.policy.is_retrieval()
+            && self.backend.supports_mixed();
+        let worked = if fuse {
+            self.mixed_tick()?
+        } else if any_prefill && (self.cfg.prefill_priority || !any_decode) {
+            self.prefill_tick()?
         } else if any_decode || any_prefill {
-            self.decode_tick()?;
-            true
+            self.decode_tick()?
         } else {
             false
         };
@@ -482,7 +512,8 @@ impl<B: ModelBackend> Engine<B> {
     // -----------------------------------------------------------------
     // decode tick
     // -----------------------------------------------------------------
-    fn decode_tick(&mut self) -> Result<()> {
+    /// Returns false when no lane was ready to decode (no backend call).
+    fn decode_tick(&mut self) -> Result<bool> {
         let dims = self.backend.dims();
         let (l, b, h, m) = (dims.layers, self.backend.batch(), dims.hkv,
                             self.backend.slots());
@@ -539,7 +570,7 @@ impl<B: ModelBackend> Engine<B> {
             chosen[lane_idx] = Some(slots_per_head);
         }
         if active == 0 {
-            return Ok(());
+            return Ok(false);
         }
 
         let want_attn = self.policy.needs_attention() || self.record_gates;
@@ -643,11 +674,7 @@ impl<B: ModelBackend> Engine<B> {
                 let tok = self.sampler.sample(logits) as u32;
                 seq.generated.push(tok);
                 self.metrics.tokens_decoded += 1;
-                if seq.ttft_us.is_none() {
-                    let us = seq.t_submit.elapsed().as_secs_f64() * 1e6;
-                    seq.ttft_us = Some(us);
-                    self.metrics.ttft_us.record_us(us);
-                }
+                record_token_latency(&mut self.metrics, seq, self.tick_no);
                 let hit_eos = seq.stop_at_eos && tok == self.eos_token;
                 if hit_eos || seq.generated.len() >= seq.max_new {
                     finished.push(lane_idx);
@@ -655,13 +682,15 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
         self.finish_lanes(finished)?;
-        Ok(())
+        Ok(true)
     }
 
     // -----------------------------------------------------------------
     // chunked prefill tick
     // -----------------------------------------------------------------
-    fn prefill_tick(&mut self) -> Result<()> {
+    /// Returns false when no lane had prompt tokens to feed (no backend
+    /// call was issued — the caller must not report work done).
+    fn prefill_tick(&mut self) -> Result<bool> {
         let dims = self.backend.dims();
         let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
                                self.backend.slots(), self.backend.chunk());
@@ -709,7 +738,7 @@ impl<B: ModelBackend> Engine<B> {
             chunk_info[lane_idx] = Some((real_c, per_head));
         }
         if chunk_info.iter().all(Option::is_none) {
-            return Ok(());
+            return Ok(false);
         }
 
         let out = self.backend.prefill(&PrefillIn {
@@ -800,9 +829,7 @@ impl<B: ModelBackend> Engine<B> {
                 let tok = self.sampler.sample(&out.logits[lb..lb + vocab]) as u32;
                 seq.generated.push(tok);
                 self.metrics.tokens_decoded += 1;
-                let us = seq.t_submit.elapsed().as_secs_f64() * 1e6;
-                seq.ttft_us = Some(us);
-                self.metrics.ttft_us.record_us(us);
+                record_token_latency(&mut self.metrics, seq, self.tick_no);
                 let hit_eos = seq.stop_at_eos && tok == self.eos_token;
                 if hit_eos || seq.generated.len() >= seq.max_new {
                     finished.push(lane_idx);
@@ -810,7 +837,254 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
         self.finish_lanes(finished)?;
-        Ok(())
+        Ok(true)
+    }
+
+    // -----------------------------------------------------------------
+    // fused mixed tick (decode + budgeted chunk prefill, ONE backend step)
+    // -----------------------------------------------------------------
+    /// The stall-free scheduling step: every decoding lane advances one
+    /// token AND every mid-prefill lane feeds a budgeted chunk, in a single
+    /// `step_mixed` graph execution.  Decode lanes occupy chunk column 0 of
+    /// the fused buffers; their attention row comes back mode-fused over
+    /// the M resident slots, so the per-lane post-processing below is
+    /// exactly `decode_tick`'s.  Chunk lanes follow `prefill_tick`'s
+    /// compress-after-each-chunk protocol unchanged — TRIM-KV scores
+    /// tokens at creation time, so fusing the phases alters no eviction
+    /// decision.  Token budget: `scheduler.tick_token_budget`
+    /// (Sarathi-style; decoders reserved first).
+    fn mixed_tick(&mut self) -> Result<bool> {
+        let dims = self.backend.dims();
+        let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
+                               self.backend.slots(), self.backend.chunk());
+        let trash = (m - 1) as i32;
+
+        // --- plan: classify lanes, split the tick's token budget --------
+        let mut n_decode = 0usize;
+        let mut fill_needs: Vec<usize> = Vec::new();
+        let mut plan: Vec<Option<LaneWork>> = vec![None; b];
+        for (lane_idx, lane) in self.lanes.iter().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            if seq.fed < seq.prompt.len() {
+                fill_needs.push(seq.prompt.len() - seq.fed);
+                plan[lane_idx] = Some(LaneWork::Chunk(0)); // grant below
+            } else {
+                n_decode += 1;
+                plan[lane_idx] = Some(LaneWork::Decode);
+            }
+        }
+        if n_decode == 0 && fill_needs.is_empty() {
+            return Ok(false);
+        }
+        let grants = split_prefill_budget(self.cfg.tick_token_budget,
+                                          n_decode, &fill_needs, c);
+        let mut next_grant = grants.into_iter();
+        for work in plan.iter_mut().flatten() {
+            if matches!(*work, LaneWork::Chunk(_)) {
+                *work = LaneWork::Chunk(next_grant.next().expect("grant"));
+            }
+        }
+
+        // --- assemble the fused step ------------------------------------
+        let mut tokens = vec![0i32; b * c];
+        let mut pos = vec![0i32; b * c];
+        let mut in_mask = vec![0.0f32; b * c];
+        let mut mode = vec![0.0f32; b];
+        self.ws_mixed.iter_mut().for_each(|x| *x = trash);
+        // per lane: (real_c, per-(l,h) slot lists); decode lanes use 1
+        let mut chunk_info: Vec<Option<(usize, Vec<Vec<usize>>)>> = vec![None; b];
+        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            let Some(work) = plan[lane_idx] else { continue };
+            self.valid.sync(lane_idx, &seq.cache);
+            match work {
+                LaneWork::Decode => {
+                    mode[lane_idx] = 1.0;
+                    tokens[lane_idx * c] = seq.stream_token(seq.fed) as i32;
+                    pos[lane_idx * c] = seq.fed as i32;
+                    in_mask[lane_idx * c] = 1.0;
+                    let mut per_head = Vec::with_capacity(l * h);
+                    for li in 0..l {
+                        for hi in 0..h {
+                            let head = seq.cache.head(li, hi);
+                            let slot = head.free_slot().context(
+                                "no free slot (arena invariant broken)")?;
+                            self.ws_mixed[((li * b + lane_idx) * h + hi) * c] =
+                                slot as i32;
+                            per_head.push(vec![slot]);
+                        }
+                    }
+                    chunk_info[lane_idx] = Some((1, per_head));
+                }
+                LaneWork::Chunk(real_c) => {
+                    let start = seq.fed;
+                    for ci in 0..real_c {
+                        tokens[lane_idx * c + ci] = seq.prompt[start + ci] as i32;
+                        pos[lane_idx * c + ci] = (start + ci) as i32;
+                        in_mask[lane_idx * c + ci] = 1.0;
+                    }
+                    let mut per_head = Vec::with_capacity(l * h);
+                    for li in 0..l {
+                        for hi in 0..h {
+                            let head = seq.cache.head(li, hi);
+                            let free: Vec<usize> = (0..m - 1)
+                                .filter(|&s| !head.live[s])
+                                .take(real_c)
+                                .collect();
+                            ensure!(free.len() == real_c,
+                                    "mixed chunk needs {real_c} free slots, \
+                                     found {}", free.len());
+                            let base = ((li * b + lane_idx) * h + hi) * c;
+                            for ci in 0..real_c {
+                                self.ws_mixed[base + ci] = free[ci] as i32;
+                            }
+                            per_head.push(free);
+                        }
+                    }
+                    chunk_info[lane_idx] = Some((real_c, per_head));
+                }
+            }
+        }
+
+        let want_attn = self.policy.needs_attention() || self.record_gates;
+        let want_kv = self.policy.needs_keys();
+        let t0 = Instant::now();
+        let out = self.backend.step_mixed(&MixedIn {
+            tokens: &tokens,
+            pos: &pos,
+            in_mask: &in_mask,
+            mode: &mode,
+            valid: self.valid.as_slice(),
+            write_slots: &self.ws_mixed,
+        })?;
+        self.metrics.step_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        self.metrics.mixed_steps += 1;
+        self.metrics.mixed_decode_lanes.push(n_decode as f64);
+        self.metrics.mixed_chunk_lanes.push(fill_needs.len() as f64);
+        self.metrics.lane_occupancy
+            .push((n_decode + fill_needs.len()) as f64);
+
+        // --- per-lane post-processing -----------------------------------
+        let vocab = dims.vocab;
+        let mut finished: Vec<usize> = Vec::new();
+        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            let Some((real_c, per_head)) = chunk_info[lane_idx].take() else {
+                continue;
+            };
+            let start = seq.fed;
+            let is_decode = mode[lane_idx] > 0.5;
+            for li in 0..l {
+                for hi in 0..h {
+                    let base = (li * b + lane_idx) * h + hi;
+                    let head = seq.cache.head_mut(li, hi);
+                    if is_decode {
+                        // decode semantics on chunk column 0 (insert, then
+                        // fold the mode-fused [M] attention row)
+                        let cb = base * c;
+                        let kb = cb * dims.dh;
+                        let slot = per_head[li * h + hi][0];
+                        let entry = SlotEntry {
+                            pos: start as i64,
+                            token: tokens[lane_idx * c] as u32,
+                            log_beta: out.log_beta[cb],
+                            ..Default::default()
+                        };
+                        head.insert_kv(
+                            slot, entry,
+                            want_kv.then(|| &out.k_chunk[kb..kb + dims.dh])
+                                .as_deref(),
+                            want_kv.then(|| &out.v_chunk[kb..kb + dims.dh])
+                                .as_deref());
+                        self.valid.set(lane_idx, li, hi, slot, true);
+                        if want_attn {
+                            let arow = &out.attn_slots[base * m..(base + 1) * m];
+                            head.update_attention(arow, ATTN_EMA);
+                        }
+                    } else {
+                        // chunk-fill semantics: resident slots absorb the
+                        // chunk's attention, then the chunk inserts
+                        let arow = &out.attn_slots[base * m..(base + 1) * m];
+                        head.update_attention(arow, ATTN_EMA);
+                        for ci in 0..real_c {
+                            let slot = per_head[li * h + hi][ci];
+                            let cb = base * c + ci;
+                            let kb = cb * dims.dh;
+                            let entry = SlotEntry {
+                                pos: (start + ci) as i64,
+                                token: seq.prompt[start + ci],
+                                log_beta: out.log_beta[cb],
+                                acc_attn: out.attn_chunk[cb],
+                                ema_attn: out.attn_chunk[cb] / real_c as f32,
+                                last_attn: out.attn_chunk[cb] / real_c as f32,
+                            };
+                            head.insert_kv(slot, entry,
+                                           Some(&out.k_chunk[kb..kb + dims.dh]),
+                                           Some(&out.v_chunk[kb..kb + dims.dh]));
+                            self.valid.set(lane_idx, li, hi, slot, true);
+                        }
+                    }
+                    // budget enforcement, shared: provisional add(s), then
+                    // evict the policy's victims (retrieval never reaches
+                    // the mixed path, so no mirror bookkeeping here).
+                    // `now` matches the alternating paths exactly: decode
+                    // evicts at the fed position, prefill past the chunk.
+                    let now = if is_decode {
+                        start as i64
+                    } else {
+                        (start + real_c) as i64
+                    };
+                    while head.used > self.cfg.budget {
+                        let Some(victim) = self.policy.select_victim(head, now)
+                        else { break };
+                        let vpos = head.entries[victim].pos;
+                        head.evict(victim);
+                        self.valid.set(lane_idx, li, hi, victim, false);
+                        self.metrics.evictions += 1;
+                        if let Some(rec) = seq.record.as_mut() {
+                            rec.evictions.push((li * h + hi, vpos, now));
+                        }
+                    }
+                    head.check_invariants();
+                }
+            }
+            if let Some(rec) = seq.record.as_mut() {
+                for ci in 0..real_c {
+                    rec.tokens.push(tokens[lane_idx * c + ci] as u32);
+                    let mut row = Vec::with_capacity(l * h);
+                    for li in 0..l {
+                        for hi in 0..h {
+                            row.push(out.log_beta[((li * b + lane_idx) * h + hi)
+                                                  * c + ci]);
+                        }
+                    }
+                    rec.log_betas.push(row);
+                }
+            }
+            seq.fed += real_c;
+            if is_decode {
+                self.metrics.tokens_prefilled +=
+                    (seq.fed <= seq.prompt.len()) as u64;
+            } else {
+                self.metrics.tokens_prefilled += real_c as u64;
+                self.metrics.mixed_chunk_tokens += real_c as u64;
+            }
+            if seq.fed >= seq.prompt.len() {
+                // decode lanes sample column 0; a lane that just finished
+                // its prompt samples from its last real chunk position
+                let lb = (lane_idx * c + real_c - 1) * vocab;
+                let tok = self.sampler.sample(&out.logits[lb..lb + vocab]) as u32;
+                seq.generated.push(tok);
+                self.metrics.tokens_decoded += 1;
+                record_token_latency(&mut self.metrics, seq, self.tick_no);
+                let hit_eos = seq.stop_at_eos && tok == self.eos_token;
+                if hit_eos || seq.generated.len() >= seq.max_new {
+                    finished.push(lane_idx);
+                }
+            }
+        }
+        self.finish_lanes(finished)?;
+        Ok(true)
     }
 
     /// Retire the finished sequence on `lane_idx`.  Returns true when the
@@ -945,6 +1219,28 @@ impl<B: ModelBackend> Engine<B> {
                 .collect(),
         )
     }
+}
+
+/// Record the latency streams for a freshly sampled token: TTFT on a
+/// lane's first token, time-between-tokens (wall time + deterministic tick
+/// gap) on every later one.  Shared by all three tick paths so mixed and
+/// alternating scheduling report comparable SLO numbers.
+fn record_token_latency(metrics: &mut EngineMetrics, seq: &mut SeqState,
+                        tick_no: u64) {
+    let now = Instant::now();
+    if seq.ttft_us.is_none() {
+        let us = seq.t_submit.elapsed().as_secs_f64() * 1e6;
+        seq.ttft_us = Some(us);
+        metrics.ttft_us.record_us(us);
+        metrics.ttft_summary_us.push(us);
+    } else if let Some(t0) = seq.last_tok_at {
+        metrics.tbt_us.push(now.duration_since(t0).as_secs_f64() * 1e6);
+        if let Some(t) = seq.last_tok_tick {
+            metrics.tbt_ticks.push(tick_no.saturating_sub(t) as f64);
+        }
+    }
+    seq.last_tok_at = Some(now);
+    seq.last_tok_tick = Some(tick_no);
 }
 
 /// Retrieval re-admission rule: among mirrored (evicted) tokens, find the
@@ -1331,6 +1627,144 @@ mod tests {
         assert_eq!(rs[0].tokens.len(), 2);
         let chunks_t2 = e.metrics.prefill_chunks - chunks_t1;
         assert!(chunks_t2 <= 2, "history re-chunked: {chunks_t2} chunks");
+    }
+
+    fn mixed_engine(batch: usize, budget: usize, mixed: bool,
+                    prefill_priority: bool, tick_token_budget: usize)
+        -> Engine<MockBackend> {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget,
+            batch,
+            max_new_tokens: 8,
+            chunked_prefill: true,
+            mixed_ticks: mixed,
+            prefill_priority,
+            tick_token_budget,
+            ..Default::default()
+        };
+        // slots must cover budget + chunk (16) + 1
+        Engine::new(MockBackend::new(batch, budget + 20), cfg, 2).unwrap()
+    }
+
+    #[test]
+    fn mixed_tick_fuses_decode_and_prefill() {
+        let mut e = mixed_engine(2, 16, true, false, 0);
+        // lane 0: short prompt -> decoding from tick 2 on
+        e.submit(Request::new(0, vec![1, 40], 6)).unwrap();
+        // lane 1: long prompt -> 3 chunks of prefill
+        e.submit(Request::new(1, (0..40).map(|i| 32 + i).collect(), 2)).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(e.metrics.mixed_steps > 0, "contended ticks must fuse");
+        assert_eq!(e.metrics.mixed_steps, e.backend().mixed_calls as u64);
+        // fused ticks carried both a decoder and a filling lane
+        assert!(e.metrics.mixed_decode_lanes.mean() >= 1.0);
+        assert!(e.metrics.mixed_chunk_lanes.mean() >= 1.0);
+        assert!(e.backend().mixed_chunk_tokens > 0);
+        // every lane produced its full output
+        let by_id: std::collections::BTreeMap<u64, usize> =
+            rs.iter().map(|r| (r.id, r.tokens.len())).collect();
+        assert_eq!(by_id[&0], 6);
+        assert_eq!(by_id[&1], 2);
+    }
+
+    #[test]
+    fn mixed_scheduling_never_stalls_decoders() {
+        // the acceptance criterion: admitting one long prompt leaves every
+        // decoding lane progressing each tick (token gap == 1 tick), where
+        // the alternating scheduler stalls decoders for the whole prefill
+        for (mixed, priority) in [(true, false), (false, true)] {
+            let mut e = mixed_engine(2, 16, mixed, priority, 0);
+            e.submit(Request::new(0, vec![1, 40], 20)).unwrap();
+            // let lane 0 reach steady decode
+            for _ in 0..3 {
+                e.tick().unwrap();
+            }
+            assert!(e.metrics.tokens_decoded >= 2);
+            // admit a 4-chunk prompt while lane 0 decodes
+            e.submit(Request::new(1, (0..64).map(|i| 32 + i).collect(), 1))
+                .unwrap();
+            e.run_to_completion().unwrap();
+            let max_gap = e.metrics.tbt_ticks.max();
+            if mixed {
+                assert_eq!(max_gap, 1.0,
+                           "mixed tick stalled a decoder: gap {max_gap}");
+                assert!(e.metrics.mixed_steps >= 4,
+                        "prefill chunks must ride fused ticks");
+            } else {
+                assert!(max_gap > 1.0,
+                        "alternating+prefill_priority should stall \
+                         decoders during the 4-chunk prefill");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_tick_respects_token_budget() {
+        // budget 2 with one decoder leaves 1 prompt token per fused tick:
+        // prefill slows down, decode never pauses
+        let mut e = mixed_engine(2, 16, true, false, 2);
+        e.submit(Request::new(0, vec![1, 40], 30)).unwrap();
+        for _ in 0..3 {
+            e.tick().unwrap();
+        }
+        e.submit(Request::new(1, (0..20).map(|i| 32 + i).collect(), 1))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.backend().mixed_chunk_tokens, 20,
+                   "every prompt token of the admission rode a fused tick");
+        assert!(e.metrics.mixed_steps >= 20,
+                "token budget 2 must spread the prompt over >= 20 ticks");
+        assert_eq!(e.metrics.tbt_ticks.max(), 1.0);
+    }
+
+    #[test]
+    fn mixed_equals_alternating_token_streams() {
+        // same workload, mixed on/off: bit-identical per-request outputs
+        // (TRIM-KV scores at creation time; lanes are independent)
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![1, 40],
+            (0..40).map(|i| 32 + i).collect(),
+            (0..23).map(|i| 50 + (i % 20)).collect(),
+        ];
+        let mut outs: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+        for mixed in [true, false] {
+            let mut e = mixed_engine(2, 16, mixed, false, 0);
+            for (i, p) in prompts.iter().enumerate() {
+                e.submit(Request::new(i as u64, p.clone(), 5)).unwrap();
+            }
+            let mut rs = e.run_to_completion().unwrap();
+            rs.sort_by_key(|r| r.id);
+            if mixed {
+                assert!(e.metrics.mixed_steps > 0);
+            } else {
+                assert_eq!(e.metrics.mixed_steps, 0);
+            }
+            outs.push(rs.into_iter().map(|r| (r.id, r.tokens)).collect());
+        }
+        assert_eq!(outs[0], outs[1],
+                   "mixed scheduling changed a token stream");
+    }
+
+    #[test]
+    fn tick_true_iff_backend_stepped() {
+        // the no-op fix: tick() must report work exactly when a backend
+        // step was issued, so run_to_completion can never spin
+        let mut e = mixed_engine(2, 16, true, false, 0);
+        assert!(!e.tick().unwrap(), "idle engine must report no work");
+        e.submit(Request::new(0, vec![1, 40, 41], 4)).unwrap();
+        e.submit(Request::new(1, (0..20).map(|i| 32 + i).collect(), 3))
+            .unwrap();
+        let mut worked = 0usize;
+        while !e.idle() {
+            worked += e.tick().unwrap() as usize;
+        }
+        let be = e.backend();
+        assert_eq!(worked,
+                   be.decode_calls + be.prefill_calls + be.mixed_calls,
+                   "worked ticks must equal backend steps");
+        assert!(!e.tick().unwrap());
     }
 
     #[test]

@@ -56,6 +56,12 @@ fn common_spec() -> trimkv::util::cli::SpecBuilder {
              "host-side session snapshot store capacity (LRU beyond)")
         .opt("swap-policy", "lazy",
              "session swap policy: lazy (park on lane) | eager (snapshot)")
+        .opt("mixed-ticks", "true",
+             "fuse decode + chunked prefill into one backend step (falls \
+              back to alternating ticks on legacy artifacts)")
+        .opt("tick-token-budget", "0",
+             "token budget per mixed tick, decoders reserved first \
+              (Sarathi-style; 0 = unbounded)")
 }
 
 fn load_engine(args: &Args) -> Result<(Engine<PjrtBackend>, Vocab, ModelMeta)> {
@@ -238,13 +244,23 @@ fn inspect_cmd(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Golden test: execute the exported decode/prefill graphs on the I/O pair
-/// the python side dumped, compare outputs elementwise.
+/// Golden test: execute the exported decode/prefill/mixed graphs on the
+/// I/O pairs the python side dumped, compare outputs elementwise.  With
+/// `--structural`, verify the artifact contract without executing HLO
+/// (meta/artifact/golden inventories + shapes) — the mode CI runs against
+/// the vendored PJRT stub.
 fn selftest(argv: &[String]) -> Result<()> {
-    let args = common_spec().parse(argv)?;
+    let args = common_spec()
+        .flag("structural",
+              "contract-only check (no HLO execution; works on the stub)")
+        .parse(argv)?;
     let dir = args.get_or("artifacts", "artifacts");
     let dir = Path::new(&dir);
-    let report = trimkv::runtime::golden::run_goldens(dir)?;
+    let report = if args.flag("structural") {
+        trimkv::runtime::golden::verify_structural(dir)?
+    } else {
+        trimkv::runtime::golden::run_goldens(dir)?
+    };
     println!("{report}");
     Ok(())
 }

@@ -20,6 +20,11 @@ pub struct EngineMetrics {
     pub injections: u64,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
+    // mixed-tick scheduler (fused decode + chunked prefill)
+    pub mixed_steps: u64,                // fused backend steps executed
+    pub mixed_decode_lanes: StreamSummary, // decode lanes per mixed step
+    pub mixed_chunk_lanes: StreamSummary,  // chunk-fill lanes per mixed step
+    pub mixed_chunk_tokens: u64,         // prompt tokens fed via mixed steps
     // session subsystem (KV snapshot/swap)
     pub sessions_opened: u64,            // first turn of a new session
     pub sessions_closed: u64,            // explicit client close
@@ -30,6 +35,12 @@ pub struct EngineMetrics {
     pub preemptions: u64,                // parked lane evicted for new work
     pub resumes_in_place: u64,           // next turn hit its parked lane
     pub ttft_us: LatencyHistogram,       // time to first token
+    pub ttft_summary_us: StreamSummary,  // TTFT mean/p95 (stall-bound SLO)
+    pub tbt_us: StreamSummary,           // time between a lane's tokens
+    /// engine ticks between a lane's consecutive sampled tokens — the
+    /// deterministic stall bound (mixed scheduling keeps this at 1 even
+    /// while another lane prefills a long prompt)
+    pub tbt_ticks: StreamSummary,
     pub e2e_us: LatencyHistogram,        // request end-to-end
     pub step_us: StreamSummary,          // decode-step wall time
     pub lane_occupancy: StreamSummary,   // live lanes per step
@@ -55,6 +66,10 @@ impl EngineMetrics {
             injections: 0,
             decode_steps: 0,
             prefill_chunks: 0,
+            mixed_steps: 0,
+            mixed_decode_lanes: StreamSummary::new(),
+            mixed_chunk_lanes: StreamSummary::new(),
+            mixed_chunk_tokens: 0,
             sessions_opened: 0,
             sessions_closed: 0,
             sessions_dropped: 0,
@@ -64,6 +79,9 @@ impl EngineMetrics {
             preemptions: 0,
             resumes_in_place: 0,
             ttft_us: LatencyHistogram::new(),
+            ttft_summary_us: StreamSummary::new(),
+            tbt_us: StreamSummary::new(),
+            tbt_ticks: StreamSummary::new(),
             e2e_us: LatencyHistogram::new(),
             step_us: StreamSummary::new(),
             lane_occupancy: StreamSummary::new(),
@@ -95,6 +113,24 @@ impl EngineMetrics {
             self.ttft_us.pct_us(50.0) / 1e3,
             self.e2e_us.pct_us(50.0) / 1e3,
             self.lane_occupancy.mean(),
+        )
+    }
+
+    /// One-line mixed-tick scheduling summary (stall-free serving).
+    pub fn scheduling_summary(&self) -> String {
+        format!(
+            "mixed steps {} (decode lanes {:.2}, chunk lanes {:.2} mean) | \
+             chunk tokens {} | ttft mean {:.1} ms p95 {:.1} ms | tbt mean \
+             {:.2} ms p95 {:.2} ms | tick gap max {:.0}",
+            self.mixed_steps,
+            self.mixed_decode_lanes.mean(),
+            self.mixed_chunk_lanes.mean(),
+            self.mixed_chunk_tokens,
+            self.ttft_summary_us.mean() / 1e3,
+            self.ttft_summary_us.pct(95.0) / 1e3,
+            self.tbt_us.mean() / 1e3,
+            self.tbt_us.pct(95.0) / 1e3,
+            self.tbt_ticks.max(),
         )
     }
 
@@ -139,6 +175,22 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests 2/3"));
         assert!(s.contains("decode 100 tok"));
+    }
+
+    #[test]
+    fn scheduling_summary_renders() {
+        let mut m = EngineMetrics::new();
+        m.mixed_steps = 4;
+        m.mixed_decode_lanes.push(6.0);
+        m.mixed_chunk_lanes.push(2.0);
+        m.mixed_chunk_tokens = 128;
+        m.ttft_summary_us.push(2000.0);
+        m.tbt_us.push(900.0);
+        m.tbt_ticks.push(1.0);
+        let s = m.scheduling_summary();
+        assert!(s.contains("mixed steps 4"));
+        assert!(s.contains("chunk tokens 128"));
+        assert!(s.contains("tick gap max 1"));
     }
 
     #[test]

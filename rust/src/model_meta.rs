@@ -49,6 +49,9 @@ pub struct ModelMeta {
     pub gate_order: Vec<TensorSpec>,
     pub decode_outputs: Vec<String>,
     pub prefill_outputs: Vec<String>,
+    /// Output order of the fused mixed-step graphs; empty on exports that
+    /// predate the `mixed` artifact kind (alternating-tick fallback).
+    pub mixed_outputs: Vec<String>,
     pub gate_variants: Vec<String>,
     pub artifacts: Vec<ArtifactSpec>,
 }
@@ -126,8 +129,18 @@ impl ModelMeta {
             gate_order: tensor_list("gate_order")?,
             decode_outputs: str_list("decode_outputs"),
             prefill_outputs: str_list("prefill_outputs"),
+            mixed_outputs: str_list("mixed_outputs"),
             gate_variants: str_list("gate_variants"),
             artifacts,
+        })
+    }
+
+    /// Does this export carry a fused mixed-step graph for the given
+    /// (batch, slots, gate arch)?  Legacy artifacts return false and the
+    /// engine schedules alternating prefill/decode ticks.
+    pub fn supports_mixed(&self, b: usize, m: usize, gate_arch: &str) -> bool {
+        self.artifacts.iter().any(|a| {
+            a.kind == "mixed" && a.b == b && a.m == m && a.gate_arch == gate_arch
         })
     }
 
@@ -165,6 +178,7 @@ pub fn test_meta() -> ModelMeta {
                              "valid".into(), "log_beta".into(), "attn".into(),
                              "k_new".into()],
         prefill_outputs: vec![],
+        mixed_outputs: vec![],
         gate_variants: vec!["default".into()],
         artifacts: vec![
             ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
@@ -179,6 +193,10 @@ pub fn test_meta() -> ModelMeta {
                            file: "decode_b8_m768.hlo.txt".into(),
                            gate_arch: "mlp".into(),
                            cache_layout: "monolithic".into() },
+            ArtifactSpec { kind: "mixed".into(), b: 8, m: 128, c: 64,
+                           file: "mixed_b8_m128_pl.hlo.txt".into(),
+                           gate_arch: "mlp".into(),
+                           cache_layout: "per_lane".into() },
         ],
     }
 }
@@ -198,6 +216,17 @@ mod tests {
         assert_eq!(meta.pick("decode", 8, 200, "mlp").unwrap().m, 768);
         assert!(meta.pick("decode", 8, 1000, "mlp").is_none());
         assert!(meta.pick("decode", 1, 64, "mlp").is_none());
+    }
+
+    #[test]
+    fn mixed_capability_is_per_variant_and_defaults_off() {
+        let meta = test_meta();
+        assert!(meta.supports_mixed(8, 128, "mlp"));
+        assert!(!meta.supports_mixed(8, 768, "mlp"), "no mixed graph at m=768");
+        assert!(!meta.supports_mixed(1, 128, "mlp"));
+        // pick works on the mixed kind like any other
+        assert_eq!(meta.pick("mixed", 8, 100, "mlp").unwrap().m, 128);
+        assert!(meta.pick("mixed", 8, 500, "mlp").is_none());
     }
 
     #[test]
@@ -222,5 +251,8 @@ mod tests {
         // pre-refactor exports carry no cache_layout key -> monolithic
         assert_eq!(meta.artifacts[0].cache_layout, "monolithic");
         assert_eq!(meta.available_batches("decode"), vec![8]);
+        // legacy exports: no mixed graphs, no mixed output order
+        assert!(meta.mixed_outputs.is_empty());
+        assert!(!meta.supports_mixed(8, 256, "mlp"));
     }
 }

@@ -60,6 +60,35 @@ pub struct PrefillOut {
     pub v_chunk: Vec<f32>,    // [L, B, H, C, dh]
 }
 
+/// One fused *mixed tick* over all B lanes: decoding lanes advance by one
+/// token (a 1-token chunk in column 0), mid-prefill lanes by a budgeted
+/// chunk — a single backend step, so a long prompt admission never stalls
+/// the decode stream.  Layouts match `PrefillIn` plus the per-lane `mode`.
+pub struct MixedIn<'a> {
+    pub tokens: &'a [i32],      // [B, C]
+    pub pos: &'a [i32],         // [B, C]
+    pub in_mask: &'a [f32],     // [B, C]
+    /// per lane: 1.0 = decode lane (column 0 holds its token), 0.0 =
+    /// chunk-fill lane.  Idle lanes are chunk-fill with an all-zero mask.
+    pub mode: &'a [f32],        // [B]
+    pub valid: &'a [f32],       // [L, B, H, M]
+    pub write_slots: &'a [i32], // [L, B, H, C]
+}
+
+/// Mixed-tick outputs: the prefill tuple, with `attn_slots` mode-fused —
+/// for decode lanes the new token's self-attention mass is folded into its
+/// write slot, so each decode lane reads one `[M]` row exactly like
+/// `DecodeOut::attn`.
+#[derive(Debug, Clone)]
+pub struct MixedOut {
+    pub logits: Vec<f32>,     // [B, C, vocab]
+    pub log_beta: Vec<f32>,   // [L, B, H, C]
+    pub attn_slots: Vec<f32>, // [L, B, H, M]
+    pub attn_chunk: Vec<f32>, // [L, B, H, C]
+    pub k_chunk: Vec<f32>,    // [L, B, H, C, dh]
+    pub v_chunk: Vec<f32>,    // [L, B, H, C, dh]
+}
+
 pub trait ModelBackend: Send {
     fn dims(&self) -> ModelDims;
     fn batch(&self) -> usize;
@@ -67,6 +96,23 @@ pub trait ModelBackend: Send {
     fn chunk(&self) -> usize;
     fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut>;
     fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut>;
+
+    /// Does this backend carry a fused mixed-step graph?  When false the
+    /// engine falls back to today's alternating prefill/decode ticks
+    /// (legacy artifacts exported before the `mixed` kind).
+    fn supports_mixed(&self) -> bool {
+        false
+    }
+
+    /// One fused mixed tick (see [`MixedIn`]).  Implementations must keep
+    /// exact per-lane token accounting: every `in_mask == 1` position of a
+    /// lane advances that lane by exactly one token, decode and chunk-fill
+    /// lanes alike, in the one call.
+    fn step_mixed(&mut self, _ins: &MixedIn) -> Result<MixedOut> {
+        anyhow::bail!("backend has no fused mixed-step graph \
+                       (re-export artifacts with `python -m compile.aot`)")
+    }
+
     /// Zero the device-resident KV caches (new evaluation run).
     fn reset_cache(&mut self) -> Result<()>;
 
@@ -101,6 +147,9 @@ pub struct PjrtBackend {
     client: xla::PjRtClient,
     decode_exe: xla::PjRtLoadedExecutable,
     prefill_exe: Option<xla::PjRtLoadedExecutable>,
+    /// fused mixed-step graph; `None` on artifacts exported before the
+    /// `mixed` kind — the engine then alternates prefill/decode ticks
+    mixed_exe: Option<xla::PjRtLoadedExecutable>,
     weight_bufs: Vec<xla::PjRtBuffer>, // params ++ gates, device-resident
     cache: DeviceKvCache,
     dims: ModelDims,
@@ -136,6 +185,18 @@ impl PjrtBackend {
         } else {
             None
         };
+        // the fused mixed-step graph is optional (absent on legacy
+        // exports); like prefill it must share the decode graph's layout
+        let mixed_exe = match meta.artifacts.iter().find(|a| {
+            a.kind == "mixed" && a.b == b && a.m == m
+                && a.gate_arch == gate_arch
+                && a.cache_layout == dec.cache_layout
+        }) {
+            Some(mx) if with_prefill => {
+                Some(compile_hlo(&client, &meta.dir.join(&mx.file))?)
+            }
+            _ => None,
+        };
 
         // upload weights once, in the flat order the graphs expect
         let weights = super::weights::read_weights(&meta.dir.join("weights.bin"))?;
@@ -170,6 +231,7 @@ impl PjrtBackend {
             client,
             decode_exe,
             prefill_exe,
+            mixed_exe,
             weight_bufs,
             cache,
             dims,
@@ -306,6 +368,56 @@ impl ModelBackend for PjrtBackend {
         Ok(out)
     }
 
+    fn supports_mixed(&self) -> bool {
+        self.mixed_exe.is_some()
+    }
+
+    fn step_mixed(&mut self, ins: &MixedIn) -> Result<MixedOut> {
+        let (l, b, h) = self.lbh();
+        let (m, c) = (self.m, self.c);
+        ensure!(ins.tokens.len() == b * c, "bad tokens len");
+        ensure!(ins.mode.len() == b, "bad mode len");
+        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
+        ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
+
+        let tok_b = self.upload_i32(ins.tokens, &[b, c])?;
+        let pos_b = self.upload_i32(ins.pos, &[b, c])?;
+        let mask_b = self.upload_f32(ins.in_mask, &[b, c])?;
+        let mode_b = self.upload_f32(ins.mode, &[b])?;
+        let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
+        let ws_b = self.upload_i32(ins.write_slots, &[l, b, h, c])?;
+
+        let exe = self
+            .mixed_exe
+            .as_ref()
+            .context("backend loaded without mixed-step graph")?;
+        let ncache = self.cache.num_operands();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&tok_b, &pos_b, &mask_b, &mode_b]);
+        args.extend(self.cache.arg_refs());
+        args.extend([&valid_b, &ws_b]);
+        let mut outs = exe.execute_b(&args)?;
+        drop(args);
+        let mut outs = outs.swap_remove(0);
+        ensure!(outs.len() == 7 + ncache,
+                "mixed graph returned {} outputs, expected {}", outs.len(),
+                7 + ncache);
+        // order: logits, kc.., vc.., valid, log_beta, attn_slots,
+        //        attn_chunk, k_chunk, v_chunk (attn_slots mode-fused)
+        let iv = 1 + ncache;
+        let out = MixedOut {
+            logits: to_host(&outs[0])?,
+            log_beta: to_host(&outs[iv + 1])?,
+            attn_slots: to_host(&outs[iv + 2])?,
+            attn_chunk: to_host(&outs[iv + 3])?,
+            k_chunk: to_host(&outs[iv + 4])?,
+            v_chunk: to_host(&outs[iv + 5])?,
+        };
+        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
+        self.cache.update_from_outputs(cache_bufs)?;
+        Ok(out)
+    }
+
     fn reset_cache(&mut self) -> Result<()> {
         self.cache.reset(&self.client)
     }
@@ -335,10 +447,25 @@ pub struct MockBackend {
     pub b: usize,
     pub m: usize,
     pub c: usize,
+    /// EOS trigger for tests.  Semantics differ slightly by path — an
+    /// artifact of `decode` receiving no activity mask: `decode` bumps
+    /// every lane's counter per call (idle lanes included), `step_mixed`
+    /// bumps only mode=1 lanes.  Tests combining a finite `eos_after`
+    /// with cross-scheduling equivalence would diverge for that reason;
+    /// keep eos_after at the usize::MAX default there.
     pub eos_after: usize,
     pub decoded_per_lane: Vec<usize>,
     pub decode_calls: usize,
     pub prefill_calls: usize,
+    pub mixed_calls: usize,
+    /// decode tokens advanced through `step_mixed` (one per mode=1 lane
+    /// per call) — exact accounting for the fused path
+    pub mixed_decode_tokens: u64,
+    /// prompt tokens advanced through `step_mixed` (sum of live `in_mask`
+    /// positions on chunk-fill lanes)
+    pub mixed_chunk_tokens: u64,
+    /// per lane: total tokens (decode + chunk) fed through `step_mixed`
+    pub mixed_tokens_per_lane: Vec<u64>,
     /// Host twin of the per-lane device K/V arenas — written exactly where
     /// the real graphs would scatter, so the batched session-swap path is
     /// testable end-to-end with exact transfer accounting.
@@ -359,6 +486,10 @@ impl MockBackend {
             decoded_per_lane: vec![0; b],
             decode_calls: 0,
             prefill_calls: 0,
+            mixed_calls: 0,
+            mixed_decode_tokens: 0,
+            mixed_chunk_tokens: 0,
+            mixed_tokens_per_lane: vec![0; b],
             arena: HostLaneArena::new(b, lane_len),
         }
     }
@@ -557,6 +688,119 @@ impl ModelBackend for MockBackend {
         Ok(PrefillOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
     }
 
+    fn supports_mixed(&self) -> bool {
+        true
+    }
+
+    /// Fused mixed tick: per lane, exactly the numbers `decode` (mode=1;
+    /// chunk column 0) or `prefill` (mode=0) would produce, in one call —
+    /// the engine's mixed scheduling is therefore token-equivalent to the
+    /// alternating paths whenever chunk boundaries align.
+    fn step_mixed(&mut self, ins: &MixedIn) -> Result<MixedOut> {
+        self.mixed_calls += 1;
+        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
+        let (m, dh, v, c) = (self.m, self.dims.dh, self.dims.vocab, self.c);
+        ensure!(ins.tokens.len() == b * c, "bad tokens len");
+        ensure!(ins.mode.len() == b, "bad mode len");
+        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
+        ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
+
+        let mut logits = vec![0.0f32; b * c * v];
+        let mut log_beta = vec![0.0f32; l * b * h * c];
+        let mut attn_slots = vec![0.0f32; l * b * h * m];
+        let attn_chunk = vec![1.0 / c as f32; l * b * h * c];
+        let mut k_chunk = vec![0.0f32; l * b * h * c * dh];
+        for lane in 0..b {
+            let decode_lane = ins.mode[lane] > 0.5;
+            if decode_lane {
+                // column 0 is the lane's decode token; same successor/EOS
+                // rule and same per-lane generation counter as `decode`
+                let tok = ins.tokens[lane * c];
+                self.decoded_per_lane[lane] += 1;
+                self.mixed_decode_tokens += 1;
+                self.mixed_tokens_per_lane[lane] += 1;
+                let next = if self.decoded_per_lane[lane] >= self.eos_after {
+                    2 // EOS
+                } else {
+                    ((tok + 1) as usize) % v
+                };
+                logits[lane * c * v + next] = 10.0;
+            } else {
+                for ci in 0..c {
+                    if ins.in_mask[lane * c + ci] <= 0.0 {
+                        continue;
+                    }
+                    let tok = ins.tokens[lane * c + ci];
+                    self.mixed_chunk_tokens += 1;
+                    self.mixed_tokens_per_lane[lane] += 1;
+                    logits[(lane * c + ci) * v + ((tok + 1) as usize) % v] = 10.0;
+                }
+            }
+            for li in 0..l {
+                for hh in 0..h {
+                    let base = (li * b + lane) * h + hh;
+                    // attention: decode lanes mirror `decode` (uniform over
+                    // the lane's live slots), chunk lanes mirror `prefill`
+                    if decode_lane {
+                        let row = &ins.valid[base * m..(base + 1) * m];
+                        let live: f32 = row.iter().sum();
+                        if live > 0.0 {
+                            for s in 0..m {
+                                attn_slots[base * m + s] = row[s] / live;
+                            }
+                        }
+                    } else {
+                        for s in 0..m {
+                            attn_slots[base * m + s] = 1.0 / m as f32;
+                        }
+                    }
+                    for ci in 0..c {
+                        if ins.in_mask[lane * c + ci] <= 0.0 {
+                            continue;
+                        }
+                        let tok = ins.tokens[lane * c + ci];
+                        let cb = base * c + ci;
+                        log_beta[cb] = Self::mock_log_beta(li, hh, tok);
+                        for d in 0..dh {
+                            // decode lanes use the 1-token-chunk K/V law so
+                            // the slab matches `decode`'s k_new exactly
+                            k_chunk[cb * dh + d] = if decode_lane {
+                                Self::mock_kv(li, hh, h, 0, 1, d, dh, tok)
+                            } else {
+                                Self::mock_kv(li, hh, h, ci, c, d, dh, tok)
+                            };
+                        }
+                    }
+                }
+            }
+        }
+        let v_chunk = k_chunk.clone();
+        // scatter live positions into the per-lane arenas, like the graphs
+        for lane in 0..b {
+            let slab = self.arena.lane_mut(lane);
+            for li in 0..l {
+                for hh in 0..h {
+                    let base = (li * b + lane) * h + hh;
+                    let row = (li * h + hh) * m;
+                    for ci in 0..c {
+                        if ins.in_mask[lane * c + ci] <= 0.0 {
+                            continue;
+                        }
+                        let s = ins.write_slots[base * c + ci] as usize;
+                        ensure!(s < m, "write slot {s} out of range");
+                        let dst = (row + s) * dh;
+                        let src = (base * c + ci) * dh;
+                        slab.k[dst..dst + dh]
+                            .copy_from_slice(&k_chunk[src..src + dh]);
+                        slab.v[dst..dst + dh]
+                            .copy_from_slice(&v_chunk[src..src + dh]);
+                    }
+                }
+            }
+        }
+        Ok(MixedOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
+    }
+
     fn reset_cache(&mut self) -> Result<()> {
         self.decoded_per_lane = vec![0; self.b];
         self.arena.reset();
@@ -703,6 +947,126 @@ mod tests {
         let lb = b.swap_lanes(&[1], &[]).unwrap();
         assert_eq!(la[0], lb[0],
                    "lane content depends on lane index or batch size");
+    }
+
+    #[test]
+    fn mock_mixed_step_matches_decode_and_prefill_lanes() {
+        // lane 0 decodes token 10 in chunk column 0; lane 1 prefills 3
+        // tokens — each side must reproduce the dedicated graph exactly
+        let (l, h, m) = (4usize, 2usize, 8usize);
+        let mut mb = MockBackend::new(2, m);
+        let c = mb.c;
+        let (dh, v) = (mb.dims.dh, mb.dims.vocab);
+        let mut valid = vec![0.0f32; l * 2 * h * m];
+        for li in 0..l {
+            for hh in 0..h {
+                let base = (li * 2) * h + hh; // lane 0 rows
+                valid[base * m] = 1.0;
+                valid[base * m + 1] = 1.0;
+            }
+        }
+        let mut tokens = vec![0i32; 2 * c];
+        tokens[0] = 10;
+        for ci in 0..3 {
+            tokens[c + ci] = 40 + ci as i32;
+        }
+        let mut in_mask = vec![0.0f32; 2 * c];
+        in_mask[0] = 1.0;
+        in_mask[c..c + 3].fill(1.0);
+        let pos = vec![0i32; 2 * c];
+        let mut ws = vec![(m - 1) as i32; l * 2 * h * c];
+        for li in 0..l {
+            for hh in 0..h {
+                ws[((li * 2) * h + hh) * c] = 2; // lane 0 writes slot 2
+                for ci in 0..3 {
+                    ws[((li * 2 + 1) * h + hh) * c + ci] = ci as i32;
+                }
+            }
+        }
+        let out = mb
+            .step_mixed(&MixedIn {
+                tokens: &tokens,
+                pos: &pos,
+                in_mask: &in_mask,
+                mode: &[1.0, 0.0],
+                valid: &valid,
+                write_slots: &ws,
+            })
+            .unwrap();
+        assert_eq!(mb.mixed_calls, 1);
+        assert_eq!(mb.mixed_decode_tokens, 1);
+        assert_eq!(mb.mixed_chunk_tokens, 3);
+        assert_eq!(mb.mixed_tokens_per_lane, vec![1, 3]);
+
+        // decode reference for lane 0
+        let mut dref = MockBackend::new(2, m);
+        let mut dws = vec![0i32; l * 2 * h];
+        for li in 0..l {
+            for hh in 0..h {
+                dws[(li * 2) * h + hh] = 2;
+            }
+        }
+        let dout = dref
+            .decode(&DecodeIn {
+                tokens: &[10, 0],
+                pos: &[0, 0],
+                valid: &valid,
+                write_slot: &dws,
+                inject_flag: None,
+                inject_slot: None,
+                inject_k: None,
+                inject_v: None,
+                want_attn: true,
+                want_kv: true,
+            })
+            .unwrap();
+        assert_eq!(out.logits[..v], dout.logits[..v], "decode-lane logits");
+        for li in 0..l {
+            for hh in 0..h {
+                let base = (li * 2) * h + hh;
+                assert_eq!(out.log_beta[base * c], dout.log_beta[base]);
+                assert_eq!(out.attn_slots[base * m..(base + 1) * m],
+                           dout.attn[base * m..(base + 1) * m]);
+                assert_eq!(out.k_chunk[base * c * dh..base * c * dh + dh],
+                           dout.k_new[base * dh..(base + 1) * dh]);
+            }
+        }
+
+        // prefill reference for lane 1 (same fused buffers)
+        let mut pref = MockBackend::new(2, m);
+        let pout = pref
+            .prefill(&PrefillIn {
+                tokens: &tokens,
+                pos: &pos,
+                in_mask: &in_mask,
+                valid: &valid,
+                write_slots: &ws,
+            })
+            .unwrap();
+        for ci in 0..3 {
+            let col = (c + ci) * v;
+            assert_eq!(out.logits[col..col + v], pout.logits[col..col + v]);
+        }
+        for li in 0..l {
+            for hh in 0..h {
+                let base = (li * 2 + 1) * h + hh;
+                for ci in 0..3 {
+                    let cb = base * c + ci;
+                    assert_eq!(out.log_beta[cb], pout.log_beta[cb]);
+                    assert_eq!(out.attn_chunk[cb], pout.attn_chunk[cb]);
+                    assert_eq!(out.k_chunk[cb * dh..(cb + 1) * dh],
+                               pout.k_chunk[cb * dh..(cb + 1) * dh]);
+                }
+                assert_eq!(out.attn_slots[base * m..(base + 1) * m],
+                           pout.attn_slots[base * m..(base + 1) * m]);
+            }
+        }
+        // lane slabs: the fused write equals the dedicated graphs' writes
+        let mixed_slabs = mb.swap_lanes(&[0, 1], &[]).unwrap();
+        let d_slab = dref.swap_lanes(&[0], &[]).unwrap();
+        let p_slab = pref.swap_lanes(&[1], &[]).unwrap();
+        assert_eq!(mixed_slabs[0], d_slab[0], "decode-lane slab");
+        assert_eq!(mixed_slabs[1], p_slab[0], "chunk-lane slab");
     }
 
     #[test]

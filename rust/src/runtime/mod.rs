@@ -6,8 +6,9 @@ pub mod devcache;
 pub mod golden;
 pub mod weights;
 
-pub use backend::{compile_hlo, DecodeIn, DecodeOut, MockBackend, ModelBackend,
-                  PjrtBackend, PrefillIn, PrefillOut};
+pub use backend::{compile_hlo, DecodeIn, DecodeOut, MixedIn, MixedOut,
+                  MockBackend, ModelBackend, PjrtBackend, PrefillIn,
+                  PrefillOut};
 pub use devcache::{CacheShape, DeviceKvCache, HostLaneArena, LaneKv,
                    SwapTraffic};
 pub use weights::{read_weights, HostTensor};

@@ -43,6 +43,36 @@ fn num_or_null(x: f64) -> Json {
     if x.is_finite() { Json::num(x) } else { Json::Null }
 }
 
+/// Shared `--quick` mode for the bench suite (the CI bench-smoke job):
+/// enabled by a `--quick` argv flag or `BENCH_QUICK=1`, it trims warmup and
+/// iteration counts (see [`iters`]) so every bench finishes in seconds
+/// while still emitting its full `BENCH_*.json` record.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale a bench's (warmup, iters) pair for the active mode: unchanged
+/// normally, cut to (1, max(iters/10, 3)) under `--quick`.
+pub fn iters(warmup: u64, full_iters: u64) -> (u64, u64) {
+    if quick() {
+        (1, (full_iters / 10).max(3))
+    } else {
+        (warmup, full_iters)
+    }
+}
+
+/// One entry of the `regress_on` block in `BENCH_*.json`: the scalar the
+/// CI bench-smoke job gates on against the committed `BENCH_baseline.json`
+/// (>10% move in the losing direction fails the job; a null baseline value
+/// means "seed me" and only reports).
+pub fn gate(value: f64, higher_is_better: bool) -> Json {
+    Json::obj(vec![
+        ("value", num_or_null(value)),
+        ("higher_is_better", Json::Bool(higher_is_better)),
+    ])
+}
+
 /// Timed results as a JSON array (one object per `BenchResult`).
 pub fn results_json(results: &[BenchResult]) -> Json {
     Json::Arr(results.iter().map(BenchResult::to_json).collect())
@@ -201,6 +231,16 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn gate_entries_serialize() {
+        let g = gate(7.0, true);
+        let s = format!("{g}");
+        assert!(s.contains("\"value\""));
+        assert!(s.contains("true"));
+        let s = format!("{}", gate(f64::NAN, false));
+        assert!(s.contains("null"), "NaN gate value must serialize as null");
     }
 
     #[test]

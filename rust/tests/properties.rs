@@ -131,6 +131,64 @@ fn prop_engine_budget_invariant_all_policies() {
 }
 
 #[test]
+fn prop_mixed_ticks_token_equivalent_to_alternating() {
+    // the mixed-tick scheduler invariant: fusing decode steps and prefill
+    // chunks into one backend step changes scheduling only — every request
+    // emits bit-identical tokens to the sequential prefill-then-decode
+    // path.  (TRIM-KV scores tokens at creation time; each lane's cache
+    // evolution depends only on its own stream.)  Policies with a shared
+    // rng ("random") or cross-tick injection state ("retrieval") are out:
+    // the former interleaves its rng stream differently by construction,
+    // the latter falls back to alternating ticks.
+    forall("mixed tick equivalence", 20, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret"];
+        let policy = names[rng.below(names.len())];
+        let budget = rng.range(12, 28);
+        let batch = rng.range(2, 5);
+        let n_req = rng.range(2, 7);
+        let prompts: Vec<Vec<u32>> = (0..n_req)
+            .map(|_| {
+                (0..rng.range(2, 70))
+                    .map(|_| 32 + rng.below(64) as u32)
+                    .collect()
+            })
+            .collect();
+        let max_new: Vec<usize> = (0..n_req).map(|_| rng.range(1, 8)).collect();
+        // the alternating arm covers both head-of-line orders
+        let priority = rng.bool(0.5);
+        let mut streams: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+        for mixed in [true, false] {
+            let cfg = EngineConfig {
+                policy: policy.into(),
+                budget,
+                batch,
+                chunked_prefill: true,
+                mixed_ticks: mixed,
+                prefill_priority: priority,
+                ..Default::default()
+            };
+            let backend = MockBackend::new(batch, budget + 20);
+            let mut engine = Engine::new(backend, cfg, 2).unwrap();
+            for (i, p) in prompts.iter().enumerate() {
+                engine
+                    .submit(Request::new(i as u64, p.clone(), max_new[i]))
+                    .map_err(|e| format!("{e}"))?;
+            }
+            let mut rs = engine.run_to_completion().map_err(|e| format!("{e}"))?;
+            rs.sort_by_key(|r| r.id);
+            prop_assert_eq!(rs.len(), n_req);
+            if !mixed {
+                prop_assert_eq!(engine.metrics.mixed_steps, 0);
+            }
+            streams.push(rs.into_iter().map(|r| (r.id, r.tokens)).collect());
+        }
+        prop_assert_eq!(&streams[0], &streams[1]);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_eviction_monotonicity() {
     // paper constraint alpha_ti >= alpha_(t+1)i: once evicted, a token's
     // position never reappears in the cache (except via retrieval inject,

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Gate BENCH_*.json emissions against the committed BENCH_baseline.json.
+
+Every bench harness (util::benchkit) writes a machine-readable
+``BENCH_<name>.json`` whose optional ``regress_on`` block names the scalars
+CI guards: ``{"metric": {"value": <f64>, "higher_is_better": <bool>}}``.
+The committed baseline mirrors that shape plus a global ``threshold``
+(fractional regression allowed, default 0.10).
+
+Rules, per metric present in the baseline:
+  * baseline value ``null``  -> not seeded yet: print the current value as a
+    SEED line and pass (deterministic metrics are committed seeded; wall
+    -time metrics are seeded from the first CI run's artifact).
+  * current bench missing or ``{"skipped": true}`` -> SKIP (benches that
+    need model artifacts decline politely without them).
+  * otherwise fail when the current value moves more than the threshold
+    in the losing direction.  A metric entry may carry its own
+    ``"threshold"`` (wall-time metrics on shared CI runners get a loose
+    one; tick/element-denominated metrics keep the tight global default).
+
+``--write-baseline out.json`` additionally emits a fully seeded baseline
+from the current results; CI uploads it as an artifact so a maintainer can
+commit it to (re)seed the trajectory.
+
+stdlib only — runs on a bare CI python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="override the baseline's regression threshold")
+    ap.add_argument("--write-baseline", default=None,
+                    help="emit a baseline seeded from the current results")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    threshold = (args.threshold if args.threshold is not None
+                 else baseline.get("threshold", 0.10))
+    failures, seeded = [], {}
+
+    for bench, spec in sorted(baseline.get("benches", {}).items()):
+        cur_path = os.path.join(args.dir, f"BENCH_{bench}.json")
+        gates = spec.get("regress_on", {})
+        if not os.path.exists(cur_path):
+            print(f"SKIP  {bench}: no {cur_path} (bench did not run)")
+            continue
+        cur = load(cur_path)
+        if cur.get("skipped"):
+            print(f"SKIP  {bench}: {cur.get('reason', 'skipped marker')}")
+            continue
+        cur_gates = cur.get("regress_on", {})
+        seeded[bench] = {"regress_on": {}}
+        for metric, base in sorted(gates.items()):
+            entry = cur_gates.get(metric)
+            if entry is None or entry.get("value") is None:
+                print(f"WARN  {bench}.{metric}: absent from current run")
+                continue
+            value = float(entry["value"])
+            higher = bool(base.get("higher_is_better",
+                                   entry.get("higher_is_better", True)))
+            thr = float(base.get("threshold", threshold))
+            seeded[bench]["regress_on"][metric] = {
+                "value": value, "higher_is_better": higher}
+            if "threshold" in base:
+                seeded[bench]["regress_on"][metric]["threshold"] = thr
+            bval = base.get("value")
+            if bval is None:
+                print(f"SEED  {bench}.{metric} = {value:.6g}")
+                continue
+            bval = float(bval)
+            if higher:
+                limit = bval * (1.0 - thr)
+                bad = value < limit
+            else:
+                limit = bval * (1.0 + thr)
+                bad = value > limit
+            verdict = "FAIL" if bad else "ok"
+            arrow = ">=" if higher else "<="
+            print(f"{verdict:5} {bench}.{metric}: {value:.6g} "
+                  f"(baseline {bval:.6g}, must stay {arrow} {limit:.6g})")
+            if bad:
+                failures.append(f"{bench}.{metric}")
+
+    if args.write_baseline:
+        out = {"threshold": threshold, "benches": seeded}
+        with open(args.write_baseline, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+        print(f"wrote seeded baseline: {args.write_baseline}")
+
+    if failures:
+        print(f"\nREGRESSION: {', '.join(failures)} (beyond threshold)")
+        return 1
+    print("\nbench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
