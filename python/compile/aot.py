@@ -7,6 +7,12 @@ rust/src/runtime/):
   artifacts/
     decode_b{B}_m{M}[_pl][_lin].hlo.txt   one decode step (model.decode_fn)
     prefill_b{B}_m{M}[_pl][_lin].hlo.txt  one chunk prefill (model.prefill_fn)
+    mixed_b{B}_m{M}[_pl].hlo.txt      one fused mixed step incl. the
+                                      retrieval inject tail
+                                      (model.step_fn_mixed); each artifact's
+                                      meta entry records `runtime_inputs` —
+                                      the StepPlan operand order the rust
+                                      structural selftest verifies
     weights.bin                       base parameters (TKVW format)
     gates_<variant>.bin               gate parameters per trained variant
     meta.json                         dims, artifact table, tensor orders
@@ -119,7 +125,9 @@ def prefill_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
 
 def mixed_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
     """Like prefill, plus the per-lane `mode` operand (1.0 = decode lane)
-    inserted after in_mask (the runtime's step_mixed operand contract)."""
+    inserted after in_mask, plus the decode graph's retrieval inject tail —
+    the runtime's unified StepPlan operand contract (the rust structural
+    selftest verifies this exact lead/tail order)."""
     L, H, dh = cfg.layers, cfg.hkv, cfg.dh
     sp = dict(
         tokens=spec((b, c), jnp.int32),
@@ -131,6 +139,10 @@ def mixed_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
     sp.update(
         valid=spec((L, b, H, m)),
         write_slots=spec((L, b, H, c), jnp.int32),
+        inject_flag=spec((L, b, H)),
+        inject_slot=spec((L, b, H), jnp.int32),
+        inject_k=spec((L, b, H, dh)),
+        inject_v=spec((L, b, H, dh)),
     )
     return sp
 
@@ -249,14 +261,21 @@ def export_goldens(out, cfg, params, gates, b, m):
 
     # mixed tick: first half of the lanes decode one token (1-token chunks,
     # padding pointed at the trash slot m-1 as the engine does), second half
-    # prefill a full chunk
+    # prefill a full chunk.  Lane 0 additionally re-injects one retrieval
+    # entry per (layer, head) into a dead slot, so the golden replay covers
+    # the inject operands numerically, not just structurally.
     nd = b // 2
     mode = jnp.concatenate([jnp.ones((nd,)), jnp.zeros((b - nd,))])
     mtoks = toks.at[:nd, 1:].set(0)
     mmask = in_mask.at[:nd, 1:].set(0.0)
     mws = ws.at[:, :nd, :, 1:].set(m - 1)
+    inj_flag = jnp.zeros((L, b, H)).at[:, 0, :].set(1.0)
+    inj_slot = jnp.full((L, b, H), m - 2, jnp.int32)  # dead, != any write
+    inj_k = jax.random.normal(ks[4], (L, b, H, dh)) * 0.3
+    inj_v = jax.random.normal(ks[5], (L, b, H, dh)) * 0.3
     mins = dict(tokens=mtoks, pos=posc, in_mask=mmask, mode=mode, kc=kc,
-                vc=vc, valid=valid, write_slots=mws)
+                vc=vc, valid=valid, write_slots=mws, inject_flag=inj_flag,
+                inject_slot=inj_slot, inject_k=inj_k, inject_v=inj_v)
     mouts = step_fn_mixed(params, gates, *mins.values(), cfg=cfg)
     blob = {f"in.{k}": np.asarray(v, np.float32) for k, v in mins.items()}
     blob.update({f"out.{k}": np.asarray(mouts[k], np.float32)

@@ -413,7 +413,8 @@ def prefill_fn(params: dict, gates: dict, tokens: jax.Array, pos: jax.Array,
 
 
 def step_fn_mixed(params, gates, tokens, pos, in_mask, mode, kc, vc,
-                  valid, write_slots, cfg: ModelConfig = CONFIG):
+                  valid, write_slots, inject_flag=None, inject_slot=None,
+                  inject_k=None, inject_v=None, cfg: ModelConfig = CONFIG):
     """One fused *mixed tick*: every lane advances in a single graph call —
     decoding lanes by one token, mid-prefill lanes by a budgeted chunk — so
     a long prompt admission never stalls the decode stream (TRIM-KV scores
@@ -427,14 +428,29 @@ def step_fn_mixed(params, gates, tokens, pos, in_mask, mode, kc, vc,
     tokens/pos/in_mask  [B,C] as in `prefill_fn`; decode lanes use column 0
     mode                [B] f32, 1.0 = decode lane, 0.0 = chunk-fill lane
     kc/vc/valid/write_slots  as in `prefill_fn`
+    inject_*            optional KV re-admission, mirroring `decode_fn`:
+                        where inject_flag [L,B,Hkv] == 1, (inject_k,
+                        inject_v) [L,B,Hkv,dh] are written into inject_slot
+                        and marked live *before* attention — the retrieval
+                        baseline's re-injection no longer forces the engine
+                        off the fused path.
 
     Returns the `prefill_fn` dict with one change: for decode lanes the
     token's self-attention mass (attn_chunk[..., 0]) is folded into its
     write slot of `attn_slots`, so the engine consumes one [M] row per
     decode lane exactly as it consumes `decode_fn`'s `attn` output."""
+    m = kc.shape[3]
+    if inject_flag is not None:
+        # retrieval re-admission ahead of attention, all layers at once
+        # (prefill_fn consumes kc[l] per layer, so pre-scattering the full
+        # [L,...] tensors is exactly decode_fn's per-layer rule)
+        ih = jax.nn.one_hot(inject_slot, m, dtype=kc.dtype) \
+            * inject_flag[..., None]                        # [L,B,Hkv,M]
+        kc = kc * (1.0 - ih[..., None]) + inject_k[..., None, :] * ih[..., None]
+        vc = vc * (1.0 - ih[..., None]) + inject_v[..., None, :] * ih[..., None]
+        valid = jnp.maximum(valid, ih)
     out = prefill_fn(params, gates, tokens, pos, in_mask, kc, vc, valid,
                      write_slots, cfg=cfg)
-    m = kc.shape[3]
     self_slot = write_slots[:, :, :, 0]                     # [L,B,Hkv]
     oh = jax.nn.one_hot(self_slot, m, dtype=out["attn_slots"].dtype)
     self_mass = out["attn_chunk"][:, :, :, 0] * mode[None, :, None]
@@ -477,14 +493,16 @@ def prefill_fn_lanes(params, gates, tokens, pos, in_mask, kc_lanes, vc_lanes,
 
 
 def step_fn_mixed_lanes(params, gates, tokens, pos, in_mask, mode, kc_lanes,
-                        vc_lanes, valid, write_slots,
+                        vc_lanes, valid, write_slots, inject_flag=None,
+                        inject_slot=None, inject_k=None, inject_v=None,
                         cfg: ModelConfig = CONFIG):
     """Per-lane cache-residency variant of `step_fn_mixed`; see
     `decode_fn_lanes` for the layout contract."""
     kc = jnp.stack(list(kc_lanes), axis=1)
     vc = jnp.stack(list(vc_lanes), axis=1)
     out = step_fn_mixed(params, gates, tokens, pos, in_mask, mode, kc, vc,
-                        valid, write_slots, cfg=cfg)
+                        valid, write_slots, inject_flag, inject_slot,
+                        inject_k, inject_v, cfg=cfg)
     b = tokens.shape[0]
     out["kc"] = [out["kc"][:, i] for i in range(b)]
     out["vc"] = [out["vc"][:, i] for i in range(b)]

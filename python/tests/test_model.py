@@ -237,6 +237,79 @@ def test_mixed_step_chunk_lane_matches_prefill_fn(params, gates):
     assert jnp.abs(mixed["valid"][:, 1] - pre["valid"][:, 1]).max() == 0.0
 
 
+def test_mixed_step_inject_matches_decode_fn_inject(params, gates):
+    """The mixed graph's retrieval re-injection is bit-compatible with
+    `decode_fn`'s: same pre-attention write, same valid promotion, same
+    downstream numbers for the injecting decode lane."""
+    B, C, Msl = 2, 8, 32
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    ks = jax.random.split(jax.random.PRNGKey(14), 6)
+    n_live = 6
+    kc = jax.random.normal(ks[0], (L, B, H, Msl, dh)) * 0.3
+    vc = jax.random.normal(ks[1], (L, B, H, Msl, dh)) * 0.3
+    valid = jnp.zeros((L, B, H, Msl)).at[..., :n_live].set(1.0)
+    toks = jax.random.randint(ks[2], (B, C), 0, CFG.vocab)
+    # lane 0 decodes AND injects one mirrored entry per (layer, head) into
+    # a dead slot; lane 1 prefills a chunk
+    inj_flag = jnp.zeros((L, B, H)).at[:, 0, :].set(1.0)
+    inj_slot = jnp.full((L, B, H), Msl - 2, jnp.int32)
+    inj_k = jax.random.normal(ks[3], (L, B, H, dh)) * 0.3
+    inj_v = jax.random.normal(ks[4], (L, B, H, dh)) * 0.3
+    mode = jnp.array([1.0, 0.0])
+    in_mask = jnp.ones((B, C)).at[0, 1:].set(0.0)
+    pos = jnp.broadcast_to(jnp.arange(n_live, n_live + C)[None],
+                           (B, C)).astype(jnp.int32)
+    ws = jnp.broadcast_to(jnp.arange(n_live, n_live + C)[None, None, None],
+                          (L, B, H, C)).astype(jnp.int32)
+    ws = ws.at[:, 0, :, 1:].set(Msl - 1)
+    mixed = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode,
+                            kc, vc, valid, ws, inj_flag, inj_slot,
+                            inj_k, inj_v, cfg=CFG)
+    dec = M.decode_fn(params, gates, toks[:, 0],
+                      jnp.full((B,), n_live, jnp.int32), kc, vc, valid,
+                      jnp.full((L, B, H), n_live, jnp.int32),
+                      inj_flag, inj_slot, inj_k, inj_v, cfg=CFG)
+    assert jnp.abs(mixed["logits"][0, 0] - dec["logits"][0]).max() < 2e-3
+    assert jnp.abs(mixed["attn_slots"][:, 0] - dec["attn"][:, 0]).max() < 1e-4
+    # injected slot is live and carries the injected content on lane 0
+    assert float(mixed["valid"][:, 0, :, Msl - 2].min()) == 1.0
+    assert jnp.abs(mixed["kc"][:, 0, :, Msl - 2] - inj_k[:, 0]).max() == 0.0
+    assert jnp.abs(mixed["vc"][:, 0, :, Msl - 2] - inj_v[:, 0]).max() == 0.0
+    # the injected entry is attended: zeroing the flag changes the logits
+    no_inj = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode,
+                             kc, vc, valid, ws, jnp.zeros((L, B, H)),
+                             inj_slot, inj_k, inj_v, cfg=CFG)
+    assert jnp.abs(no_inj["logits"][0, 0] - mixed["logits"][0, 0]).max() > 1e-5
+    # lane 1 (no inject flags) is untouched by the inject operands
+    assert jnp.abs(no_inj["logits"][1] - mixed["logits"][1]).max() == 0.0
+
+
+def test_mixed_step_without_inject_args_unchanged(params, gates):
+    """Omitting the optional inject operands equals passing all-zero flags
+    (the exported graph always takes them; hand-written callers may not)."""
+    B, C, Msl = 2, 4, 16
+    L, H, dh = CFG.layers, CFG.hkv, CFG.dh
+    ks = jax.random.split(jax.random.PRNGKey(15), 3)
+    kc = jax.random.normal(ks[0], (L, B, H, Msl, dh)) * 0.3
+    vc = jax.random.normal(ks[1], (L, B, H, Msl, dh)) * 0.3
+    valid = jnp.zeros((L, B, H, Msl)).at[..., :3].set(1.0)
+    toks = jax.random.randint(ks[2], (B, C), 0, CFG.vocab)
+    in_mask = jnp.ones((B, C))
+    pos = jnp.broadcast_to(jnp.arange(3, 3 + C)[None], (B, C)).astype(jnp.int32)
+    ws = jnp.broadcast_to(jnp.arange(3, 3 + C)[None, None, None],
+                          (L, B, H, C)).astype(jnp.int32)
+    mode = jnp.zeros((B,))
+    plain = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode, kc, vc,
+                            valid, ws, cfg=CFG)
+    zeroed = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode, kc, vc,
+                             valid, ws, jnp.zeros((L, B, H)),
+                             jnp.zeros((L, B, H), jnp.int32),
+                             jnp.zeros((L, B, H, dh)),
+                             jnp.zeros((L, B, H, dh)), cfg=CFG)
+    for k in ("logits", "kc", "vc", "valid", "attn_slots"):
+        assert jnp.abs(plain[k] - zeroed[k]).max() == 0.0
+
+
 def test_mixed_lanes_variant_matches_monolithic(params, gates):
     """The per-lane cache layout of the mixed graph returns the same
     numbers as the monolithic formulation, split per lane."""
@@ -253,12 +326,18 @@ def test_mixed_lanes_variant_matches_monolithic(params, gates):
                           (L, B, H, C)).astype(jnp.int32)
     ws = ws.at[:, 0, :, 1:].set(Msl - 1)
     mode = jnp.array([1.0, 0.0])
+    # exercise the full exported signature incl. an active injection
+    inj_flag = jnp.zeros((L, B, H)).at[:, 0, :].set(1.0)
+    inj_slot = jnp.full((L, B, H), Msl - 2, jnp.int32)
+    inj_k = jax.random.normal(jax.random.PRNGKey(99), (L, B, H, dh)) * 0.3
     mono = M.step_fn_mixed(params, gates, toks, pos, in_mask, mode, kc, vc,
-                           valid, ws, cfg=CFG)
+                           valid, ws, inj_flag, inj_slot, inj_k, inj_k,
+                           cfg=CFG)
     kcs = [kc[:, i] for i in range(B)]
     vcs = [vc[:, i] for i in range(B)]
     lanes = M.step_fn_mixed_lanes(params, gates, toks, pos, in_mask, mode,
-                                  kcs, vcs, valid, ws, cfg=CFG)
+                                  kcs, vcs, valid, ws, inj_flag, inj_slot,
+                                  inj_k, inj_k, cfg=CFG)
     assert jnp.abs(lanes["logits"] - mono["logits"]).max() < 1e-6
     for i in range(B):
         assert jnp.abs(lanes["kc"][i] - mono["kc"][:, i]).max() < 1e-6

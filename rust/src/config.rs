@@ -17,7 +17,7 @@
 //! prefill_priority = false   # alternating fallback only; mixed ticks
 //!                            # never face the prefill/decode choice
 //! mixed_ticks = true         # fuse decode + chunked prefill into one
-//!                            # backend step when the artifact supports it
+//!                            # step plan per tick (stall-free)
 //! tick_token_budget = 0      # Sarathi-style cap on tokens per mixed tick
 //!                            # (decoders reserved first; 0 = unbounded)
 //!
@@ -46,10 +46,12 @@ pub struct EngineConfig {
     /// Use chunked prefill (prefill graph) for prompts; otherwise prompts
     /// are fed token-by-token through the decode graph.
     pub chunked_prefill: bool,
-    /// Fuse decode steps and prefill chunks into one mixed backend step per
+    /// Fuse decode steps and prefill chunks into one mixed step plan per
     /// tick (no prefill/decode head-of-line blocking).  Requires
-    /// `chunked_prefill` and a backend with a mixed-step graph; otherwise
-    /// the engine falls back to alternating ticks.
+    /// `chunked_prefill`; with it off the engine schedules alternating
+    /// decode/prefill phases.  How a mixed plan executes is the backend's
+    /// business — a fused graph where exported, per-kind graph calls on
+    /// legacy artifacts (still stall-free).
     pub mixed_ticks: bool,
     /// Token budget per mixed tick (Sarathi-style): decoding lanes are
     /// reserved one token each first, the remainder splits across

@@ -116,40 +116,6 @@ impl SeqState {
     }
 }
 
-/// Work assigned to a busy lane by the mixed-tick planner.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(crate) enum LaneWork {
-    /// one decode token, carried in chunk column 0
-    Decode,
-    /// a budgeted prefill chunk of this many prompt tokens
-    Chunk(usize),
-}
-
-/// Sarathi-style per-tick token budget split for the mixed scheduler.
-///
-/// Decoders come first: each decoding lane is reserved one token off the
-/// top (their progress is the whole point of mixed ticks).  The remainder
-/// divides evenly across the mid-prefill lanes, clamped to the graph's
-/// chunk capacity and each lane's remaining prompt — but never below one
-/// token, so an over-subscribed budget slows prefill, it cannot stall it.
-/// `budget == 0` means unbounded (every filling lane gets a full chunk).
-///
-/// Returns the chunk length granted to each entry of `needs` (the
-/// remaining prompt tokens of each mid-prefill lane, in lane order).
-pub(crate) fn split_prefill_budget(budget: usize, n_decode: usize,
-                                   needs: &[usize], chunk: usize)
-    -> Vec<usize> {
-    if needs.is_empty() {
-        return Vec::new();
-    }
-    let share = if budget == 0 {
-        chunk
-    } else {
-        (budget.saturating_sub(n_decode) / needs.len()).clamp(1, chunk)
-    };
-    needs.iter().map(|&need| share.min(need).min(chunk)).collect()
-}
-
 /// A finished session turn still occupying its lane: the KV slabs remain
 /// device-resident so the session's next turn can resume without any host
 /// round-trip.  Preempted (snapshotted to the `SessionStore`) on demand.
@@ -302,21 +268,6 @@ mod tests {
         let seq = SeqState::fresh(Request::new(1, vec![1], 4),
                                   LaneCache::new(&dims(), 4, false), false);
         assert_eq!(LaneAvail::of(&Lane::Busy(Box::new(seq))), LaneAvail::Busy);
-    }
-
-    #[test]
-    fn budget_split_reserves_decoders_first() {
-        // budget 10, 6 decoders -> 4 left over 2 filling lanes = 2 each
-        assert_eq!(split_prefill_budget(10, 6, &[30, 30], 16), vec![2, 2]);
-        // unbounded: full chunks, clamped by remaining prompt
-        assert_eq!(split_prefill_budget(0, 6, &[30, 5], 16), vec![16, 5]);
-        // over-subscribed budget still grants one token (no prefill stall)
-        assert_eq!(split_prefill_budget(4, 7, &[30, 30, 30], 16),
-                   vec![1, 1, 1]);
-        // share never exceeds the graph's chunk capacity
-        assert_eq!(split_prefill_budget(1000, 0, &[500], 16), vec![16]);
-        assert_eq!(split_prefill_budget(8, 0, &[2], 16), vec![2]);
-        assert!(split_prefill_budget(10, 2, &[], 16).is_empty());
     }
 
     #[test]

@@ -2,26 +2,34 @@
 //! model graphs and enforces the KV budget through the configured eviction
 //! policy (paper Algorithm 1, generalized over all baselines).
 //!
-//! Per decode tick:
+//! Every tick is ONE plan-execute-postprocess pipeline:
 //!   1. idle lanes admit waiting requests (continuous batching); any lane
 //!      residency changes — LRU preemptions of parked sessions and session
 //!      swap-ins from the host store — execute as ONE batched
 //!      `swap_lanes` backend call (O(lane) per lane moved, never a
 //!      round-trip per lane)
-//!   2. each running lane picks, per (layer, head), the slot its new token
-//!      will occupy — a free slot (the arena keeps `slots > budget` so one
-//!      always exists after the previous tick's eviction)
-//!   3. one batched decode-graph execution (KV stays device-resident; the
-//!      validity mask is maintained incrementally, not rebuilt per tick)
-//!   4. per lane/head: record the new token's retention score beta (gate
-//!      output), fold attention stats, then — if the head now exceeds the
-//!      budget — evict the policy's victim (provisional-add-then-evict,
-//!      exactly the paper's rule: the newest token itself can be evicted)
-//!   5. sample the next token, finish lanes on EOS / length
+//!   2. *plan*: `engine::plan::assign_ops` gives every lane a `LaneOp` —
+//!      `Decode` (one token), `Chunk{tokens}` (a Sarathi-budgeted prefill
+//!      chunk), `Inject{slots}` (decode + retrieval re-admissions), or
+//!      `Idle` — per the tick's scheduling phase (fused mixed ticks by
+//!      default; alternating phases when `mixed_ticks` is off)
+//!   3. *assemble*: each active lane picks, per (layer, head), the slot(s)
+//!      its new token(s) will occupy — free slots (the arena keeps
+//!      `slots > budget` so one always exists after the previous tick's
+//!      eviction) — into the reusable fused `StepPlan` buffers; the
+//!      validity mask is maintained incrementally, not rebuilt per tick
+//!   4. *execute*: one `ModelBackend::execute(&StepPlan)` call (KV stays
+//!      device-resident; the backend dispatches to the cheapest graph)
+//!   5. *postprocess*: ONE shared per-lane helper records the new tokens'
+//!      retention scores (gate outputs), folds attention stats, then — if
+//!      a head now exceeds the budget — evicts the policy's victims
+//!      (provisional-add-then-evict, exactly the paper's rule: the newest
+//!      token itself can be evicted), plans retrieval re-injections, and
+//!      samples the next token, finishing lanes on EOS / length
 //!
-//! Prompts run through the chunked prefill graph (compress-after-each-chunk,
-//! the LocRet protocol used in paper §B.3) or token-by-token through the
-//! decode graph (`chunked_prefill = false`).
+//! Prompts run through chunk ops (compress-after-each-chunk, the LocRet
+//! protocol used in paper §B.3) or token-by-token through decode ops
+//! (`chunked_prefill = false`).
 //!
 //! Multi-turn serving: a request carrying a `session` id retains its lane
 //! state after the turn.  Under the `lazy` swap policy the finished turn
@@ -34,6 +42,7 @@
 //! `engine::lanes`.
 
 pub(crate) mod lanes;
+pub(crate) mod plan;
 pub mod sampler;
 
 use std::time::Instant;
@@ -43,12 +52,13 @@ use anyhow::{ensure, Context, Result};
 use crate::config::EngineConfig;
 use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::metrics::EngineMetrics;
+use crate::model_meta::ModelDims;
 use crate::policy::Policy;
-use crate::runtime::{DecodeIn, LaneKv, MixedIn, ModelBackend, PrefillIn};
+use crate::runtime::{LaneKv, LaneOp, ModelBackend, StepOut};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
 use crate::session::{SessionSnapshot, SessionStore};
-use lanes::{split_prefill_budget, Lane, LaneAvail, LaneWork, ParkedSession,
-            SeqState, ValidMask};
+use lanes::{Lane, LaneAvail, ParkedSession, SeqState, ValidMask};
+use plan::{assign_ops, StepBufs, TickKind};
 use sampler::Sampler;
 
 /// EMA factor for the SnapKV-style attention statistic.
@@ -91,12 +101,9 @@ pub struct Engine<B: ModelBackend> {
     tick_no: u64,
     /// `[L, B, H, M]` validity mask, incrementally maintained
     valid: ValidMask,
-    /// write-slot scratch reused across ticks (perf: no per-step allocation)
-    ws_buf: Vec<i32>,
-    /// `[L, B, H, C]` write-slot scratch for mixed ticks (the largest fused
-    /// buffer — reused like `ws_buf` so contended steady state stays off
-    /// the allocator's hot path)
-    ws_mixed: Vec<i32>,
+    /// reusable fused `StepPlan` operand buffers (perf: no per-step
+    /// allocation of the [B,C]/[L,B,H,C] scratch)
+    bufs: StepBufs,
 }
 
 impl<B: ModelBackend> Engine<B> {
@@ -132,8 +139,7 @@ impl<B: ModelBackend> Engine<B> {
             clock: 0,
             tick_no: 0,
             valid: ValidMask::new(&dims, b, slots),
-            ws_buf: vec![0; dims.layers * b * dims.hkv],
-            ws_mixed: vec![0; dims.layers * b * dims.hkv * chunk],
+            bufs: StepBufs::new(&dims, b, chunk),
             cfg,
         })
     }
@@ -258,23 +264,22 @@ impl<B: ModelBackend> Engine<B> {
             Lane::Busy(s) => !self.cfg.chunked_prefill || s.fed >= s.prompt.len(),
             _ => false,
         });
-        // Mixed tick: when decoders and mid-prefill lanes coexist, run one
-        // fused backend step for both — no prefill/decode head-of-line
-        // blocking.  Retrieval's KV re-injection rides the decode graph,
-        // and legacy artifacts carry no mixed graph: both fall back to the
-        // alternating prefill/decode ticks below.
+        // Fused tick: when decoders and mid-prefill lanes coexist, plan one
+        // mixed step for both — no prefill/decode head-of-line blocking.
+        // The backend realizes the plan through whatever graphs it has
+        // (fused mixed graph, or per-kind calls on legacy artifacts);
+        // retrieval's re-injections ride the plan's inject operands, so no
+        // policy forces the alternating phases any more.
         let fuse = self.cfg.mixed_ticks
             && self.cfg.chunked_prefill
             && any_prefill
-            && any_decode
-            && !self.policy.is_retrieval()
-            && self.backend.supports_mixed();
+            && any_decode;
         let worked = if fuse {
-            self.mixed_tick()?
+            self.step_tick(TickKind::Fused)?
         } else if any_prefill && (self.cfg.prefill_priority || !any_decode) {
-            self.prefill_tick()?
+            self.step_tick(TickKind::Prefill)?
         } else if any_decode || any_prefill {
-            self.decode_tick()?
+            self.step_tick(TickKind::Decode)?
         } else {
             false
         };
@@ -510,577 +515,160 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     // -----------------------------------------------------------------
-    // decode tick
+    // the unified step pipeline: plan -> assemble -> execute -> postprocess
     // -----------------------------------------------------------------
-    /// Returns false when no lane was ready to decode (no backend call).
-    fn decode_tick(&mut self) -> Result<bool> {
+    /// One scheduling step of the given kind.  Returns false when no lane
+    /// had work (no backend call was issued — `run_to_completion` must
+    /// never spin on no-op ticks).
+    ///
+    /// The pipeline is identical for every phase: `plan::assign_ops` gives
+    /// each lane a [`LaneOp`], the assembly loop fills the reusable fused
+    /// buffers (applying pending retrieval injections, which upgrades a
+    /// lane's op to `Inject`), ONE `ModelBackend::execute` call runs the
+    /// plan, and [`postprocess_lane`] — the single shared per-lane helper —
+    /// commits every lane's results.
+    fn step_tick(&mut self, kind: TickKind) -> Result<bool> {
         let dims = self.backend.dims();
-        let (l, b, h, m) = (dims.layers, self.backend.batch(), dims.hkv,
-                            self.backend.slots());
+        let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
+                               self.backend.slots(), self.backend.chunk());
         let trash = (m - 1) as i32;
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        self.ws_buf.iter_mut().for_each(|x| *x = trash);
-        let mut chosen: Vec<Option<Vec<usize>>> = vec![None; b];
-        let mut inj_flag = vec![0.0f32; l * b * h];
-        let mut inj_slot = vec![0i32; l * b * h];
-        let mut inj_k = vec![0.0f32; l * b * h * dims.dh];
-        let mut inj_v = vec![0.0f32; l * b * h * dims.dh];
-        let mut any_inject = false;
-        let mut active = 0usize;
 
+        // --- plan --------------------------------------------------------
+        self.bufs.reset(trash);
+        let n_active = assign_ops(&self.lanes, kind, self.cfg.chunked_prefill,
+                                  self.cfg.tick_token_budget, c,
+                                  &mut self.bufs.ops);
+        if n_active == 0 {
+            return Ok(false);
+        }
+
+        // --- assemble ----------------------------------------------------
+        // per lane: (real_c, flat [l*h, real_c] chosen-slot table); decode
+        // lanes use real_c = 1 (one flat Vec per lane, not one per head —
+        // steady-state decode stays off the allocator's hot path)
+        let mut chunk_info: Vec<Option<(usize, Vec<usize>)>> = vec![None; b];
+        let mut any_inject = false;
         for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
             let Lane::Busy(seq) = lane else { continue };
-            // in chunked mode, mid-prefill lanes skip decode ticks
-            if self.cfg.chunked_prefill && seq.fed < seq.prompt.len() {
+            let op = self.bufs.ops[lane_idx];
+            if !op.is_active() {
                 continue;
             }
-            active += 1;
-            tokens[lane_idx] = seq.stream_token(seq.fed) as i32;
-            pos[lane_idx] = seq.fed as i32;
             // rebuild this lane's mask region only if its occupant changed
             self.valid.sync(lane_idx, &seq.cache);
-            // apply pending retrieval injections: mark live *before* the
-            // call (the graph writes inject k/v ahead of attention)
-            let mut slots_per_head = Vec::with_capacity(l * h);
-            for li in 0..l {
-                for hi in 0..h {
-                    let flat = li * h + hi;
-                    let base = (li * b + lane_idx) * h + hi;
-                    if let Some((slot, me)) = seq.inject.plans[flat].take() {
-                        inj_flag[base] = 1.0;
-                        inj_slot[base] = slot as i32;
-                        let kb = base * dims.dh;
-                        inj_k[kb..kb + dims.dh].copy_from_slice(&me.key);
-                        inj_v[kb..kb + dims.dh].copy_from_slice(&me.val);
-                        seq.cache.head_mut(li, hi).insert_kv(
-                            slot, me.entry, Some(&me.key), Some(&me.val));
-                        self.valid.set(lane_idx, li, hi, slot, true);
-                        any_inject = true;
-                        self.metrics.injections += 1;
-                    }
-                    let head = seq.cache.head(li, hi);
-                    let slot = head
-                        .free_slot()
-                        .context("no free slot (arena invariant broken)")?;
-                    self.ws_buf[base] = slot as i32;
-                    slots_per_head.push(slot);
-                }
-            }
-            chosen[lane_idx] = Some(slots_per_head);
-        }
-        if active == 0 {
-            return Ok(false);
-        }
-
-        let want_attn = self.policy.needs_attention() || self.record_gates;
-        let want_kv = self.policy.needs_keys();
-        let t0 = Instant::now();
-        let out = self.backend.decode(&DecodeIn {
-            tokens: &tokens,
-            pos: &pos,
-            valid: self.valid.as_slice(),
-            write_slot: &self.ws_buf,
-            inject_flag: any_inject.then_some(&inj_flag[..]),
-            inject_slot: any_inject.then_some(&inj_slot[..]),
-            inject_k: any_inject.then_some(&inj_k[..]),
-            inject_v: any_inject.then_some(&inj_v[..]),
-            want_attn,
-            want_kv,
-        })?;
-        self.metrics.step_us.push(t0.elapsed().as_secs_f64() * 1e6);
-        self.metrics.decode_steps += 1;
-        self.metrics.lane_occupancy.push(active as f64);
-
-        let vocab = dims.vocab;
-        let mut finished: Vec<usize> = Vec::new();
-        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
-            let Lane::Busy(seq) = lane else { continue };
-            let Some(slots_per_head) = chosen[lane_idx].take() else { continue };
-            let now = seq.fed as i64;
-            for li in 0..l {
-                for hi in 0..h {
-                    let base = (li * b + lane_idx) * h + hi;
-                    let slot = slots_per_head[li * h + hi];
-                    let kb = base * dims.dh;
-                    let entry = SlotEntry {
-                        pos: now,
-                        token: tokens[lane_idx] as u32,
-                        log_beta: out.log_beta[base],
-                        ..Default::default()
-                    };
-                    let head = seq.cache.head_mut(li, hi);
-                    head.insert_kv(
-                        slot, entry,
-                        want_kv.then(|| &out.k_new[kb..kb + dims.dh]).as_deref(),
-                        want_kv.then(|| &out.v_new[kb..kb + dims.dh]).as_deref());
-                    self.valid.set(lane_idx, li, hi, slot, true);
-                    if want_attn {
-                        let arow = &out.attn[base * m..(base + 1) * m];
-                        head.update_attention(arow, ATTN_EMA);
-                    }
-                    // budget enforcement: provisional add, then evict argmin
-                    while head.used > self.cfg.budget {
-                        let Some(victim) = self.policy.select_victim(head, now)
-                        else { break };
-                        if self.policy.is_retrieval() {
-                            let me = MirrorEntry {
-                                entry: head.entries[victim],
-                                key: head.key(victim).to_vec(),
-                                val: head.val(victim).to_vec(),
-                            };
-                            seq.mirror[li * h + hi].push(me);
-                        }
-                        let vpos = head.entries[victim].pos;
-                        head.evict(victim);
-                        self.valid.set(lane_idx, li, hi, victim, false);
-                        self.metrics.evictions += 1;
-                        if let Some(rec) = seq.record.as_mut() {
-                            rec.evictions.push((li * h + hi, vpos, now));
-                        }
-                    }
-                    head.check_invariants();
-                    // retrieval: schedule a re-admission when a mirrored key
-                    // matches the current decoding direction better than the
-                    // weakest resident does
-                    if self.policy.is_retrieval() {
-                        let q_proxy = &out.k_new[kb..kb + dims.dh];
-                        let head = seq.cache.head(li, hi);
-                        if let Some(plan) = plan_injection(
-                            head, &mut seq.mirror[li * h + hi], q_proxy) {
-                            seq.inject.plans[li * h + hi] = Some(plan);
-                        }
-                    }
-                }
-            }
-
-            if let Some(rec) = seq.record.as_mut() {
-                rec.tokens.push(tokens[lane_idx] as u32);
-                let mut row = Vec::with_capacity(l * h);
+            if op.is_decode() {
+                self.bufs.tokens[lane_idx * c] = seq.stream_token(seq.fed) as i32;
+                self.bufs.pos[lane_idx * c] = seq.fed as i32;
+                self.bufs.in_mask[lane_idx * c] = 1.0;
+                let mut injected = 0usize;
+                let mut per_head = Vec::with_capacity(l * h);
                 for li in 0..l {
                     for hi in 0..h {
-                        row.push(out.log_beta[(li * b + lane_idx) * h + hi]);
-                    }
-                }
-                rec.log_betas.push(row);
-            }
-            seq.fed += 1;
-            self.metrics.tokens_prefilled +=
-                (seq.fed <= seq.prompt.len()) as u64;
-            // logits at this step predict stream[fed]; sample once the
-            // prompt is exhausted
-            if seq.fed >= seq.prompt.len() {
-                let logits = &out.logits[lane_idx * vocab..(lane_idx + 1) * vocab];
-                let tok = self.sampler.sample(logits) as u32;
-                seq.generated.push(tok);
-                self.metrics.tokens_decoded += 1;
-                record_token_latency(&mut self.metrics, seq, self.tick_no);
-                let hit_eos = seq.stop_at_eos && tok == self.eos_token;
-                if hit_eos || seq.generated.len() >= seq.max_new {
-                    finished.push(lane_idx);
-                }
-            }
-        }
-        self.finish_lanes(finished)?;
-        Ok(true)
-    }
-
-    // -----------------------------------------------------------------
-    // chunked prefill tick
-    // -----------------------------------------------------------------
-    /// Returns false when no lane had prompt tokens to feed (no backend
-    /// call was issued — the caller must not report work done).
-    fn prefill_tick(&mut self) -> Result<bool> {
-        let dims = self.backend.dims();
-        let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
-                               self.backend.slots(), self.backend.chunk());
-        let trash = (m - 1) as i32;
-        let mut tokens = vec![0i32; b * c];
-        let mut pos = vec![0i32; b * c];
-        let mut in_mask = vec![0.0f32; b * c];
-        let mut ws = vec![trash; l * b * h * c];
-        // per lane: (real_c, per-(l,h) slot lists)
-        let mut chunk_info: Vec<Option<(usize, Vec<Vec<usize>>)>> = vec![None; b];
-
-        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
-            let Lane::Busy(seq) = lane else { continue };
-            if seq.fed >= seq.prompt.len() {
-                continue;
-            }
-            let start = seq.fed;
-            let real_c = c.min(seq.prompt.len() - start);
-            for ci in 0..real_c {
-                tokens[lane_idx * c + ci] = seq.prompt[start + ci] as i32;
-                pos[lane_idx * c + ci] = (start + ci) as i32;
-                in_mask[lane_idx * c + ci] = 1.0;
-            }
-            self.valid.sync(lane_idx, &seq.cache);
-            let mut per_head = Vec::with_capacity(l * h);
-            for li in 0..l {
-                for hi in 0..h {
-                    let head = seq.cache.head(li, hi);
-                    // first real_c free slots for this chunk
-                    let mut free: Vec<usize> = (0..m - 1)
-                        .filter(|&s| !head.live[s])
-                        .take(real_c)
-                        .collect();
-                    ensure!(free.len() == real_c,
-                            "prefill needs {real_c} free slots, found {}",
-                            free.len());
-                    let base = ((li * b + lane_idx) * h + hi) * c;
-                    for ci in 0..real_c {
-                        ws[base + ci] = free[ci] as i32;
-                    }
-                    free.truncate(real_c);
-                    per_head.push(free);
-                }
-            }
-            chunk_info[lane_idx] = Some((real_c, per_head));
-        }
-        if chunk_info.iter().all(Option::is_none) {
-            return Ok(false);
-        }
-
-        let out = self.backend.prefill(&PrefillIn {
-            tokens: &tokens,
-            pos: &pos,
-            in_mask: &in_mask,
-            valid: self.valid.as_slice(),
-            write_slots: &ws,
-        })?;
-        self.metrics.prefill_chunks += 1;
-
-        let vocab = dims.vocab;
-        let mut finished: Vec<usize> = Vec::new();
-        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
-            let Lane::Busy(seq) = lane else { continue };
-            let Some((real_c, per_head)) = chunk_info[lane_idx].take() else {
-                continue;
-            };
-            let start = seq.fed;
-            for li in 0..l {
-                for hi in 0..h {
-                    let base = (li * b + lane_idx) * h + hi;
-                    let head = seq.cache.head_mut(li, hi);
-                    // resident slots first absorb the chunk's attention
-                    let arow = &out.attn_slots[base * m..(base + 1) * m];
-                    head.update_attention(arow, ATTN_EMA);
-                    // insert the chunk's tokens
-                    for ci in 0..real_c {
-                        let slot = per_head[li * h + hi][ci];
-                        let cb = base * c + ci;
-                        let kb = cb * dims.dh;
-                        let entry = SlotEntry {
-                            pos: (start + ci) as i64,
-                            token: seq.prompt[start + ci],
-                            log_beta: out.log_beta[cb],
-                            acc_attn: out.attn_chunk[cb],
-                            ema_attn: out.attn_chunk[cb] / real_c as f32,
-                            last_attn: out.attn_chunk[cb] / real_c as f32,
-                        };
-                        head.insert_kv(slot, entry,
-                                       Some(&out.k_chunk[kb..kb + dims.dh]),
-                                       Some(&out.v_chunk[kb..kb + dims.dh]));
-                        self.valid.set(lane_idx, li, hi, slot, true);
-                    }
-                    // compress down to budget (LocRet chunked protocol)
-                    let now = (start + real_c) as i64;
-                    while head.used > self.cfg.budget {
-                        let Some(victim) = self.policy.select_victim(head, now)
-                        else { break };
-                        if self.policy.is_retrieval() {
-                            let me = MirrorEntry {
-                                entry: head.entries[victim],
-                                key: head.key(victim).to_vec(),
-                                val: head.val(victim).to_vec(),
-                            };
-                            seq.mirror[li * h + hi].push(me);
+                        let flat = li * h + hi;
+                        let base = (li * b + lane_idx) * h + hi;
+                        // apply pending retrieval injections: mark live
+                        // *before* the call (the graph writes inject k/v
+                        // ahead of attention)
+                        if let Some((slot, me)) = seq.inject.plans[flat].take() {
+                            self.bufs.inject_flag[base] = 1.0;
+                            self.bufs.inject_slot[base] = slot as i32;
+                            let kb = base * dims.dh;
+                            self.bufs.inject_k[kb..kb + dims.dh]
+                                .copy_from_slice(&me.key);
+                            self.bufs.inject_v[kb..kb + dims.dh]
+                                .copy_from_slice(&me.val);
+                            seq.cache.head_mut(li, hi).insert_kv(
+                                slot, me.entry, Some(&me.key), Some(&me.val));
+                            self.valid.set(lane_idx, li, hi, slot, true);
+                            injected += 1;
+                            self.metrics.injections += 1;
                         }
-                        let vpos = head.entries[victim].pos;
-                        head.evict(victim);
-                        self.valid.set(lane_idx, li, hi, victim, false);
-                        self.metrics.evictions += 1;
-                        if let Some(rec) = seq.record.as_mut() {
-                            rec.evictions.push((li * h + hi, vpos, now));
-                        }
+                        let head = seq.cache.head(li, hi);
+                        let slot = head
+                            .free_slot()
+                            .context("no free slot (arena invariant broken)")?;
+                        self.bufs.write_slots[base * c] = slot as i32;
+                        per_head.push(slot);
                     }
-                    head.check_invariants();
                 }
-            }
-            if let Some(rec) = seq.record.as_mut() {
+                if injected > 0 {
+                    self.bufs.ops[lane_idx] = LaneOp::Inject { slots: injected };
+                    any_inject = true;
+                }
+                chunk_info[lane_idx] = Some((1, per_head));
+            } else if let LaneOp::Chunk { tokens: real_c } = op {
+                let start = seq.fed;
                 for ci in 0..real_c {
-                    rec.tokens.push(seq.prompt[start + ci]);
-                    let mut row = Vec::with_capacity(l * h);
-                    for li in 0..l {
-                        for hi in 0..h {
-                            row.push(out.log_beta[((li * b + lane_idx) * h + hi)
-                                                  * c + ci]);
+                    self.bufs.tokens[lane_idx * c + ci] =
+                        seq.prompt[start + ci] as i32;
+                    self.bufs.pos[lane_idx * c + ci] = (start + ci) as i32;
+                    self.bufs.in_mask[lane_idx * c + ci] = 1.0;
+                }
+                let mut per_head = Vec::with_capacity(l * h * real_c);
+                for li in 0..l {
+                    for hi in 0..h {
+                        let head = seq.cache.head(li, hi);
+                        // first real_c free slots for this chunk
+                        let before = per_head.len();
+                        per_head.extend(
+                            (0..m - 1).filter(|&s| !head.live[s]).take(real_c));
+                        ensure!(per_head.len() - before == real_c,
+                                "chunk needs {real_c} free slots, found {}",
+                                per_head.len() - before);
+                        let base = ((li * b + lane_idx) * h + hi) * c;
+                        for ci in 0..real_c {
+                            self.bufs.write_slots[base + ci] =
+                                per_head[before + ci] as i32;
                         }
                     }
-                    rec.log_betas.push(row);
                 }
-            }
-            seq.fed += real_c;
-            self.metrics.tokens_prefilled += real_c as u64;
-            if seq.fed >= seq.prompt.len() {
-                // prompt complete: the last real position's logits sample the
-                // first generated token
-                let lb = (lane_idx * c + real_c - 1) * vocab;
-                let tok = self.sampler.sample(&out.logits[lb..lb + vocab]) as u32;
-                seq.generated.push(tok);
-                self.metrics.tokens_decoded += 1;
-                record_token_latency(&mut self.metrics, seq, self.tick_no);
-                let hit_eos = seq.stop_at_eos && tok == self.eos_token;
-                if hit_eos || seq.generated.len() >= seq.max_new {
-                    finished.push(lane_idx);
-                }
-            }
-        }
-        self.finish_lanes(finished)?;
-        Ok(true)
-    }
-
-    // -----------------------------------------------------------------
-    // fused mixed tick (decode + budgeted chunk prefill, ONE backend step)
-    // -----------------------------------------------------------------
-    /// The stall-free scheduling step: every decoding lane advances one
-    /// token AND every mid-prefill lane feeds a budgeted chunk, in a single
-    /// `step_mixed` graph execution.  Decode lanes occupy chunk column 0 of
-    /// the fused buffers; their attention row comes back mode-fused over
-    /// the M resident slots, so the per-lane post-processing below is
-    /// exactly `decode_tick`'s.  Chunk lanes follow `prefill_tick`'s
-    /// compress-after-each-chunk protocol unchanged — TRIM-KV scores
-    /// tokens at creation time, so fusing the phases alters no eviction
-    /// decision.  Token budget: `scheduler.tick_token_budget`
-    /// (Sarathi-style; decoders reserved first).
-    fn mixed_tick(&mut self) -> Result<bool> {
-        let dims = self.backend.dims();
-        let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
-                               self.backend.slots(), self.backend.chunk());
-        let trash = (m - 1) as i32;
-
-        // --- plan: classify lanes, split the tick's token budget --------
-        let mut n_decode = 0usize;
-        let mut fill_needs: Vec<usize> = Vec::new();
-        let mut plan: Vec<Option<LaneWork>> = vec![None; b];
-        for (lane_idx, lane) in self.lanes.iter().enumerate() {
-            let Lane::Busy(seq) = lane else { continue };
-            if seq.fed < seq.prompt.len() {
-                fill_needs.push(seq.prompt.len() - seq.fed);
-                plan[lane_idx] = Some(LaneWork::Chunk(0)); // grant below
-            } else {
-                n_decode += 1;
-                plan[lane_idx] = Some(LaneWork::Decode);
-            }
-        }
-        if n_decode == 0 && fill_needs.is_empty() {
-            return Ok(false);
-        }
-        let grants = split_prefill_budget(self.cfg.tick_token_budget,
-                                          n_decode, &fill_needs, c);
-        let mut next_grant = grants.into_iter();
-        for work in plan.iter_mut().flatten() {
-            if matches!(*work, LaneWork::Chunk(_)) {
-                *work = LaneWork::Chunk(next_grant.next().expect("grant"));
+                chunk_info[lane_idx] = Some((real_c, per_head));
             }
         }
 
-        // --- assemble the fused step ------------------------------------
-        let mut tokens = vec![0i32; b * c];
-        let mut pos = vec![0i32; b * c];
-        let mut in_mask = vec![0.0f32; b * c];
-        let mut mode = vec![0.0f32; b];
-        self.ws_mixed.iter_mut().for_each(|x| *x = trash);
-        // per lane: (real_c, per-(l,h) slot lists); decode lanes use 1
-        let mut chunk_info: Vec<Option<(usize, Vec<Vec<usize>>)>> = vec![None; b];
-        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
-            let Lane::Busy(seq) = lane else { continue };
-            let Some(work) = plan[lane_idx] else { continue };
-            self.valid.sync(lane_idx, &seq.cache);
-            match work {
-                LaneWork::Decode => {
-                    mode[lane_idx] = 1.0;
-                    tokens[lane_idx * c] = seq.stream_token(seq.fed) as i32;
-                    pos[lane_idx * c] = seq.fed as i32;
-                    in_mask[lane_idx * c] = 1.0;
-                    let mut per_head = Vec::with_capacity(l * h);
-                    for li in 0..l {
-                        for hi in 0..h {
-                            let head = seq.cache.head(li, hi);
-                            let slot = head.free_slot().context(
-                                "no free slot (arena invariant broken)")?;
-                            self.ws_mixed[((li * b + lane_idx) * h + hi) * c] =
-                                slot as i32;
-                            per_head.push(vec![slot]);
-                        }
-                    }
-                    chunk_info[lane_idx] = Some((1, per_head));
-                }
-                LaneWork::Chunk(real_c) => {
-                    let start = seq.fed;
-                    for ci in 0..real_c {
-                        tokens[lane_idx * c + ci] = seq.prompt[start + ci] as i32;
-                        pos[lane_idx * c + ci] = (start + ci) as i32;
-                        in_mask[lane_idx * c + ci] = 1.0;
-                    }
-                    let mut per_head = Vec::with_capacity(l * h);
-                    for li in 0..l {
-                        for hi in 0..h {
-                            let head = seq.cache.head(li, hi);
-                            let free: Vec<usize> = (0..m - 1)
-                                .filter(|&s| !head.live[s])
-                                .take(real_c)
-                                .collect();
-                            ensure!(free.len() == real_c,
-                                    "mixed chunk needs {real_c} free slots, \
-                                     found {}", free.len());
-                            let base = ((li * b + lane_idx) * h + hi) * c;
-                            for ci in 0..real_c {
-                                self.ws_mixed[base + ci] = free[ci] as i32;
-                            }
-                            per_head.push(free);
-                        }
-                    }
-                    chunk_info[lane_idx] = Some((real_c, per_head));
-                }
-            }
-        }
-
+        // --- execute -----------------------------------------------------
         let want_attn = self.policy.needs_attention() || self.record_gates;
         let want_kv = self.policy.needs_keys();
         let t0 = Instant::now();
-        let out = self.backend.step_mixed(&MixedIn {
-            tokens: &tokens,
-            pos: &pos,
-            in_mask: &in_mask,
-            mode: &mode,
-            valid: self.valid.as_slice(),
-            write_slots: &self.ws_mixed,
-        })?;
+        let out = {
+            let plan = self.bufs.as_plan(self.valid.as_slice(), any_inject,
+                                         want_attn, want_kv);
+            self.backend.execute(&plan)?
+        };
         self.metrics.step_us.push(t0.elapsed().as_secs_f64() * 1e6);
-        self.metrics.mixed_steps += 1;
-        self.metrics.mixed_decode_lanes.push(n_decode as f64);
-        self.metrics.mixed_chunk_lanes.push(fill_needs.len() as f64);
-        self.metrics.lane_occupancy
-            .push((n_decode + fill_needs.len()) as f64);
+        self.metrics.lane_occupancy.push(n_active as f64);
+        match kind {
+            TickKind::Decode => self.metrics.decode_steps += 1,
+            TickKind::Prefill => self.metrics.prefill_chunks += 1,
+            TickKind::Fused => {
+                let n_dec =
+                    self.bufs.ops.iter().filter(|o| o.is_decode()).count();
+                self.metrics.mixed_steps += 1;
+                self.metrics.mixed_decode_lanes.push(n_dec as f64);
+                self.metrics.mixed_chunk_lanes
+                    .push((n_active - n_dec) as f64);
+                self.metrics.mixed_inject_steps += any_inject as u64;
+            }
+        }
 
-        // --- per-lane post-processing -----------------------------------
-        let vocab = dims.vocab;
+        // --- postprocess (ONE shared per-lane helper) --------------------
+        let fused = kind == TickKind::Fused;
+        let budget = self.cfg.budget;
+        let eos_token = self.eos_token;
+        let tick_no = self.tick_no;
         let mut finished: Vec<usize> = Vec::new();
-        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+        let Engine { lanes, policy, valid, metrics, sampler, bufs, .. } = self;
+        for (lane_idx, lane) in lanes.iter_mut().enumerate() {
             let Lane::Busy(seq) = lane else { continue };
             let Some((real_c, per_head)) = chunk_info[lane_idx].take() else {
                 continue;
             };
-            let start = seq.fed;
-            let is_decode = mode[lane_idx] > 0.5;
-            for li in 0..l {
-                for hi in 0..h {
-                    let base = (li * b + lane_idx) * h + hi;
-                    let head = seq.cache.head_mut(li, hi);
-                    if is_decode {
-                        // decode semantics on chunk column 0 (insert, then
-                        // fold the mode-fused [M] attention row)
-                        let cb = base * c;
-                        let kb = cb * dims.dh;
-                        let slot = per_head[li * h + hi][0];
-                        let entry = SlotEntry {
-                            pos: start as i64,
-                            token: tokens[lane_idx * c] as u32,
-                            log_beta: out.log_beta[cb],
-                            ..Default::default()
-                        };
-                        head.insert_kv(
-                            slot, entry,
-                            want_kv.then(|| &out.k_chunk[kb..kb + dims.dh])
-                                .as_deref(),
-                            want_kv.then(|| &out.v_chunk[kb..kb + dims.dh])
-                                .as_deref());
-                        self.valid.set(lane_idx, li, hi, slot, true);
-                        if want_attn {
-                            let arow = &out.attn_slots[base * m..(base + 1) * m];
-                            head.update_attention(arow, ATTN_EMA);
-                        }
-                    } else {
-                        // chunk-fill semantics: resident slots absorb the
-                        // chunk's attention, then the chunk inserts
-                        let arow = &out.attn_slots[base * m..(base + 1) * m];
-                        head.update_attention(arow, ATTN_EMA);
-                        for ci in 0..real_c {
-                            let slot = per_head[li * h + hi][ci];
-                            let cb = base * c + ci;
-                            let kb = cb * dims.dh;
-                            let entry = SlotEntry {
-                                pos: (start + ci) as i64,
-                                token: seq.prompt[start + ci],
-                                log_beta: out.log_beta[cb],
-                                acc_attn: out.attn_chunk[cb],
-                                ema_attn: out.attn_chunk[cb] / real_c as f32,
-                                last_attn: out.attn_chunk[cb] / real_c as f32,
-                            };
-                            head.insert_kv(slot, entry,
-                                           Some(&out.k_chunk[kb..kb + dims.dh]),
-                                           Some(&out.v_chunk[kb..kb + dims.dh]));
-                            self.valid.set(lane_idx, li, hi, slot, true);
-                        }
-                    }
-                    // budget enforcement, shared: provisional add(s), then
-                    // evict the policy's victims (retrieval never reaches
-                    // the mixed path, so no mirror bookkeeping here).
-                    // `now` matches the alternating paths exactly: decode
-                    // evicts at the fed position, prefill past the chunk.
-                    let now = if is_decode {
-                        start as i64
-                    } else {
-                        (start + real_c) as i64
-                    };
-                    while head.used > self.cfg.budget {
-                        let Some(victim) = self.policy.select_victim(head, now)
-                        else { break };
-                        let vpos = head.entries[victim].pos;
-                        head.evict(victim);
-                        self.valid.set(lane_idx, li, hi, victim, false);
-                        self.metrics.evictions += 1;
-                        if let Some(rec) = seq.record.as_mut() {
-                            rec.evictions.push((li * h + hi, vpos, now));
-                        }
-                    }
-                    head.check_invariants();
-                }
-            }
-            if let Some(rec) = seq.record.as_mut() {
-                for ci in 0..real_c {
-                    rec.tokens.push(tokens[lane_idx * c + ci] as u32);
-                    let mut row = Vec::with_capacity(l * h);
-                    for li in 0..l {
-                        for hi in 0..h {
-                            row.push(out.log_beta[((li * b + lane_idx) * h + hi)
-                                                  * c + ci]);
-                        }
-                    }
-                    rec.log_betas.push(row);
-                }
-            }
-            seq.fed += real_c;
-            if is_decode {
-                self.metrics.tokens_prefilled +=
-                    (seq.fed <= seq.prompt.len()) as u64;
-            } else {
-                self.metrics.tokens_prefilled += real_c as u64;
-                self.metrics.mixed_chunk_tokens += real_c as u64;
-            }
-            if seq.fed >= seq.prompt.len() {
-                // decode lanes sample column 0; a lane that just finished
-                // its prompt samples from its last real chunk position
-                let lb = (lane_idx * c + real_c - 1) * vocab;
-                let tok = self.sampler.sample(&out.logits[lb..lb + vocab]) as u32;
-                seq.generated.push(tok);
-                self.metrics.tokens_decoded += 1;
-                record_token_latency(&mut self.metrics, seq, self.tick_no);
-                let hit_eos = seq.stop_at_eos && tok == self.eos_token;
-                if hit_eos || seq.generated.len() >= seq.max_new {
-                    finished.push(lane_idx);
-                }
+            let done = postprocess_lane(
+                seq, lane_idx, bufs.ops[lane_idx], real_c, &per_head, &out,
+                &dims, b, m, budget, fused, want_attn, want_kv, policy, valid,
+                metrics, sampler, eos_token, tick_no)?;
+            if done {
+                finished.push(lane_idx);
             }
         }
         self.finish_lanes(finished)?;
@@ -1219,6 +807,164 @@ impl<B: ModelBackend> Engine<B> {
                 .collect(),
         )
     }
+}
+
+/// THE shared per-lane postprocess: commit one lane's step results to its
+/// host slot tables — used identically by decode, prefill and fused ticks
+/// (it replaces the three near-identical copies the tick bodies used to
+/// carry).  Inserts the new entries, folds attention, enforces the budget
+/// (provisional-add-then-evict at the same `now` the alternating paths
+/// used: decode ops evict at the fed position, chunk ops past the chunk),
+/// mirrors retrieval evictions, plans re-injections, records gate traces,
+/// and samples once the prompt is exhausted.  Returns true when the lane's
+/// sequence finished (EOS / length).
+#[allow(clippy::too_many_arguments)]
+fn postprocess_lane(seq: &mut SeqState, lane_idx: usize, op: LaneOp,
+                    real_c: usize, per_head: &[usize], out: &StepOut,
+                    dims: &ModelDims, b: usize, m: usize, budget: usize,
+                    fused: bool, want_attn: bool, want_kv: bool,
+                    policy: &mut Policy, valid: &mut ValidMask,
+                    metrics: &mut EngineMetrics, sampler: &mut Sampler,
+                    eos_token: u32, tick_no: u64) -> Result<bool> {
+    let (l, h, dh) = (dims.layers, dims.hkv, dims.dh);
+    let (vocab, cols) = (dims.vocab, out.cols);
+    let is_decode = op.is_decode();
+    let retrieval = policy.is_retrieval();
+    let start = seq.fed;
+    // resolved before the slot tables borrow below (chunk ops read their
+    // tokens straight off `seq.prompt`, which stays field-disjoint)
+    let dec_token = is_decode.then(|| seq.stream_token(start));
+    for li in 0..l {
+        for hi in 0..h {
+            let base = (li * b + lane_idx) * h + hi;
+            let head = seq.cache.head_mut(li, hi);
+            if is_decode {
+                // decode semantics on chunk column 0: insert, then fold
+                // the (mode-fused) [M] attention row
+                let cb = base * cols;
+                let kb = cb * dh;
+                let slot = per_head[li * h + hi];
+                let entry = SlotEntry {
+                    pos: start as i64,
+                    token: dec_token.expect("decode op"),
+                    log_beta: out.log_beta[cb],
+                    ..Default::default()
+                };
+                head.insert_kv(
+                    slot, entry,
+                    want_kv.then(|| &out.k_chunk[kb..kb + dh]).as_deref(),
+                    want_kv.then(|| &out.v_chunk[kb..kb + dh]).as_deref());
+                valid.set(lane_idx, li, hi, slot, true);
+                if want_attn {
+                    let arow = &out.attn_slots[base * m..(base + 1) * m];
+                    head.update_attention(arow, ATTN_EMA);
+                }
+            } else {
+                // chunk semantics: resident slots absorb the chunk's
+                // attention first, then the chunk inserts
+                let arow = &out.attn_slots[base * m..(base + 1) * m];
+                head.update_attention(arow, ATTN_EMA);
+                for ci in 0..real_c {
+                    let slot = per_head[(li * h + hi) * real_c + ci];
+                    let cb = base * cols + ci;
+                    let kb = cb * dh;
+                    let entry = SlotEntry {
+                        pos: (start + ci) as i64,
+                        token: seq.prompt[start + ci],
+                        log_beta: out.log_beta[cb],
+                        acc_attn: out.attn_chunk[cb],
+                        ema_attn: out.attn_chunk[cb] / real_c as f32,
+                        last_attn: out.attn_chunk[cb] / real_c as f32,
+                    };
+                    head.insert_kv(slot, entry,
+                                   Some(&out.k_chunk[kb..kb + dh]),
+                                   Some(&out.v_chunk[kb..kb + dh]));
+                    valid.set(lane_idx, li, hi, slot, true);
+                }
+            }
+            // budget enforcement: provisional add(s), then evict the
+            // policy's victims ("compress after each chunk" on chunk ops)
+            let now = if is_decode {
+                start as i64
+            } else {
+                (start + real_c) as i64
+            };
+            while head.used > budget {
+                let Some(victim) = policy.select_victim(head, now) else {
+                    break;
+                };
+                if retrieval {
+                    let me = MirrorEntry {
+                        entry: head.entries[victim],
+                        key: head.key(victim).to_vec(),
+                        val: head.val(victim).to_vec(),
+                    };
+                    seq.mirror[li * h + hi].push(me);
+                }
+                let vpos = head.entries[victim].pos;
+                head.evict(victim);
+                valid.set(lane_idx, li, hi, victim, false);
+                metrics.evictions += 1;
+                if let Some(rec) = seq.record.as_mut() {
+                    rec.evictions.push((li * h + hi, vpos, now));
+                }
+            }
+            head.check_invariants();
+            // retrieval: schedule a re-admission when a mirrored key
+            // matches the current decoding direction better than the
+            // weakest resident does (decode ops only — chunk ops keep the
+            // LocRet protocol and never inject)
+            if retrieval && is_decode {
+                let kb = base * cols * dh;
+                let q_proxy = &out.k_chunk[kb..kb + dh];
+                let head = seq.cache.head(li, hi);
+                if let Some(plan) = plan_injection(
+                    head, &mut seq.mirror[li * h + hi], q_proxy) {
+                    seq.inject.plans[li * h + hi] = Some(plan);
+                }
+            }
+        }
+    }
+
+    if let Some(rec) = seq.record.as_mut() {
+        for ci in 0..real_c {
+            rec.tokens.push(match dec_token {
+                Some(tok) => tok, // decode op: real_c == 1
+                None => seq.prompt[start + ci],
+            });
+            let mut row = Vec::with_capacity(l * h);
+            for li in 0..l {
+                for hi in 0..h {
+                    row.push(out.log_beta[((li * b + lane_idx) * h + hi)
+                                          * cols + ci]);
+                }
+            }
+            rec.log_betas.push(row);
+        }
+    }
+    seq.fed += real_c;
+    if is_decode {
+        metrics.tokens_prefilled += (seq.fed <= seq.prompt.len()) as u64;
+    } else {
+        metrics.tokens_prefilled += real_c as u64;
+        if fused {
+            metrics.mixed_chunk_tokens += real_c as u64;
+        }
+    }
+    // logits at the lane's last real column predict stream[fed]; sample
+    // once the prompt is exhausted
+    if seq.fed >= seq.prompt.len() {
+        let lb = (lane_idx * cols + real_c - 1) * vocab;
+        let tok = sampler.sample(&out.logits[lb..lb + vocab]) as u32;
+        seq.generated.push(tok);
+        metrics.tokens_decoded += 1;
+        record_token_latency(metrics, seq, tick_no);
+        let hit_eos = seq.stop_at_eos && tok == eos_token;
+        if hit_eos || seq.generated.len() >= seq.max_new {
+            return Ok(true);
+        }
+    }
+    Ok(false)
 }
 
 /// Record the latency streams for a freshly sampled token: TTFT on a
@@ -1765,6 +1511,60 @@ mod tests {
                    be.decode_calls + be.prefill_calls + be.mixed_calls,
                    "worked ticks must equal backend steps");
         assert!(!e.tick().unwrap());
+    }
+
+    #[test]
+    fn retrieval_policy_rides_fused_ticks() {
+        // the restriction the step-plan API lifts: retrieval's KV
+        // re-injection used to force alternating ticks; now its injections
+        // ride the plan's inject operands and contended ticks still fuse
+        let cfg = EngineConfig {
+            policy: "retrieval".into(),
+            budget: 16,
+            batch: 2,
+            max_new_tokens: 16,
+            chunked_prefill: true,
+            mixed_ticks: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockBackend::new(2, 16 + 20), cfg, 2).unwrap();
+        e.submit(Request::new(0, vec![1, 40], 16)).unwrap();
+        for _ in 0..3 {
+            e.tick().unwrap();
+        }
+        // admit a 3-chunk prompt while lane 0 decodes: ticks must fuse
+        e.submit(Request::new(1, (0..40).map(|i| 32 + i).collect(), 2))
+            .unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(e.metrics.mixed_steps > 0,
+                "retrieval must no longer force alternating ticks");
+        assert_eq!(e.metrics.tbt_ticks.max(), 1.0,
+                   "fused retrieval ticks must not stall decoders");
+    }
+
+    #[test]
+    fn retrieval_injections_reach_the_backend() {
+        // every injection the engine plans is applied by the backend in the
+        // same step's plan — exact (layer, head)-entry accounting, through
+        // decode-only AND fused ticks
+        let cfg = EngineConfig {
+            policy: "retrieval".into(),
+            budget: 8,
+            batch: 2,
+            chunked_prefill: true,
+            mixed_ticks: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockBackend::new(2, 8 + 20), cfg, 2).unwrap();
+        e.submit(Request::new(0, (0..30).map(|i| 32 + i).collect(), 20))
+            .unwrap();
+        e.submit(Request::new(1, (0..25).map(|i| 64 + i).collect(), 4))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.evictions > 0, "tight budget must evict");
+        assert_eq!(e.metrics.injections, e.backend().injected_entries,
+                   "planned injections must all reach the backend");
     }
 
     #[test]

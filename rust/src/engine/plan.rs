@@ -1,0 +1,259 @@
+//! The step planner: ONE place that decides what every lane does in a tick
+//! and owns the reusable fused operand buffers behind the [`StepPlan`] the
+//! backend executes.
+//!
+//! The engine's event loop picks a [`TickKind`] (its scheduling policy —
+//! fused mixed ticks by default, alternating decode/prefill phases when
+//! `mixed_ticks` is off); `assign_ops` turns that into a [`LaneOp`] per
+//! lane, Sarathi-style splitting the tick token budget across mid-prefill
+//! lanes (decoders reserved first).  The engine then fills the `StepBufs`
+//! scratch (tokens, masks, write slots, retrieval injections) and hands the
+//! assembled plan to `ModelBackend::execute` — the same pipeline for
+//! decode-only, prefill-only, mixed and inject-carrying steps.
+
+use crate::model_meta::ModelDims;
+use crate::runtime::{LaneOp, StepPlan};
+
+use super::lanes::Lane;
+
+/// Which lanes a tick schedules: the engine's phase choice, not the
+/// backend's (any [`StepPlan`] executes through the one `execute` call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TickKind {
+    /// decode-ready lanes only (alternating fallback / no prefill pending)
+    Decode,
+    /// mid-prefill lanes only, one full chunk each (alternating fallback)
+    Prefill,
+    /// every busy lane: decoders one token, fillers a budgeted chunk
+    Fused,
+}
+
+/// Assign a [`LaneOp`] to every lane for this tick; returns the number of
+/// active ops.  `Inject` ops are upgraded from `Decode` later, during
+/// buffer assembly, when a lane has pending retrieval re-admissions.
+pub(crate) fn assign_ops(lanes: &[Lane], kind: TickKind,
+                         chunked_prefill: bool, token_budget: usize,
+                         chunk: usize, ops: &mut [LaneOp]) -> usize {
+    let mut n_decode = 0usize;
+    let mut fill_needs: Vec<usize> = Vec::new();
+    let mut fill_lanes: Vec<usize> = Vec::new();
+    for (i, lane) in lanes.iter().enumerate() {
+        let Lane::Busy(seq) = lane else {
+            ops[i] = LaneOp::Idle;
+            continue;
+        };
+        let mid_prefill = chunked_prefill && seq.fed < seq.prompt.len();
+        ops[i] = match kind {
+            TickKind::Decode if !mid_prefill => {
+                n_decode += 1;
+                LaneOp::Decode
+            }
+            TickKind::Prefill if mid_prefill => LaneOp::Chunk {
+                tokens: chunk.min(seq.prompt.len() - seq.fed),
+            },
+            TickKind::Fused => {
+                if mid_prefill {
+                    fill_needs.push(seq.prompt.len() - seq.fed);
+                    fill_lanes.push(i);
+                    LaneOp::Chunk { tokens: 1 } // granted below
+                } else {
+                    n_decode += 1;
+                    LaneOp::Decode
+                }
+            }
+            _ => LaneOp::Idle,
+        };
+    }
+    if kind == TickKind::Fused {
+        let grants = split_prefill_budget(token_budget, n_decode,
+                                          &fill_needs, chunk);
+        for (i, grant) in fill_lanes.into_iter().zip(grants) {
+            ops[i] = LaneOp::Chunk { tokens: grant };
+        }
+    }
+    ops.iter().filter(|o| o.is_active()).count()
+}
+
+/// Sarathi-style per-tick token budget split for fused ticks.
+///
+/// Decoders come first: each decoding lane is reserved one token off the
+/// top (their progress is the whole point of mixed ticks).  The remainder
+/// divides evenly across the mid-prefill lanes, clamped to the graph's
+/// chunk capacity and each lane's remaining prompt — but never below one
+/// token, so an over-subscribed budget slows prefill, it cannot stall it.
+/// `budget == 0` means unbounded (every filling lane gets a full chunk).
+///
+/// Returns the chunk length granted to each entry of `needs` (the
+/// remaining prompt tokens of each mid-prefill lane, in lane order).
+pub(crate) fn split_prefill_budget(budget: usize, n_decode: usize,
+                                   needs: &[usize], chunk: usize)
+    -> Vec<usize> {
+    if needs.is_empty() {
+        return Vec::new();
+    }
+    let share = if budget == 0 {
+        chunk
+    } else {
+        (budget.saturating_sub(n_decode) / needs.len()).clamp(1, chunk)
+    };
+    needs.iter().map(|&need| share.min(need).min(chunk)).collect()
+}
+
+/// Reusable fused operand buffers behind the per-tick [`StepPlan`] — one
+/// allocation at engine construction, `reset` per tick, so contended
+/// steady state stays off the allocator's hot path.
+pub(crate) struct StepBufs {
+    pub ops: Vec<LaneOp>,        // [B]
+    pub tokens: Vec<i32>,        // [B, C]
+    pub pos: Vec<i32>,           // [B, C]
+    pub in_mask: Vec<f32>,       // [B, C]
+    pub write_slots: Vec<i32>,   // [L, B, H, C]
+    pub inject_flag: Vec<f32>,   // [L, B, H]
+    pub inject_slot: Vec<i32>,   // [L, B, H]
+    pub inject_k: Vec<f32>,      // [L, B, H, dh]
+    pub inject_v: Vec<f32>,      // [L, B, H, dh]
+}
+
+impl StepBufs {
+    pub fn new(dims: &ModelDims, b: usize, c: usize) -> StepBufs {
+        let lbh = dims.layers * b * dims.hkv;
+        StepBufs {
+            ops: vec![LaneOp::Idle; b],
+            tokens: vec![0; b * c],
+            pos: vec![0; b * c],
+            in_mask: vec![0.0; b * c],
+            write_slots: vec![0; lbh * c],
+            inject_flag: vec![0.0; lbh],
+            inject_slot: vec![0; lbh],
+            inject_k: vec![0.0; lbh * dims.dh],
+            inject_v: vec![0.0; lbh * dims.dh],
+        }
+    }
+
+    /// Clear to the idle state: zero masks/tokens/injections, every write
+    /// pointed at the trash slot.
+    pub fn reset(&mut self, trash: i32) {
+        self.ops.iter_mut().for_each(|o| *o = LaneOp::Idle);
+        self.tokens.iter_mut().for_each(|x| *x = 0);
+        self.pos.iter_mut().for_each(|x| *x = 0);
+        self.in_mask.iter_mut().for_each(|x| *x = 0.0);
+        self.write_slots.iter_mut().for_each(|x| *x = trash);
+        self.inject_flag.iter_mut().for_each(|x| *x = 0.0);
+        self.inject_slot.iter_mut().for_each(|x| *x = 0);
+        self.inject_k.iter_mut().for_each(|x| *x = 0.0);
+        self.inject_v.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// View the assembled buffers as the backend's [`StepPlan`].
+    pub fn as_plan<'a>(&'a self, valid: &'a [f32], any_inject: bool,
+                       want_attn: bool, want_kv: bool) -> StepPlan<'a> {
+        StepPlan {
+            ops: &self.ops,
+            tokens: &self.tokens,
+            pos: &self.pos,
+            in_mask: &self.in_mask,
+            valid,
+            write_slots: &self.write_slots,
+            inject_flag: any_inject.then_some(&self.inject_flag[..]),
+            inject_slot: any_inject.then_some(&self.inject_slot[..]),
+            inject_k: any_inject.then_some(&self.inject_k[..]),
+            inject_v: any_inject.then_some(&self.inject_v[..]),
+            want_attn,
+            want_kv,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::lanes::SeqState;
+    use crate::kvcache::LaneCache;
+    use crate::scheduler::Request;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 512, d: 128, layers: 2, hq: 4, hkv: 2, dh: 4,
+                    ffn: 256, gate_hidden: 48 }
+    }
+
+    fn busy(prompt_len: usize, fed: usize) -> Lane {
+        let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| 32 + i).collect();
+        let mut seq = SeqState::fresh(Request::new(1, prompt, 4),
+                                      LaneCache::new(&dims(), 6, false), false);
+        seq.fed = fed;
+        Lane::Busy(Box::new(seq))
+    }
+
+    #[test]
+    fn budget_split_reserves_decoders_first() {
+        // budget 10, 6 decoders -> 4 left over 2 filling lanes = 2 each
+        assert_eq!(split_prefill_budget(10, 6, &[30, 30], 16), vec![2, 2]);
+        // unbounded: full chunks, clamped by remaining prompt
+        assert_eq!(split_prefill_budget(0, 6, &[30, 5], 16), vec![16, 5]);
+        // over-subscribed budget still grants one token (no prefill stall)
+        assert_eq!(split_prefill_budget(4, 7, &[30, 30, 30], 16),
+                   vec![1, 1, 1]);
+        // share never exceeds the graph's chunk capacity
+        assert_eq!(split_prefill_budget(1000, 0, &[500], 16), vec![16]);
+        assert_eq!(split_prefill_budget(8, 0, &[2], 16), vec![2]);
+        assert!(split_prefill_budget(10, 2, &[], 16).is_empty());
+    }
+
+    #[test]
+    fn assign_ops_fused_mixes_decoders_and_grants() {
+        let lanes = vec![busy(2, 2), busy(40, 8), Lane::Idle];
+        let mut ops = vec![LaneOp::Idle; 3];
+        let n = assign_ops(&lanes, TickKind::Fused, true, 0, 16, &mut ops);
+        assert_eq!(n, 2);
+        assert_eq!(ops[0], LaneOp::Decode);
+        assert_eq!(ops[1], LaneOp::Chunk { tokens: 16 });
+        assert_eq!(ops[2], LaneOp::Idle);
+        // a tight budget shrinks the grant, never below one token
+        assign_ops(&lanes, TickKind::Fused, true, 2, 16, &mut ops);
+        assert_eq!(ops[1], LaneOp::Chunk { tokens: 1 });
+    }
+
+    #[test]
+    fn assign_ops_alternating_phases_select_disjoint_lanes() {
+        let lanes = vec![busy(2, 2), busy(40, 8)];
+        let mut ops = vec![LaneOp::Idle; 2];
+        let n = assign_ops(&lanes, TickKind::Decode, true, 0, 16, &mut ops);
+        assert_eq!((n, ops[0], ops[1]), (1, LaneOp::Decode, LaneOp::Idle));
+        let n = assign_ops(&lanes, TickKind::Prefill, true, 0, 16, &mut ops);
+        assert_eq!((n, ops[0]), (1, LaneOp::Idle));
+        assert_eq!(ops[1], LaneOp::Chunk { tokens: 16 });
+        // without chunked prefill every busy lane decodes (token-by-token
+        // prompt feed rides the decode op)
+        let n = assign_ops(&lanes, TickKind::Decode, false, 0, 16, &mut ops);
+        assert_eq!((n, ops[0], ops[1]), (2, LaneOp::Decode, LaneOp::Decode));
+    }
+
+    #[test]
+    fn assign_ops_chunk_grant_caps_at_remaining_prompt() {
+        let lanes = vec![busy(10, 8)];
+        let mut ops = vec![LaneOp::Idle; 1];
+        assign_ops(&lanes, TickKind::Prefill, true, 0, 16, &mut ops);
+        assert_eq!(ops[0], LaneOp::Chunk { tokens: 2 });
+        assign_ops(&lanes, TickKind::Fused, true, 0, 16, &mut ops);
+        assert_eq!(ops[0], LaneOp::Chunk { tokens: 2 });
+    }
+
+    #[test]
+    fn step_bufs_reset_restores_idle_state() {
+        let d = dims();
+        let mut bufs = StepBufs::new(&d, 2, 4);
+        bufs.ops[0] = LaneOp::Decode;
+        bufs.tokens[0] = 9;
+        bufs.in_mask[0] = 1.0;
+        bufs.inject_flag[0] = 1.0;
+        bufs.reset(7);
+        assert_eq!(bufs.ops[0], LaneOp::Idle);
+        assert_eq!(bufs.tokens[0], 0);
+        assert_eq!(bufs.in_mask[0], 0.0);
+        assert_eq!(bufs.inject_flag[0], 0.0);
+        assert!(bufs.write_slots.iter().all(|&x| x == 7));
+        let valid = vec![0.0; 2 * 2 * 2 * 6];
+        let plan = bufs.as_plan(&valid, false, false, false);
+        assert!(plan.inject_flag.is_none());
+    }
+}

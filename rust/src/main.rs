@@ -57,8 +57,9 @@ fn common_spec() -> trimkv::util::cli::SpecBuilder {
         .opt("swap-policy", "lazy",
              "session swap policy: lazy (park on lane) | eager (snapshot)")
         .opt("mixed-ticks", "true",
-             "fuse decode + chunked prefill into one backend step (falls \
-              back to alternating ticks on legacy artifacts)")
+             "fuse decode + chunked prefill into one step plan (legacy \
+              artifacts without a mixed graph execute the plan as two \
+              per-kind graph calls — still stall-free)")
         .opt("tick-token-budget", "0",
              "token budget per mixed tick, decoders reserved first \
               (Sarathi-style; 0 = unbounded)")
@@ -247,8 +248,9 @@ fn inspect_cmd(argv: &[String]) -> Result<()> {
 /// Golden test: execute the exported decode/prefill/mixed graphs on the
 /// I/O pairs the python side dumped, compare outputs elementwise.  With
 /// `--structural`, verify the artifact contract without executing HLO
-/// (meta/artifact/golden inventories + shapes) — the mode CI runs against
-/// the vendored PJRT stub.
+/// (meta/artifact/golden inventories + shapes + the StepPlan operand
+/// order each graph declares in `runtime_inputs`) — the mode CI runs
+/// against the vendored PJRT stub.
 fn selftest(argv: &[String]) -> Result<()> {
     let args = common_spec()
         .flag("structural",

@@ -25,6 +25,10 @@ pub struct EngineMetrics {
     pub mixed_decode_lanes: StreamSummary, // decode lanes per mixed step
     pub mixed_chunk_lanes: StreamSummary,  // chunk-fill lanes per mixed step
     pub mixed_chunk_tokens: u64,         // prompt tokens fed via mixed steps
+    /// fused steps whose plan carried retrieval re-injections (`Inject`
+    /// ops) — nonzero proves the retrieval baseline rides fused ticks
+    /// instead of forcing alternating phases
+    pub mixed_inject_steps: u64,
     // session subsystem (KV snapshot/swap)
     pub sessions_opened: u64,            // first turn of a new session
     pub sessions_closed: u64,            // explicit client close
@@ -42,8 +46,14 @@ pub struct EngineMetrics {
     /// while another lane prefills a long prompt)
     pub tbt_ticks: StreamSummary,
     pub e2e_us: LatencyHistogram,        // request end-to-end
-    pub step_us: StreamSummary,          // decode-step wall time
-    pub lane_occupancy: StreamSummary,   // live lanes per step
+    /// backend-step wall time.  Since the step-plan API this covers EVERY
+    /// executed plan — decode, prefill and mixed ticks alike (pre-PR-4 it
+    /// excluded pure prefill ticks, so long-prompt workloads report higher
+    /// means here than older builds; that is a measurement-coverage change,
+    /// not an engine regression).
+    pub step_us: StreamSummary,
+    /// active lanes per executed step (same coverage note as `step_us`)
+    pub lane_occupancy: StreamSummary,
     pub swap_out_us: StreamSummary,      // batched swap call incl. evictions
     pub swap_in_us: StreamSummary,       // batched swap call incl. loads
 }
@@ -70,6 +80,7 @@ impl EngineMetrics {
             mixed_decode_lanes: StreamSummary::new(),
             mixed_chunk_lanes: StreamSummary::new(),
             mixed_chunk_tokens: 0,
+            mixed_inject_steps: 0,
             sessions_opened: 0,
             sessions_closed: 0,
             sessions_dropped: 0,
@@ -119,12 +130,13 @@ impl EngineMetrics {
     /// One-line mixed-tick scheduling summary (stall-free serving).
     pub fn scheduling_summary(&self) -> String {
         format!(
-            "mixed steps {} (decode lanes {:.2}, chunk lanes {:.2} mean) | \
-             chunk tokens {} | ttft mean {:.1} ms p95 {:.1} ms | tbt mean \
-             {:.2} ms p95 {:.2} ms | tick gap max {:.0}",
+            "mixed steps {} (decode lanes {:.2}, chunk lanes {:.2} mean, \
+             {} with injects) | chunk tokens {} | ttft mean {:.1} ms p95 \
+             {:.1} ms | tbt mean {:.2} ms p95 {:.2} ms | tick gap max {:.0}",
             self.mixed_steps,
             self.mixed_decode_lanes.mean(),
             self.mixed_chunk_lanes.mean(),
+            self.mixed_inject_steps,
             self.mixed_chunk_tokens,
             self.ttft_summary_us.mean() / 1e3,
             self.ttft_summary_us.pct(95.0) / 1e3,

@@ -28,7 +28,7 @@ pub struct TensorSpec {
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
-    pub kind: String, // "decode" | "prefill"
+    pub kind: String, // "decode" | "prefill" | "mixed"
     pub b: usize,
     pub m: usize,
     pub c: usize,
@@ -38,6 +38,21 @@ pub struct ArtifactSpec {
     /// (O(lane) session swap); "monolithic": single [L,B,H,M,dh] pair
     /// (legacy artifacts; swap stages through a host shadow).
     pub cache_layout: String,
+    /// The graph's runtime operand names in call order (after params +
+    /// gates) — the exported `StepPlan` operand contract.  Empty on
+    /// exports that predate the field.
+    pub runtime_inputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    /// Does this graph take the retrieval inject operands?  Decode graphs
+    /// always do; mixed graphs only since the unified step-plan exports —
+    /// a PR-3-era mixed artifact returns false and inject-carrying plans
+    /// degrade to per-kind graph calls.
+    pub fn has_inject(&self) -> bool {
+        self.kind == "decode"
+            || self.runtime_inputs.iter().any(|s| s == "inject_flag")
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -118,6 +133,15 @@ impl ModelMeta {
                         .and_then(Json::as_str)
                         .unwrap_or("monolithic")
                         .to_string(),
+                    runtime_inputs: a
+                        .get("runtime_inputs")
+                        .and_then(Json::as_arr)
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|x| x.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
                 })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
@@ -167,6 +191,15 @@ impl ModelMeta {
 
 #[cfg(test)]
 pub fn test_meta() -> ModelMeta {
+    // per-lane mixed graph at b=8: the step-plan operand order with one
+    // kc/vc buffer per batch lane in the cache span
+    let mut mixed_inputs: Vec<String> =
+        ["tokens", "pos", "in_mask", "mode"].map(String::from).to_vec();
+    mixed_inputs.extend((0..8).map(|i| format!("kc{i}")));
+    mixed_inputs.extend((0..8).map(|i| format!("vc{i}")));
+    mixed_inputs.extend(["valid", "write_slots", "inject_flag",
+                         "inject_slot", "inject_k", "inject_v"]
+        .map(String::from));
     ModelMeta {
         dir: PathBuf::from("artifacts"),
         dims: ModelDims { vocab: 512, d: 128, layers: 4, hq: 4, hkv: 2,
@@ -184,19 +217,23 @@ pub fn test_meta() -> ModelMeta {
             ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
                            file: "decode_b8_m128.hlo.txt".into(),
                            gate_arch: "mlp".into(),
-                           cache_layout: "monolithic".into() },
+                           cache_layout: "monolithic".into(),
+                           runtime_inputs: vec![] },
             ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
                            file: "decode_b8_m128_pl.hlo.txt".into(),
                            gate_arch: "mlp".into(),
-                           cache_layout: "per_lane".into() },
+                           cache_layout: "per_lane".into(),
+                           runtime_inputs: vec![] },
             ArtifactSpec { kind: "decode".into(), b: 8, m: 768, c: 1,
                            file: "decode_b8_m768.hlo.txt".into(),
                            gate_arch: "mlp".into(),
-                           cache_layout: "monolithic".into() },
+                           cache_layout: "monolithic".into(),
+                           runtime_inputs: vec![] },
             ArtifactSpec { kind: "mixed".into(), b: 8, m: 128, c: 64,
                            file: "mixed_b8_m128_pl.hlo.txt".into(),
                            gate_arch: "mlp".into(),
-                           cache_layout: "per_lane".into() },
+                           cache_layout: "per_lane".into(),
+                           runtime_inputs: mixed_inputs },
         ],
     }
 }
@@ -227,6 +264,19 @@ mod tests {
         // pick works on the mixed kind like any other
         assert_eq!(meta.pick("mixed", 8, 100, "mlp").unwrap().m, 128);
         assert!(meta.pick("mixed", 8, 500, "mlp").is_none());
+    }
+
+    #[test]
+    fn inject_capability_follows_runtime_inputs() {
+        let meta = test_meta();
+        // decode graphs always take the inject operands
+        assert!(meta.pick("decode", 8, 100, "mlp").unwrap().has_inject());
+        // the test mixed artifact declares the step-plan operand order
+        assert!(meta.pick("mixed", 8, 100, "mlp").unwrap().has_inject());
+        // a PR-3-era mixed artifact (no runtime_inputs) is not injectable
+        let mut legacy = meta.pick("mixed", 8, 100, "mlp").unwrap().clone();
+        legacy.runtime_inputs.clear();
+        assert!(!legacy.has_inject());
     }
 
     #[test]

@@ -1,13 +1,22 @@
 //! ModelBackend: the engine's interface to the AOT-compiled model graphs.
 //!
+//! The contract is ONE declarative step: the engine assembles a [`StepPlan`]
+//! — a [`LaneOp`] per batch lane plus the fused flat operand buffers — and
+//! the backend executes it through whatever graph is cheapest.
+//!
 //! `PjrtBackend` executes the HLO artifacts on the PJRT CPU client with the
 //! KV caches held device-resident (only logits / gate scores / attention
 //! stats cross the device boundary each step — the paper's O(M) decode).
-//! Cache residency is owned by [`DeviceKvCache`]: per-lane buffer pairs for
-//! `cache_layout = "per_lane"` artifacts (O(lane) session swap) or a single
-//! monolithic pair with a staged host shadow for legacy artifacts.
-//! `MockBackend` is a deterministic stand-in used by unit/property tests so
-//! the scheduler, cache manager and policies are testable without artifacts.
+//! A pure-decode plan dispatches to the decode graph, a pure-chunk plan to
+//! the prefill graph, and a mixed plan to the fused mixed-step graph;
+//! legacy artifacts without a (retrieval-capable) mixed graph degrade to
+//! one decode-graph + one prefill-graph call behind the same `execute`
+//! entrypoint.  Cache residency is owned by [`DeviceKvCache`]: per-lane
+//! buffer pairs for `cache_layout = "per_lane"` artifacts (O(lane) session
+//! swap) or a single monolithic pair with a staged host shadow for legacy
+//! artifacts.  `MockBackend` is a deterministic stand-in used by
+//! unit/property tests so the scheduler, cache manager and policies are
+//! testable without artifacts.
 
 use anyhow::{ensure, Context, Result};
 
@@ -15,78 +24,160 @@ use super::devcache::{CacheShape, DeviceKvCache, HostLaneArena, LaneKv,
                       SwapTraffic};
 use crate::model_meta::{ModelDims, ModelMeta};
 
-/// One decode step over all B lanes.  Layouts are row-major flat slices:
-/// valid `[L,B,H,M]`, write_slot `[L,B,H]`, inject_k/v `[L,B,H,dh]`.
-pub struct DecodeIn<'a> {
+/// What one batch lane does in a step plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaneOp {
+    /// No work this step (idle/parked lane): its plan columns are padding
+    /// (zero mask, writes pointed at the trash slot).
+    #[default]
+    Idle,
+    /// Advance one decode token, carried in chunk column 0.
+    Decode,
+    /// Feed a budgeted prefill chunk of this many prompt tokens
+    /// (1 <= tokens <= chunk capacity; the planner grants the budget).
+    Chunk { tokens: usize },
+    /// Decode one token AND re-inject `slots` previously evicted KV entries
+    /// first (retrieval baseline; at most one injection per (layer, head),
+    /// described by the plan's `inject_*` operands).
+    Inject { slots: usize },
+}
+
+impl LaneOp {
+    /// Decode-like: advances exactly one token through chunk column 0.
+    pub fn is_decode(self) -> bool {
+        matches!(self, LaneOp::Decode | LaneOp::Inject { .. })
+    }
+
+    pub fn is_chunk(self) -> bool {
+        matches!(self, LaneOp::Chunk { .. })
+    }
+
+    pub fn is_active(self) -> bool {
+        self != LaneOp::Idle
+    }
+
+    /// Chunk columns this op occupies in the plan's fused buffers.
+    pub fn cols(self) -> usize {
+        match self {
+            LaneOp::Idle => 0,
+            LaneOp::Decode | LaneOp::Inject { .. } => 1,
+            LaneOp::Chunk { tokens } => tokens,
+        }
+    }
+}
+
+/// Which graph family a plan needs (derived, not stored).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    Empty,
+    Decode,
+    Chunk,
+    Mixed,
+}
+
+/// One declarative engine step over all B lanes: a [`LaneOp`] per lane plus
+/// the fused flat operand buffers every graph family consumes.  Layouts are
+/// row-major flat slices at the backend's chunk capacity C:
+/// tokens/pos/in_mask `[B, C]`, valid `[L, B, H, M]`, write_slots
+/// `[L, B, H, C]`, inject_flag/inject_slot `[L, B, H]`, inject_k/v
+/// `[L, B, H, dh]`.  Decode lanes live in chunk column 0; idle lanes carry
+/// a zero mask and trash-slot writes.
+#[derive(Clone, Copy)]
+pub struct StepPlan<'a> {
+    pub ops: &'a [LaneOp],
     pub tokens: &'a [i32],
     pub pos: &'a [i32],
+    pub in_mask: &'a [f32],
     pub valid: &'a [f32],
-    pub write_slot: &'a [i32],
+    pub write_slots: &'a [i32],
+    /// Retrieval re-injection operands; `Some` only when an `Inject` op is
+    /// present (applied before attention, exactly the decode graph's rule).
     pub inject_flag: Option<&'a [f32]>,
     pub inject_slot: Option<&'a [i32]>,
     pub inject_k: Option<&'a [f32]>,
     pub inject_v: Option<&'a [f32]>,
     /// download the attention stats (H2O/SnapKV/R-KV/retrieval only)
     pub want_attn: bool,
-    /// download k_new/v_new (key-similarity + retrieval policies only)
+    /// download the new-token K/V (key-similarity + retrieval policies only)
     pub want_kv: bool,
 }
 
-#[derive(Debug, Clone)]
-pub struct DecodeOut {
-    pub logits: Vec<f32>,   // [B, vocab]
-    pub log_beta: Vec<f32>, // [L, B, H]
-    pub attn: Vec<f32>,     // [L, B, H, M]
-    pub k_new: Vec<f32>,    // [L, B, H, dh]
-    pub v_new: Vec<f32>,    // [L, B, H, dh]
+impl StepPlan<'_> {
+    pub fn n_decode(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_decode()).count()
+    }
+
+    pub fn n_chunk(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_chunk()).count()
+    }
+
+    pub fn has_inject(&self) -> bool {
+        self.ops.iter().any(|o| matches!(o, LaneOp::Inject { .. }))
+    }
+
+    pub fn kind(&self) -> PlanKind {
+        match (self.n_decode(), self.n_chunk()) {
+            (0, 0) => PlanKind::Empty,
+            (_, 0) => PlanKind::Decode,
+            (0, _) => PlanKind::Chunk,
+            _ => PlanKind::Mixed,
+        }
+    }
+
+    /// Shape-check against a backend's dims (every implementation calls
+    /// this first so contract violations fail loudly, not numerically).
+    pub fn validate(&self, l: usize, b: usize, h: usize, m: usize, c: usize,
+                    dh: usize) -> Result<()> {
+        ensure!(self.ops.len() == b, "bad ops len");
+        ensure!(self.tokens.len() == b * c && self.pos.len() == b * c
+                    && self.in_mask.len() == b * c,
+                "bad token/pos/mask len");
+        ensure!(self.valid.len() == l * b * h * m, "bad valid len");
+        ensure!(self.write_slots.len() == l * b * h * c, "bad write_slots len");
+        for op in self.ops {
+            if let LaneOp::Chunk { tokens } = op {
+                ensure!(*tokens >= 1 && *tokens <= c,
+                        "chunk op of {tokens} tokens exceeds capacity {c}");
+            }
+        }
+        let inj = [self.inject_flag.is_some(), self.inject_slot.is_some(),
+                   self.inject_k.is_some(), self.inject_v.is_some()];
+        ensure!(inj.iter().all(|&x| x) || inj.iter().all(|&x| !x),
+                "inject operands must be all-present or all-absent");
+        ensure!(!self.has_inject() || self.inject_flag.is_some(),
+                "plan has Inject ops but no inject operands");
+        if let (Some(flag), Some(slot), Some(ik), Some(iv)) =
+            (self.inject_flag, self.inject_slot, self.inject_k, self.inject_v)
+        {
+            ensure!(flag.len() == l * b * h, "bad inject_flag len");
+            ensure!(slot.len() == l * b * h, "bad inject_slot len");
+            ensure!(ik.len() == l * b * h * dh && iv.len() == l * b * h * dh,
+                    "bad inject_k/v len");
+        }
+        Ok(())
+    }
 }
 
-/// One prefill chunk of C tokens per lane.
-pub struct PrefillIn<'a> {
-    pub tokens: &'a [i32],      // [B, C]
-    pub pos: &'a [i32],         // [B, C]
-    pub in_mask: &'a [f32],     // [B, C]
-    pub valid: &'a [f32],       // [L, B, H, M]
-    pub write_slots: &'a [i32], // [L, B, H, C]
-}
-
+/// Unified step outputs in the chunk formulation.  `cols` is the chunk
+/// stride of this step's outputs: 1 when the step ran through the pure
+/// decode graph (the cheapest dispatch — decode lanes read column 0 either
+/// way), the backend's chunk capacity otherwise.
+///
+/// For decode lanes `attn_slots` is mode-fused: the new token's
+/// self-attention mass is folded into its write slot, so each decode lane
+/// reads one `[M]` row.  `attn_chunk` is empty on pure-decode dispatch
+/// (decode post-processing never reads it); `attn_slots`/`k_chunk`/
+/// `v_chunk` may be empty when the plan did not request them AND no chunk
+/// lane forced them.
 #[derive(Debug, Clone)]
-pub struct PrefillOut {
-    pub logits: Vec<f32>,     // [B, C, vocab]
-    pub log_beta: Vec<f32>,   // [L, B, H, C]
+pub struct StepOut {
+    pub cols: usize,
+    pub logits: Vec<f32>,     // [B, cols, vocab]
+    pub log_beta: Vec<f32>,   // [L, B, H, cols]
     pub attn_slots: Vec<f32>, // [L, B, H, M]
-    pub attn_chunk: Vec<f32>, // [L, B, H, C]
-    pub k_chunk: Vec<f32>,    // [L, B, H, C, dh]
-    pub v_chunk: Vec<f32>,    // [L, B, H, C, dh]
-}
-
-/// One fused *mixed tick* over all B lanes: decoding lanes advance by one
-/// token (a 1-token chunk in column 0), mid-prefill lanes by a budgeted
-/// chunk — a single backend step, so a long prompt admission never stalls
-/// the decode stream.  Layouts match `PrefillIn` plus the per-lane `mode`.
-pub struct MixedIn<'a> {
-    pub tokens: &'a [i32],      // [B, C]
-    pub pos: &'a [i32],         // [B, C]
-    pub in_mask: &'a [f32],     // [B, C]
-    /// per lane: 1.0 = decode lane (column 0 holds its token), 0.0 =
-    /// chunk-fill lane.  Idle lanes are chunk-fill with an all-zero mask.
-    pub mode: &'a [f32],        // [B]
-    pub valid: &'a [f32],       // [L, B, H, M]
-    pub write_slots: &'a [i32], // [L, B, H, C]
-}
-
-/// Mixed-tick outputs: the prefill tuple, with `attn_slots` mode-fused —
-/// for decode lanes the new token's self-attention mass is folded into its
-/// write slot, so each decode lane reads one `[M]` row exactly like
-/// `DecodeOut::attn`.
-#[derive(Debug, Clone)]
-pub struct MixedOut {
-    pub logits: Vec<f32>,     // [B, C, vocab]
-    pub log_beta: Vec<f32>,   // [L, B, H, C]
-    pub attn_slots: Vec<f32>, // [L, B, H, M]
-    pub attn_chunk: Vec<f32>, // [L, B, H, C]
-    pub k_chunk: Vec<f32>,    // [L, B, H, C, dh]
-    pub v_chunk: Vec<f32>,    // [L, B, H, C, dh]
+    pub attn_chunk: Vec<f32>, // [L, B, H, cols]
+    pub k_chunk: Vec<f32>,    // [L, B, H, cols, dh]
+    pub v_chunk: Vec<f32>,    // [L, B, H, cols, dh]
 }
 
 pub trait ModelBackend: Send {
@@ -94,24 +185,15 @@ pub trait ModelBackend: Send {
     fn batch(&self) -> usize;
     fn slots(&self) -> usize;
     fn chunk(&self) -> usize;
-    fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut>;
-    fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut>;
 
-    /// Does this backend carry a fused mixed-step graph?  When false the
-    /// engine falls back to today's alternating prefill/decode ticks
-    /// (legacy artifacts exported before the `mixed` kind).
-    fn supports_mixed(&self) -> bool {
-        false
-    }
-
-    /// One fused mixed tick (see [`MixedIn`]).  Implementations must keep
-    /// exact per-lane token accounting: every `in_mask == 1` position of a
-    /// lane advances that lane by exactly one token, decode and chunk-fill
-    /// lanes alike, in the one call.
-    fn step_mixed(&mut self, _ins: &MixedIn) -> Result<MixedOut> {
-        anyhow::bail!("backend has no fused mixed-step graph \
-                       (re-export artifacts with `python -m compile.aot`)")
-    }
+    /// THE step entrypoint: execute one declarative [`StepPlan`].
+    /// Implementations must keep exact per-lane token accounting — every
+    /// `in_mask == 1` position of an active lane advances that lane by
+    /// exactly one token, decode and chunk lanes alike, in the one call —
+    /// and are free to dispatch to whichever graph(s) realize the plan
+    /// cheapest, as long as the result is lane-for-lane equivalent to the
+    /// fused semantics.
+    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut>;
 
     /// Zero the device-resident KV caches (new evaluation run).
     fn reset_cache(&mut self) -> Result<()>;
@@ -148,8 +230,12 @@ pub struct PjrtBackend {
     decode_exe: xla::PjRtLoadedExecutable,
     prefill_exe: Option<xla::PjRtLoadedExecutable>,
     /// fused mixed-step graph; `None` on artifacts exported before the
-    /// `mixed` kind — the engine then alternates prefill/decode ticks
+    /// `mixed` kind — mixed plans then degrade to per-kind graph calls
     mixed_exe: Option<xla::PjRtLoadedExecutable>,
+    /// the mixed graph takes the retrieval inject operands (exports since
+    /// the unified step-plan API); false on PR-3-era mixed artifacts, whose
+    /// inject-carrying mixed plans degrade to per-kind calls
+    mixed_inject: bool,
     weight_bufs: Vec<xla::PjRtBuffer>, // params ++ gates, device-resident
     cache: DeviceKvCache,
     dims: ModelDims,
@@ -187,15 +273,17 @@ impl PjrtBackend {
         };
         // the fused mixed-step graph is optional (absent on legacy
         // exports); like prefill it must share the decode graph's layout
-        let mixed_exe = match meta.artifacts.iter().find(|a| {
+        let mixed_spec = meta.artifacts.iter().find(|a| {
             a.kind == "mixed" && a.b == b && a.m == m
                 && a.gate_arch == gate_arch
                 && a.cache_layout == dec.cache_layout
-        }) {
-            Some(mx) if with_prefill => {
-                Some(compile_hlo(&client, &meta.dir.join(&mx.file))?)
-            }
-            _ => None,
+        });
+        let (mixed_exe, mixed_inject) = match mixed_spec {
+            Some(mx) if with_prefill => (
+                Some(compile_hlo(&client, &meta.dir.join(&mx.file))?),
+                mx.has_inject(),
+            ),
+            _ => (None, false),
         };
 
         // upload weights once, in the flat order the graphs expect
@@ -232,6 +320,7 @@ impl PjrtBackend {
             decode_exe,
             prefill_exe,
             mixed_exe,
+            mixed_inject,
             weight_bufs,
             cache,
             dims,
@@ -250,6 +339,306 @@ impl PjrtBackend {
 
     fn lbh(&self) -> (usize, usize, usize) {
         (self.dims.layers, self.b, self.dims.hkv)
+    }
+
+    /// Pure-decode dispatch: gather column 0 of the plan into the decode
+    /// graph's `[B]`/`[L,B,H]` operands and return cols=1 outputs.
+    fn exec_decode(&mut self, plan: &StepPlan) -> Result<StepOut> {
+        let (l, b, h) = self.lbh();
+        let (c, dh) = (self.c, self.dims.dh);
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for lane in 0..b {
+            tokens[lane] = plan.tokens[lane * c];
+            pos[lane] = plan.pos[lane * c];
+        }
+        let mut ws = vec![0i32; l * b * h];
+        for (i, slot) in ws.iter_mut().enumerate() {
+            *slot = plan.write_slots[i * c];
+        }
+
+        let zero_f = vec![0.0f32; l * b * h];
+        let zero_i = vec![0i32; l * b * h];
+        let zero_k = vec![0.0f32; l * b * h * dh];
+        let token_b = self.upload_i32(&tokens, &[b])?;
+        let pos_b = self.upload_i32(&pos, &[b])?;
+        let valid_b = self.upload_f32(plan.valid, &[l, b, h, self.m])?;
+        let ws_b = self.upload_i32(&ws, &[l, b, h])?;
+        let if_b = self.upload_f32(plan.inject_flag.unwrap_or(&zero_f), &[l, b, h])?;
+        let is_b = self.upload_i32(plan.inject_slot.unwrap_or(&zero_i), &[l, b, h])?;
+        let ik_b = self.upload_f32(plan.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?;
+        let iv_b = self.upload_f32(plan.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?;
+
+        let ncache = self.cache.num_operands();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&token_b, &pos_b]);
+        args.extend(self.cache.arg_refs());
+        args.extend([&valid_b, &ws_b, &if_b, &is_b, &ik_b, &iv_b]);
+        let mut outs = self.decode_exe.execute_b(&args)?;
+        drop(args);
+        let mut outs = outs.swap_remove(0);
+        ensure!(outs.len() == 6 + ncache,
+                "decode graph returned {} outputs, expected {}", outs.len(),
+                6 + ncache);
+        // order: logits, kc.., vc.., valid, log_beta, attn, k_new, v_new
+        // (perf: skip device->host transfers the policy will not consume)
+        let iv = 1 + ncache; // index of the (unused) valid output
+        let out = StepOut {
+            cols: 1,
+            logits: to_host(&outs[0])?,
+            log_beta: to_host(&outs[iv + 1])?,
+            attn_slots: if plan.want_attn {
+                to_host(&outs[iv + 2])?
+            } else {
+                Vec::new()
+            },
+            attn_chunk: Vec::new(),
+            k_chunk: if plan.want_kv { to_host(&outs[iv + 3])? } else { Vec::new() },
+            v_chunk: if plan.want_kv { to_host(&outs[iv + 4])? } else { Vec::new() },
+        };
+        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
+        self.cache.update_from_outputs(cache_bufs)?;
+        Ok(out)
+    }
+
+    /// Pure-chunk dispatch: the plan's fused buffers ARE the prefill
+    /// graph's operands.  `tokens`/`in_mask`/`write_slots` may be the
+    /// caller-modified copies of the degraded mixed path.
+    fn exec_prefill(&mut self, tokens: &[i32], pos: &[i32], in_mask: &[f32],
+                    valid: &[f32], write_slots: &[i32]) -> Result<StepOut> {
+        let (l, b, h) = self.lbh();
+        let (m, c) = (self.m, self.c);
+        let tok_b = self.upload_i32(tokens, &[b, c])?;
+        let pos_b = self.upload_i32(pos, &[b, c])?;
+        let mask_b = self.upload_f32(in_mask, &[b, c])?;
+        let valid_b = self.upload_f32(valid, &[l, b, h, m])?;
+        let ws_b = self.upload_i32(write_slots, &[l, b, h, c])?;
+
+        let exe = self
+            .prefill_exe
+            .as_ref()
+            .context("backend loaded without prefill graph")?;
+        let ncache = self.cache.num_operands();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&tok_b, &pos_b, &mask_b]);
+        args.extend(self.cache.arg_refs());
+        args.extend([&valid_b, &ws_b]);
+        let mut outs = exe.execute_b(&args)?;
+        drop(args);
+        let mut outs = outs.swap_remove(0);
+        ensure!(outs.len() == 7 + ncache,
+                "prefill graph returned {} outputs, expected {}", outs.len(),
+                7 + ncache);
+        // order: logits, kc.., vc.., valid, log_beta, attn_slots,
+        //        attn_chunk, k_chunk, v_chunk
+        let iv = 1 + ncache;
+        let out = StepOut {
+            cols: c,
+            logits: to_host(&outs[0])?,
+            log_beta: to_host(&outs[iv + 1])?,
+            attn_slots: to_host(&outs[iv + 2])?,
+            attn_chunk: to_host(&outs[iv + 3])?,
+            k_chunk: to_host(&outs[iv + 4])?,
+            v_chunk: to_host(&outs[iv + 5])?,
+        };
+        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
+        self.cache.update_from_outputs(cache_bufs)?;
+        Ok(out)
+    }
+
+    /// Mixed dispatch through the fused graph (one execution for decode AND
+    /// chunk lanes).  `with_inject` appends the retrieval operands (zeros
+    /// when the plan carries none) — only on inject-capable exports.
+    fn exec_mixed(&mut self, plan: &StepPlan, with_inject: bool)
+        -> Result<StepOut> {
+        let (l, b, h) = self.lbh();
+        let (m, c, dh) = (self.m, self.c, self.dims.dh);
+        let mut mode = vec![0.0f32; b];
+        for (lane, op) in plan.ops.iter().enumerate() {
+            if op.is_decode() {
+                mode[lane] = 1.0;
+            }
+        }
+        let tok_b = self.upload_i32(plan.tokens, &[b, c])?;
+        let pos_b = self.upload_i32(plan.pos, &[b, c])?;
+        let mask_b = self.upload_f32(plan.in_mask, &[b, c])?;
+        let mode_b = self.upload_f32(&mode, &[b])?;
+        let valid_b = self.upload_f32(plan.valid, &[l, b, h, m])?;
+        let ws_b = self.upload_i32(plan.write_slots, &[l, b, h, c])?;
+        let zero_f = vec![0.0f32; l * b * h];
+        let zero_i = vec![0i32; l * b * h];
+        let zero_k = vec![0.0f32; l * b * h * dh];
+        let inject_bufs = if with_inject {
+            Some((
+                self.upload_f32(plan.inject_flag.unwrap_or(&zero_f), &[l, b, h])?,
+                self.upload_i32(plan.inject_slot.unwrap_or(&zero_i), &[l, b, h])?,
+                self.upload_f32(plan.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?,
+                self.upload_f32(plan.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?,
+            ))
+        } else {
+            None
+        };
+
+        let exe = self
+            .mixed_exe
+            .as_ref()
+            .context("backend loaded without mixed-step graph")?;
+        let ncache = self.cache.num_operands();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&tok_b, &pos_b, &mask_b, &mode_b]);
+        args.extend(self.cache.arg_refs());
+        args.extend([&valid_b, &ws_b]);
+        if let Some((if_b, is_b, ik_b, iv_b)) = &inject_bufs {
+            args.extend([if_b, is_b, ik_b, iv_b]);
+        }
+        let mut outs = exe.execute_b(&args)?;
+        drop(args);
+        let mut outs = outs.swap_remove(0);
+        ensure!(outs.len() == 7 + ncache,
+                "mixed graph returned {} outputs, expected {}", outs.len(),
+                7 + ncache);
+        // order: logits, kc.., vc.., valid, log_beta, attn_slots,
+        //        attn_chunk, k_chunk, v_chunk (attn_slots mode-fused)
+        let iv = 1 + ncache;
+        let out = StepOut {
+            cols: c,
+            logits: to_host(&outs[0])?,
+            log_beta: to_host(&outs[iv + 1])?,
+            attn_slots: to_host(&outs[iv + 2])?,
+            attn_chunk: to_host(&outs[iv + 3])?,
+            k_chunk: to_host(&outs[iv + 4])?,
+            v_chunk: to_host(&outs[iv + 5])?,
+        };
+        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
+        self.cache.update_from_outputs(cache_bufs)?;
+        Ok(out)
+    }
+
+    /// Degraded mixed dispatch for legacy artifacts (no mixed graph, or a
+    /// PR-3-era mixed graph without inject operands while the plan carries
+    /// injections): one decode-graph call advances the decode lanes (chunk
+    /// lanes idled behind trash writes), one prefill-graph call feeds the
+    /// chunk lanes (decode lanes masked out), and the outputs merge into
+    /// the fused cols=C layout.  Lane semantics are identical to the fused
+    /// graph — lanes only ever attend to their own rows — at the price of
+    /// two graph executions for the one plan.
+    fn exec_split(&mut self, plan: &StepPlan) -> Result<StepOut> {
+        let (l, b, h) = self.lbh();
+        let (m, c, dh, v) = (self.m, self.c, self.dims.dh, self.dims.vocab);
+        let trash = (m - 1) as i32;
+
+        // --- decode-graph call over the decode lanes --------------------
+        let mut dec_tokens = vec![0i32; b * c];
+        let mut dec_pos = vec![0i32; b * c];
+        let mut dec_mask = vec![0.0f32; b * c];
+        let mut dec_ws = vec![trash; l * b * h * c];
+        for lane in 0..b {
+            if !plan.ops[lane].is_decode() {
+                continue;
+            }
+            dec_tokens[lane * c] = plan.tokens[lane * c];
+            dec_pos[lane * c] = plan.pos[lane * c];
+            dec_mask[lane * c] = plan.in_mask[lane * c];
+            for li in 0..l {
+                for hh in 0..h {
+                    let base = ((li * b + lane) * h + hh) * c;
+                    dec_ws[base] = plan.write_slots[base];
+                }
+            }
+        }
+        // chunk lanes get their attention rows from the prefill call; the
+        // decode call honours the plan's own want flags
+        let dec_plan = StepPlan {
+            tokens: &dec_tokens,
+            pos: &dec_pos,
+            in_mask: &dec_mask,
+            write_slots: &dec_ws,
+            ..*plan
+        };
+        let dec = self.exec_decode(&dec_plan)?;
+
+        // --- prefill-graph call over the chunk lanes --------------------
+        let mut pre_tokens = vec![0i32; b * c];
+        let mut pre_pos = vec![0i32; b * c];
+        let mut pre_mask = vec![0.0f32; b * c];
+        let mut pre_ws = vec![trash; l * b * h * c];
+        for lane in 0..b {
+            if !plan.ops[lane].is_chunk() {
+                continue;
+            }
+            let col = lane * c;
+            pre_tokens[col..col + c].copy_from_slice(&plan.tokens[col..col + c]);
+            pre_pos[col..col + c].copy_from_slice(&plan.pos[col..col + c]);
+            pre_mask[col..col + c].copy_from_slice(&plan.in_mask[col..col + c]);
+            for li in 0..l {
+                for hh in 0..h {
+                    let base = ((li * b + lane) * h + hh) * c;
+                    pre_ws[base..base + c]
+                        .copy_from_slice(&plan.write_slots[base..base + c]);
+                }
+            }
+        }
+        let pre = self.exec_prefill(&pre_tokens, &pre_pos, &pre_mask,
+                                    plan.valid, &pre_ws)?;
+
+        // --- merge into the fused cols=C layout -------------------------
+        let mut out = StepOut {
+            cols: c,
+            logits: vec![0.0f32; b * c * v],
+            log_beta: vec![0.0f32; l * b * h * c],
+            attn_slots: vec![0.0f32; l * b * h * m],
+            attn_chunk: vec![0.0f32; l * b * h * c],
+            k_chunk: vec![0.0f32; l * b * h * c * dh],
+            v_chunk: vec![0.0f32; l * b * h * c * dh],
+        };
+        for lane in 0..b {
+            let op = plan.ops[lane];
+            if op.is_decode() {
+                out.logits[lane * c * v..lane * c * v + v]
+                    .copy_from_slice(&dec.logits[lane * v..(lane + 1) * v]);
+                for li in 0..l {
+                    for hh in 0..h {
+                        let base = (li * b + lane) * h + hh;
+                        out.log_beta[base * c] = dec.log_beta[base];
+                        if plan.want_attn {
+                            out.attn_slots[base * m..(base + 1) * m]
+                                .copy_from_slice(
+                                    &dec.attn_slots[base * m..(base + 1) * m]);
+                        }
+                        if plan.want_kv {
+                            out.k_chunk[base * c * dh..base * c * dh + dh]
+                                .copy_from_slice(
+                                    &dec.k_chunk[base * dh..(base + 1) * dh]);
+                            out.v_chunk[base * c * dh..base * c * dh + dh]
+                                .copy_from_slice(
+                                    &dec.v_chunk[base * dh..(base + 1) * dh]);
+                        }
+                    }
+                }
+            } else if op.is_chunk() {
+                let col = lane * c * v;
+                out.logits[col..col + c * v]
+                    .copy_from_slice(&pre.logits[col..col + c * v]);
+                for li in 0..l {
+                    for hh in 0..h {
+                        let base = (li * b + lane) * h + hh;
+                        out.log_beta[base * c..(base + 1) * c]
+                            .copy_from_slice(&pre.log_beta[base * c..(base + 1) * c]);
+                        out.attn_slots[base * m..(base + 1) * m]
+                            .copy_from_slice(&pre.attn_slots[base * m..(base + 1) * m]);
+                        out.attn_chunk[base * c..(base + 1) * c]
+                            .copy_from_slice(&pre.attn_chunk[base * c..(base + 1) * c]);
+                        out.k_chunk[base * c * dh..(base + 1) * c * dh]
+                            .copy_from_slice(
+                                &pre.k_chunk[base * c * dh..(base + 1) * c * dh]);
+                        out.v_chunk[base * c * dh..(base + 1) * c * dh]
+                            .copy_from_slice(
+                                &pre.v_chunk[base * c * dh..(base + 1) * c * dh]);
+                    }
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -279,143 +668,24 @@ impl ModelBackend for PjrtBackend {
         self.c
     }
 
-    fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut> {
+    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut> {
         let (l, b, h) = self.lbh();
-        let (m, dh) = (self.m, self.dims.dh);
-        ensure!(ins.tokens.len() == b && ins.pos.len() == b, "bad lane count");
-        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
-        ensure!(ins.write_slot.len() == l * b * h, "bad write_slot len");
-
-        let zero_f = vec![0.0f32; l * b * h];
-        let zero_i = vec![0i32; l * b * h];
-        let zero_k = vec![0.0f32; l * b * h * dh];
-        let token_b = self.upload_i32(ins.tokens, &[b])?;
-        let pos_b = self.upload_i32(ins.pos, &[b])?;
-        let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
-        let ws_b = self.upload_i32(ins.write_slot, &[l, b, h])?;
-        let if_b = self.upload_f32(ins.inject_flag.unwrap_or(&zero_f), &[l, b, h])?;
-        let is_b = self.upload_i32(ins.inject_slot.unwrap_or(&zero_i), &[l, b, h])?;
-        let ik_b = self.upload_f32(ins.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?;
-        let iv_b = self.upload_f32(ins.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?;
-
-        let ncache = self.cache.num_operands();
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.extend([&token_b, &pos_b]);
-        args.extend(self.cache.arg_refs());
-        args.extend([&valid_b, &ws_b, &if_b, &is_b, &ik_b, &iv_b]);
-        let mut outs = self.decode_exe.execute_b(&args)?;
-        drop(args);
-        let mut outs = outs.swap_remove(0);
-        ensure!(outs.len() == 6 + ncache,
-                "decode graph returned {} outputs, expected {}", outs.len(),
-                6 + ncache);
-        // order: logits, kc.., vc.., valid, log_beta, attn, k_new, v_new
-        // (perf: skip device->host transfers the policy will not consume)
-        let iv = 1 + ncache; // index of the (unused) valid output
-        let out = DecodeOut {
-            logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[iv + 1])?,
-            attn: if ins.want_attn { to_host(&outs[iv + 2])? } else { Vec::new() },
-            k_new: if ins.want_kv { to_host(&outs[iv + 3])? } else { Vec::new() },
-            v_new: if ins.want_kv { to_host(&outs[iv + 4])? } else { Vec::new() },
-        };
-        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
-        self.cache.update_from_outputs(cache_bufs)?;
-        Ok(out)
-    }
-
-    fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut> {
-        let (l, b, h) = self.lbh();
-        let (m, c) = (self.m, self.c);
-        ensure!(ins.tokens.len() == b * c, "bad tokens len");
-        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
-        ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
-
-        let tok_b = self.upload_i32(ins.tokens, &[b, c])?;
-        let pos_b = self.upload_i32(ins.pos, &[b, c])?;
-        let mask_b = self.upload_f32(ins.in_mask, &[b, c])?;
-        let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
-        let ws_b = self.upload_i32(ins.write_slots, &[l, b, h, c])?;
-
-        let exe = self
-            .prefill_exe
-            .as_ref()
-            .context("backend loaded without prefill graph")?;
-        let ncache = self.cache.num_operands();
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.extend([&tok_b, &pos_b, &mask_b]);
-        args.extend(self.cache.arg_refs());
-        args.extend([&valid_b, &ws_b]);
-        let mut outs = exe.execute_b(&args)?;
-        drop(args);
-        let mut outs = outs.swap_remove(0);
-        ensure!(outs.len() == 7 + ncache,
-                "prefill graph returned {} outputs, expected {}", outs.len(),
-                7 + ncache);
-        // order: logits, kc.., vc.., valid, log_beta, attn_slots,
-        //        attn_chunk, k_chunk, v_chunk
-        let iv = 1 + ncache;
-        let out = PrefillOut {
-            logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[iv + 1])?,
-            attn_slots: to_host(&outs[iv + 2])?,
-            attn_chunk: to_host(&outs[iv + 3])?,
-            k_chunk: to_host(&outs[iv + 4])?,
-            v_chunk: to_host(&outs[iv + 5])?,
-        };
-        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
-        self.cache.update_from_outputs(cache_bufs)?;
-        Ok(out)
-    }
-
-    fn supports_mixed(&self) -> bool {
-        self.mixed_exe.is_some()
-    }
-
-    fn step_mixed(&mut self, ins: &MixedIn) -> Result<MixedOut> {
-        let (l, b, h) = self.lbh();
-        let (m, c) = (self.m, self.c);
-        ensure!(ins.tokens.len() == b * c, "bad tokens len");
-        ensure!(ins.mode.len() == b, "bad mode len");
-        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
-        ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
-
-        let tok_b = self.upload_i32(ins.tokens, &[b, c])?;
-        let pos_b = self.upload_i32(ins.pos, &[b, c])?;
-        let mask_b = self.upload_f32(ins.in_mask, &[b, c])?;
-        let mode_b = self.upload_f32(ins.mode, &[b])?;
-        let valid_b = self.upload_f32(ins.valid, &[l, b, h, m])?;
-        let ws_b = self.upload_i32(ins.write_slots, &[l, b, h, c])?;
-
-        let exe = self
-            .mixed_exe
-            .as_ref()
-            .context("backend loaded without mixed-step graph")?;
-        let ncache = self.cache.num_operands();
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.extend([&tok_b, &pos_b, &mask_b, &mode_b]);
-        args.extend(self.cache.arg_refs());
-        args.extend([&valid_b, &ws_b]);
-        let mut outs = exe.execute_b(&args)?;
-        drop(args);
-        let mut outs = outs.swap_remove(0);
-        ensure!(outs.len() == 7 + ncache,
-                "mixed graph returned {} outputs, expected {}", outs.len(),
-                7 + ncache);
-        // order: logits, kc.., vc.., valid, log_beta, attn_slots,
-        //        attn_chunk, k_chunk, v_chunk (attn_slots mode-fused)
-        let iv = 1 + ncache;
-        let out = MixedOut {
-            logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[iv + 1])?,
-            attn_slots: to_host(&outs[iv + 2])?,
-            attn_chunk: to_host(&outs[iv + 3])?,
-            k_chunk: to_host(&outs[iv + 4])?,
-            v_chunk: to_host(&outs[iv + 5])?,
-        };
-        let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
-        self.cache.update_from_outputs(cache_bufs)?;
-        Ok(out)
+        plan.validate(l, b, h, self.m, self.c, self.dims.dh)?;
+        match plan.kind() {
+            PlanKind::Empty | PlanKind::Decode => self.exec_decode(plan),
+            PlanKind::Chunk => self.exec_prefill(plan.tokens, plan.pos,
+                                                 plan.in_mask, plan.valid,
+                                                 plan.write_slots),
+            PlanKind::Mixed => {
+                let injectable = self.mixed_inject || plan.inject_flag.is_none();
+                if self.mixed_exe.is_some() && injectable {
+                    let with_inject = self.mixed_inject;
+                    self.exec_mixed(plan, with_inject)
+                } else {
+                    self.exec_split(plan)
+                }
+            }
+        }
     }
 
     fn reset_cache(&mut self) -> Result<()> {
@@ -440,32 +710,33 @@ impl ModelBackend for PjrtBackend {
 /// `(token + 1) % vocab` until `eos_after` tokens have been produced on a
 /// lane, then at EOS (id 2).  Gate scores depend only on (layer, head,
 /// token), and the fake K/V content only on (layer, head, position-in-lane,
-/// token) — never on the lane index or batch size — so TRIM-KV evictions
-/// and swapped lane slabs are reproducible across engine shapes in tests.
+/// token) — never on the lane index, the batch size, or the plan's op mix —
+/// so TRIM-KV evictions, swapped lane slabs and cross-scheduling runs are
+/// reproducible bit-exactly across engine shapes in tests.
 pub struct MockBackend {
     pub dims: ModelDims,
     pub b: usize,
     pub m: usize,
     pub c: usize,
-    /// EOS trigger for tests.  Semantics differ slightly by path — an
-    /// artifact of `decode` receiving no activity mask: `decode` bumps
-    /// every lane's counter per call (idle lanes included), `step_mixed`
-    /// bumps only mode=1 lanes.  Tests combining a finite `eos_after`
-    /// with cross-scheduling equivalence would diverge for that reason;
-    /// keep eos_after at the usize::MAX default there.
+    /// EOS trigger for tests: a lane's distribution flips to EOS once its
+    /// counter of decode-op tokens reaches this.
     pub eos_after: usize,
     pub decoded_per_lane: Vec<usize>,
+    /// executed plans by dispatch kind (mirrors `PjrtBackend`'s graph
+    /// choice: pure-decode / pure-chunk / mixed)
     pub decode_calls: usize,
     pub prefill_calls: usize,
     pub mixed_calls: usize,
-    /// decode tokens advanced through `step_mixed` (one per mode=1 lane
+    /// decode tokens advanced through *mixed* plans (one per decode lane
     /// per call) — exact accounting for the fused path
     pub mixed_decode_tokens: u64,
-    /// prompt tokens advanced through `step_mixed` (sum of live `in_mask`
-    /// positions on chunk-fill lanes)
+    /// prompt tokens advanced through *mixed* plans (sum of live `in_mask`
+    /// positions on chunk lanes)
     pub mixed_chunk_tokens: u64,
-    /// per lane: total tokens (decode + chunk) fed through `step_mixed`
+    /// per lane: total tokens (decode + chunk) fed through mixed plans
     pub mixed_tokens_per_lane: Vec<u64>,
+    /// retrieval re-injections applied ((layer, head) entries written)
+    pub injected_entries: u64,
     /// Host twin of the per-lane device K/V arenas — written exactly where
     /// the real graphs would scatter, so the batched session-swap path is
     /// testable end-to-end with exact transfer accounting.
@@ -490,6 +761,7 @@ impl MockBackend {
             mixed_decode_tokens: 0,
             mixed_chunk_tokens: 0,
             mixed_tokens_per_lane: vec![0; b],
+            injected_entries: 0,
             arena: HostLaneArena::new(b, lane_len),
         }
     }
@@ -514,8 +786,10 @@ impl MockBackend {
     }
 
     /// Fake K/V element for head-dim position `d` of `(layer, head, token)`
-    /// (+ chunk offset `ci` on the prefill path).  Deliberately independent
-    /// of lane index and batch size.
+    /// (+ chunk offset `ci` on the chunk path).  Deliberately independent
+    /// of lane index and batch size.  Decode-op tokens use the 1-token
+    /// chunk law `(ci=0, c=1)` in every dispatch, so a token's slab content
+    /// never depends on how the scheduler batched it.
     fn mock_kv(li: usize, hh: usize, hkv: usize, ci: usize, c: usize,
                d: usize, dh: usize, token: i32) -> f32 {
         let j = (((li * hkv + hh) * c + ci) * dh) + d;
@@ -537,259 +811,154 @@ impl ModelBackend for MockBackend {
         self.c
     }
 
-    fn decode(&mut self, ins: &DecodeIn) -> Result<DecodeOut> {
-        self.decode_calls += 1;
+    /// One plan-execute step, mirroring `PjrtBackend`'s dispatch: a
+    /// pure-decode plan returns compact cols=1 outputs (and honours
+    /// `want_attn`/`want_kv` by leaving those tensors empty), any plan with
+    /// chunk lanes returns the full cols=C tuple.  Per lane the numbers are
+    /// exactly what the dedicated decode/prefill laws produce, so the
+    /// engine's fused scheduling is token-equivalent to alternating ticks.
+    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut> {
         let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
-        let (m, dh, v) = (self.m, self.dims.dh, self.dims.vocab);
-        let mut logits = vec![0.0f32; b * v];
+        let (m, dh, v, c) = (self.m, self.dims.dh, self.dims.vocab, self.c);
+        plan.validate(l, b, h, m, c, dh)?;
+        let n_dec = plan.n_decode();
+        let n_chunk = plan.n_chunk();
+        let pure_decode = n_chunk == 0;
+        let fused = n_dec > 0 && n_chunk > 0;
+        let cols = if pure_decode { 1 } else { c };
+        if pure_decode {
+            self.decode_calls += 1;
+        } else if n_dec == 0 {
+            self.prefill_calls += 1;
+        } else {
+            self.mixed_calls += 1;
+        }
+
+        let mut logits = vec![0.0f32; b * cols * v];
+        let mut log_beta = vec![0.0f32; l * b * h * cols];
+        let mut attn_slots = vec![0.0f32; l * b * h * m];
+        let attn_chunk = if pure_decode {
+            Vec::new()
+        } else {
+            vec![1.0 / c as f32; l * b * h * cols]
+        };
+        let mut k_chunk = vec![0.0f32; l * b * h * cols * dh];
+
         for lane in 0..b {
-            let tok = ins.tokens[lane];
-            self.decoded_per_lane[lane] += 1;
-            let next = if self.decoded_per_lane[lane] >= self.eos_after {
-                2 // EOS
-            } else {
-                ((tok + 1) as usize) % v
-            };
-            logits[lane * v + next] = 10.0;
-        }
-        let mut log_beta = vec![0.0f32; l * b * h];
-        for li in 0..l {
-            for lane in 0..b {
-                for hh in 0..h {
-                    log_beta[(li * b + lane) * h + hh] =
-                        Self::mock_log_beta(li, hh, ins.tokens[lane]);
+            let op = plan.ops[lane];
+            match op {
+                LaneOp::Idle => continue,
+                LaneOp::Decode | LaneOp::Inject { .. } => {
+                    // column 0 is the lane's decode token; successor/EOS
+                    // rule on the lane's own generation counter
+                    let tok = plan.tokens[lane * c];
+                    self.decoded_per_lane[lane] += 1;
+                    if fused {
+                        self.mixed_decode_tokens += 1;
+                        self.mixed_tokens_per_lane[lane] += 1;
+                    }
+                    let next = if self.decoded_per_lane[lane] >= self.eos_after {
+                        2 // EOS
+                    } else {
+                        ((tok + 1) as usize) % v
+                    };
+                    logits[lane * cols * v + next] = 10.0;
+                    for li in 0..l {
+                        for hh in 0..h {
+                            let base = (li * b + lane) * h + hh;
+                            let cb = base * cols;
+                            log_beta[cb] = Self::mock_log_beta(li, hh, tok);
+                            // attention: uniform over the lane's live slots
+                            let row = &plan.valid[base * m..(base + 1) * m];
+                            let live: f32 = row.iter().sum();
+                            if live > 0.0 {
+                                for s in 0..m {
+                                    attn_slots[base * m + s] = row[s] / live;
+                                }
+                            }
+                            for d in 0..dh {
+                                k_chunk[cb * dh + d] =
+                                    Self::mock_kv(li, hh, h, 0, 1, d, dh, tok);
+                            }
+                        }
+                    }
                 }
-            }
-        }
-        // uniform attention over live slots
-        let mut attn = vec![0.0f32; l * b * h * m];
-        for i in 0..l * b * h {
-            let row = &ins.valid[i * m..(i + 1) * m];
-            let live: f32 = row.iter().sum();
-            if live > 0.0 {
-                for s in 0..m {
-                    attn[i * m + s] = row[s] / live;
-                }
-            }
-        }
-        let mut k_new = vec![0.0f32; l * b * h * dh];
-        for li in 0..l {
-            for lane in 0..b {
-                for hh in 0..h {
-                    let base = (li * b + lane) * h + hh;
-                    for d in 0..dh {
-                        k_new[base * dh + d] = Self::mock_kv(
-                            li, hh, h, 0, 1, d, dh, ins.tokens[lane]);
+                LaneOp::Chunk { .. } => {
+                    for li in 0..l {
+                        for hh in 0..h {
+                            let base = (li * b + lane) * h + hh;
+                            for s in 0..m {
+                                attn_slots[base * m + s] = 1.0 / m as f32;
+                            }
+                            for ci in 0..cols {
+                                if plan.in_mask[lane * c + ci] <= 0.0 {
+                                    continue;
+                                }
+                                let tok = plan.tokens[lane * c + ci];
+                                let cb = base * cols + ci;
+                                log_beta[cb] = Self::mock_log_beta(li, hh, tok);
+                                for d in 0..dh {
+                                    k_chunk[cb * dh + d] = Self::mock_kv(
+                                        li, hh, h, ci, c, d, dh, tok);
+                                }
+                            }
+                        }
+                    }
+                    for ci in 0..cols {
+                        if plan.in_mask[lane * c + ci] <= 0.0 {
+                            continue;
+                        }
+                        let tok = plan.tokens[lane * c + ci];
+                        if fused {
+                            self.mixed_chunk_tokens += 1;
+                            self.mixed_tokens_per_lane[lane] += 1;
+                        }
+                        logits[(lane * cols + ci) * v + ((tok + 1) as usize) % v] =
+                            10.0;
                     }
                 }
             }
         }
-        let v_new = k_new.clone();
-        // scatter into the per-lane K/V arenas exactly as the decode graph
-        // would: pending injects first, then the step's write_slot
+        let v_chunk = k_chunk.clone();
+
+        // scatter into the per-lane K/V arenas exactly as the real graphs
+        // would: pending injects first, then the live chunk positions
         for lane in 0..b {
+            let op = plan.ops[lane];
+            if !op.is_active() {
+                continue;
+            }
+            let mut injected = 0u64;
             let slab = self.arena.lane_mut(lane);
             for li in 0..l {
                 for hh in 0..h {
-                    let base = (li * b + lane) * h + hh; // flat [L,B,H] index
-                    let row = (li * h + hh) * m;         // in-lane [L,H,M] row
-                    if let (Some(flag), Some(islot)) =
-                        (ins.inject_flag, ins.inject_slot)
-                    {
-                        if flag[base] > 0.0 {
-                            let s = islot[base] as usize;
-                            let dst = (row + s) * dh;
-                            if let (Some(ik), Some(ivv)) =
-                                (ins.inject_k, ins.inject_v)
-                            {
+                    let base = (li * b + lane) * h + hh;
+                    let row = (li * h + hh) * m;
+                    if op.is_decode() {
+                        if let (Some(flag), Some(islot), Some(ik), Some(ivv)) =
+                            (plan.inject_flag, plan.inject_slot,
+                             plan.inject_k, plan.inject_v)
+                        {
+                            if flag[base] > 0.0 {
+                                let s = islot[base] as usize;
+                                ensure!(s < m, "inject slot {s} out of range");
+                                let dst = (row + s) * dh;
                                 slab.k[dst..dst + dh].copy_from_slice(
                                     &ik[base * dh..(base + 1) * dh]);
                                 slab.v[dst..dst + dh].copy_from_slice(
                                     &ivv[base * dh..(base + 1) * dh]);
+                                injected += 1;
                             }
                         }
                     }
-                    let s = ins.write_slot[base] as usize;
-                    let dst = (row + s) * dh;
-                    slab.k[dst..dst + dh]
-                        .copy_from_slice(&k_new[base * dh..(base + 1) * dh]);
-                    slab.v[dst..dst + dh]
-                        .copy_from_slice(&v_new[base * dh..(base + 1) * dh]);
-                }
-            }
-        }
-        Ok(DecodeOut { logits, log_beta, attn, k_new, v_new })
-    }
-
-    fn prefill(&mut self, ins: &PrefillIn) -> Result<PrefillOut> {
-        self.prefill_calls += 1;
-        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
-        let (m, dh, v, c) = (self.m, self.dims.dh, self.dims.vocab, self.c);
-        let mut logits = vec![0.0f32; b * c * v];
-        for lane in 0..b {
-            for ci in 0..c {
-                let tok = ins.tokens[lane * c + ci];
-                logits[(lane * c + ci) * v + ((tok + 1) as usize) % v] = 10.0;
-            }
-        }
-        let mut log_beta = vec![0.0f32; l * b * h * c];
-        for li in 0..l {
-            for lane in 0..b {
-                for hh in 0..h {
-                    for ci in 0..c {
-                        log_beta[((li * b + lane) * h + hh) * c + ci] =
-                            Self::mock_log_beta(li, hh, ins.tokens[lane * c + ci]);
-                    }
-                }
-            }
-        }
-        let attn_slots = vec![1.0 / m as f32; l * b * h * m];
-        let attn_chunk = vec![1.0 / c as f32; l * b * h * c];
-        // token-dependent chunk K/V (lane-invariant, like decode) so swapped
-        // slabs carry distinguishable content in tests
-        let mut k_chunk = vec![0.0f32; l * b * h * c * dh];
-        for li in 0..l {
-            for lane in 0..b {
-                for hh in 0..h {
-                    for ci in 0..c {
-                        let cb = ((li * b + lane) * h + hh) * c + ci;
-                        for d in 0..dh {
-                            k_chunk[cb * dh + d] = Self::mock_kv(
-                                li, hh, h, ci, c, d, dh,
-                                ins.tokens[lane * c + ci]);
-                        }
-                    }
-                }
-            }
-        }
-        let v_chunk = k_chunk.clone();
-        // scatter the chunk into the per-lane arenas at the planned slots
-        for lane in 0..b {
-            let slab = self.arena.lane_mut(lane);
-            for li in 0..l {
-                for hh in 0..h {
-                    let base = (li * b + lane) * h + hh;
-                    let row = (li * h + hh) * m;
-                    for ci in 0..c {
-                        if ins.in_mask[lane * c + ci] <= 0.0 {
+                    for ci in 0..cols {
+                        if plan.in_mask[lane * c + ci] <= 0.0 {
                             continue;
                         }
-                        let s = ins.write_slots[base * c + ci] as usize;
-                        let dst = (row + s) * dh;
-                        let src = (base * c + ci) * dh;
-                        slab.k[dst..dst + dh]
-                            .copy_from_slice(&k_chunk[src..src + dh]);
-                        slab.v[dst..dst + dh]
-                            .copy_from_slice(&v_chunk[src..src + dh]);
-                    }
-                }
-            }
-        }
-        Ok(PrefillOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
-    }
-
-    fn supports_mixed(&self) -> bool {
-        true
-    }
-
-    /// Fused mixed tick: per lane, exactly the numbers `decode` (mode=1;
-    /// chunk column 0) or `prefill` (mode=0) would produce, in one call —
-    /// the engine's mixed scheduling is therefore token-equivalent to the
-    /// alternating paths whenever chunk boundaries align.
-    fn step_mixed(&mut self, ins: &MixedIn) -> Result<MixedOut> {
-        self.mixed_calls += 1;
-        let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
-        let (m, dh, v, c) = (self.m, self.dims.dh, self.dims.vocab, self.c);
-        ensure!(ins.tokens.len() == b * c, "bad tokens len");
-        ensure!(ins.mode.len() == b, "bad mode len");
-        ensure!(ins.valid.len() == l * b * h * m, "bad valid len");
-        ensure!(ins.write_slots.len() == l * b * h * c, "bad write_slots len");
-
-        let mut logits = vec![0.0f32; b * c * v];
-        let mut log_beta = vec![0.0f32; l * b * h * c];
-        let mut attn_slots = vec![0.0f32; l * b * h * m];
-        let attn_chunk = vec![1.0 / c as f32; l * b * h * c];
-        let mut k_chunk = vec![0.0f32; l * b * h * c * dh];
-        for lane in 0..b {
-            let decode_lane = ins.mode[lane] > 0.5;
-            if decode_lane {
-                // column 0 is the lane's decode token; same successor/EOS
-                // rule and same per-lane generation counter as `decode`
-                let tok = ins.tokens[lane * c];
-                self.decoded_per_lane[lane] += 1;
-                self.mixed_decode_tokens += 1;
-                self.mixed_tokens_per_lane[lane] += 1;
-                let next = if self.decoded_per_lane[lane] >= self.eos_after {
-                    2 // EOS
-                } else {
-                    ((tok + 1) as usize) % v
-                };
-                logits[lane * c * v + next] = 10.0;
-            } else {
-                for ci in 0..c {
-                    if ins.in_mask[lane * c + ci] <= 0.0 {
-                        continue;
-                    }
-                    let tok = ins.tokens[lane * c + ci];
-                    self.mixed_chunk_tokens += 1;
-                    self.mixed_tokens_per_lane[lane] += 1;
-                    logits[(lane * c + ci) * v + ((tok + 1) as usize) % v] = 10.0;
-                }
-            }
-            for li in 0..l {
-                for hh in 0..h {
-                    let base = (li * b + lane) * h + hh;
-                    // attention: decode lanes mirror `decode` (uniform over
-                    // the lane's live slots), chunk lanes mirror `prefill`
-                    if decode_lane {
-                        let row = &ins.valid[base * m..(base + 1) * m];
-                        let live: f32 = row.iter().sum();
-                        if live > 0.0 {
-                            for s in 0..m {
-                                attn_slots[base * m + s] = row[s] / live;
-                            }
-                        }
-                    } else {
-                        for s in 0..m {
-                            attn_slots[base * m + s] = 1.0 / m as f32;
-                        }
-                    }
-                    for ci in 0..c {
-                        if ins.in_mask[lane * c + ci] <= 0.0 {
-                            continue;
-                        }
-                        let tok = ins.tokens[lane * c + ci];
-                        let cb = base * c + ci;
-                        log_beta[cb] = Self::mock_log_beta(li, hh, tok);
-                        for d in 0..dh {
-                            // decode lanes use the 1-token-chunk K/V law so
-                            // the slab matches `decode`'s k_new exactly
-                            k_chunk[cb * dh + d] = if decode_lane {
-                                Self::mock_kv(li, hh, h, 0, 1, d, dh, tok)
-                            } else {
-                                Self::mock_kv(li, hh, h, ci, c, d, dh, tok)
-                            };
-                        }
-                    }
-                }
-            }
-        }
-        let v_chunk = k_chunk.clone();
-        // scatter live positions into the per-lane arenas, like the graphs
-        for lane in 0..b {
-            let slab = self.arena.lane_mut(lane);
-            for li in 0..l {
-                for hh in 0..h {
-                    let base = (li * b + lane) * h + hh;
-                    let row = (li * h + hh) * m;
-                    for ci in 0..c {
-                        if ins.in_mask[lane * c + ci] <= 0.0 {
-                            continue;
-                        }
-                        let s = ins.write_slots[base * c + ci] as usize;
+                        let s = plan.write_slots[base * c + ci] as usize;
                         ensure!(s < m, "write slot {s} out of range");
                         let dst = (row + s) * dh;
-                        let src = (base * c + ci) * dh;
+                        let src = (base * cols + ci) * dh;
                         slab.k[dst..dst + dh]
                             .copy_from_slice(&k_chunk[src..src + dh]);
                         slab.v[dst..dst + dh]
@@ -797,8 +966,23 @@ impl ModelBackend for MockBackend {
                     }
                 }
             }
+            self.injected_entries += injected;
         }
-        Ok(MixedOut { logits, log_beta, attn_slots, attn_chunk, k_chunk, v_chunk })
+
+        // PjrtBackend parity: a pure-decode dispatch only downloads what
+        // the plan asked for — leave the rest empty so an engine that reads
+        // un-requested tensors fails in tests, not just on hardware
+        let (attn_slots, k_chunk, v_chunk) = if pure_decode {
+            (
+                if plan.want_attn { attn_slots } else { Vec::new() },
+                if plan.want_kv { k_chunk } else { Vec::new() },
+                if plan.want_kv { v_chunk } else { Vec::new() },
+            )
+        } else {
+            (attn_slots, k_chunk, v_chunk)
+        };
+        Ok(StepOut { cols, logits, log_beta, attn_slots, attn_chunk, k_chunk,
+                     v_chunk })
     }
 
     fn reset_cache(&mut self) -> Result<()> {
@@ -821,26 +1005,117 @@ impl ModelBackend for MockBackend {
 mod tests {
     use super::*;
 
+    /// Owned buffers backing a hand-built StepPlan (test scaffolding).
+    struct PlanBufs {
+        ops: Vec<LaneOp>,
+        tokens: Vec<i32>,
+        pos: Vec<i32>,
+        in_mask: Vec<f32>,
+        valid: Vec<f32>,
+        write_slots: Vec<i32>,
+    }
+
+    impl PlanBufs {
+        fn new(mb: &MockBackend) -> PlanBufs {
+            let (l, b, h) = (mb.dims.layers, mb.b, mb.dims.hkv);
+            let (m, c) = (mb.m, mb.c);
+            PlanBufs {
+                ops: vec![LaneOp::Idle; b],
+                tokens: vec![0; b * c],
+                pos: vec![0; b * c],
+                in_mask: vec![0.0; b * c],
+                valid: vec![0.0; l * b * h * m],
+                write_slots: vec![(m - 1) as i32; l * b * h * c],
+            }
+        }
+
+        /// Mark `lane` as a decode op of `token` writing `slot` everywhere.
+        fn decode_lane(&mut self, mb: &MockBackend, lane: usize, token: i32,
+                       slot: usize) {
+            let (l, b, h, c) = (mb.dims.layers, mb.b, mb.dims.hkv, mb.c);
+            self.ops[lane] = LaneOp::Decode;
+            self.tokens[lane * c] = token;
+            self.in_mask[lane * c] = 1.0;
+            for li in 0..l {
+                for hh in 0..h {
+                    self.write_slots[((li * b + lane) * h + hh) * c] = slot as i32;
+                }
+            }
+        }
+
+        fn plan(&self, want_attn: bool, want_kv: bool) -> StepPlan<'_> {
+            StepPlan {
+                ops: &self.ops,
+                tokens: &self.tokens,
+                pos: &self.pos,
+                in_mask: &self.in_mask,
+                valid: &self.valid,
+                write_slots: &self.write_slots,
+                inject_flag: None,
+                inject_slot: None,
+                inject_k: None,
+                inject_v: None,
+                want_attn,
+                want_kv,
+            }
+        }
+    }
+
+    fn decode_write(mb: &mut MockBackend, tokens: &[i32], slots: &[usize]) {
+        let mut bufs = PlanBufs::new(mb);
+        for (lane, (&t, &s)) in tokens.iter().zip(slots).enumerate() {
+            bufs.decode_lane(mb, lane, t, s);
+        }
+        mb.execute(&bufs.plan(false, true)).unwrap();
+    }
+
     #[test]
-    fn mock_decode_emits_successor_then_eos() {
+    fn lane_op_classification() {
+        assert!(LaneOp::Decode.is_decode());
+        assert!(LaneOp::Inject { slots: 3 }.is_decode());
+        assert!(!LaneOp::Chunk { tokens: 4 }.is_decode());
+        assert!(LaneOp::Chunk { tokens: 4 }.is_chunk());
+        assert!(!LaneOp::Idle.is_active());
+        assert_eq!(LaneOp::Idle.cols(), 0);
+        assert_eq!(LaneOp::Decode.cols(), 1);
+        assert_eq!(LaneOp::Chunk { tokens: 5 }.cols(), 5);
+    }
+
+    #[test]
+    fn plan_kind_follows_op_mix() {
+        let mb = MockBackend::new(2, 8);
+        let mut bufs = PlanBufs::new(&mb);
+        assert_eq!(bufs.plan(false, false).kind(), PlanKind::Empty);
+        bufs.ops[0] = LaneOp::Decode;
+        assert_eq!(bufs.plan(false, false).kind(), PlanKind::Decode);
+        bufs.ops[1] = LaneOp::Chunk { tokens: 3 };
+        assert_eq!(bufs.plan(false, false).kind(), PlanKind::Mixed);
+        bufs.ops[0] = LaneOp::Idle;
+        assert_eq!(bufs.plan(false, false).kind(), PlanKind::Chunk);
+        bufs.ops[0] = LaneOp::Inject { slots: 1 };
+        assert!(bufs.plan(false, false).has_inject());
+    }
+
+    #[test]
+    fn plan_validation_rejects_bad_shapes() {
+        let mut mb = MockBackend::new(2, 8);
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.ops[0] = LaneOp::Chunk { tokens: 99 }; // beyond chunk capacity
+        assert!(mb.execute(&bufs.plan(false, false)).is_err());
+        bufs.ops[0] = LaneOp::Decode;
+        bufs.tokens.pop();
+        assert!(mb.execute(&bufs.plan(false, false)).is_err());
+    }
+
+    #[test]
+    fn mock_decode_plan_emits_successor_then_eos() {
         let mut mb = MockBackend::new(2, 8).with_eos_after(3);
-        let valid = vec![0.0f32; 4 * 2 * 2 * 8];
-        let ws = vec![0i32; 4 * 2 * 2];
         for step in 0..4 {
-            let out = mb
-                .decode(&DecodeIn {
-                    tokens: &[10, 20],
-                    pos: &[step, step],
-                    valid: &valid,
-                    write_slot: &ws,
-                    inject_flag: None,
-                    inject_slot: None,
-                    inject_k: None,
-                    inject_v: None,
-                    want_attn: true,
-                    want_kv: true,
-                })
-                .unwrap();
+            let mut bufs = PlanBufs::new(&mb);
+            bufs.decode_lane(&mb, 0, 10, 0);
+            bufs.decode_lane(&mb, 1, 20, 0);
+            let out = mb.execute(&bufs.plan(true, true)).unwrap();
+            assert_eq!(out.cols, 1, "pure-decode dispatch is compact");
             let argmax = |lane: usize| {
                 (0..512)
                     .max_by(|&a, &b| {
@@ -857,6 +1132,8 @@ mod tests {
                 assert_eq!(argmax(0), 2);
             }
         }
+        assert_eq!(mb.decode_calls, 4);
+        assert_eq!(mb.prefill_calls + mb.mixed_calls, 0);
     }
 
     #[test]
@@ -867,31 +1144,17 @@ mod tests {
         assert!(sym < 0.0);
     }
 
-    fn decode_write(mb: &mut MockBackend, tokens: &[i32], slots: &[usize]) {
-        let (l, b, h, m) = (mb.dims.layers, mb.b, mb.dims.hkv, mb.m);
-        let valid = vec![0.0f32; l * b * h * m];
-        let pos = vec![0i32; b];
-        let mut ws = vec![0i32; l * b * h];
-        for li in 0..l {
-            for (lane, &slot) in slots.iter().enumerate() {
-                for hh in 0..h {
-                    ws[(li * b + lane) * h + hh] = slot as i32;
-                }
-            }
-        }
-        mb.decode(&DecodeIn {
-            tokens,
-            pos: &pos,
-            valid: &valid,
-            write_slot: &ws,
-            inject_flag: None,
-            inject_slot: None,
-            inject_k: None,
-            inject_v: None,
-            want_attn: false,
-            want_kv: true,
-        })
-        .unwrap();
+    #[test]
+    fn pure_decode_dispatch_honours_want_flags() {
+        let mut mb = MockBackend::new(1, 8);
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.decode_lane(&mb, 0, 10, 0);
+        let out = mb.execute(&bufs.plan(false, false)).unwrap();
+        assert!(out.attn_slots.is_empty() && out.k_chunk.is_empty(),
+                "un-requested tensors must come back empty (PJRT parity)");
+        assert!(out.attn_chunk.is_empty(), "decode dispatch has no chunk row");
+        let out = mb.execute(&bufs.plan(true, true)).unwrap();
+        assert!(!out.attn_slots.is_empty() && !out.k_chunk.is_empty());
     }
 
     #[test]
@@ -950,99 +1213,78 @@ mod tests {
     }
 
     #[test]
-    fn mock_mixed_step_matches_decode_and_prefill_lanes() {
+    fn mixed_plan_matches_decode_and_chunk_dispatches() {
         // lane 0 decodes token 10 in chunk column 0; lane 1 prefills 3
-        // tokens — each side must reproduce the dedicated graph exactly
+        // tokens — the one mixed plan must reproduce each dedicated
+        // dispatch exactly (logits, gate scores, attention, lane slabs)
         let (l, h, m) = (4usize, 2usize, 8usize);
         let mut mb = MockBackend::new(2, m);
         let c = mb.c;
         let (dh, v) = (mb.dims.dh, mb.dims.vocab);
-        let mut valid = vec![0.0f32; l * 2 * h * m];
+        let mut bufs = PlanBufs::new(&mb);
         for li in 0..l {
             for hh in 0..h {
                 let base = (li * 2) * h + hh; // lane 0 rows
-                valid[base * m] = 1.0;
-                valid[base * m + 1] = 1.0;
+                bufs.valid[base * m] = 1.0;
+                bufs.valid[base * m + 1] = 1.0;
             }
         }
-        let mut tokens = vec![0i32; 2 * c];
-        tokens[0] = 10;
+        bufs.ops[0] = LaneOp::Decode;
+        bufs.ops[1] = LaneOp::Chunk { tokens: 3 };
+        bufs.tokens[0] = 10;
+        bufs.in_mask[0] = 1.0;
         for ci in 0..3 {
-            tokens[c + ci] = 40 + ci as i32;
+            bufs.tokens[c + ci] = 40 + ci as i32;
+            bufs.in_mask[c + ci] = 1.0;
         }
-        let mut in_mask = vec![0.0f32; 2 * c];
-        in_mask[0] = 1.0;
-        in_mask[c..c + 3].fill(1.0);
-        let pos = vec![0i32; 2 * c];
-        let mut ws = vec![(m - 1) as i32; l * 2 * h * c];
         for li in 0..l {
             for hh in 0..h {
-                ws[((li * 2) * h + hh) * c] = 2; // lane 0 writes slot 2
+                bufs.write_slots[((li * 2) * h + hh) * c] = 2; // lane 0: slot 2
                 for ci in 0..3 {
-                    ws[((li * 2 + 1) * h + hh) * c + ci] = ci as i32;
+                    bufs.write_slots[((li * 2 + 1) * h + hh) * c + ci] = ci as i32;
                 }
             }
         }
-        let out = mb
-            .step_mixed(&MixedIn {
-                tokens: &tokens,
-                pos: &pos,
-                in_mask: &in_mask,
-                mode: &[1.0, 0.0],
-                valid: &valid,
-                write_slots: &ws,
-            })
-            .unwrap();
+        let out = mb.execute(&bufs.plan(true, true)).unwrap();
+        assert_eq!(out.cols, c);
         assert_eq!(mb.mixed_calls, 1);
         assert_eq!(mb.mixed_decode_tokens, 1);
         assert_eq!(mb.mixed_chunk_tokens, 3);
         assert_eq!(mb.mixed_tokens_per_lane, vec![1, 3]);
 
-        // decode reference for lane 0
+        // pure-decode reference for lane 0 (same valid rows, same slot)
         let mut dref = MockBackend::new(2, m);
-        let mut dws = vec![0i32; l * 2 * h];
-        for li in 0..l {
-            for hh in 0..h {
-                dws[(li * 2) * h + hh] = 2;
-            }
-        }
-        let dout = dref
-            .decode(&DecodeIn {
-                tokens: &[10, 0],
-                pos: &[0, 0],
-                valid: &valid,
-                write_slot: &dws,
-                inject_flag: None,
-                inject_slot: None,
-                inject_k: None,
-                inject_v: None,
-                want_attn: true,
-                want_kv: true,
-            })
-            .unwrap();
+        let mut dbufs = PlanBufs::new(&dref);
+        dbufs.valid.copy_from_slice(&bufs.valid);
+        dbufs.decode_lane(&dref, 0, 10, 2);
+        let dout = dref.execute(&dbufs.plan(true, true)).unwrap();
+        assert_eq!(dout.cols, 1);
         assert_eq!(out.logits[..v], dout.logits[..v], "decode-lane logits");
         for li in 0..l {
             for hh in 0..h {
                 let base = (li * 2) * h + hh;
                 assert_eq!(out.log_beta[base * c], dout.log_beta[base]);
                 assert_eq!(out.attn_slots[base * m..(base + 1) * m],
-                           dout.attn[base * m..(base + 1) * m]);
+                           dout.attn_slots[base * m..(base + 1) * m]);
                 assert_eq!(out.k_chunk[base * c * dh..base * c * dh + dh],
-                           dout.k_new[base * dh..(base + 1) * dh]);
+                           dout.k_chunk[base * dh..(base + 1) * dh]);
             }
         }
 
-        // prefill reference for lane 1 (same fused buffers)
+        // pure-chunk reference for lane 1 (same fused buffers, lane 0 idle)
         let mut pref = MockBackend::new(2, m);
-        let pout = pref
-            .prefill(&PrefillIn {
-                tokens: &tokens,
-                pos: &pos,
-                in_mask: &in_mask,
-                valid: &valid,
-                write_slots: &ws,
-            })
-            .unwrap();
+        let mut pbufs = PlanBufs::new(&pref);
+        pbufs.valid.copy_from_slice(&bufs.valid);
+        pbufs.ops[1] = LaneOp::Chunk { tokens: 3 };
+        pbufs.tokens.copy_from_slice(&bufs.tokens);
+        for ci in 0..3 {
+            pbufs.in_mask[c + ci] = 1.0;
+        }
+        pbufs.write_slots.copy_from_slice(&bufs.write_slots);
+        // neutralize lane 0's decode columns for the chunk-only run
+        pbufs.in_mask[0] = 0.0;
+        let pout = pref.execute(&pbufs.plan(true, true)).unwrap();
+        assert_eq!(pref.prefill_calls, 1);
         for ci in 0..3 {
             let col = (c + ci) * v;
             assert_eq!(out.logits[col..col + v], pout.logits[col..col + v]);
@@ -1061,7 +1303,7 @@ mod tests {
                            pout.attn_slots[base * m..(base + 1) * m]);
             }
         }
-        // lane slabs: the fused write equals the dedicated graphs' writes
+        // lane slabs: the fused write equals the dedicated dispatch writes
         let mixed_slabs = mb.swap_lanes(&[0, 1], &[]).unwrap();
         let d_slab = dref.swap_lanes(&[0], &[]).unwrap();
         let p_slab = pref.swap_lanes(&[1], &[]).unwrap();
@@ -1070,27 +1312,50 @@ mod tests {
     }
 
     #[test]
+    fn inject_op_scatters_before_the_write() {
+        // a retrieval inject writes the mirrored K/V into its slot ahead of
+        // the decode token's own write — and the counter accounts per-head
+        let (l, h, m) = (4usize, 2usize, 8usize);
+        let mut mb = MockBackend::new(1, m);
+        let c = mb.c;
+        let dh = mb.dims.dh;
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.decode_lane(&mb, 0, 10, 2);
+        bufs.ops[0] = LaneOp::Inject { slots: l * h };
+        let inj_flag = vec![1.0f32; l * h];
+        let inj_slot = vec![5i32; l * h];
+        let inj_k = vec![7.25f32; l * h * dh];
+        let inj_v = vec![-7.25f32; l * h * dh];
+        let plan = StepPlan {
+            inject_flag: Some(&inj_flag),
+            inject_slot: Some(&inj_slot),
+            inject_k: Some(&inj_k),
+            inject_v: Some(&inj_v),
+            ..bufs.plan(false, true)
+        };
+        mb.execute(&plan).unwrap();
+        assert_eq!(mb.injected_entries, (l * h) as u64);
+        let slab = mb.swap_lanes(&[0], &[]).unwrap().remove(0);
+        for li in 0..l {
+            for hh in 0..h {
+                let row = (li * h + hh) * m;
+                assert_eq!(slab.k[(row + 5) * dh], 7.25, "inject slot content");
+                assert_eq!(slab.v[(row + 5) * dh], -7.25);
+                assert_ne!(slab.k[(row + 2) * dh], 0.0, "decode write present");
+            }
+        }
+    }
+
+    #[test]
     fn mock_attention_is_uniform_over_live() {
         let mut mb = MockBackend::new(1, 4);
-        let mut valid = vec![0.0f32; 4 * 1 * 2 * 4];
-        valid[0] = 1.0;
-        valid[1] = 1.0;
-        let out = mb
-            .decode(&DecodeIn {
-                tokens: &[1],
-                pos: &[0],
-                valid: &valid,
-                write_slot: &[0; 8],
-                inject_flag: None,
-                inject_slot: None,
-                inject_k: None,
-                inject_v: None,
-                want_attn: true,
-                want_kv: true,
-            })
-            .unwrap();
-        assert_eq!(out.attn[0], 0.5);
-        assert_eq!(out.attn[1], 0.5);
-        assert_eq!(out.attn[2], 0.0);
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.decode_lane(&mb, 0, 1, 0);
+        bufs.valid[0] = 1.0;
+        bufs.valid[1] = 1.0;
+        let out = mb.execute(&bufs.plan(true, true)).unwrap();
+        assert_eq!(out.attn_slots[0], 0.5);
+        assert_eq!(out.attn_slots[1], 0.5);
+        assert_eq!(out.attn_slots[2], 0.0);
     }
 }

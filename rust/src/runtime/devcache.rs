@@ -224,11 +224,28 @@ fn to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
     Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
 }
 
+/// One-shot guard for the monolithic-fallback deprecation notice.
+static MONOLITHIC_DEPRECATION: std::sync::Once = std::sync::Once::new();
+
 impl DeviceKvCache {
     /// Allocate zeroed device arenas in the residency mode the artifact's
     /// `cache_layout` asks for (`per_lane` | `monolithic`).
     pub fn new_zeroed(client: &xla::PjRtClient, shape: CacheShape,
                       per_lane: bool) -> Result<DeviceKvCache> {
+        if !per_lane {
+            // once per process, not per engine/reset: eval sweeps rebuild
+            // caches constantly and the operator only needs telling once
+            MONOLITHIC_DEPRECATION.call_once(|| {
+                eprintln!(
+                    "[trimkv] WARNING: artifact uses the monolithic \
+                     cache_layout; the staged host-shadow swap fallback is \
+                     DEPRECATED and scheduled for removal (see README \
+                     \"Deprecation window\"). Re-export with `python -m \
+                     compile.aot` to get per-lane residency (O(lane) \
+                     session swaps) plus the inject-capable mixed graphs."
+                );
+            });
+        }
         let res = if per_lane {
             let zeros = vec![0.0f32; shape.lane_len()];
             let dims = shape.lane_dims();

@@ -24,8 +24,15 @@ const DECODE_INS: &[&str] = &["token", "pos", "kc", "vc", "valid",
                               "inject_k", "inject_v"];
 const PREFILL_INS: &[&str] = &["tokens", "pos", "in_mask", "kc", "vc",
                                "valid", "write_slots"];
+/// PR-3-era mixed operand order (no retrieval inject)
+const MIXED_INS_LEGACY: &[&str] = &["tokens", "pos", "in_mask", "mode", "kc",
+                                    "vc", "valid", "write_slots"];
+/// unified step-plan mixed operand order: the prefill operands plus `mode`
+/// and the decode graph's inject tail, so retrieval fuses like every other
+/// policy
 const MIXED_INS: &[&str] = &["tokens", "pos", "in_mask", "mode", "kc", "vc",
-                             "valid", "write_slots"];
+                             "valid", "write_slots", "inject_flag",
+                             "inject_slot", "inject_k", "inject_v"];
 /// inputs that the graphs expect as i32 (goldens store everything as f32)
 const I32_INPUTS: &[&str] = &["token", "tokens", "pos", "write_slot",
                               "inject_slot", "write_slots"];
@@ -41,13 +48,15 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
         ("decode", DECODE_INS, DECODE_OUTS, "golden_decode.bin"),
         ("prefill", PREFILL_INS, PREFILL_OUTS, "golden_prefill.bin"),
     ];
-    if meta.pick("mixed", 8, 256, "mlp").is_some()
-        && dir.join("golden_mixed.bin").is_file()
-    {
-        kinds.push(("mixed", MIXED_INS, MIXED_OUTS, "golden_mixed.bin"));
-    } else {
-        report.push_str("mixed    skipped (legacy export: no mixed graph \
-                         or golden)\n");
+    match meta.pick("mixed", 8, 256, "mlp") {
+        Some(mx) if dir.join("golden_mixed.bin").is_file() => {
+            // PR-3-era mixed graphs lack the inject tail; replay them on
+            // the operand list they were exported with
+            let ins = if mx.has_inject() { MIXED_INS } else { MIXED_INS_LEGACY };
+            kinds.push(("mixed", ins, MIXED_OUTS, "golden_mixed.bin"));
+        }
+        _ => report.push_str("mixed    skipped (legacy export: no mixed \
+                              graph or golden)\n"),
     }
     for (kind, ins, outs, golden_file) in kinds {
         let golden = read_weights(&dir.join(golden_file))?;
@@ -127,13 +136,15 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
 
 /// Artifact-contract verification that runs WITHOUT a PJRT runtime (the
 /// vendored xla stub cannot execute HLO): meta.json parses, every listed
-/// artifact file exists and is non-empty, weight/gate/vocab blobs are
-/// present, the golden I/O blobs carry every tensor of each kind's
-/// contract with dimension-consistent element counts, and the mixed-tick
-/// capability is self-consistent (mixed artifact <-> mixed golden +
-/// output order).  CI replays the python job's freshly exported artifact
-/// through this check; the numerical replay (`run_goldens`) runs wherever
-/// the real xla bindings are linked.
+/// artifact file exists and is non-empty, each artifact's declared
+/// `runtime_inputs` follow the canonical `StepPlan` operand order of its
+/// kind, weight/gate/vocab blobs are present, the golden I/O blobs carry
+/// every tensor of each kind's contract with dimension-consistent element
+/// counts, and the mixed-tick capability is self-consistent (mixed
+/// artifact <-> mixed golden + output order + inject operands).  CI
+/// replays the python job's freshly exported artifact through this check;
+/// the numerical replay (`run_goldens`) runs wherever the real xla
+/// bindings are linked.
 pub fn verify_structural(dir: &Path) -> Result<String> {
     let meta = ModelMeta::load(dir)?;
     let d = meta.dims;
@@ -143,6 +154,7 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
         anyhow::ensure!(p.is_file(), "artifact file missing: {p:?}");
         let bytes = std::fs::metadata(&p)?.len();
         anyhow::ensure!(bytes > 0, "artifact file empty: {p:?}");
+        verify_operand_order(a)?;
         writeln!(report, "artifact {:32} {:8} b={} m={} layout={} {:6} KiB",
                  a.file, a.kind, a.b, a.m, a.cache_layout, bytes / 1024)?;
     }
@@ -157,17 +169,23 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
     // and the layout-bearing element counts against the model dims
     let (b, m, c) = (8usize, 256usize, meta.chunk);
     let cache_len = d.layers * b * d.hkv * m * d.dh;
+    let lbh = d.layers * b * d.hkv;
     let mut kinds: Vec<(&str, &[&str], &[&str], &str)> = vec![
         ("decode", DECODE_INS, DECODE_OUTS, "golden_decode.bin"),
         ("prefill", PREFILL_INS, PREFILL_OUTS, "golden_prefill.bin"),
     ];
     let has_mixed = meta.supports_mixed(b, m, "mlp");
+    let mixed_inject = meta
+        .pick("mixed", b, m, "mlp")
+        .map(|a| a.has_inject())
+        .unwrap_or(false);
     if has_mixed {
         anyhow::ensure!(!meta.mixed_outputs.is_empty(),
                         "mixed artifact without mixed_outputs in meta.json");
         anyhow::ensure!(dir.join("golden_mixed.bin").is_file(),
                         "mixed artifact without golden_mixed.bin");
-        kinds.push(("mixed", MIXED_INS, MIXED_OUTS, "golden_mixed.bin"));
+        let ins = if mixed_inject { MIXED_INS } else { MIXED_INS_LEGACY };
+        kinds.push(("mixed", ins, MIXED_OUTS, "golden_mixed.bin"));
     }
     for (kind, ins, outs, golden_file) in kinds {
         let golden = read_weights(&dir.join(golden_file))?;
@@ -181,6 +199,8 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
                 "mode" => Some(b),
                 "tokens" | "in_mask" => Some(b * c),
                 "token" => Some(b),
+                "inject_flag" | "inject_slot" => Some(lbh),
+                "inject_k" | "inject_v" => Some(lbh * d.dh),
                 _ => None,
             };
             if let Some(want) = want {
@@ -212,9 +232,68 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
                           {} in / {} out tensors OK", ins.len(), outs.len())?;
     }
     writeln!(report, "mixed-step capability: {}",
-             if has_mixed { "present" } else { "absent (legacy export)" })?;
+             match (has_mixed, mixed_inject) {
+                 (true, true) => "present (inject-capable)",
+                 (true, false) => "present (legacy: no inject operands — \
+                                   retrieval plans degrade to per-kind calls)",
+                 _ => "absent (legacy export)",
+             })?;
     report.push_str("structural selftest: ALL OK\n");
     Ok(report)
+}
+
+/// Check an artifact's declared `runtime_inputs` against the canonical
+/// `StepPlan` operand order of its kind: the leading operands and the
+/// post-cache tail must match exactly (the cache operands in between vary
+/// by `cache_layout`: one kc/vc pair, or B per-lane buffers).  Artifacts
+/// exported before the field record nothing and pass vacuously.
+fn verify_operand_order(a: &crate::model_meta::ArtifactSpec) -> Result<()> {
+    if a.runtime_inputs.is_empty() {
+        return Ok(());
+    }
+    let (lead, tail): (&[&str], &[&str]) = match a.kind.as_str() {
+        "decode" => (&["token", "pos"],
+                     &["valid", "write_slot", "inject_flag", "inject_slot",
+                       "inject_k", "inject_v"]),
+        "prefill" => (&["tokens", "pos", "in_mask"],
+                      &["valid", "write_slots"]),
+        "mixed" => {
+            if a.has_inject() {
+                (&["tokens", "pos", "in_mask", "mode"],
+                 &["valid", "write_slots", "inject_flag", "inject_slot",
+                   "inject_k", "inject_v"])
+            } else {
+                (&["tokens", "pos", "in_mask", "mode"],
+                 &["valid", "write_slots"])
+            }
+        }
+        other => anyhow::bail!("unknown artifact kind `{other}`"),
+    };
+    let ri = &a.runtime_inputs;
+    anyhow::ensure!(ri.len() > lead.len() + tail.len(),
+                    "{}: runtime_inputs too short for its kind", a.file);
+    for (i, want) in lead.iter().enumerate() {
+        anyhow::ensure!(ri[i] == *want,
+                        "{}: operand {i} is `{}`, step-plan contract wants \
+                         `{want}`", a.file, ri[i]);
+    }
+    for (i, want) in tail.iter().rev().enumerate() {
+        let got = &ri[ri.len() - 1 - i];
+        anyhow::ensure!(got == want,
+                        "{}: tail operand `{got}` where the step-plan \
+                         contract wants `{want}`", a.file);
+    }
+    // everything between lead and tail must be cache operands
+    let ncache = ri.len() - lead.len() - tail.len();
+    let want_cache = if a.cache_layout == "per_lane" { 2 * a.b } else { 2 };
+    anyhow::ensure!(ncache == want_cache,
+                    "{}: {ncache} cache operands, layout {} wants \
+                     {want_cache}", a.file, a.cache_layout);
+    for name in &ri[lead.len()..lead.len() + ncache] {
+        anyhow::ensure!(name.starts_with("kc") || name.starts_with("vc"),
+                        "{}: `{name}` in the cache operand span", a.file);
+    }
+    Ok(())
 }
 
 fn upload(client: &xla::PjRtClient, t: &HostTensor,
@@ -247,5 +326,25 @@ mod tests {
     fn max_err_basics() {
         assert_eq!(max_abs_err(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
         assert_eq!(max_abs_err(&[1.0], &[1.0, 2.0]), f32::INFINITY);
+    }
+
+    #[test]
+    fn operand_order_check_enforces_step_plan_contract() {
+        let meta = crate::model_meta::test_meta();
+        // the inject-capable mixed artifact passes as declared
+        let mixed = meta.pick("mixed", 8, 100, "mlp").unwrap();
+        verify_operand_order(mixed).unwrap();
+        // undeclared runtime_inputs pass vacuously (pre-field exports)
+        let decode = meta.pick("decode", 8, 100, "mlp").unwrap();
+        verify_operand_order(decode).unwrap();
+        // a shuffled tail violates the contract
+        let mut bad = mixed.clone();
+        let n = bad.runtime_inputs.len();
+        bad.runtime_inputs.swap(n - 1, n - 2);
+        assert!(verify_operand_order(&bad).is_err());
+        // dropping a cache operand breaks the layout arity
+        let mut short = mixed.clone();
+        short.runtime_inputs.remove(4);
+        assert!(verify_operand_order(&short).is_err());
     }
 }

@@ -6,9 +6,8 @@ pub mod devcache;
 pub mod golden;
 pub mod weights;
 
-pub use backend::{compile_hlo, DecodeIn, DecodeOut, MixedIn, MixedOut,
-                  MockBackend, ModelBackend, PjrtBackend, PrefillIn,
-                  PrefillOut};
+pub use backend::{compile_hlo, LaneOp, MockBackend, ModelBackend,
+                  PjrtBackend, PlanKind, StepOut, StepPlan};
 pub use devcache::{CacheShape, DeviceKvCache, HostLaneArena, LaneKv,
                    SwapTraffic};
 pub use weights::{read_weights, HostTensor};

@@ -133,16 +133,17 @@ fn prop_engine_budget_invariant_all_policies() {
 #[test]
 fn prop_mixed_ticks_token_equivalent_to_alternating() {
     // the mixed-tick scheduler invariant: fusing decode steps and prefill
-    // chunks into one backend step changes scheduling only — every request
+    // chunks into one step plan changes scheduling only — every request
     // emits bit-identical tokens to the sequential prefill-then-decode
     // path.  (TRIM-KV scores tokens at creation time; each lane's cache
-    // evolution depends only on its own stream.)  Policies with a shared
-    // rng ("random") or cross-tick injection state ("retrieval") are out:
-    // the former interleaves its rng stream differently by construction,
-    // the latter falls back to alternating ticks.
+    // evolution — including retrieval's mirror pool and re-injections,
+    // which ride the plan's inject operands since the step-plan API —
+    // depends only on its own stream.)  All 7+1 deterministic policies are
+    // in; only "random" is out: its shared rng interleaves differently by
+    // construction.
     forall("mixed tick equivalence", 20, |rng| {
         let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
-                     "keydiff", "locret"];
+                     "keydiff", "locret", "retrieval"];
         let policy = names[rng.below(names.len())];
         let budget = rng.range(12, 28);
         let batch = rng.range(2, 5);
@@ -357,28 +358,37 @@ fn prop_swapped_session_matches_flattened_run() {
     });
 }
 
-/// One decode step writing `tokens[lane]` into slot `slots[lane]` of every
-/// (layer, head) — fills lanes with distinct, reproducible content.
+/// One decode-plan step writing `tokens[lane]` into slot `slots[lane]` of
+/// every (layer, head) — fills lanes with distinct, reproducible content
+/// through the unified `ModelBackend::execute` entrypoint.
 fn seed_lanes(mb: &mut MockBackend, rng_tag: i32, slots: &[usize]) {
-    use trimkv::runtime::{DecodeIn, ModelBackend};
+    use trimkv::runtime::{LaneOp, ModelBackend, StepPlan};
     let d = mb.dims;
-    let (l, b, h, m) = (d.layers, mb.b, d.hkv, mb.m);
-    let tokens: Vec<i32> = (0..b as i32).map(|i| 100 + rng_tag + i).collect();
-    let pos = vec![0i32; b];
+    let (l, b, h, m, c) = (d.layers, mb.b, d.hkv, mb.m, mb.c);
+    let ops = vec![LaneOp::Decode; b];
+    let mut tokens = vec![0i32; b * c];
+    let mut in_mask = vec![0.0f32; b * c];
+    for lane in 0..b {
+        tokens[lane * c] = 100 + rng_tag + lane as i32;
+        in_mask[lane * c] = 1.0;
+    }
+    let pos = vec![0i32; b * c];
     let valid = vec![0.0f32; l * b * h * m];
-    let mut ws = vec![0i32; l * b * h];
+    let mut ws = vec![(m - 1) as i32; l * b * h * c];
     for li in 0..l {
         for (lane, &slot) in slots.iter().enumerate() {
             for hh in 0..h {
-                ws[(li * b + lane) * h + hh] = slot as i32;
+                ws[((li * b + lane) * h + hh) * c] = slot as i32;
             }
         }
     }
-    mb.decode(&DecodeIn {
+    mb.execute(&StepPlan {
+        ops: &ops,
         tokens: &tokens,
         pos: &pos,
+        in_mask: &in_mask,
         valid: &valid,
-        write_slot: &ws,
+        write_slots: &ws,
         inject_flag: None,
         inject_slot: None,
         inject_k: None,

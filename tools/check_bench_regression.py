@@ -22,6 +22,16 @@ Rules, per metric present in the baseline:
 from the current results; CI uploads it as an artifact so a maintainer can
 commit it to (re)seed the trajectory.
 
+``--merge-baseline`` instead rewrites the committed baseline IN PLACE,
+filling only its ``null`` values from the current results (seeded values,
+thresholds and the comment are preserved).  Arming the wall-clock gates is
+therefore one command on any machine with a rust toolchain::
+
+    cargo bench --bench session_swap && cargo bench --bench throughput \
+      && cargo bench --bench mixed_tick
+    python3 tools/check_bench_regression.py --merge-baseline
+    git add BENCH_baseline.json   # commit the armed gate
+
 stdlib only — runs on a bare CI python.
 """
 
@@ -47,6 +57,9 @@ def main() -> int:
                     help="override the baseline's regression threshold")
     ap.add_argument("--write-baseline", default=None,
                     help="emit a baseline seeded from the current results")
+    ap.add_argument("--merge-baseline", action="store_true",
+                    help="rewrite --baseline in place, filling only its "
+                         "null values from the current results")
     args = ap.parse_args()
 
     baseline = load(args.baseline)
@@ -103,6 +116,21 @@ def main() -> int:
             json.dump(out, f, indent=1)
             f.write("\n")
         print(f"wrote seeded baseline: {args.write_baseline}")
+
+    if args.merge_baseline:
+        merged = 0
+        for bench, spec in baseline.get("benches", {}).items():
+            fresh = seeded.get(bench, {}).get("regress_on", {})
+            for metric, base in spec.get("regress_on", {}).items():
+                if base.get("value") is None and metric in fresh:
+                    base["value"] = fresh[metric]["value"]
+                    merged += 1
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+            f.write("\n")
+        print(f"merged {merged} null value(s) into {args.baseline}"
+              if merged else
+              f"no null values to seed in {args.baseline}")
 
     if failures:
         print(f"\nREGRESSION: {', '.join(failures)} (beyond threshold)")
