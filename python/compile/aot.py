@@ -25,14 +25,13 @@ HLO *text* is the interchange format (not serialized protos): jax >= 0.5
 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 parser reassigns ids (see /opt/xla-example/README.md).
 
-Cache layouts (`--cache-layout`, per artifact in meta.json):
-  per_lane    (default) kc/vc are B separate [L,Hkv,M,dh] operands, one per
-              batch lane, returned the same way — the runtime can swap one
-              lane's session KV in O(lane) without touching the others
-  monolithic  legacy single [L,B,Hkv,M,dh] kc/vc pair; the runtime falls
-              back to a staged-host-shadow swap (one full round-trip per
-              batched swap call)
-  both        export every variant in both layouts
+Cache layout (recorded per artifact in meta.json as `cache_layout`):
+  per_lane    kc/vc are B separate [L,Hkv,M,dh] operands, one per batch
+              lane, returned the same way — the runtime can swap one lane's
+              session KV in O(lane) without touching the others.  This is
+              the only layout; the legacy monolithic single-pair layout was
+              removed at the end of its deprecation window and the rust
+              runtime rejects such exports.
 
 Usage: cd python && python -m compile.aot [--out ../artifacts] [--quick]
 """
@@ -79,24 +78,22 @@ def spec(shape, dtype=jnp.float32):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def cache_specs(cfg, b, m, cache_layout):
-    """kc/vc runtime-input specs: one [L,B,H,M,dh] pair (monolithic) or B
-    per-lane [L,H,M,dh] pairs (per_lane, keyed kc0..kc{B-1}/vc0..)."""
+def cache_specs(cfg, b, m):
+    """kc/vc runtime-input specs: B per-lane [L,H,M,dh] pairs, keyed
+    kc0..kc{B-1}/vc0..vc{B-1}."""
     L, H, dh = cfg.layers, cfg.hkv, cfg.dh
-    if cache_layout == "per_lane":
-        sp = {f"kc{i}": spec((L, H, m, dh)) for i in range(b)}
-        sp.update({f"vc{i}": spec((L, H, m, dh)) for i in range(b)})
-        return sp
-    return dict(kc=spec((L, b, H, m, dh)), vc=spec((L, b, H, m, dh)))
+    sp = {f"kc{i}": spec((L, H, m, dh)) for i in range(b)}
+    sp.update({f"vc{i}": spec((L, H, m, dh)) for i in range(b)})
+    return sp
 
 
-def decode_specs(cfg, b, m, cache_layout="monolithic"):
+def decode_specs(cfg, b, m):
     L, H, dh = cfg.layers, cfg.hkv, cfg.dh
     sp = dict(
         token=spec((b,), jnp.int32),
         pos=spec((b,), jnp.int32),
     )
-    sp.update(cache_specs(cfg, b, m, cache_layout))
+    sp.update(cache_specs(cfg, b, m))
     sp.update(
         valid=spec((L, b, H, m)),
         write_slot=spec((L, b, H), jnp.int32),
@@ -108,14 +105,14 @@ def decode_specs(cfg, b, m, cache_layout="monolithic"):
     return sp
 
 
-def prefill_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
+def prefill_specs(cfg, b, m, c=CHUNK):
     L, H, dh = cfg.layers, cfg.hkv, cfg.dh
     sp = dict(
         tokens=spec((b, c), jnp.int32),
         pos=spec((b, c), jnp.int32),
         in_mask=spec((b, c)),
     )
-    sp.update(cache_specs(cfg, b, m, cache_layout))
+    sp.update(cache_specs(cfg, b, m))
     sp.update(
         valid=spec((L, b, H, m)),
         write_slots=spec((L, b, H, c), jnp.int32),
@@ -123,7 +120,7 @@ def prefill_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
     return sp
 
 
-def mixed_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
+def mixed_specs(cfg, b, m, c=CHUNK):
     """Like prefill, plus the per-lane `mode` operand (1.0 = decode lane)
     inserted after in_mask, plus the decode graph's retrieval inject tail —
     the runtime's unified StepPlan operand contract (the rust structural
@@ -135,7 +132,7 @@ def mixed_specs(cfg, b, m, c=CHUNK, cache_layout="monolithic"):
         in_mask=spec((b, c)),
         mode=spec((b,)),
     )
-    sp.update(cache_specs(cfg, b, m, cache_layout))
+    sp.update(cache_specs(cfg, b, m))
     sp.update(
         valid=spec((L, b, H, m)),
         write_slots=spec((L, b, H, c), jnp.int32),
@@ -154,12 +151,12 @@ PREFILL_OUT_ORDER = ["logits", "kc", "vc", "valid", "log_beta", "attn_slots",
 MIXED_OUT_ORDER = PREFILL_OUT_ORDER  # same tuple; attn_slots is mode-fused
 
 
-def build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout):
+def build_fn(kind, cfg, pnames, gnames, attn_impl, b):
     """Flat-signature wrapper: fn(*params, *gates, *runtime) -> tuple.
 
-    In the per_lane layout the runtime cache operands are B kc buffers then
-    B vc buffers (each [L,Hkv,M,dh]); the output tuple expands the same
-    way, in the DECODE/PREFILL/MIXED_OUT_ORDER position of kc/vc."""
+    The runtime cache operands are B kc buffers then B vc buffers (each
+    [L,Hkv,M,dh]); the output tuple expands the same way, in the
+    DECODE/PREFILL/MIXED_OUT_ORDER position of kc/vc."""
     np_, ng = len(pnames), len(gnames)
     # leading runtime operands before the caches, per kind:
     #   decode  (token, pos) | prefill (tokens, pos, in_mask)
@@ -170,51 +167,41 @@ def build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout):
         params = dict(zip(pnames, args[:np_]))
         gates = dict(zip(gnames, args[np_:np_ + ng]))
         rt = args[np_ + ng:]
-        if cache_layout == "per_lane":
-            head, rest = rt[:lead_n], rt[lead_n:]
-            kcs, vcs, tail = rest[:b], rest[b:2 * b], rest[2 * b:]
-            if kind == "decode":
-                out = decode_fn_lanes(params, gates, *head, kcs, vcs, *tail,
-                                      cfg=cfg, attn_impl=attn_impl)
-                names = DECODE_OUT_ORDER
-            elif kind == "mixed":
-                out = step_fn_mixed_lanes(params, gates, *head, kcs, vcs,
-                                          *tail, cfg=cfg)
-                names = MIXED_OUT_ORDER
-            else:
-                out = prefill_fn_lanes(params, gates, *head, kcs, vcs, *tail,
-                                       cfg=cfg)
-                names = PREFILL_OUT_ORDER
-            outs = []
-            for k in names:
-                if k in ("kc", "vc"):
-                    outs.extend(out[k])  # B per-lane buffers
-                else:
-                    outs.append(out[k])
-            return tuple(outs)
+        head, rest = rt[:lead_n], rt[lead_n:]
+        kcs, vcs, tail = rest[:b], rest[b:2 * b], rest[2 * b:]
         if kind == "decode":
-            out = decode_fn(params, gates, *rt, cfg=cfg, attn_impl=attn_impl)
-            return tuple(out[k] for k in DECODE_OUT_ORDER)
-        if kind == "mixed":
-            out = step_fn_mixed(params, gates, *rt, cfg=cfg)
-            return tuple(out[k] for k in MIXED_OUT_ORDER)
-        out = prefill_fn(params, gates, *rt, cfg=cfg)
-        return tuple(out[k] for k in PREFILL_OUT_ORDER)
+            out = decode_fn_lanes(params, gates, *head, kcs, vcs, *tail,
+                                  cfg=cfg, attn_impl=attn_impl)
+            names = DECODE_OUT_ORDER
+        elif kind == "mixed":
+            out = step_fn_mixed_lanes(params, gates, *head, kcs, vcs,
+                                      *tail, cfg=cfg)
+            names = MIXED_OUT_ORDER
+        else:
+            out = prefill_fn_lanes(params, gates, *head, kcs, vcs, *tail,
+                                   cfg=cfg)
+            names = PREFILL_OUT_ORDER
+        outs = []
+        for k in names:
+            if k in ("kc", "vc"):
+                outs.extend(out[k])  # B per-lane buffers
+            else:
+                outs.append(out[k])
+        return tuple(outs)
 
     return fn
 
 
-def lower_variant(kind, cfg, b, m, params_np, gates_np, linear, attn_impl,
-                  cache_layout="monolithic"):
+def lower_variant(kind, cfg, b, m, params_np, gates_np, linear, attn_impl):
     pnames = param_names(cfg)
     gnames = gate_names(cfg, linear=linear)
-    fn = build_fn(kind, cfg, pnames, gnames, attn_impl, b, cache_layout)
+    fn = build_fn(kind, cfg, pnames, gnames, attn_impl, b)
     pspecs = [spec(params_np[n].shape) for n in pnames]
     gspecs = [spec(gates_np[n].shape) for n in gnames]
     rspecs = {
-        "decode": lambda: decode_specs(cfg, b, m, cache_layout),
-        "prefill": lambda: prefill_specs(cfg, b, m, cache_layout=cache_layout),
-        "mixed": lambda: mixed_specs(cfg, b, m, cache_layout=cache_layout),
+        "decode": lambda: decode_specs(cfg, b, m),
+        "prefill": lambda: prefill_specs(cfg, b, m),
+        "mixed": lambda: mixed_specs(cfg, b, m),
     }[kind]()
     lowered = jax.jit(fn).lower(*pspecs, *gspecs, *rspecs.values())
     return to_hlo_text(lowered), list(rspecs.keys())
@@ -302,10 +289,6 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="only export the (8,256) pair (fast iteration)")
     ap.add_argument("--attn-impl", default="pallas", choices=["pallas", "ref"])
-    ap.add_argument("--cache-layout", default="per_lane",
-                    choices=["per_lane", "monolithic", "both"],
-                    help="kc/vc operand layout: per-lane buffers (O(lane) "
-                         "session swap), legacy monolithic pair, or both")
     ap.add_argument("--smoke", action="store_true",
                     help="initialize random params/gates instead of loading "
                          "trained checkpoints (CI export smoke test; the "
@@ -353,27 +336,22 @@ def main() -> None:
     dec_vars = [(8, 256)] if args.quick else DECODE_VARIANTS
     pre_vars = [(8, 256)] if args.quick else PREFILL_VARIANTS
     mix_vars = [(8, 256)] if args.quick else MIXED_VARIANTS
-    layouts = (["per_lane", "monolithic"] if args.cache_layout == "both"
-               else [args.cache_layout])
     artifacts = []
     for kind, variants in (("decode", dec_vars), ("prefill", pre_vars),
                            ("mixed", mix_vars)):
         for b, m in variants:
-            for layout in layouts:
-                suffix = "_pl" if layout == "per_lane" else ""
-                fname = f"{kind}_b{b}_m{m}{suffix}.hlo.txt"
-                hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
-                                              gates_np, False,
-                                              args.attn_impl, layout)
-                with open(f"{out}/{fname}", "w") as f:
-                    f.write(hlo)
-                artifacts.append({"kind": kind, "b": b, "m": m,
-                                  "c": 1 if kind == "decode" else CHUNK,
-                                  "file": fname, "gate_arch": "mlp",
-                                  "cache_layout": layout,
-                                  "runtime_inputs": rt_order})
-                print(f"lowered {fname} ({len(hlo)//1024} KiB, "
-                      f"{time.time()-t0:.0f}s)", flush=True)
+            fname = f"{kind}_b{b}_m{m}_pl.hlo.txt"
+            hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
+                                          gates_np, False, args.attn_impl)
+            with open(f"{out}/{fname}", "w") as f:
+                f.write(hlo)
+            artifacts.append({"kind": kind, "b": b, "m": m,
+                              "c": 1 if kind == "decode" else CHUNK,
+                              "file": fname, "gate_arch": "mlp",
+                              "cache_layout": "per_lane",
+                              "runtime_inputs": rt_order})
+            print(f"lowered {fname} ({len(hlo)//1024} KiB, "
+                  f"{time.time()-t0:.0f}s)", flush=True)
 
     # linear-gate ablation graphs, if that variant was trained
     lin_files = [f for f in gate_files if "linear" in f]
@@ -381,19 +359,16 @@ def main() -> None:
         lin_np = dict(np.load(lin_files[0]))
         for kind in ("decode", "prefill"):
             for b, m in LIN_VARIANTS:
-                for layout in layouts:
-                    suffix = "_pl" if layout == "per_lane" else ""
-                    fname = f"{kind}_b{b}_m{m}{suffix}_lin.hlo.txt"
-                    hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
-                                                  lin_np, True,
-                                                  args.attn_impl, layout)
-                    with open(f"{out}/{fname}", "w") as f:
-                        f.write(hlo)
-                    artifacts.append({"kind": kind, "b": b, "m": m,
-                                      "c": CHUNK if kind == "prefill" else 1,
-                                      "file": fname, "gate_arch": "linear",
-                                      "cache_layout": layout,
-                                      "runtime_inputs": rt_order})
+                fname = f"{kind}_b{b}_m{m}_pl_lin.hlo.txt"
+                hlo, rt_order = lower_variant(kind, cfg, b, m, params_np,
+                                              lin_np, True, args.attn_impl)
+                with open(f"{out}/{fname}", "w") as f:
+                    f.write(hlo)
+                artifacts.append({"kind": kind, "b": b, "m": m,
+                                  "c": CHUNK if kind == "prefill" else 1,
+                                  "file": fname, "gate_arch": "linear",
+                                  "cache_layout": "per_lane",
+                                  "runtime_inputs": rt_order})
 
     meta = {
         "model": {"vocab": cfg.vocab, "d": cfg.d, "layers": cfg.layers,

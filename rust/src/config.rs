@@ -25,6 +25,10 @@
 //! max_sessions = 256      # host-side snapshot store capacity (LRU beyond)
 //! swap_policy = "lazy"    # lazy: park on the lane, swap out on demand
 //!                         # eager: snapshot to host as soon as a turn ends
+//!
+//! [obs]
+//! trace = true            # tick flight recorder (per-phase trace journal)
+//! trace_capacity = 8192   # journal ring size, in events (hard memory cap)
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -64,6 +68,13 @@ pub struct EngineConfig {
     /// and is swapped to host only when the lane is preempted.
     /// "eager": every finished turn snapshots to host immediately.
     pub swap_policy: String,
+    /// Record per-tick phase spans into the flight-recorder journal (the
+    /// `trimkv trace` / Chrome-trace export source).  Cheap enough to stay
+    /// on in serving; off = the journal records nothing.
+    pub trace: bool,
+    /// Journal ring capacity in events; the hard memory cap (oldest events
+    /// are overwritten, and counted, once it fills).
+    pub trace_capacity: usize,
 }
 
 impl Default for EngineConfig {
@@ -84,6 +95,8 @@ impl Default for EngineConfig {
             tick_token_budget: 0,
             max_sessions: 256,
             swap_policy: "lazy".into(),
+            trace: true,
+            trace_capacity: 8192,
         }
     }
 }
@@ -139,6 +152,13 @@ impl EngineConfig {
                 "session.swap_policy" => {
                     cfg.swap_policy = val.as_str().ok_or_else(|| bad(key))?.into()
                 }
+                "obs.trace" => {
+                    cfg.trace = val.as_bool().ok_or_else(|| bad(key))?
+                }
+                "obs.trace_capacity" => {
+                    cfg.trace_capacity =
+                        val.as_usize().ok_or_else(|| bad(key))?
+                }
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -185,6 +205,13 @@ impl EngineConfig {
             self.tick_token_budget =
                 v.parse().map_err(|_| anyhow::anyhow!("bad --tick-token-budget"))?;
         }
+        if args.flag("no-trace") {
+            self.trace = false;
+        }
+        if let Some(v) = args.get("trace-capacity") {
+            self.trace_capacity =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --trace-capacity"))?;
+        }
         self.validate()
     }
 
@@ -201,6 +228,8 @@ impl EngineConfig {
             matches!(self.swap_policy.as_str(), "lazy" | "eager"),
             "swap_policy must be `lazy` or `eager` (got `{}`)", self.swap_policy
         );
+        anyhow::ensure!(self.trace_capacity >= 1,
+                        "trace_capacity must be >= 1");
         Ok(())
     }
 }
@@ -276,5 +305,20 @@ prefill_priority = true
             "[session]\nmax_sessions = 9\nswap_policy = \"eager\"").unwrap();
         assert_eq!(cfg.max_sessions, 9);
         assert_eq!(cfg.swap_policy, "eager");
+    }
+
+    #[test]
+    fn parses_obs_keys() {
+        let cfg = EngineConfig::from_toml_str(
+            "[obs]\ntrace = false\ntrace_capacity = 64").unwrap();
+        assert!(!cfg.trace);
+        assert_eq!(cfg.trace_capacity, 64);
+        let d = EngineConfig::default();
+        assert!(d.trace, "tracing is on by default");
+        assert_eq!(d.trace_capacity, 8192);
+        assert!(EngineConfig::from_toml_str(
+            "[obs]\ntrace_capacity = 0").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "[obs]\ntrace = \"maybe\"").is_err());
     }
 }

@@ -53,6 +53,7 @@ use crate::config::EngineConfig;
 use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::metrics::EngineMetrics;
 use crate::model_meta::ModelDims;
+use crate::obs::{self, EngineObs, Phase, RetentionObs};
 use crate::policy::Policy;
 use crate::runtime::{LaneKv, LaneOp, ModelBackend, StepOut};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
@@ -104,6 +105,8 @@ pub struct Engine<B: ModelBackend> {
     /// reusable fused `StepPlan` operand buffers (perf: no per-step
     /// allocation of the [B,C]/[L,B,H,C] scratch)
     bufs: StepBufs,
+    /// observability plane: tick flight recorder + retention histograms
+    pub obs: EngineObs,
 }
 
 impl<B: ModelBackend> Engine<B> {
@@ -140,6 +143,8 @@ impl<B: ModelBackend> Engine<B> {
             tick_no: 0,
             valid: ValidMask::new(&dims, b, slots),
             bufs: StepBufs::new(&dims, b, chunk),
+            obs: EngineObs::new(cfg.trace_capacity, cfg.trace, dims.layers,
+                                dims.hkv),
             cfg,
         })
     }
@@ -253,6 +258,7 @@ impl<B: ModelBackend> Engine<B> {
     /// (no backend step was issued — `run_to_completion` must never spin
     /// on no-op ticks).
     pub fn tick(&mut self) -> Result<bool> {
+        let t0 = Instant::now();
         self.process_pending_closes();
         self.admit_waiting()?;
         self.tick_no += 1;
@@ -285,6 +291,11 @@ impl<B: ModelBackend> Engine<B> {
         };
         // turns that finished this tick may unblock a deferred close
         self.process_pending_closes();
+        // device-idle accounting: a runnable tick that issued no backend
+        // step is a host gap (structurally zero on this serial loop)
+        self.obs.journal.note_host_gap(
+            any_prefill || any_decode, worked,
+            (t0.elapsed().as_secs_f64() * 1e6) as u64);
         Ok(worked)
     }
 
@@ -426,6 +437,7 @@ impl<B: ModelBackend> Engine<B> {
         if evict.is_empty() && load.is_empty() {
             return Ok(Vec::new());
         }
+        let span = self.obs.journal.now_us();
         let t0 = Instant::now();
         let downloaded = {
             let Engine { backend, sessions, .. } = self;
@@ -464,6 +476,8 @@ impl<B: ModelBackend> Engine<B> {
             self.metrics.swap_ins += load.len() as u64;
         }
         self.metrics.swap_batches += 1;
+        self.obs.journal.record(self.tick_no, Phase::Swap, "swap",
+                                (evict.len() + load.len()) as u32, span);
         Ok(loaded)
     }
 
@@ -532,6 +546,12 @@ impl<B: ModelBackend> Engine<B> {
         let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
                                self.backend.slots(), self.backend.chunk());
         let trash = (m - 1) as i32;
+        let kind_label = match kind {
+            TickKind::Decode => "decode",
+            TickKind::Prefill => "chunk",
+            TickKind::Fused => "mixed",
+        };
+        let mut span = self.obs.journal.now_us();
 
         // --- plan --------------------------------------------------------
         self.bufs.reset(trash);
@@ -541,6 +561,8 @@ impl<B: ModelBackend> Engine<B> {
         if n_active == 0 {
             return Ok(false);
         }
+        span = self.obs.journal.record(self.tick_no, Phase::Plan, kind_label,
+                                       n_active as u32, span);
 
         // --- assemble ----------------------------------------------------
         // per lane: (real_c, flat [l*h, real_c] chosen-slot table); decode
@@ -626,6 +648,9 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
 
+        span = self.obs.journal.record(self.tick_no, Phase::Assemble,
+                                       kind_label, n_active as u32, span);
+
         // --- execute -----------------------------------------------------
         let want_attn = self.policy.needs_attention() || self.record_gates;
         let want_kv = self.policy.needs_keys();
@@ -635,6 +660,8 @@ impl<B: ModelBackend> Engine<B> {
                                          want_attn, want_kv);
             self.backend.execute(&plan)?
         };
+        span = self.obs.journal.record(self.tick_no, Phase::Execute,
+                                       kind_label, n_active as u32, span);
         self.metrics.step_us.push(t0.elapsed().as_secs_f64() * 1e6);
         self.metrics.lane_occupancy.push(n_active as f64);
         match kind {
@@ -657,7 +684,8 @@ impl<B: ModelBackend> Engine<B> {
         let eos_token = self.eos_token;
         let tick_no = self.tick_no;
         let mut finished: Vec<usize> = Vec::new();
-        let Engine { lanes, policy, valid, metrics, sampler, bufs, .. } = self;
+        let Engine { lanes, policy, valid, metrics, sampler, bufs, obs, .. } =
+            self;
         for (lane_idx, lane) in lanes.iter_mut().enumerate() {
             let Lane::Busy(seq) = lane else { continue };
             let Some((real_c, per_head)) = chunk_info[lane_idx].take() else {
@@ -666,11 +694,13 @@ impl<B: ModelBackend> Engine<B> {
             let done = postprocess_lane(
                 seq, lane_idx, bufs.ops[lane_idx], real_c, &per_head, &out,
                 &dims, b, m, budget, fused, want_attn, want_kv, policy, valid,
-                metrics, sampler, eos_token, tick_no)?;
+                metrics, sampler, &mut obs.retention, eos_token, tick_no)?;
             if done {
                 finished.push(lane_idx);
             }
         }
+        obs.journal.record(tick_no, Phase::Postprocess, kind_label,
+                           n_active as u32, span);
         self.finish_lanes(finished)?;
         Ok(true)
     }
@@ -807,6 +837,27 @@ impl<B: ModelBackend> Engine<B> {
                 .collect(),
         )
     }
+
+    /// Every metric sample — engine counters/series plus the obs plane's
+    /// own health counters — rendered as Prometheus-style text (the
+    /// `GET /metrics` payload).
+    pub fn prometheus_text(&self) -> String {
+        let mut samples = self.metrics.samples();
+        samples.extend(self.obs.samples());
+        obs::render_prometheus(&samples)
+    }
+
+    /// The flight-recorder journal exported as Chrome-trace JSON
+    /// (loadable in chrome://tracing / Perfetto).
+    pub fn chrome_trace_json(&self) -> String {
+        self.obs.journal.chrome_trace().to_string()
+    }
+
+    /// Per-(layer, head) retention-at-eviction report
+    /// (the `trimkv inspect --retention` payload).
+    pub fn retention_report(&self) -> String {
+        self.obs.retention.report()
+    }
 }
 
 /// THE shared per-lane postprocess: commit one lane's step results to its
@@ -825,6 +876,7 @@ fn postprocess_lane(seq: &mut SeqState, lane_idx: usize, op: LaneOp,
                     fused: bool, want_attn: bool, want_kv: bool,
                     policy: &mut Policy, valid: &mut ValidMask,
                     metrics: &mut EngineMetrics, sampler: &mut Sampler,
+                    retention: &mut RetentionObs,
                     eos_token: u32, tick_no: u64) -> Result<bool> {
     let (l, h, dh) = (dims.layers, dims.hkv, dims.dh);
     let (vocab, cols) = (dims.vocab, out.cols);
@@ -902,9 +954,11 @@ fn postprocess_lane(seq: &mut SeqState, lane_idx: usize, op: LaneOp,
                     seq.mirror[li * h + hi].push(me);
                 }
                 let vpos = head.entries[victim].pos;
+                let vbeta = head.entries[victim].log_beta;
                 head.evict(victim);
                 valid.set(lane_idx, li, hi, victim, false);
                 metrics.evictions += 1;
+                retention.record_eviction(li, hi, vbeta, now - vpos);
                 if let Some(rec) = seq.record.as_mut() {
                     rec.evictions.push((li * h + hi, vpos, now));
                 }
@@ -1565,6 +1619,129 @@ mod tests {
         assert!(e.metrics.evictions > 0, "tight budget must evict");
         assert_eq!(e.metrics.injections, e.backend().injected_entries,
                    "planned injections must all reach the backend");
+    }
+
+    #[test]
+    fn trace_journal_stays_bounded_over_ten_thousand_ticks() {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 8,
+            batch: 1,
+            chunked_prefill: false,
+            trace_capacity: 128,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockBackend::new(1, 12), cfg, 2).unwrap();
+        for i in 0..800u64 {
+            e.submit(Request::new(i, vec![1, 40], 12)).unwrap();
+            e.run_to_completion().unwrap();
+        }
+        assert!(e.ticks() >= 10_000, "want a 10k-tick run, got {}", e.ticks());
+        // the hard cap held over ~4 events per tick, and the overflow was
+        // counted, not grown into
+        assert_eq!(e.obs.journal.len(), 128);
+        assert!(e.obs.journal.dropped() > 0);
+        let ts: Vec<u64> = e.obs.journal.events().map(|ev| ev.ts_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]),
+                "ring iteration must stay chronological after wrap");
+    }
+
+    #[test]
+    fn chrome_trace_spans_are_valid_and_monotone() {
+        let mut e = mixed_engine(2, 16, true, false, 0);
+        e.submit(Request::new(0, vec![1, 40], 6)).unwrap();
+        e.submit(Request::new(1, (0..40).map(|i| 32 + i).collect(), 2))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        let text = e.chrome_trace_json();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        let mut prev_end = 0.0;
+        let mut cats = std::collections::BTreeSet::new();
+        for ev in evs {
+            assert_eq!(ev.str_field("ph").unwrap(), "X");
+            let ts = ev.get("ts").unwrap().as_f64().unwrap();
+            let dur = ev.get("dur").unwrap().as_f64().unwrap();
+            assert!(ts >= prev_end, "spans overlap: ts {ts} < end {prev_end}");
+            prev_end = ts + dur;
+            cats.insert(ev.str_field("cat").unwrap().to_string());
+        }
+        assert!(cats.contains("mixed"),
+                "fused ticks must be labelled mixed, got {cats:?}");
+    }
+
+    #[test]
+    fn prometheus_text_matches_engine_counters() {
+        let mut e = engine("trimkv", 8, 1);
+        e.submit(Request::new(1, (0..20).map(|i| 32 + i).collect(), 10))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        let text = e.prometheus_text();
+        crate::obs::assert_prometheus_parses(&text);
+        let line = |n: &str, v: u64| format!("{n} {v}\n");
+        assert!(text.contains(&line("trimkv_tokens_decoded_total",
+                                    e.metrics.tokens_decoded)));
+        assert!(text.contains(&line("trimkv_evictions_total",
+                                    e.metrics.evictions)));
+        assert!(text.contains(&line("trimkv_requests_finished_total",
+                                    e.metrics.requests_finished)));
+        // the obs plane rides the same exposition, and its eviction counter
+        // agrees with the engine's
+        assert!(text.contains(&line("trimkv_retention_evictions_total",
+                                    e.metrics.evictions)));
+        assert!(text.contains("trimkv_step_us_count"));
+        assert!(text.contains("trimkv_ttft_us_bucket{le=\"+Inf\"}"));
+    }
+
+    #[test]
+    fn host_gap_is_structurally_zero_on_the_serial_loop() {
+        let mut e = mixed_engine(2, 16, true, false, 0);
+        e.submit(Request::new(0, vec![1, 40], 8)).unwrap();
+        e.submit(Request::new(1, (0..30).map(|i| 32 + i).collect(), 4))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        e.tick().unwrap(); // an idle tick is not a gap either
+        assert_eq!(e.obs.journal.host_gap_ticks, 0);
+        assert_eq!(e.obs.journal.host_gap_us, 0);
+    }
+
+    #[test]
+    fn retention_histograms_cover_every_head_at_eviction() {
+        let mut e = engine("trimkv", 8, 1);
+        e.submit(Request::new(1, (0..30).map(|i| 32 + i).collect(), 10))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.evictions > 0);
+        assert_eq!(e.obs.retention.total_evictions(), e.metrics.evictions);
+        // budget pressure applies per (layer, head): every head evicted
+        for li in 0..4 {
+            for hi in 0..2 {
+                assert!(e.obs.retention.head(li, hi).count > 0,
+                        "no evictions recorded for ({li}, {hi})");
+            }
+        }
+        let rep = e.retention_report();
+        assert!(rep.contains("signature"));
+        assert!(rep.lines().count() >= 4 * 2 + 3);
+    }
+
+    #[test]
+    fn trace_flag_disables_the_journal_but_not_retention() {
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 8,
+            batch: 1,
+            chunked_prefill: false,
+            trace: false,
+            ..Default::default()
+        };
+        let mut e = Engine::new(MockBackend::new(1, 12), cfg, 2).unwrap();
+        e.submit(Request::new(1, (0..20).map(|i| 32 + i).collect(), 4))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.obs.journal.is_empty());
+        assert!(e.obs.retention.total_evictions() > 0);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! - [`vocab`] / [`model_meta`] — artifact interchange contracts with python
 //! - [`runtime`] — PJRT client, HLO loading, the ModelBackend abstraction
 //! - [`kvcache`] / [`policy`] — slot cache manager + eviction policies
+//! - [`obs`] — observability plane: tick flight recorder, metric samples +
+//!   Prometheus-style exposition, retention-score introspection
 //! - [`session`] — host-side KV snapshot/swap store for multi-turn serving
 //! - [`engine`] / [`scheduler`] / [`server`] — the serving coordinator
 //! - [`workload`] / [`eval`] — paper benchmark suites and table harnesses
@@ -17,6 +19,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod metrics;
 pub mod model_meta;
+pub mod obs;
 pub mod policy;
 pub mod runtime;
 pub mod scheduler;

@@ -5,6 +5,8 @@
 //!   generate   run one prompt through the engine and print the tokens
 //!   eval       policy x budget accuracy sweep over a paper suite
 //!   inspect    retention-trace dumps (Figs 4/5/11-19)
+//!   trace      run a workload and export the tick flight recorder as
+//!              Chrome-trace JSON (chrome://tracing / Perfetto)
 //!   selftest   golden-I/O check of the AOT artifacts vs the python export
 
 use std::path::Path;
@@ -33,10 +35,12 @@ fn main() -> Result<()> {
         "generate" => generate(&rest),
         "eval" => eval_cmd(&rest),
         "inspect" => inspect_cmd(&rest),
+        "trace" => trace_cmd(&rest),
         "selftest" => selftest(&rest),
         _ => {
             eprintln!(
-                "usage: trimkv <serve|generate|eval|inspect|selftest> [--help]\n\
+                "usage: trimkv <serve|generate|eval|inspect|trace|selftest> \
+                 [--help]\n\
                  see README.md for examples"
             );
             Ok(())
@@ -63,6 +67,9 @@ fn common_spec() -> trimkv::util::cli::SpecBuilder {
         .opt("tick-token-budget", "0",
              "token budget per mixed tick, decoders reserved first \
               (Sarathi-style; 0 = unbounded)")
+        .opt("trace-capacity", "8192",
+             "flight-recorder journal capacity, in events (hard memory cap)")
+        .flag("no-trace", "disable the per-tick flight recorder")
 }
 
 fn load_engine(args: &Args) -> Result<(Engine<PjrtBackend>, Vocab, ModelMeta)> {
@@ -198,6 +205,9 @@ fn inspect_cmd(argv: &[String]) -> Result<()> {
         .flag("tokens", "per-token retention table (Fig 5a/b)")
         .flag("sparsity", "layer/head sparsity (Fig 5c)")
         .flag("kept", "kept-token rendering (Figs 13-19)")
+        .flag("retention",
+              "per-(layer, head) retention-at-eviction histograms and \
+               sink/sliding-window/gist signatures")
         .parse(argv)?;
     let (mut engine, vocab, meta) = load_engine(&args)?;
     engine.record_gates = true;
@@ -242,6 +252,41 @@ fn inspect_cmd(argv: &[String]) -> Result<()> {
             println!("{}", inspect::kept_tokens_render(&rec, &kept, &vocab));
         }
     }
+    if args.flag("retention") {
+        println!("{}", engine.retention_report());
+    }
+    Ok(())
+}
+
+/// Run a workload through the engine, then export the flight recorder as
+/// Chrome-trace JSON (and print the scheduling summary).  The engine traces
+/// by default, so `serve` users can also scrape the same journal live over
+/// the TCP stats protocol.
+fn trace_cmd(argv: &[String]) -> Result<()> {
+    let args = common_spec()
+        .opt("prompt", "", "comma-separated token ids (default: demo recall)")
+        .opt("out", "trace.json", "Chrome-trace output path")
+        .parse(argv)?;
+    let (mut engine, vocab, _) = load_engine(&args)?;
+    let prompt: Vec<u32> = match args.get("prompt") {
+        Some(s) if !s.is_empty() => s
+            .split(',')
+            .map(|x| x.trim().parse().context("bad token id"))
+            .collect::<Result<_>>()?,
+        _ => {
+            let mut g = trimkv::workload::Gen::new(&vocab, args.u64("seed")?);
+            g.recall(8, 4).prompt
+        }
+    };
+    engine.submit(Request::new(0, prompt, args.usize("max-new-tokens")?))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    engine.run_to_completion()?;
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(&out, engine.chrome_trace_json())?;
+    println!("wrote {out}: {} spans over {} ticks ({} overwritten)",
+             engine.obs.journal.len(), engine.ticks(),
+             engine.obs.journal.dropped());
+    println!("{}", engine.metrics.scheduling_summary());
     Ok(())
 }
 

@@ -4,10 +4,16 @@
 //! Welford moments + a fixed reservoir for percentiles) — a serving engine
 //! records one sample per event forever, so nothing here may grow with
 //! uptime.
+//!
+//! Beyond the human-readable `summary()` one-liners, every counter and
+//! series is enumerable through [`EngineMetrics::samples`], the machine
+//! interface the Prometheus `/metrics` exposition (and any future SLO
+//! loadgen) consumes.
 
 use std::time::Instant;
 
-use crate::util::stats::{LatencyHistogram, StreamSummary};
+use crate::obs::{self, Sample};
+use crate::util::stats::{fmt_opt, LatencyHistogram, StreamSummary};
 
 #[derive(Debug)]
 pub struct EngineMetrics {
@@ -101,48 +107,57 @@ impl EngineMetrics {
         }
     }
 
-    pub fn decode_throughput_tok_s(&self) -> f64 {
+    /// `None` until the first decoded token: a fresh engine has no
+    /// throughput, and rendering must show `-`, not 0.0 or NaN.
+    pub fn decode_throughput_tok_s(&self) -> Option<f64> {
         let el = self.started.elapsed().as_secs_f64();
-        if el > 0.0 { self.tokens_decoded as f64 / el } else { 0.0 }
+        if self.tokens_decoded == 0 || el <= 0.0 {
+            None
+        } else {
+            Some(self.tokens_decoded as f64 / el)
+        }
     }
 
     pub fn summary(&self) -> String {
+        let ms = |v: Option<f64>, d: usize| fmt_opt(v.map(|x| x / 1e3), d);
         format!(
             "requests {}/{} finished | prefill {} tok | decode {} tok \
-             ({:.1} tok/s) | steps {} (mean {:.2} ms, p95 {:.2} ms) | \
-             evictions {} | ttft p50 {:.1} ms | e2e p50 {:.1} ms | \
+             ({} tok/s) | steps {} (mean {:.2} ms, p95 {} ms) | \
+             evictions {} | ttft p50 {} ms | e2e p50 {} ms | \
              lanes {:.2}",
             self.requests_finished,
             self.requests_admitted,
             self.tokens_prefilled,
             self.tokens_decoded,
-            self.decode_throughput_tok_s(),
+            fmt_opt(self.decode_throughput_tok_s(), 1),
             self.decode_steps,
             self.step_us.mean() / 1e3,
-            self.step_us.pct(95.0) / 1e3,
+            ms(self.step_us.pct(95.0), 2),
             self.evictions,
-            self.ttft_us.pct_us(50.0) / 1e3,
-            self.e2e_us.pct_us(50.0) / 1e3,
+            ms(self.ttft_us.pct_us(50.0), 1),
+            ms(self.e2e_us.pct_us(50.0), 1),
             self.lane_occupancy.mean(),
         )
     }
 
     /// One-line mixed-tick scheduling summary (stall-free serving).
     pub fn scheduling_summary(&self) -> String {
+        let ms = |v: Option<f64>, d: usize| fmt_opt(v.map(|x| x / 1e3), d);
         format!(
             "mixed steps {} (decode lanes {:.2}, chunk lanes {:.2} mean, \
              {} with injects) | chunk tokens {} | ttft mean {:.1} ms p95 \
-             {:.1} ms | tbt mean {:.2} ms p95 {:.2} ms | tick gap max {:.0}",
+             {} ms | tbt mean {:.2} ms p95 {} ms | tick gap max {}",
             self.mixed_steps,
             self.mixed_decode_lanes.mean(),
             self.mixed_chunk_lanes.mean(),
             self.mixed_inject_steps,
             self.mixed_chunk_tokens,
             self.ttft_summary_us.mean() / 1e3,
-            self.ttft_summary_us.pct(95.0) / 1e3,
+            ms(self.ttft_summary_us.pct(95.0), 1),
             self.tbt_us.mean() / 1e3,
-            self.tbt_us.pct(95.0) / 1e3,
-            self.tbt_ticks.max(),
+            ms(self.tbt_us.pct(95.0), 2),
+            fmt_opt((self.tbt_ticks.count() > 0).then(|| self.tbt_ticks.max()),
+                    0),
         )
     }
 
@@ -150,22 +165,71 @@ impl EngineMetrics {
     pub fn session_summary(&self) -> String {
         format!(
             "sessions {} opened / {} closed / {} dropped | swaps {} out \
-             (mean {:.1} us, p95 {:.1} us) / {} in (mean {:.1} us, p95 \
-             {:.1} us) over {} batched calls | preemptions {} | in-place \
+             (mean {:.1} us, p95 {} us) / {} in (mean {:.1} us, p95 \
+             {} us) over {} batched calls | preemptions {} | in-place \
              resumes {}",
             self.sessions_opened,
             self.sessions_closed,
             self.sessions_dropped,
             self.swap_outs,
             self.swap_out_us.mean(),
-            self.swap_out_us.pct(95.0),
+            fmt_opt(self.swap_out_us.pct(95.0), 1),
             self.swap_ins,
             self.swap_in_us.mean(),
-            self.swap_in_us.pct(95.0),
+            fmt_opt(self.swap_in_us.pct(95.0), 1),
             self.swap_batches,
             self.preemptions,
             self.resumes_in_place,
         )
+    }
+
+    /// Enumerate every counter and series as [`obs::Sample`]s — the single
+    /// source the Prometheus exposition renders.  Counters keep their field
+    /// names under a `trimkv_` prefix with the `_total` suffix; summaries
+    /// and histograms expand per the Prometheus conventions.
+    pub fn samples(&self) -> Vec<Sample> {
+        let mut out: Vec<Sample> = [
+            ("trimkv_requests_admitted_total", self.requests_admitted),
+            ("trimkv_requests_finished_total", self.requests_finished),
+            ("trimkv_tokens_prefilled_total", self.tokens_prefilled),
+            ("trimkv_tokens_decoded_total", self.tokens_decoded),
+            ("trimkv_evictions_total", self.evictions),
+            ("trimkv_injections_total", self.injections),
+            ("trimkv_decode_steps_total", self.decode_steps),
+            ("trimkv_prefill_chunks_total", self.prefill_chunks),
+            ("trimkv_mixed_steps_total", self.mixed_steps),
+            ("trimkv_mixed_chunk_tokens_total", self.mixed_chunk_tokens),
+            ("trimkv_mixed_inject_steps_total", self.mixed_inject_steps),
+            ("trimkv_sessions_opened_total", self.sessions_opened),
+            ("trimkv_sessions_closed_total", self.sessions_closed),
+            ("trimkv_sessions_dropped_total", self.sessions_dropped),
+            ("trimkv_swap_outs_total", self.swap_outs),
+            ("trimkv_swap_ins_total", self.swap_ins),
+            ("trimkv_swap_batches_total", self.swap_batches),
+            ("trimkv_preemptions_total", self.preemptions),
+            ("trimkv_resumes_in_place_total", self.resumes_in_place),
+        ]
+        .into_iter()
+        .map(|(name, v)| Sample::counter(name, v as f64))
+        .collect();
+        out.push(Sample::gauge("trimkv_uptime_seconds",
+                               self.started.elapsed().as_secs_f64()));
+        for (name, s) in [
+            ("trimkv_mixed_decode_lanes", &self.mixed_decode_lanes),
+            ("trimkv_mixed_chunk_lanes", &self.mixed_chunk_lanes),
+            ("trimkv_ttft_summary_us", &self.ttft_summary_us),
+            ("trimkv_tbt_us", &self.tbt_us),
+            ("trimkv_tbt_ticks", &self.tbt_ticks),
+            ("trimkv_step_us", &self.step_us),
+            ("trimkv_lane_occupancy", &self.lane_occupancy),
+            ("trimkv_swap_out_us", &self.swap_out_us),
+            ("trimkv_swap_in_us", &self.swap_in_us),
+        ] {
+            out.extend(obs::summary_samples(name, s));
+        }
+        out.extend(obs::histogram_samples("trimkv_ttft_us", &self.ttft_us));
+        out.extend(obs::histogram_samples("trimkv_e2e_us", &self.e2e_us));
+        out
     }
 }
 
@@ -187,6 +251,19 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests 2/3"));
         assert!(s.contains("decode 100 tok"));
+    }
+
+    #[test]
+    fn empty_series_render_dashes_not_nan() {
+        let m = EngineMetrics::new();
+        assert_eq!(m.decode_throughput_tok_s(), None);
+        for s in [m.summary(), m.scheduling_summary(), m.session_summary()] {
+            assert!(!s.contains("NaN") && !s.contains("inf"),
+                    "NaN/inf leaked into: {s}");
+            assert!(s.contains('-'), "empty series must render `-`: {s}");
+        }
+        assert!(m.summary().contains("(- tok/s)"));
+        assert!(m.summary().contains("ttft p50 - ms"));
     }
 
     #[test]
@@ -230,6 +307,35 @@ mod tests {
             m.swap_out_us.push(i as f64);
         }
         assert_eq!(m.step_us.count(), 100_000);
-        assert!(m.step_us.pct(95.0) > m.step_us.pct(5.0));
+        assert!(m.step_us.pct(95.0).unwrap() > m.step_us.pct(5.0).unwrap());
+    }
+
+    #[test]
+    fn samples_enumerate_counters_series_and_histograms() {
+        let mut m = EngineMetrics::new();
+        m.tokens_decoded = 77;
+        m.evictions = 5;
+        m.step_us.push(1000.0);
+        m.ttft_us.record_us(2000.0);
+        let samples = m.samples();
+        let get = |n: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == n && s.labels.is_empty())
+                .unwrap_or_else(|| panic!("missing sample {n}"))
+                .value
+        };
+        assert_eq!(get("trimkv_tokens_decoded_total"), 77.0);
+        assert_eq!(get("trimkv_evictions_total"), 5.0);
+        assert_eq!(get("trimkv_step_us_count"), 1.0);
+        assert_eq!(get("trimkv_ttft_us_count"), 1.0);
+        assert_eq!(get("trimkv_requests_admitted_total"), 0.0);
+        // every sample renders to a strictly parseable exposition line
+        let text = crate::obs::render_prometheus(&samples);
+        for line in text.lines() {
+            let (name, value) = line.rsplit_once(' ').unwrap();
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "bad value line: {line}");
+        }
     }
 }

@@ -34,9 +34,10 @@ pub struct ArtifactSpec {
     pub c: usize,
     pub file: String,
     pub gate_arch: String, // "mlp" | "linear"
-    /// "per_lane": the graph takes/returns one kc/vc buffer per batch lane
-    /// (O(lane) session swap); "monolithic": single [L,B,H,M,dh] pair
-    /// (legacy artifacts; swap stages through a host shadow).
+    /// Always "per_lane": the graph takes/returns one kc/vc buffer per
+    /// batch lane (O(lane) session swap).  The legacy "monolithic" layout
+    /// was removed at the end of its deprecation window; `from_json` bails
+    /// on such exports.
     pub cache_layout: String,
     /// The graph's runtime operand names in call order (after params +
     /// gates) — the exported `StepPlan` operand contract.  Empty on
@@ -46,9 +47,9 @@ pub struct ArtifactSpec {
 
 impl ArtifactSpec {
     /// Does this graph take the retrieval inject operands?  Decode graphs
-    /// always do; mixed graphs only since the unified step-plan exports —
-    /// a PR-3-era mixed artifact returns false and inject-carrying plans
-    /// degrade to per-kind graph calls.
+    /// always do; mixed graphs declare them in `runtime_inputs` (the
+    /// backend refuses to load a mixed graph without them — the PR-3-era
+    /// inject-less exports are past their deprecation window).
     pub fn has_inject(&self) -> bool {
         self.kind == "decode"
             || self.runtime_inputs.iter().any(|s| s == "inject_flag")
@@ -120,19 +121,26 @@ impl ModelMeta {
             .ok_or_else(|| anyhow::anyhow!("meta: missing artifacts"))?
             .iter()
             .map(|a| {
+                let file = a.str_field("file")?.to_string();
+                let cache_layout = a
+                    .get("cache_layout")
+                    .and_then(Json::as_str)
+                    .unwrap_or("monolithic")
+                    .to_string();
+                anyhow::ensure!(
+                    cache_layout == "per_lane",
+                    "artifact {file} uses the removed `{cache_layout}` \
+                     cache_layout; re-export with python -m compile.aot to \
+                     get per-lane residency",
+                );
                 Ok(ArtifactSpec {
                     kind: a.str_field("kind")?.to_string(),
                     b: a.usize_field("b")?,
                     m: a.usize_field("m")?,
                     c: a.usize_field("c")?,
-                    file: a.str_field("file")?.to_string(),
+                    file,
                     gate_arch: a.str_field("gate_arch")?.to_string(),
-                    // absent in pre-refactor exports -> monolithic
-                    cache_layout: a
-                        .get("cache_layout")
-                        .and_then(Json::as_str)
-                        .unwrap_or("monolithic")
-                        .to_string(),
+                    cache_layout,
                     runtime_inputs: a
                         .get("runtime_inputs")
                         .and_then(Json::as_arr)
@@ -168,15 +176,14 @@ impl ModelMeta {
         })
     }
 
-    /// Smallest exported variant with b == `b` and m >= `budget`; at equal
-    /// m, per-lane cache layouts win (O(lane) session swap).
+    /// Smallest exported variant with b == `b` and m >= `budget`.
     pub fn pick(&self, kind: &str, b: usize, budget: usize,
                 gate_arch: &str) -> Option<&ArtifactSpec> {
         self.artifacts
             .iter()
             .filter(|a| a.kind == kind && a.b == b && a.m >= budget
                         && a.gate_arch == gate_arch)
-            .min_by_key(|a| (a.m, (a.cache_layout != "per_lane") as usize))
+            .min_by_key(|a| a.m)
     }
 
     /// All batch-lane counts available for a given kind.
@@ -215,19 +222,14 @@ pub fn test_meta() -> ModelMeta {
         gate_variants: vec!["default".into()],
         artifacts: vec![
             ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
-                           file: "decode_b8_m128.hlo.txt".into(),
-                           gate_arch: "mlp".into(),
-                           cache_layout: "monolithic".into(),
-                           runtime_inputs: vec![] },
-            ArtifactSpec { kind: "decode".into(), b: 8, m: 128, c: 1,
                            file: "decode_b8_m128_pl.hlo.txt".into(),
                            gate_arch: "mlp".into(),
                            cache_layout: "per_lane".into(),
                            runtime_inputs: vec![] },
             ArtifactSpec { kind: "decode".into(), b: 8, m: 768, c: 1,
-                           file: "decode_b8_m768.hlo.txt".into(),
+                           file: "decode_b8_m768_pl.hlo.txt".into(),
                            gate_arch: "mlp".into(),
-                           cache_layout: "monolithic".into(),
+                           cache_layout: "per_lane".into(),
                            runtime_inputs: vec![] },
             ArtifactSpec { kind: "mixed".into(), b: 8, m: 128, c: 64,
                            file: "mixed_b8_m128_pl.hlo.txt".into(),
@@ -243,13 +245,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn pick_chooses_smallest_sufficient_m_preferring_per_lane() {
+    fn pick_chooses_smallest_sufficient_m() {
         let meta = test_meta();
         assert_eq!(meta.pick("decode", 8, 100, "mlp").unwrap().m, 128);
         assert_eq!(meta.pick("decode", 8, 128, "mlp").unwrap().m, 128);
-        // at equal m, the per-lane layout wins (O(lane) swap)
-        assert_eq!(meta.pick("decode", 8, 128, "mlp").unwrap().cache_layout,
-                   "per_lane");
         assert_eq!(meta.pick("decode", 8, 200, "mlp").unwrap().m, 768);
         assert!(meta.pick("decode", 8, 1000, "mlp").is_none());
         assert!(meta.pick("decode", 1, 64, "mlp").is_none());
@@ -291,18 +290,41 @@ mod tests {
           "prefill_outputs": ["logits"],
           "gate_variants": ["default"],
           "artifacts": [{"kind":"decode","b":8,"m":256,"c":1,
-                         "file":"decode_b8_m256.hlo.txt","gate_arch":"mlp"}]
+                         "file":"decode_b8_m256.hlo.txt","gate_arch":"mlp",
+                         "cache_layout":"per_lane"}]
         }"#;
         let meta =
             ModelMeta::from_json(Path::new("x"), &Json::parse(src).unwrap()).unwrap();
         assert_eq!(meta.dims.layers, 4);
         assert_eq!(meta.param_order[0].shape, vec![512, 128]);
         assert_eq!(meta.artifacts.len(), 1);
-        // pre-refactor exports carry no cache_layout key -> monolithic
-        assert_eq!(meta.artifacts[0].cache_layout, "monolithic");
+        assert_eq!(meta.artifacts[0].cache_layout, "per_lane");
         assert_eq!(meta.available_batches("decode"), vec![8]);
-        // legacy exports: no mixed graphs, no mixed output order
+        // exports without mixed graphs carry no mixed output order
         assert!(meta.mixed_outputs.is_empty());
         assert!(!meta.supports_mixed(8, 256, "mlp"));
+    }
+
+    #[test]
+    fn rejects_monolithic_and_layoutless_exports() {
+        // pre-refactor exports carry no cache_layout key (implicitly
+        // monolithic); both forms are past their deprecation window
+        for extra in ["", r#","cache_layout":"monolithic""#] {
+            let src = format!(
+                r#"{{
+                  "model": {{"vocab":512,"d":128,"layers":4,"hq":4,"hkv":2,
+                            "dh":32,"ffn":256,"gate_hidden":48}},
+                  "chunk": 64,
+                  "param_order": [],
+                  "gate_order": [],
+                  "artifacts": [{{"kind":"decode","b":8,"m":256,"c":1,
+                                 "file":"d.hlo.txt","gate_arch":"mlp"{extra}}}]
+                }}"#
+            );
+            let err =
+                ModelMeta::from_json(Path::new("x"), &Json::parse(&src).unwrap())
+                    .unwrap_err();
+            assert!(err.to_string().contains("re-export"), "err: {err}");
+        }
     }
 }

@@ -1,0 +1,243 @@
+//! Observability plane: tick flight recorder, enumerable metric samples
+//! with Prometheus-style text exposition, and retention-score introspection.
+//!
+//! Layering: `obs` sits on [`crate::util`] only.  `engine`, `metrics` and
+//! `server` depend on `obs`, never the reverse, so the hot tick loop can
+//! record into the journal without an import cycle.
+//!
+//! The exposition format is deliberately strict: every rendered line is
+//! `name value` or `name{label="v",...} value` — no comment or TYPE lines —
+//! so scrapers (and the repo's own tests) can parse it with a two-token
+//! split.
+
+pub mod retention;
+pub mod trace;
+
+pub use retention::{HeadHist, RetentionObs, AGE_BUCKETS, SCORE_BUCKETS};
+pub use trace::{Phase, TraceEvent, TraceJournal};
+
+use crate::util::stats::{LatencyHistogram, StreamSummary};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleKind {
+    Counter,
+    Gauge,
+}
+
+/// One enumerable metric sample: the unit every exposition surface
+/// (Prometheus text, tests, future loadgen) consumes.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(&'static str, String)>,
+    pub value: f64,
+    pub kind: SampleKind,
+}
+
+impl Sample {
+    pub fn counter(name: impl Into<String>, value: f64) -> Sample {
+        Sample { name: name.into(), labels: Vec::new(), value,
+                 kind: SampleKind::Counter }
+    }
+
+    pub fn gauge(name: impl Into<String>, value: f64) -> Sample {
+        Sample { name: name.into(), labels: Vec::new(), value,
+                 kind: SampleKind::Gauge }
+    }
+
+    pub fn label(mut self, key: &'static str, value: impl Into<String>) -> Sample {
+        self.labels.push((key, value.into()));
+        self
+    }
+}
+
+/// Render samples as Prometheus-style text: one `name{labels} value` line
+/// per sample, nothing else.
+pub fn render_prometheus(samples: &[Sample]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for s in samples {
+        out.push_str(&s.name);
+        if !s.labels.is_empty() {
+            out.push('{');
+            for (i, (k, v)) in s.labels.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{k}=\"{v}\"");
+            }
+            out.push('}');
+        }
+        let _ = writeln!(out, " {}", s.value);
+    }
+    out
+}
+
+/// Expand a [`StreamSummary`] into quantile samples plus `_count`/`_sum`
+/// (the Prometheus summary convention).  Quantiles are emitted only once
+/// the series has samples — empty series never render NaN.
+pub fn summary_samples(name: &str, s: &StreamSummary) -> Vec<Sample> {
+    let mut out = Vec::new();
+    for (q, p) in [("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0)] {
+        if let Some(v) = s.pct(p) {
+            out.push(Sample::gauge(name, v).label("quantile", q));
+        }
+    }
+    out.push(Sample::counter(format!("{name}_sum"),
+                             s.mean() * s.count() as f64));
+    out.push(Sample::counter(format!("{name}_count"), s.count() as f64));
+    out
+}
+
+/// Expand a [`LatencyHistogram`] into cumulative `_bucket{le="..."}` lines
+/// plus `_sum`/`_count` (the Prometheus histogram convention).  Bucket
+/// boundaries are the histogram's native powers of two, trimmed at the last
+/// occupied bucket.
+pub fn histogram_samples(name: &str, h: &LatencyHistogram) -> Vec<Sample> {
+    let mut out = Vec::new();
+    let buckets = h.buckets();
+    if let Some(last) = buckets.iter().rposition(|&c| c > 0) {
+        let mut acc = 0u64;
+        for (i, &c) in buckets.iter().enumerate().take(last + 1) {
+            acc += c;
+            out.push(Sample::counter(format!("{name}_bucket"), acc as f64)
+                .label("le", (1u64 << (i + 1)).to_string()));
+        }
+    }
+    out.push(Sample::counter(format!("{name}_bucket"), h.count() as f64)
+        .label("le", "+Inf"));
+    out.push(Sample::counter(format!("{name}_sum"),
+                             h.mean_us() * h.count() as f64));
+    out.push(Sample::counter(format!("{name}_count"), h.count() as f64));
+    out
+}
+
+/// The engine's observability bundle: one flight-recorder journal plus the
+/// retention histograms, constructed once per engine.
+#[derive(Debug)]
+pub struct EngineObs {
+    pub journal: TraceJournal,
+    pub retention: RetentionObs,
+}
+
+impl EngineObs {
+    pub fn new(trace_capacity: usize, trace_enabled: bool, layers: usize,
+               heads: usize) -> EngineObs {
+        EngineObs {
+            journal: TraceJournal::new(trace_capacity, trace_enabled),
+            retention: RetentionObs::new(layers, heads),
+        }
+    }
+
+    /// The obs plane's own samples (journal health + host-gap + retention
+    /// totals); the engine appends these to `EngineMetrics::samples()`.
+    pub fn samples(&self) -> Vec<Sample> {
+        vec![
+            Sample::gauge("trimkv_trace_events", self.journal.len() as f64),
+            Sample::counter("trimkv_trace_dropped_total",
+                            self.journal.dropped() as f64),
+            Sample::counter("trimkv_host_gap_ticks_total",
+                            self.journal.host_gap_ticks as f64),
+            Sample::counter("trimkv_host_gap_us_total",
+                            self.journal.host_gap_us as f64),
+            Sample::counter("trimkv_retention_evictions_total",
+                            self.retention.total_evictions() as f64),
+        ]
+    }
+}
+
+/// Strict line-shape check shared by the obs, engine and server exposition
+/// tests: every line must split into `name{...}` and a float.
+#[cfg(test)]
+pub fn assert_prometheus_parses(text: &str) {
+    for line in text.lines() {
+        let (name, value) = line.rsplit_once(' ')
+            .unwrap_or_else(|| panic!("unsplittable line: {line}"));
+        assert!(!name.is_empty(), "empty name in: {line}");
+        assert!(!name.contains(' ') || name.contains('{'),
+                "malformed name in: {line}");
+        assert!(value.parse::<f64>().is_ok() || value == "+Inf",
+                "unparseable value in: {line}");
+        if let Some(open) = name.find('{') {
+            assert!(name.ends_with('}'), "unclosed labels: {line}");
+            let inner = &name[open + 1..name.len() - 1];
+            for pair in inner.split(',') {
+                let (k, v) = pair.split_once('=').unwrap();
+                assert!(!k.is_empty() && v.starts_with('"')
+                            && v.ends_with('"'),
+                        "bad label `{pair}` in: {line}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_names_labels_values() {
+        let samples = vec![
+            Sample::counter("trimkv_tokens_total", 42.0),
+            Sample::gauge("trimkv_step_us", 1.5)
+                .label("quantile", "0.5"),
+        ];
+        let text = render_prometheus(&samples);
+        assert_eq!(text, "trimkv_tokens_total 42\n\
+                          trimkv_step_us{quantile=\"0.5\"} 1.5\n");
+        assert_prometheus_parses(&text);
+    }
+
+    #[test]
+    fn summary_samples_skip_quantiles_when_empty() {
+        let empty = StreamSummary::new();
+        let s = summary_samples("trimkv_tbt_us", &empty);
+        assert_eq!(s.len(), 2, "only _sum and _count for an empty series");
+        assert!(s.iter().all(|x| x.value == 0.0));
+        let mut pop = StreamSummary::new();
+        pop.push(5.0);
+        pop.push(7.0);
+        let s = summary_samples("trimkv_tbt_us", &pop);
+        assert_eq!(s.len(), 5);
+        let count = s.iter().find(|x| x.name.ends_with("_count")).unwrap();
+        assert_eq!(count.value, 2.0);
+        let sum = s.iter().find(|x| x.name.ends_with("_sum")).unwrap();
+        assert!((sum.value - 12.0).abs() < 1e-9);
+        assert_prometheus_parses(&render_prometheus(&s));
+    }
+
+    #[test]
+    fn histogram_samples_are_cumulative_with_inf_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(3.0); // bucket 1 ([2,4))
+        h.record_us(3.5);
+        h.record_us(100.0); // bucket 6 ([64,128))
+        let s = histogram_samples("trimkv_ttft_us", &h);
+        let buckets: Vec<&Sample> =
+            s.iter().filter(|x| x.name.ends_with("_bucket")).collect();
+        // trimmed at the last occupied bucket, plus +Inf
+        assert_eq!(buckets.len(), 8);
+        let values: Vec<f64> = buckets.iter().map(|x| x.value).collect();
+        assert!(values.windows(2).all(|w| w[0] <= w[1]), "not cumulative");
+        assert_eq!(buckets.last().unwrap().labels[0].1, "+Inf");
+        assert_eq!(buckets.last().unwrap().value, 3.0);
+        assert_prometheus_parses(&render_prometheus(&s));
+        // empty histogram: just the +Inf bucket and zero _sum/_count
+        let s = histogram_samples("x", &LatencyHistogram::new());
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn engine_obs_samples_cover_journal_and_retention() {
+        let mut obs = EngineObs::new(8, true, 2, 2);
+        let t = obs.journal.now_us();
+        obs.journal.record(0, Phase::Execute, "decode", 1, t);
+        obs.retention.record_eviction(0, 1, -0.1, 3);
+        let s = obs.samples();
+        let get = |n: &str| s.iter().find(|x| x.name == n).unwrap().value;
+        assert_eq!(get("trimkv_trace_events"), 1.0);
+        assert_eq!(get("trimkv_host_gap_ticks_total"), 0.0);
+        assert_eq!(get("trimkv_retention_evictions_total"), 1.0);
+        assert_prometheus_parses(&render_prometheus(&s));
+    }
+}

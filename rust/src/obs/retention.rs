@@ -1,0 +1,243 @@
+//! Retention-score introspection: bounded per-(layer, head) histograms of
+//! the retention score a token carried *at eviction time* and of how old it
+//! was when it died.
+//!
+//! This is the paper's interpretability claim made observable from live
+//! serving data: heads that evict only *young* tokens are keeping their old
+//! ones (attention-sink behaviour), heads that evict *old, low-score*
+//! tokens behave like a sliding window, and heads that evict tokens whose
+//! scores are still high are doing selective/gist-style retention where
+//! budget pressure — not the gate — forces the kill.  The hook sits in the
+//! engine's `postprocess_lane` eviction loop, so every policy (not just
+//! trim-kv) produces a comparable report.
+//!
+//! Memory is fixed: `layers * heads` histograms of
+//! `SCORE_BUCKETS + AGE_BUCKETS` u64 buckets, regardless of uptime.
+
+use crate::util::benchkit::Table;
+
+/// Linear buckets over `beta = exp(log_beta)` in [0, 1).
+pub const SCORE_BUCKETS: usize = 16;
+/// Log2 buckets over eviction age; bucket i covers [2^i, 2^(i+1)) ticks.
+pub const AGE_BUCKETS: usize = 16;
+
+/// One (layer, head)'s eviction histograms.
+#[derive(Debug, Clone)]
+pub struct HeadHist {
+    pub score: [u64; SCORE_BUCKETS],
+    pub age: [u64; AGE_BUCKETS],
+    pub count: u64,
+    score_sum: f64,
+    age_sum: f64,
+}
+
+impl Default for HeadHist {
+    fn default() -> Self {
+        HeadHist {
+            score: [0; SCORE_BUCKETS],
+            age: [0; AGE_BUCKETS],
+            count: 0,
+            score_sum: 0.0,
+            age_sum: 0.0,
+        }
+    }
+}
+
+impl HeadHist {
+    /// Mean retention score (beta) across this head's evictions.
+    pub fn mean_beta(&self) -> Option<f64> {
+        if self.count == 0 { None } else { Some(self.score_sum / self.count as f64) }
+    }
+
+    pub fn mean_age(&self) -> Option<f64> {
+        if self.count == 0 { None } else { Some(self.age_sum / self.count as f64) }
+    }
+
+    /// Approximate age percentile from the log2 buckets (upper bound).
+    pub fn age_pct(&self, p: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.age.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Some(1u64 << (i + 1));
+            }
+        }
+        Some(1u64 << AGE_BUCKETS)
+    }
+
+    /// Heuristic tag recovering the paper's head-role taxonomy from the
+    /// eviction signature alone.  Deliberately coarse — it labels the
+    /// report, it does not drive any decision.
+    pub fn signature(&self) -> &'static str {
+        let (Some(beta), Some(p50)) = (self.mean_beta(), self.age_pct(50.0))
+        else {
+            return "-";
+        };
+        if p50 <= 4 {
+            // evicted tokens die young: old tokens are being retained
+            "sink-like"
+        } else if beta < 0.5 {
+            // old, low-score victims: gate decay tracks recency
+            "sliding-window"
+        } else if beta >= 0.75 {
+            // victims still scored high: budget pressure, selective churn
+            "gist/selective"
+        } else {
+            "mixed"
+        }
+    }
+}
+
+/// Per-(layer, head) eviction histograms for a whole model.
+#[derive(Debug)]
+pub struct RetentionObs {
+    layers: usize,
+    heads: usize,
+    hists: Vec<HeadHist>,
+}
+
+impl RetentionObs {
+    pub fn new(layers: usize, heads: usize) -> RetentionObs {
+        RetentionObs {
+            layers,
+            heads,
+            hists: vec![HeadHist::default(); layers * heads],
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head(&self, layer: usize, head: usize) -> &HeadHist {
+        &self.hists[layer * self.heads + head]
+    }
+
+    pub fn total_evictions(&self) -> u64 {
+        self.hists.iter().map(|h| h.count).sum()
+    }
+
+    /// Record one eviction: the victim's gate output (`log_beta`) and its
+    /// age (current position minus the victim's write position, >= 0).
+    pub fn record_eviction(&mut self, layer: usize, head: usize,
+                           log_beta: f32, age: i64) {
+        let h = &mut self.hists[layer * self.heads + head];
+        let beta = (log_beta as f64).exp().clamp(0.0, 1.0);
+        let si = ((beta * SCORE_BUCKETS as f64) as usize).min(SCORE_BUCKETS - 1);
+        h.score[si] += 1;
+        let age = age.max(0) as u64;
+        let ai = if age < 2 {
+            0
+        } else {
+            ((age as f64).log2() as usize).min(AGE_BUCKETS - 1)
+        };
+        h.age[ai] += 1;
+        h.count += 1;
+        h.score_sum += beta;
+        h.age_sum += age as f64;
+    }
+
+    /// Human-readable per-head report (the `trimkv inspect --retention`
+    /// payload): evictions, mean retention score, age percentiles, and the
+    /// heuristic sink / sliding-window / gist signature per (layer, head).
+    pub fn report(&self) -> String {
+        let mut t = Table::new(&["layer", "head", "evicted", "mean_beta",
+                                 "age_p50", "age_p90", "signature"]);
+        for li in 0..self.layers {
+            for hi in 0..self.heads {
+                let h = self.head(li, hi);
+                let fmt_opt = |v: Option<u64>| {
+                    v.map(|x| x.to_string()).unwrap_or_else(|| "-".into())
+                };
+                t.row(vec![
+                    li.to_string(),
+                    hi.to_string(),
+                    h.count.to_string(),
+                    h.mean_beta()
+                        .map(|b| format!("{b:.3}"))
+                        .unwrap_or_else(|| "-".into()),
+                    fmt_opt(h.age_pct(50.0)),
+                    fmt_opt(h.age_pct(90.0)),
+                    h.signature().to_string(),
+                ]);
+            }
+        }
+        format!("retention at eviction ({} evictions)\n{}",
+                self.total_evictions(), t.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_score_and_age() {
+        let mut r = RetentionObs::new(2, 2);
+        // beta ~= 0.95 -> top score bucket; age 10 -> log2 bucket 3
+        r.record_eviction(1, 0, (0.95f32).ln(), 10);
+        let h = r.head(1, 0);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.score[15], 1);
+        assert_eq!(h.age[3], 1);
+        assert!((h.mean_beta().unwrap() - 0.95).abs() < 1e-3);
+        assert_eq!(h.mean_age().unwrap(), 10.0);
+        // untouched heads stay empty
+        assert_eq!(r.head(0, 0).count, 0);
+        assert_eq!(r.total_evictions(), 1);
+    }
+
+    #[test]
+    fn edge_ages_and_scores_clamp_into_range() {
+        let mut r = RetentionObs::new(1, 1);
+        r.record_eviction(0, 0, 0.0, 0); // beta = 1.0 clamps to top bucket
+        r.record_eviction(0, 0, -100.0, -5); // beta ~ 0, negative age -> 0
+        r.record_eviction(0, 0, 0.0, i64::MAX); // huge age -> last bucket
+        let h = r.head(0, 0);
+        assert_eq!(h.count, 3);
+        assert_eq!(h.score[SCORE_BUCKETS - 1], 2);
+        assert_eq!(h.score[0], 1);
+        assert_eq!(h.age[0], 2);
+        assert_eq!(h.age[AGE_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn signatures_follow_the_heuristics() {
+        let mut r = RetentionObs::new(1, 4);
+        assert_eq!(r.head(0, 3).signature(), "-");
+        // head 0: young victims -> sink-like
+        for _ in 0..10 {
+            r.record_eviction(0, 0, (0.6f32).ln(), 2);
+        }
+        assert_eq!(r.head(0, 0).signature(), "sink-like");
+        // head 1: old low-score victims -> sliding-window
+        for _ in 0..10 {
+            r.record_eviction(0, 1, (0.2f32).ln(), 100);
+        }
+        assert_eq!(r.head(0, 1).signature(), "sliding-window");
+        // head 2: old high-score victims -> gist/selective
+        for _ in 0..10 {
+            r.record_eviction(0, 2, (0.9f32).ln(), 100);
+        }
+        assert_eq!(r.head(0, 2).signature(), "gist/selective");
+    }
+
+    #[test]
+    fn report_renders_every_head() {
+        let mut r = RetentionObs::new(2, 2);
+        r.record_eviction(0, 1, (0.8f32).ln(), 7);
+        let rep = r.report();
+        assert!(rep.contains("signature"));
+        // header + rule + 4 head rows + leading summary line
+        assert_eq!(rep.trim_end().lines().count(), 7);
+        assert!(rep.contains("retention at eviction (1 evictions)"));
+    }
+}

@@ -1,0 +1,255 @@
+//! Tick flight recorder: a bounded ring-buffer journal of `step_tick` phase
+//! spans, exportable as Chrome-trace (`chrome://tracing` / Perfetto) JSON.
+//!
+//! One [`TraceEvent`] per phase per tick, O(1) memory per event and a hard
+//! capacity cap: once the ring is full the oldest events are overwritten
+//! (and counted in `dropped`), so the journal can run forever in serving.
+//! Phase spans chain through [`TraceJournal::record`] — the returned end
+//! timestamp is the next phase's start — which makes the exported spans
+//! monotone and non-overlapping by construction.
+//!
+//! The journal also owns the device-idle accounting ROADMAP item 2 needs:
+//! [`TraceJournal::note_host_gap`] counts ticks where runnable work existed
+//! but no step executed.  The current engine loop is strictly serial (a
+//! runnable tick always executes), so both gap counters are structurally
+//! zero today; they arm the moment pipelined execution lands.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One `step_tick` phase (plus the session-swap step around it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Plan,
+    Assemble,
+    Execute,
+    Postprocess,
+    Swap,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Plan => "plan",
+            Phase::Assemble => "assemble",
+            Phase::Execute => "execute",
+            Phase::Postprocess => "postprocess",
+            Phase::Swap => "swap",
+        }
+    }
+}
+
+/// One recorded phase span.  `Copy` and fixed-size: journal memory is
+/// exactly `capacity * size_of::<TraceEvent>()` no matter the uptime.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// span start, microseconds since journal creation
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tick: u64,
+    pub phase: Phase,
+    /// plan-kind label for the tick ("decode" | "chunk" | "mixed" | "swap")
+    pub kind: &'static str,
+    /// active lanes in the tick's plan (lanes moved, for a swap span)
+    pub lanes: u32,
+}
+
+/// Bounded ring-buffer trace journal (see module docs).
+#[derive(Debug)]
+pub struct TraceJournal {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// next write index; once the ring is full this is also the oldest event
+    head: usize,
+    dropped: u64,
+    epoch: Instant,
+    enabled: bool,
+    /// ticks where runnable work existed but no step executed (serial loop:
+    /// always 0; pipelined execution will make this the device-idle metric)
+    pub host_gap_ticks: u64,
+    /// host-side microseconds accumulated across those gap ticks
+    pub host_gap_us: u64,
+}
+
+impl TraceJournal {
+    pub fn new(cap: usize, enabled: bool) -> TraceJournal {
+        TraceJournal {
+            buf: Vec::with_capacity(if enabled { cap.min(1024) } else { 0 }),
+            cap,
+            head: 0,
+            dropped: 0,
+            epoch: Instant::now(),
+            enabled,
+            host_gap_ticks: 0,
+            host_gap_us: 0,
+        }
+    }
+
+    /// Microseconds since the journal epoch: the timebase every span uses.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Close the span that started at `start_us` (from [`Self::now_us`] or a
+    /// previous `record` return) and return its end timestamp — feed that
+    /// into the next phase's `record` so spans never overlap.
+    pub fn record(&mut self, tick: u64, phase: Phase, kind: &'static str,
+                  lanes: u32, start_us: u64) -> u64 {
+        let end = self.now_us();
+        if self.enabled && self.cap > 0 {
+            let ev = TraceEvent {
+                ts_us: start_us,
+                dur_us: end.saturating_sub(start_us),
+                tick,
+                phase,
+                kind,
+                lanes,
+            };
+            if self.buf.len() < self.cap {
+                self.buf.push(ev);
+            } else {
+                self.buf[self.head] = ev;
+                self.head = (self.head + 1) % self.cap;
+                self.dropped += 1;
+            }
+        }
+        end
+    }
+
+    /// Device-idle accounting: a tick that had runnable work but executed
+    /// no step is a host gap.  The serial loop never produces one.
+    pub fn note_host_gap(&mut self, runnable: bool, executed: bool,
+                         gap_us: u64) {
+        if runnable && !executed {
+            self.host_gap_ticks += 1;
+            self.host_gap_us += gap_us;
+        }
+    }
+
+    /// Retained events in chronological order (oldest first).
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        let split = if self.buf.len() == self.cap { self.head } else { 0 };
+        let (older, newer) = self.buf.split_at(split);
+        newer.iter().chain(older.iter())
+    }
+
+    /// Export the retained spans as a Chrome-trace JSON object
+    /// (`{"traceEvents": [...]}`), loadable in chrome://tracing / Perfetto.
+    pub fn chrome_trace(&self) -> Json {
+        let events: Vec<Json> = self
+            .events()
+            .map(|e| {
+                Json::obj(vec![
+                    ("name", Json::str(e.phase.name())),
+                    ("cat", Json::str(e.kind)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(e.ts_us as f64)),
+                    ("dur", Json::num(e.dur_us as f64)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(1.0)),
+                    ("args", Json::obj(vec![
+                        ("tick", Json::num(e.tick as f64)),
+                        ("lanes", Json::num(e.lanes as f64)),
+                    ])),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_never_exceeds_cap_and_counts_drops() {
+        let mut j = TraceJournal::new(8, true);
+        let mut t = j.now_us();
+        for tick in 0..100u64 {
+            t = j.record(tick, Phase::Execute, "decode", 1, t);
+        }
+        assert_eq!(j.len(), 8);
+        assert_eq!(j.capacity(), 8);
+        assert_eq!(j.dropped(), 92);
+        // chronological iteration yields the newest 8 ticks in order
+        let ticks: Vec<u64> = j.events().map(|e| e.tick).collect();
+        assert_eq!(ticks, (92..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn disabled_journal_records_nothing_but_still_times() {
+        let mut j = TraceJournal::new(8, false);
+        let t0 = j.now_us();
+        let t1 = j.record(0, Phase::Plan, "decode", 1, t0);
+        assert!(t1 >= t0);
+        assert!(j.is_empty());
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn chained_records_are_monotone_and_non_overlapping() {
+        let mut j = TraceJournal::new(64, true);
+        let mut t = j.now_us();
+        for tick in 0..4u64 {
+            for ph in [Phase::Plan, Phase::Assemble, Phase::Execute,
+                       Phase::Postprocess] {
+                t = j.record(tick, ph, "mixed", 2, t);
+            }
+        }
+        let evs: Vec<&TraceEvent> = j.events().collect();
+        assert_eq!(evs.len(), 16);
+        for w in evs.windows(2) {
+            assert!(w[0].ts_us + w[0].dur_us <= w[1].ts_us,
+                    "spans overlap: {:?} then {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_span_fields() {
+        let mut j = TraceJournal::new(16, true);
+        let t = j.now_us();
+        j.record(7, Phase::Execute, "chunk", 3, t);
+        let text = j.chrome_trace().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].str_field("name").unwrap(), "execute");
+        assert_eq!(evs[0].str_field("cat").unwrap(), "chunk");
+        assert_eq!(evs[0].str_field("ph").unwrap(), "X");
+        assert_eq!(evs[0].path("args.tick").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn host_gap_counts_only_runnable_unexecuted_ticks() {
+        let mut j = TraceJournal::new(4, true);
+        j.note_host_gap(true, true, 10); // executed: not a gap
+        j.note_host_gap(false, false, 10); // idle: not a gap
+        assert_eq!(j.host_gap_ticks, 0);
+        j.note_host_gap(true, false, 10);
+        assert_eq!(j.host_gap_ticks, 1);
+        assert_eq!(j.host_gap_us, 10);
+    }
+}

@@ -9,14 +9,12 @@
 //! stats cross the device boundary each step — the paper's O(M) decode).
 //! A pure-decode plan dispatches to the decode graph, a pure-chunk plan to
 //! the prefill graph, and a mixed plan to the fused mixed-step graph;
-//! legacy artifacts without a (retrieval-capable) mixed graph degrade to
-//! one decode-graph + one prefill-graph call behind the same `execute`
-//! entrypoint.  Cache residency is owned by [`DeviceKvCache`]: per-lane
-//! buffer pairs for `cache_layout = "per_lane"` artifacts (O(lane) session
-//! swap) or a single monolithic pair with a staged host shadow for legacy
-//! artifacts.  `MockBackend` is a deterministic stand-in used by
-//! unit/property tests so the scheduler, cache manager and policies are
-//! testable without artifacts.
+//! artifacts exported without any mixed graph degrade to one decode-graph
+//! + one prefill-graph call behind the same `execute` entrypoint.  Cache
+//! residency is owned by [`DeviceKvCache`]: per-lane buffer pairs (O(lane)
+//! session swap) — the only supported `cache_layout`.  `MockBackend` is a
+//! deterministic stand-in used by unit/property tests so the scheduler,
+//! cache manager and policies are testable without artifacts.
 
 use anyhow::{ensure, Context, Result};
 
@@ -204,9 +202,7 @@ pub trait ModelBackend: Send {
     /// untouched.  Downloads happen before uploads, so a lane may appear in
     /// both — preempting it and installing another session in one step.
     ///
-    /// Cost contract: swapping N lanes moves O(N * lane_kv_len()) elements
-    /// on per-lane residency; a monolithic fallback may stage through one
-    /// full-cache round-trip per *call* (never per lane).
+    /// Cost contract: swapping N lanes moves O(N * lane_kv_len()) elements.
     fn swap_lanes(&mut self, out: &[usize], inn: &[(usize, &LaneKv)])
         -> Result<Vec<LaneKv>>;
 
@@ -232,10 +228,6 @@ pub struct PjrtBackend {
     /// fused mixed-step graph; `None` on artifacts exported before the
     /// `mixed` kind — mixed plans then degrade to per-kind graph calls
     mixed_exe: Option<xla::PjRtLoadedExecutable>,
-    /// the mixed graph takes the retrieval inject operands (exports since
-    /// the unified step-plan API); false on PR-3-era mixed artifacts, whose
-    /// inject-carrying mixed plans degrade to per-kind calls
-    mixed_inject: bool,
     weight_bufs: Vec<xla::PjRtBuffer>, // params ++ gates, device-resident
     cache: DeviceKvCache,
     dims: ModelDims,
@@ -272,18 +264,23 @@ impl PjrtBackend {
             None
         };
         // the fused mixed-step graph is optional (absent on legacy
-        // exports); like prefill it must share the decode graph's layout
+        // exports); like prefill it must share the decode graph's layout.
+        // When present it must carry the retrieval inject operands — the
+        // pre-unified-API mixed exports without them are no longer loaded.
         let mixed_spec = meta.artifacts.iter().find(|a| {
             a.kind == "mixed" && a.b == b && a.m == m
                 && a.gate_arch == gate_arch
                 && a.cache_layout == dec.cache_layout
         });
-        let (mixed_exe, mixed_inject) = match mixed_spec {
-            Some(mx) if with_prefill => (
-                Some(compile_hlo(&client, &meta.dir.join(&mx.file))?),
-                mx.has_inject(),
-            ),
-            _ => (None, false),
+        let mixed_exe = match mixed_spec {
+            Some(mx) if with_prefill => {
+                ensure!(mx.has_inject(),
+                        "mixed artifact {} lacks inject operands; re-export \
+                         with python -m compile.aot",
+                        mx.file);
+                Some(compile_hlo(&client, &meta.dir.join(&mx.file))?)
+            }
+            _ => None,
         };
 
         // upload weights once, in the flat order the graphs expect
@@ -313,14 +310,12 @@ impl PjrtBackend {
         let dims = meta.dims;
         let shape = CacheShape { layers: dims.layers, batch: b, hkv: dims.hkv,
                                  slots: m, dh: dims.dh };
-        let cache = DeviceKvCache::new_zeroed(&client, shape,
-                                             dec.cache_layout == "per_lane")?;
+        let cache = DeviceKvCache::new_zeroed(&client, shape)?;
         Ok(PjrtBackend {
             client,
             decode_exe,
             prefill_exe,
             mixed_exe,
-            mixed_inject,
             weight_bufs,
             cache,
             dims,
@@ -447,10 +442,9 @@ impl PjrtBackend {
     }
 
     /// Mixed dispatch through the fused graph (one execution for decode AND
-    /// chunk lanes).  `with_inject` appends the retrieval operands (zeros
-    /// when the plan carries none) — only on inject-capable exports.
-    fn exec_mixed(&mut self, plan: &StepPlan, with_inject: bool)
-        -> Result<StepOut> {
+    /// chunk lanes).  The retrieval inject operands are always appended —
+    /// zeros when the plan carries none.
+    fn exec_mixed(&mut self, plan: &StepPlan) -> Result<StepOut> {
         let (l, b, h) = self.lbh();
         let (m, c, dh) = (self.m, self.c, self.dims.dh);
         let mut mode = vec![0.0f32; b];
@@ -468,16 +462,10 @@ impl PjrtBackend {
         let zero_f = vec![0.0f32; l * b * h];
         let zero_i = vec![0i32; l * b * h];
         let zero_k = vec![0.0f32; l * b * h * dh];
-        let inject_bufs = if with_inject {
-            Some((
-                self.upload_f32(plan.inject_flag.unwrap_or(&zero_f), &[l, b, h])?,
-                self.upload_i32(plan.inject_slot.unwrap_or(&zero_i), &[l, b, h])?,
-                self.upload_f32(plan.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?,
-                self.upload_f32(plan.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?,
-            ))
-        } else {
-            None
-        };
+        let if_b = self.upload_f32(plan.inject_flag.unwrap_or(&zero_f), &[l, b, h])?;
+        let is_b = self.upload_i32(plan.inject_slot.unwrap_or(&zero_i), &[l, b, h])?;
+        let ik_b = self.upload_f32(plan.inject_k.unwrap_or(&zero_k), &[l, b, h, dh])?;
+        let iv_b = self.upload_f32(plan.inject_v.unwrap_or(&zero_k), &[l, b, h, dh])?;
 
         let exe = self
             .mixed_exe
@@ -487,10 +475,7 @@ impl PjrtBackend {
         let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
         args.extend([&tok_b, &pos_b, &mask_b, &mode_b]);
         args.extend(self.cache.arg_refs());
-        args.extend([&valid_b, &ws_b]);
-        if let Some((if_b, is_b, ik_b, iv_b)) = &inject_bufs {
-            args.extend([if_b, is_b, ik_b, iv_b]);
-        }
+        args.extend([&valid_b, &ws_b, &if_b, &is_b, &ik_b, &iv_b]);
         let mut outs = exe.execute_b(&args)?;
         drop(args);
         let mut outs = outs.swap_remove(0);
@@ -514,12 +499,11 @@ impl PjrtBackend {
         Ok(out)
     }
 
-    /// Degraded mixed dispatch for legacy artifacts (no mixed graph, or a
-    /// PR-3-era mixed graph without inject operands while the plan carries
-    /// injections): one decode-graph call advances the decode lanes (chunk
-    /// lanes idled behind trash writes), one prefill-graph call feeds the
-    /// chunk lanes (decode lanes masked out), and the outputs merge into
-    /// the fused cols=C layout.  Lane semantics are identical to the fused
+    /// Degraded mixed dispatch for artifacts exported without any mixed
+    /// graph: one decode-graph call advances the decode lanes (chunk lanes
+    /// idled behind trash writes), one prefill-graph call feeds the chunk
+    /// lanes (decode lanes masked out), and the outputs merge into the
+    /// fused cols=C layout.  Lane semantics are identical to the fused
     /// graph — lanes only ever attend to their own rows — at the price of
     /// two graph executions for the one plan.
     fn exec_split(&mut self, plan: &StepPlan) -> Result<StepOut> {
@@ -677,10 +661,8 @@ impl ModelBackend for PjrtBackend {
                                                  plan.in_mask, plan.valid,
                                                  plan.write_slots),
             PlanKind::Mixed => {
-                let injectable = self.mixed_inject || plan.inject_flag.is_none();
-                if self.mixed_exe.is_some() && injectable {
-                    let with_inject = self.mixed_inject;
-                    self.exec_mixed(plan, with_inject)
+                if self.mixed_exe.is_some() {
+                    self.exec_mixed(plan)
                 } else {
                     self.exec_split(plan)
                 }

@@ -2,20 +2,15 @@
 //! pieces of them cross the host/device boundary.
 //!
 //! The serving graphs attend over `[L, B, Hkv, M, dh]` K/V slot arenas.  A
-//! session swap moves exactly one lane's `[L, Hkv, M, dh]` slice of them —
-//! and how much *actually* crosses the boundary depends on residency:
-//!
-//!   * **per-lane** artifacts take (and return) one kc/vc buffer *per batch
-//!     lane*, so [`DeviceKvCache`] holds B independent buffer pairs and a
-//!     swap touches only the buffers of the swapped lanes — O(lane), the
-//!     cost model the paper's memory-bounded serving story needs.
-//!   * **monolithic** artifacts (legacy single-buffer graphs, and PJRT CPU
-//!     which has no partial-buffer reads) fall back to a *staged host
-//!     shadow*: the whole cache is downloaded once per batched swap call,
-//!     every requested lane is gathered/scattered against that staging
-//!     buffer, and the whole cache is uploaded once — O(batch) per call,
-//!     but amortized over all lanes swapped in the call instead of paid per
-//!     lane as the old `download_lane_kv`/`upload_lane_kv` pair did.
+//! session swap moves exactly one lane's `[L, Hkv, M, dh]` slice of them.
+//! Artifacts take (and return) one kc/vc buffer *per batch lane*, so
+//! [`DeviceKvCache`] holds B independent buffer pairs and a swap touches
+//! only the buffers of the swapped lanes — O(lane), the cost model the
+//! paper's memory-bounded serving story needs.  (The legacy monolithic
+//! single-buffer residency and its staged host-shadow swap fallback were
+//! removed at the end of their deprecation window; `gather_lane` /
+//! `scatter_lane` survive as the flat-layout helpers the golden harness
+//! uses to expand per-lane goldens.)
 //!
 //! [`HostLaneArena`] is the host-memory twin used by `MockBackend`: the same
 //! per-lane layout and the same batched-swap semantics, plus exact transfer
@@ -153,7 +148,7 @@ impl HostLaneArena {
 // Device residency manager (PjrtBackend storage)
 // ---------------------------------------------------------------------------
 
-/// Shape of the device cache, shared by both residency modes.
+/// Shape of the device cache.
 #[derive(Debug, Clone, Copy)]
 pub struct CacheShape {
     pub layers: usize,
@@ -171,15 +166,6 @@ impl CacheShape {
 
     fn lane_dims(&self) -> [usize; 4] {
         [self.layers, self.hkv, self.slots, self.dh]
-    }
-
-    fn full_dims(&self) -> [usize; 5] {
-        [self.layers, self.batch, self.hkv, self.slots, self.dh]
-    }
-
-    /// Per-lane stride (Hkv * M * dh) inside the flat monolithic layout.
-    fn stride(&self) -> usize {
-        self.hkv * self.slots * self.dh
     }
 }
 
@@ -206,17 +192,12 @@ pub fn scatter_lane(cache: &mut [f32], lane: usize, layers: usize,
     }
 }
 
-enum Residency {
-    /// One device buffer pair per batch lane, each `[L, Hkv, M, dh]`.
-    PerLane { kc: Vec<xla::PjRtBuffer>, vc: Vec<xla::PjRtBuffer> },
-    /// Single `[L, B, Hkv, M, dh]` pair (legacy artifacts).
-    Monolithic { kc: xla::PjRtBuffer, vc: xla::PjRtBuffer },
-}
-
-/// Owner of the device-resident K/V arenas for `PjrtBackend`.
+/// Owner of the device-resident K/V arenas for `PjrtBackend`: one device
+/// buffer pair per batch lane, each `[L, Hkv, M, dh]`.
 pub struct DeviceKvCache {
     shape: CacheShape,
-    res: Residency,
+    kc: Vec<xla::PjRtBuffer>,
+    vc: Vec<xla::PjRtBuffer>,
     pub traffic: SwapTraffic,
 }
 
@@ -224,69 +205,33 @@ fn to_host(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
     Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
 }
 
-/// One-shot guard for the monolithic-fallback deprecation notice.
-static MONOLITHIC_DEPRECATION: std::sync::Once = std::sync::Once::new();
-
 impl DeviceKvCache {
-    /// Allocate zeroed device arenas in the residency mode the artifact's
-    /// `cache_layout` asks for (`per_lane` | `monolithic`).
-    pub fn new_zeroed(client: &xla::PjRtClient, shape: CacheShape,
-                      per_lane: bool) -> Result<DeviceKvCache> {
-        if !per_lane {
-            // once per process, not per engine/reset: eval sweeps rebuild
-            // caches constantly and the operator only needs telling once
-            MONOLITHIC_DEPRECATION.call_once(|| {
-                eprintln!(
-                    "[trimkv] WARNING: artifact uses the monolithic \
-                     cache_layout; the staged host-shadow swap fallback is \
-                     DEPRECATED and scheduled for removal (see README \
-                     \"Deprecation window\"). Re-export with `python -m \
-                     compile.aot` to get per-lane residency (O(lane) \
-                     session swaps) plus the inject-capable mixed graphs."
-                );
-            });
+    /// Allocate zeroed per-lane device arenas.
+    pub fn new_zeroed(client: &xla::PjRtClient, shape: CacheShape)
+        -> Result<DeviceKvCache> {
+        let zeros = vec![0.0f32; shape.lane_len()];
+        let dims = shape.lane_dims();
+        let mut kc = Vec::with_capacity(shape.batch);
+        let mut vc = Vec::with_capacity(shape.batch);
+        for _ in 0..shape.batch {
+            kc.push(client.buffer_from_host_buffer(&zeros, &dims, None)?);
+            vc.push(client.buffer_from_host_buffer(&zeros, &dims, None)?);
         }
-        let res = if per_lane {
-            let zeros = vec![0.0f32; shape.lane_len()];
-            let dims = shape.lane_dims();
-            let mut kc = Vec::with_capacity(shape.batch);
-            let mut vc = Vec::with_capacity(shape.batch);
-            for _ in 0..shape.batch {
-                kc.push(client.buffer_from_host_buffer(&zeros, &dims, None)?);
-                vc.push(client.buffer_from_host_buffer(&zeros, &dims, None)?);
-            }
-            Residency::PerLane { kc, vc }
-        } else {
-            let dims = shape.full_dims();
-            let zeros = vec![0.0f32; dims.iter().product()];
-            Residency::Monolithic {
-                kc: client.buffer_from_host_buffer(&zeros, &dims, None)?,
-                vc: client.buffer_from_host_buffer(&zeros, &dims, None)?,
-            }
-        };
-        Ok(DeviceKvCache { shape, res, traffic: SwapTraffic::default() })
-    }
-
-    pub fn per_lane(&self) -> bool {
-        matches!(self.res, Residency::PerLane { .. })
+        Ok(DeviceKvCache { shape, kc, vc, traffic: SwapTraffic::default() })
     }
 
     pub fn shape(&self) -> CacheShape {
         self.shape
     }
 
-    /// Number of cache operands the graph takes (and returns): 2 per lane
-    /// in per-lane mode, 2 in monolithic mode.
+    /// Number of cache operands the graph takes (and returns): 2 per lane.
     pub fn num_operands(&self) -> usize {
-        if self.per_lane() { 2 * self.shape.batch } else { 2 }
+        2 * self.shape.batch
     }
 
     /// Cache operands in graph order: all kc buffers, then all vc buffers.
     pub fn arg_refs(&self) -> Vec<&xla::PjRtBuffer> {
-        match &self.res {
-            Residency::PerLane { kc, vc } => kc.iter().chain(vc.iter()).collect(),
-            Residency::Monolithic { kc, vc } => vec![kc, vc],
-        }
+        self.kc.iter().chain(self.vc.iter()).collect()
     }
 
     /// Adopt the updated cache buffers a graph execution returned (same
@@ -296,23 +241,12 @@ impl DeviceKvCache {
         ensure!(bufs.len() == self.num_operands(),
                 "graph returned {} cache buffers, expected {}", bufs.len(),
                 self.num_operands());
-        match &mut self.res {
-            Residency::PerLane { kc, vc } => {
-                let b = kc.len();
-                let mut it = bufs.into_iter();
-                for buf in kc.iter_mut() {
-                    *buf = it.next().expect("length checked");
-                }
-                for buf in vc.iter_mut() {
-                    *buf = it.next().expect("length checked");
-                }
-                debug_assert_eq!(b, vc.len());
-            }
-            Residency::Monolithic { kc, vc } => {
-                let mut it = bufs.into_iter();
-                *kc = it.next().expect("length checked");
-                *vc = it.next().expect("length checked");
-            }
+        let mut it = bufs.into_iter();
+        for buf in self.kc.iter_mut() {
+            *buf = it.next().expect("length checked");
+        }
+        for buf in self.vc.iter_mut() {
+            *buf = it.next().expect("length checked");
         }
         Ok(())
     }
@@ -320,18 +254,14 @@ impl DeviceKvCache {
     /// Re-zero the arenas (new evaluation run).
     pub fn reset(&mut self, client: &xla::PjRtClient) -> Result<()> {
         let traffic = self.traffic;
-        *self = DeviceKvCache::new_zeroed(client, self.shape, self.per_lane())?;
+        *self = DeviceKvCache::new_zeroed(client, self.shape)?;
         self.traffic = traffic;
         Ok(())
     }
 
     /// Batched lane swap (session preempt/restore).  Downloads every `out`
-    /// lane first, then uploads the `inn` slabs.
-    ///
-    /// Per-lane residency touches only the swapped lanes' buffers: O(lane)
-    /// per lane moved.  Monolithic residency stages through one full-cache
-    /// download + upload per *call* — O(batch) once, shared by all lanes in
-    /// the call (the traffic counters record that cost honestly).
+    /// lane first, then uploads the `inn` slabs, touching only the swapped
+    /// lanes' buffers: O(lane) per lane moved.
     pub fn swap_lanes(&mut self, client: &xla::PjRtClient, out: &[usize],
                       inn: &[(usize, &LaneKv)]) -> Result<Vec<LaneKv>> {
         let shape = self.shape;
@@ -339,67 +269,32 @@ impl DeviceKvCache {
         self.traffic.swap_calls += 1;
         self.traffic.lanes_out += out.len() as u64;
         self.traffic.lanes_in += inn.len() as u64;
-        match &mut self.res {
-            Residency::PerLane { kc, vc } => {
-                let mut downloaded = Vec::with_capacity(out.len());
-                for &lane in out {
-                    let kv = LaneKv { k: to_host(&kc[lane])?,
-                                      v: to_host(&vc[lane])? };
-                    self.traffic.elems_out += kv.elems() as u64;
-                    downloaded.push(kv);
-                }
-                // stage every upload before installing any: a mid-call
-                // allocation failure must leave the device cache exactly as
-                // it was (the engine keeps sessions parked on error)
-                let dims = shape.lane_dims();
-                let mut staged = Vec::with_capacity(inn.len());
-                for (lane, kv) in inn {
-                    staged.push((
-                        *lane,
-                        client.buffer_from_host_buffer(&kv.k, &dims, None)?,
-                        client.buffer_from_host_buffer(&kv.v, &dims, None)?,
-                        kv.elems() as u64,
-                    ));
-                }
-                for (lane, k_buf, v_buf, elems) in staged {
-                    kc[lane] = k_buf;
-                    vc[lane] = v_buf;
-                    self.traffic.elems_in += elems;
-                }
-                Ok(downloaded)
-            }
-            Residency::Monolithic { kc, vc } => {
-                // staged host shadow: one full round-trip per call, with all
-                // lane gathers/scatters applied against the staging copy
-                let mut k_host = to_host(kc)?;
-                let mut v_host = to_host(vc)?;
-                self.traffic.elems_out += (k_host.len() + v_host.len()) as u64;
-                let (l, b, stride) = (shape.layers, shape.batch, shape.stride());
-                let downloaded = out
-                    .iter()
-                    .map(|&lane| LaneKv {
-                        k: gather_lane(&k_host, lane, l, b, stride),
-                        v: gather_lane(&v_host, lane, l, b, stride),
-                    })
-                    .collect();
-                if !inn.is_empty() {
-                    for (lane, kv) in inn {
-                        scatter_lane(&mut k_host, *lane, l, b, stride, &kv.k);
-                        scatter_lane(&mut v_host, *lane, l, b, stride, &kv.v);
-                    }
-                    // stage both uploads, then install (atomic on error)
-                    let dims = shape.full_dims();
-                    let k_buf =
-                        client.buffer_from_host_buffer(&k_host, &dims, None)?;
-                    let v_buf =
-                        client.buffer_from_host_buffer(&v_host, &dims, None)?;
-                    *kc = k_buf;
-                    *vc = v_buf;
-                    self.traffic.elems_in += (k_host.len() + v_host.len()) as u64;
-                }
-                Ok(downloaded)
-            }
+        let mut downloaded = Vec::with_capacity(out.len());
+        for &lane in out {
+            let kv = LaneKv { k: to_host(&self.kc[lane])?,
+                              v: to_host(&self.vc[lane])? };
+            self.traffic.elems_out += kv.elems() as u64;
+            downloaded.push(kv);
         }
+        // stage every upload before installing any: a mid-call allocation
+        // failure must leave the device cache exactly as it was (the engine
+        // keeps sessions parked on error)
+        let dims = shape.lane_dims();
+        let mut staged = Vec::with_capacity(inn.len());
+        for (lane, kv) in inn {
+            staged.push((
+                *lane,
+                client.buffer_from_host_buffer(&kv.k, &dims, None)?,
+                client.buffer_from_host_buffer(&kv.v, &dims, None)?,
+                kv.elems() as u64,
+            ));
+        }
+        for (lane, k_buf, v_buf, elems) in staged {
+            self.kc[lane] = k_buf;
+            self.vc[lane] = v_buf;
+            self.traffic.elems_in += elems;
+        }
+        Ok(downloaded)
     }
 }
 

@@ -24,9 +24,6 @@ const DECODE_INS: &[&str] = &["token", "pos", "kc", "vc", "valid",
                               "inject_k", "inject_v"];
 const PREFILL_INS: &[&str] = &["tokens", "pos", "in_mask", "kc", "vc",
                                "valid", "write_slots"];
-/// PR-3-era mixed operand order (no retrieval inject)
-const MIXED_INS_LEGACY: &[&str] = &["tokens", "pos", "in_mask", "mode", "kc",
-                                    "vc", "valid", "write_slots"];
 /// unified step-plan mixed operand order: the prefill operands plus `mode`
 /// and the decode graph's inject tail, so retrieval fuses like every other
 /// policy
@@ -50,10 +47,10 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
     ];
     match meta.pick("mixed", 8, 256, "mlp") {
         Some(mx) if dir.join("golden_mixed.bin").is_file() => {
-            // PR-3-era mixed graphs lack the inject tail; replay them on
-            // the operand list they were exported with
-            let ins = if mx.has_inject() { MIXED_INS } else { MIXED_INS_LEGACY };
-            kinds.push(("mixed", ins, MIXED_OUTS, "golden_mixed.bin"));
+            anyhow::ensure!(mx.has_inject(),
+                            "mixed artifact {} lacks inject operands; \
+                             re-export with python -m compile.aot", mx.file);
+            kinds.push(("mixed", MIXED_INS, MIXED_OUTS, "golden_mixed.bin"));
         }
         _ => report.push_str("mixed    skipped (legacy export: no mixed \
                               graph or golden)\n"),
@@ -66,9 +63,8 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
             .with_context(|| format!("no {kind} artifact at (8, >=256)"))?;
         anyhow::ensure!(spec.m == 256, "golden expects m=256, found {}", spec.m);
         let exe = super::compile_hlo(&client, &meta.dir.join(&spec.file))?;
-        // goldens store caches monolithically ([L,B,H,M,dh]); per-lane
+        // goldens store caches monolithically ([L,B,H,M,dh]); the per-lane
         // artifacts take and return one [L,H,M,dh] slab per batch lane
-        let per_lane = spec.cache_layout == "per_lane";
         let dims = meta.dims;
         let stride = dims.hkv * spec.m * dims.dh;
         let lane_shape = [dims.layers, dims.hkv, spec.m, dims.dh];
@@ -84,7 +80,7 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
             let t = golden
                 .get(&format!("in.{name}"))
                 .with_context(|| format!("golden missing in.{name}"))?;
-            if per_lane && (*name == "kc" || *name == "vc") {
+            if *name == "kc" || *name == "vc" {
                 for lane in 0..spec.b {
                     let slab = gather_lane(&t.data, lane, dims.layers,
                                            spec.b, stride);
@@ -105,7 +101,7 @@ pub fn run_goldens(dir: &Path) -> Result<String> {
             let want = golden
                 .get(&format!("out.{name}"))
                 .with_context(|| format!("golden missing out.{name}"))?;
-            if per_lane && (*name == "kc" || *name == "vc") {
+            if *name == "kc" || *name == "vc" {
                 for lane in 0..spec.b {
                     expected.push((
                         format!("{name}[{lane}]"),
@@ -175,17 +171,19 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
         ("prefill", PREFILL_INS, PREFILL_OUTS, "golden_prefill.bin"),
     ];
     let has_mixed = meta.supports_mixed(b, m, "mlp");
-    let mixed_inject = meta
-        .pick("mixed", b, m, "mlp")
-        .map(|a| a.has_inject())
-        .unwrap_or(false);
     if has_mixed {
         anyhow::ensure!(!meta.mixed_outputs.is_empty(),
                         "mixed artifact without mixed_outputs in meta.json");
         anyhow::ensure!(dir.join("golden_mixed.bin").is_file(),
                         "mixed artifact without golden_mixed.bin");
-        let ins = if mixed_inject { MIXED_INS } else { MIXED_INS_LEGACY };
-        kinds.push(("mixed", ins, MIXED_OUTS, "golden_mixed.bin"));
+        let inject = meta
+            .pick("mixed", b, m, "mlp")
+            .map(|a| a.has_inject())
+            .unwrap_or(false);
+        anyhow::ensure!(inject,
+                        "mixed artifact lacks inject operands; re-export \
+                         with python -m compile.aot");
+        kinds.push(("mixed", MIXED_INS, MIXED_OUTS, "golden_mixed.bin"));
     }
     for (kind, ins, outs, golden_file) in kinds {
         let golden = read_weights(&dir.join(golden_file))?;
@@ -232,11 +230,11 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
                           {} in / {} out tensors OK", ins.len(), outs.len())?;
     }
     writeln!(report, "mixed-step capability: {}",
-             match (has_mixed, mixed_inject) {
-                 (true, true) => "present (inject-capable)",
-                 (true, false) => "present (legacy: no inject operands — \
-                                   retrieval plans degrade to per-kind calls)",
-                 _ => "absent (legacy export)",
+             if has_mixed {
+                 "present (inject-capable)"
+             } else {
+                 "absent (legacy export: mixed plans degrade to per-kind \
+                  graph calls)"
              })?;
     report.push_str("structural selftest: ALL OK\n");
     Ok(report)
@@ -244,9 +242,9 @@ pub fn verify_structural(dir: &Path) -> Result<String> {
 
 /// Check an artifact's declared `runtime_inputs` against the canonical
 /// `StepPlan` operand order of its kind: the leading operands and the
-/// post-cache tail must match exactly (the cache operands in between vary
-/// by `cache_layout`: one kc/vc pair, or B per-lane buffers).  Artifacts
-/// exported before the field record nothing and pass vacuously.
+/// post-cache tail must match exactly (the B per-lane kc/vc buffers sit in
+/// between).  Artifacts exported before the field record nothing and pass
+/// vacuously.
 fn verify_operand_order(a: &crate::model_meta::ArtifactSpec) -> Result<()> {
     if a.runtime_inputs.is_empty() {
         return Ok(());
@@ -257,16 +255,9 @@ fn verify_operand_order(a: &crate::model_meta::ArtifactSpec) -> Result<()> {
                        "inject_k", "inject_v"]),
         "prefill" => (&["tokens", "pos", "in_mask"],
                       &["valid", "write_slots"]),
-        "mixed" => {
-            if a.has_inject() {
-                (&["tokens", "pos", "in_mask", "mode"],
-                 &["valid", "write_slots", "inject_flag", "inject_slot",
-                   "inject_k", "inject_v"])
-            } else {
-                (&["tokens", "pos", "in_mask", "mode"],
-                 &["valid", "write_slots"])
-            }
-        }
+        "mixed" => (&["tokens", "pos", "in_mask", "mode"],
+                    &["valid", "write_slots", "inject_flag", "inject_slot",
+                      "inject_k", "inject_v"]),
         other => anyhow::bail!("unknown artifact kind `{other}`"),
     };
     let ri = &a.runtime_inputs;
@@ -285,7 +276,7 @@ fn verify_operand_order(a: &crate::model_meta::ArtifactSpec) -> Result<()> {
     }
     // everything between lead and tail must be cache operands
     let ncache = ri.len() - lead.len() - tail.len();
-    let want_cache = if a.cache_layout == "per_lane" { 2 * a.b } else { 2 };
+    let want_cache = 2 * a.b;
     anyhow::ensure!(ncache == want_cache,
                     "{}: {ncache} cache operands, layout {} wants \
                      {want_cache}", a.file, a.cache_layout);

@@ -20,6 +20,10 @@ use crate::scheduler::{Request, Response};
 enum Msg {
     Req(Request),
     CloseSession(String),
+    /// reply with the engine's Prometheus-style metrics text
+    Stats(Sender<String>),
+    /// reply with the flight recorder's Chrome-trace JSON
+    Trace(Sender<String>),
     Shutdown,
 }
 
@@ -47,6 +51,12 @@ impl InProcServer {
                             }
                         }
                         Ok(Msg::CloseSession(id)) => engine.close_session(&id),
+                        Ok(Msg::Stats(reply)) => {
+                            let _ = reply.send(engine.prometheus_text());
+                        }
+                        Ok(Msg::Trace(reply)) => {
+                            let _ = reply.send(engine.chrome_trace_json());
+                        }
                         Ok(Msg::Shutdown) => shutdown = true,
                         Err(TryRecvError::Empty) => break,
                         Err(TryRecvError::Disconnected) => {
@@ -72,6 +82,12 @@ impl InProcServer {
                             }
                         }
                         Ok(Msg::CloseSession(id)) => engine.close_session(&id),
+                        Ok(Msg::Stats(reply)) => {
+                            let _ = reply.send(engine.prometheus_text());
+                        }
+                        Ok(Msg::Trace(reply)) => {
+                            let _ = reply.send(engine.chrome_trace_json());
+                        }
                         Ok(Msg::Shutdown) => shutdown = true,
                         Err(_) => return Ok(()),
                     }
@@ -92,6 +108,22 @@ impl InProcServer {
 
     pub fn try_recv(&self) -> Option<Response> {
         self.rx.try_recv().ok()
+    }
+
+    /// Live metrics scrape: the engine's Prometheus-style text, rendered on
+    /// the engine thread at the next loop turn.  None if the engine thread
+    /// is gone.
+    pub fn metrics_snapshot(&self) -> Option<String> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(Msg::Stats(reply_tx)).ok()?;
+        reply_rx.recv().ok()
+    }
+
+    /// Live flight-recorder snapshot as Chrome-trace JSON.
+    pub fn trace_snapshot(&self) -> Option<String> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(Msg::Trace(reply_tx)).ok()?;
+        reply_rx.recv().ok()
     }
 
     pub fn recv_blocking(&self) -> Option<Response> {
@@ -140,6 +172,27 @@ mod tests {
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn inproc_server_serves_metrics_and_trace_snapshots() {
+        let cfg = EngineConfig {
+            budget: 16,
+            batch: 1,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        srv.submit(Request::new(1, vec![1, 40], 3));
+        assert!(srv.recv_blocking().is_some());
+        let text = srv.metrics_snapshot().unwrap();
+        crate::obs::assert_prometheus_parses(&text);
+        assert!(text.contains("trimkv_tokens_decoded_total 3\n"));
+        let trace = srv.trace_snapshot().unwrap();
+        let doc = crate::util::json::Json::parse(&trace).unwrap();
+        assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        srv.shutdown();
     }
 
     #[test]

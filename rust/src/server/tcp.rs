@@ -7,6 +7,11 @@
 //!   {"id": 2, "session": "abc", "prompt": [44, 45], "max_new_tokens": 4}
 //! a conversation is dropped with a close message (acked with one line):
 //!   {"session": "abc", "close": true}
+//! a stats message returns the live metrics as one JSON line holding the
+//! Prometheus-style exposition text:
+//!   {"stats": true}  ->  {"metrics": "trimkv_tokens_decoded_total 42\n..."}
+//! plain HTTP scrapers are also served: a connection whose first line is
+//! `GET /metrics` receives one `text/plain` exposition and is closed.
 //! each response is one JSON line
 //!   {"id": 1, "tag": "x", "session": "abc", "tokens": [...],
 //!    "finish": "eos", "ttft_us": 123.0, "e2e_us": 456.0}
@@ -24,6 +29,8 @@ use crate::util::json::Json;
 pub enum ClientMsg {
     Req(Request),
     Close(String),
+    /// metrics scrape over the line protocol ({"stats": true})
+    Stats,
 }
 
 pub fn parse_client_line(line: &str) -> anyhow::Result<ClientMsg> {
@@ -31,6 +38,9 @@ pub fn parse_client_line(line: &str) -> anyhow::Result<ClientMsg> {
     if j.get("close").and_then(Json::as_bool) == Some(true) {
         let sid = j.str_field("session")?;
         return Ok(ClientMsg::Close(sid.to_string()));
+    }
+    if j.get("stats").and_then(Json::as_bool) == Some(true) {
+        return Ok(ClientMsg::Stats);
     }
     request_from_json(&j).map(ClientMsg::Req)
 }
@@ -95,6 +105,18 @@ pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result
         if line.trim().is_empty() {
             continue;
         }
+        // HTTP fast path: a plain `GET /metrics` (curl, Prometheus) gets
+        // one text/plain exposition and the connection closes
+        if line.starts_with("GET /metrics") {
+            let body = srv.metrics_snapshot().unwrap_or_default();
+            write!(writer,
+                   "HTTP/1.0 200 OK\r\n\
+                    Content-Type: text/plain; version=0.0.4\r\n\
+                    Content-Length: {}\r\n\
+                    Connection: close\r\n\r\n{}",
+                   body.len(), body)?;
+            return Ok(served);
+        }
         match parse_client_line(&line) {
             Ok(ClientMsg::Req(req)) => {
                 srv.submit(req);
@@ -105,6 +127,12 @@ pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result
                 writeln!(writer, "{}", Json::obj(vec![
                     ("session", Json::str(sid)),
                     ("closed", Json::Bool(true)),
+                ]))?;
+            }
+            Ok(ClientMsg::Stats) => {
+                let text = srv.metrics_snapshot().unwrap_or_default();
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("metrics", Json::str(text)),
                 ]))?;
             }
             Err(e) => {
@@ -241,6 +269,73 @@ mod tests {
         assert_eq!(j.usize_field("id").unwrap(), 1);
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(t.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn tcp_stats_message_returns_metrics_text() {
+        use crate::config::EngineConfig;
+        use crate::engine::Engine;
+        use crate::runtime::MockBackend;
+        use std::io::{BufRead, BufReader, Write};
+
+        let cfg = EngineConfig {
+            budget: 16, batch: 1, chunked_prefill: false, ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            serve_connection(s, &srv).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, r#"{{"id": 1, "prompt": [1, 50], "max_new_tokens": 2}}"#)
+            .unwrap();
+        writeln!(client, r#"{{"stats": true}}"#).unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut metrics_text = None;
+        for line in BufReader::new(&client).lines() {
+            let j = Json::parse(line.unwrap().trim()).unwrap();
+            if let Some(m) = j.get("metrics").and_then(Json::as_str) {
+                metrics_text = Some(m.to_string());
+            }
+        }
+        let text = metrics_text.expect("stats line answered");
+        crate::obs::assert_prometheus_parses(&text);
+        assert!(text.contains("trimkv_requests_admitted_total 1\n"));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_get_metrics_serves_http_scrape() {
+        use crate::config::EngineConfig;
+        use crate::engine::Engine;
+        use crate::runtime::MockBackend;
+        use std::io::{Read, Write};
+
+        let cfg = EngineConfig {
+            budget: 16, batch: 1, chunked_prefill: false, ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            serve_connection(s, &srv).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        write!(client, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut raw = String::new();
+        client.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.0 200 OK\r\n"), "got: {raw}");
+        assert!(raw.contains("Content-Type: text/plain"));
+        let body = raw.split("\r\n\r\n").nth(1).expect("header/body split");
+        crate::obs::assert_prometheus_parses(body);
+        assert!(body.contains("trimkv_uptime_seconds"));
+        t.join().unwrap();
     }
 
     #[test]

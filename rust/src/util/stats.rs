@@ -142,15 +142,16 @@ impl StreamSummary {
     }
 
     /// Approximate percentile (exact until `capacity` samples, reservoir
-    /// estimate beyond); p in [0, 100], nearest-rank.
-    pub fn pct(&self, p: f64) -> f64 {
+    /// estimate beyond); p in [0, 100], nearest-rank.  `None` until the
+    /// first sample — callers render `-`, never NaN.
+    pub fn pct(&self, p: f64) -> Option<f64> {
         if self.sample.is_empty() {
-            return f64::NAN;
+            return None;
         }
         let mut xs = self.sample.clone();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
-        xs[rank.min(xs.len() - 1)]
+        Some(xs[rank.min(xs.len() - 1)])
     }
 }
 
@@ -183,21 +184,36 @@ impl LatencyHistogram {
     pub fn mean_us(&self) -> f64 {
         self.stats.mean()
     }
+    /// Raw bucket counts; bucket i covers [2^i, 2^(i+1)) microseconds
+    /// (metrics exposition renders these as cumulative Prometheus buckets).
+    pub fn buckets(&self) -> &[u64; 32] {
+        &self.buckets
+    }
     /// Approximate percentile from bucket boundaries (upper bound).
-    pub fn pct_us(&self, p: f64) -> f64 {
+    /// `None` until the first sample — callers render `-`, never NaN.
+    pub fn pct_us(&self, p: f64) -> Option<f64> {
         let total = self.stats.count();
         if total == 0 {
-            return f64::NAN;
+            return None;
         }
         let target = (p / 100.0 * total as f64).ceil() as u64;
         let mut acc = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return (1u64 << (i + 1)) as f64;
+                return Some((1u64 << (i + 1)) as f64);
             }
         }
-        f64::NAN
+        Some(self.stats.max())
+    }
+}
+
+/// Render an optional statistic for human-readable summaries: `-` until the
+/// first sample (replacing the NaN the f64 math would otherwise emit).
+pub fn fmt_opt(v: Option<f64>, decimals: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.decimals$}"),
+        None => "-".into(),
     }
 }
 
@@ -243,9 +259,9 @@ mod tests {
         assert_eq!(s.min(), 0.0);
         assert_eq!(s.max(), 999.0);
         // reservoir percentiles approximate the uniform distribution
-        let p50 = s.pct(50.0);
+        let p50 = s.pct(50.0).unwrap();
         assert!((200.0..800.0).contains(&p50), "p50 {p50}");
-        assert!(s.pct(10.0) <= s.pct(90.0));
+        assert!(s.pct(10.0).unwrap() <= s.pct(90.0).unwrap());
     }
 
     #[test]
@@ -254,10 +270,11 @@ mod tests {
         for i in 1..=100 {
             s.push(i as f64);
         }
-        assert_eq!(s.pct(0.0), 1.0);
-        assert_eq!(s.pct(100.0), 100.0);
-        assert!((s.pct(50.0) - 50.0).abs() <= 1.0);
-        assert!(StreamSummary::new().pct(50.0).is_nan());
+        assert_eq!(s.pct(0.0), Some(1.0));
+        assert_eq!(s.pct(100.0), Some(100.0));
+        assert!((s.pct(50.0).unwrap() - 50.0).abs() <= 1.0);
+        // empty series report None, not NaN (metrics render `-`)
+        assert_eq!(StreamSummary::new().pct(50.0), None);
     }
 
     #[test]
@@ -279,7 +296,16 @@ mod tests {
             h.record_us(10.0 + i as f64);
         }
         assert_eq!(h.count(), 1000);
-        assert!(h.pct_us(50.0) <= h.pct_us(99.0));
+        assert!(h.pct_us(50.0).unwrap() <= h.pct_us(99.0).unwrap());
         assert!(h.mean_us() > 10.0);
+        assert_eq!(LatencyHistogram::new().pct_us(50.0), None);
+        assert_eq!(h.buckets().iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn fmt_opt_renders_dash_for_empty() {
+        assert_eq!(fmt_opt(None, 2), "-");
+        assert_eq!(fmt_opt(Some(1.234), 2), "1.23");
+        assert_eq!(fmt_opt(Some(3.0), 0), "3");
     }
 }
