@@ -139,6 +139,13 @@ fn main() -> Result<()> {
             "workload produced no evictions — retention report is empty");
     ensure!(eng_off.obs.journal.is_empty(),
             "journal recorded events with trace disabled");
+    // the default loop is pipelined: runnable ticks always step the
+    // backend, and the overlap windows it opens must be accounted
+    ensure!(eng_on.obs.journal.host_gap_ticks == 0,
+            "pipelined run left {} host-gap ticks",
+            eng_on.obs.journal.host_gap_ticks);
+    ensure!(eng_on.obs.journal.overlap_ns > 0,
+            "pipelined run recorded no overlap time");
     println!("\n{}", eng_on.retention_report());
     println!("step_us mean: obs-on {us_on:.1}, obs-off {us_off:.1}");
     // coarse gate: recording a handful of ring-buffer events per tick must

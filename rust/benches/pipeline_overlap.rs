@@ -1,0 +1,166 @@
+//! Pipelined-tick bench: the serial submit-then-wait loop vs the software
+//! pipeline that overlaps the next tick's host work (step assembly,
+//! admission, chained snapshot swaps) with the in-flight device step.
+//!
+//! The MockBackend's synthetic execute latency stands in for the device:
+//! `wait` pays the configured latency NET of host time already elapsed
+//! since `submit`, so a serial tick costs host + device while a pipelined
+//! tick approaches max(host, device).  Session churn under the eager swap
+//! policy keeps real host work (admission planning + lane-sized memcpy
+//! swaps) inside every overlap window.  Token streams are asserted
+//! bit-identical between the two loops at every latency point — the bench
+//! doubles as an end-to-end equivalence check.
+//!
+//! Deterministic CI gates (machine-independent): the pipelined loop's
+//! host-gap tick count (structurally zero) and the fraction of swap
+//! batches that ride an overlap window.  Wall-clock mean and speedup are
+//! tracked with the loose wall-time threshold like every other bench.
+//!
+//! Emits `BENCH_pipeline.json` (util::benchkit) for the CI bench-smoke
+//! job's regression gate.
+//!
+//!   cargo bench --bench pipeline_overlap [-- --quick]
+
+use std::time::Instant;
+
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::runtime::MockBackend;
+use trimkv::scheduler::Request;
+use trimkv::util::benchkit::{bench, gate, iters, report, results_json,
+                             write_bench_json, BenchResult};
+use trimkv::util::json::Json;
+
+const BATCH: usize = 4;
+const BUDGET: usize = 24;
+const SESSIONS: u64 = 6;
+const REQUESTS: u64 = 18;
+/// Synthetic device latencies: host-bound, balanced, device-bound.
+const LATENCIES_US: [u64; 3] = [0, 50, 200];
+
+struct RunStats {
+    wall_ms: f64,
+    mean_step_us: f64,
+    host_gap_ticks: u64,
+    overlap_us: u64,
+    swap_batches: u64,
+    swap_batches_overlapped: u64,
+    streams: Vec<(u64, Vec<u32>)>,
+}
+
+fn run_workload(pipeline: bool, latency_us: u64) -> RunStats {
+    let cfg = EngineConfig {
+        policy: "trimkv".into(),
+        budget: BUDGET,
+        batch: BATCH,
+        max_new_tokens: 8,
+        chunked_prefill: true,
+        mixed_ticks: true,
+        swap_policy: "eager".into(),
+        pipeline,
+        ..Default::default()
+    };
+    let backend = MockBackend::new(BATCH, BUDGET + 24)
+        .with_synthetic_latency_us(latency_us);
+    let mut e = Engine::new(backend, cfg, 2).expect("engine");
+    for i in 0..REQUESTS {
+        let plen = 4 + (i as usize * 7) % 45;
+        let prompt: Vec<u32> =
+            (0..plen).map(|j| 32 + (j % 64) as u32).collect();
+        e.submit(Request::new(i, prompt, 6)
+                 .with_session(format!("s{}", i % SESSIONS)))
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    let mut rs = e.run_to_completion().unwrap();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    rs.sort_by_key(|r| r.id);
+    RunStats {
+        wall_ms,
+        mean_step_us: e.metrics.step_us.mean(),
+        host_gap_ticks: e.obs.journal.host_gap_ticks,
+        overlap_us: e.obs.journal.overlap_ns / 1000,
+        swap_batches: e.metrics.swap_batches,
+        swap_batches_overlapped: e.metrics.swap_batches_overlapped,
+        streams: rs.into_iter().map(|r| (r.id, r.tokens)).collect(),
+    }
+}
+
+fn main() {
+    println!("=== pipelined vs serial tick loop ({REQUESTS} session turns, \
+              {SESSIONS} dialogues over {BATCH} lanes, eager swaps) ===");
+    println!("{:<11} {:<10} {:>10} {:>13} {:>9} {:>11} {:>10}",
+             "latency_us", "mode", "wall_ms", "mean_step_us", "host_gap",
+             "overlap_ms", "swaps_ovl");
+    let mut lat_json = Vec::new();
+    let mut overlap_fraction = 0.0;
+    let mut host_gap_total = 0u64;
+    for lat in LATENCIES_US {
+        let serial = run_workload(false, lat);
+        let piped = run_workload(true, lat);
+        assert_eq!(serial.streams, piped.streams,
+                   "pipelining changed a token stream at {lat}us latency");
+        assert_eq!(piped.host_gap_ticks, 0,
+                   "pipelined loop left a host gap at {lat}us latency");
+        assert!(piped.swap_batches_overlapped > 0,
+                "no swap batch rode an overlap window at {lat}us latency");
+        host_gap_total += piped.host_gap_ticks;
+        // pure scheduling counters: identical at every latency point
+        overlap_fraction = piped.swap_batches_overlapped as f64
+            / piped.swap_batches.max(1) as f64;
+        for (mode, s) in [("serial", &serial), ("pipelined", &piped)] {
+            println!("{:<11} {:<10} {:>10.2} {:>13.1} {:>9} {:>11.2} {:>10}",
+                     lat, mode, s.wall_ms, s.mean_step_us, s.host_gap_ticks,
+                     s.overlap_us as f64 / 1e3, s.swap_batches_overlapped);
+        }
+        lat_json.push(Json::obj(vec![
+            ("latency_us", Json::num(lat as f64)),
+            ("serial_wall_ms", Json::num(serial.wall_ms)),
+            ("pipelined_wall_ms", Json::num(piped.wall_ms)),
+            ("serial_mean_step_us", Json::num(serial.mean_step_us)),
+            ("pipelined_mean_step_us", Json::num(piped.mean_step_us)),
+            ("pipelined_overlap_us", Json::num(piped.overlap_us as f64)),
+            ("swap_batches", Json::num(piped.swap_batches as f64)),
+            ("swap_batches_overlapped",
+             Json::num(piped.swap_batches_overlapped as f64)),
+        ]));
+    }
+
+    // wall-time distribution at the device-bound point, where the overlap
+    // win is the whole host side of the tick
+    let hot = *LATENCIES_US.last().unwrap();
+    let (warmup, n) = iters(2, 10);
+    let mut results: Vec<BenchResult> = Vec::new();
+    for (name, pipeline) in [("workload/serial", false),
+                             ("workload/pipelined", true)] {
+        results.push(bench(name, warmup, n, || {
+            std::hint::black_box(run_workload(pipeline, hot));
+        }));
+    }
+    report(&results);
+    let speedup = results[0].mean_us / results[1].mean_us;
+    println!("pipelined speedup at {hot}us device latency: {speedup:.3}x \
+              (overlapped swap fraction {overlap_fraction:.2})");
+
+    let payload = Json::obj(vec![
+        ("batch", Json::num(BATCH as f64)),
+        ("budget", Json::num(BUDGET as f64)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("sessions", Json::num(SESSIONS as f64)),
+        ("latencies", Json::Arr(lat_json)),
+        ("results", results_json(&results)),
+        // CI gate: host-gap and the overlapped-swap fraction are pure
+        // scheduling counters (deterministic on the mock); the wall-time
+        // pair carries the loose shared-runner threshold in the baseline
+        ("regress_on", Json::obj(vec![
+            ("pipeline_host_gap_ticks",
+             gate(host_gap_total as f64, false)),
+            ("pipeline_overlapped_swap_fraction",
+             gate(overlap_fraction, true)),
+            ("pipeline_workload_mean_us", gate(results[1].mean_us, false)),
+            ("pipeline_speedup", gate(speedup, true)),
+        ])),
+    ]);
+    let path = write_bench_json("pipeline", payload).expect("bench json");
+    println!("wrote {}", path.display());
+}

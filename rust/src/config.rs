@@ -20,6 +20,9 @@
 //!                            # step plan per tick (stall-free)
 //! tick_token_budget = 0      # Sarathi-style cap on tokens per mixed tick
 //!                            # (decoders reserved first; 0 = unbounded)
+//! pipeline = true            # async submit/wait tick loop: host work
+//!                            # (admission, swaps) overlaps the in-flight
+//!                            # device step; off = serial submit-then-wait
 //!
 //! [session]
 //! max_sessions = 256      # host-side snapshot store capacity (LRU beyond)
@@ -61,6 +64,12 @@ pub struct EngineConfig {
     /// reserved one token each first, the remainder splits across
     /// mid-prefill lanes.  0 = unbounded (full chunk per filling lane).
     pub tick_token_budget: usize,
+    /// Pipelined tick loop: submit the step asynchronously and overlap the
+    /// next tick's host work (admission, batched swaps, deferred eager
+    /// snapshots) with device execution, waiting one tick later.  Token
+    /// streams are bit-identical to the serial loop; off restores the
+    /// submit-then-wait tick.
+    pub pipeline: bool,
     /// Capacity of the host-side session snapshot store; beyond it the
     /// least-recently-used conversation is dropped.
     pub max_sessions: usize,
@@ -93,6 +102,7 @@ impl Default for EngineConfig {
             chunked_prefill: true,
             mixed_ticks: true,
             tick_token_budget: 0,
+            pipeline: true,
             max_sessions: 256,
             swap_policy: "lazy".into(),
             trace: true,
@@ -145,6 +155,9 @@ impl EngineConfig {
                 "scheduler.tick_token_budget" => {
                     cfg.tick_token_budget =
                         val.as_usize().ok_or_else(|| bad(key))?
+                }
+                "scheduler.pipeline" => {
+                    cfg.pipeline = val.as_bool().ok_or_else(|| bad(key))?
                 }
                 "session.max_sessions" => {
                     cfg.max_sessions = val.as_usize().ok_or_else(|| bad(key))?
@@ -204,6 +217,13 @@ impl EngineConfig {
         if let Some(v) = args.get("tick-token-budget") {
             self.tick_token_budget =
                 v.parse().map_err(|_| anyhow::anyhow!("bad --tick-token-budget"))?;
+        }
+        if let Some(v) = args.get("pipeline") {
+            self.pipeline = match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                _ => anyhow::bail!("bad --pipeline (true|false)"),
+            };
         }
         if args.flag("no-trace") {
             self.trace = false;
@@ -297,6 +317,17 @@ prefill_priority = true
         assert_eq!(d.tick_token_budget, 0);
         assert!(EngineConfig::from_toml_str(
             "[scheduler]\ntick_token_budget = \"lots\"").is_err());
+    }
+
+    #[test]
+    fn parses_pipeline_key() {
+        let cfg = EngineConfig::from_toml_str(
+            "[scheduler]\npipeline = false").unwrap();
+        assert!(!cfg.pipeline);
+        assert!(EngineConfig::default().pipeline,
+                "the pipelined loop is the default");
+        assert!(EngineConfig::from_toml_str(
+            "[scheduler]\npipeline = \"fast\"").is_err());
     }
 
     #[test]

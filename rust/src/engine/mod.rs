@@ -18,7 +18,7 @@
 //!      `slots > budget` so one always exists after the previous tick's
 //!      eviction) — into the reusable fused `StepPlan` buffers; the
 //!      validity mask is maintained incrementally, not rebuilt per tick
-//!   4. *execute*: one `ModelBackend::execute(&StepPlan)` call (KV stays
+//!   4. *execute*: one `ModelBackend::submit(&StepPlan)` call (KV stays
 //!      device-resident; the backend dispatches to the cheapest graph)
 //!   5. *postprocess*: ONE shared per-lane helper records the new tokens'
 //!      retention scores (gate outputs), folds attention stats, then — if
@@ -26,6 +26,19 @@
 //!      (provisional-add-then-evict, exactly the paper's rule: the newest
 //!      token itself can be evicted), plans retrieval re-injections, and
 //!      samples the next token, finishing lanes on EOS / length
+//!
+//! Pipelined ticks (`scheduler.pipeline`, default on): submit and wait are
+//! split across tick boundaries.  `tick` t submits its step and returns;
+//! tick t+1 opens an *overlap window* — deferred eager-park snapshots and
+//! admission (whose batched `swap_lanes` chains behind the in-flight step
+//! on the device timeline) run while the device executes step t — then
+//! waits, postprocesses step t, and submits step t+1 from the other side
+//! of the double-buffered assembly scratch.  Host work overlaps device
+//! execution, so the mean tick approaches max(host, device) instead of
+//! their sum; token streams are bit-identical to the serial loop (each
+//! lane's stream depends only on its own state, never on when unrelated
+//! admission work ran).  `pipeline = off` restores the serial
+//! submit-then-wait tick.
 //!
 //! Prompts run through chunk ops (compress-after-each-chunk, the LocRet
 //! protocol used in paper §B.3) or token-by-token through decode ops
@@ -53,13 +66,14 @@ use crate::config::EngineConfig;
 use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::metrics::EngineMetrics;
 use crate::model_meta::ModelDims;
-use crate::obs::{self, EngineObs, Phase, RetentionObs};
+use crate::obs::{self, EngineObs, Phase, RetentionObs, SpanHandle,
+                 TID_DEVICE};
 use crate::policy::Policy;
-use crate::runtime::{LaneKv, LaneOp, ModelBackend, StepOut};
+use crate::runtime::{LaneKv, LaneOp, ModelBackend, StepOut, StepToken};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
 use crate::session::{SessionSnapshot, SessionStore};
 use lanes::{Lane, LaneAvail, ParkedSession, SeqState, ValidMask};
-use plan::{assign_ops, StepBufs, TickKind};
+use plan::{assign_ops, DoubleBufs, TickKind};
 use sampler::Sampler;
 
 /// EMA factor for the SnapKV-style attention statistic.
@@ -74,6 +88,28 @@ pub struct SeqRecord {
     pub log_betas: Vec<Vec<f32>>,
     /// (head index, evicted token pos, eviction step)
     pub evictions: Vec<(usize, i64, i64)>,
+}
+
+/// Bookkeeping for the step currently executing on the device: everything
+/// `complete_in_flight` needs to postprocess it, captured at submit time.
+struct InFlight {
+    token: StepToken,
+    /// tick the step was submitted on (stamps its tokens' latency metrics)
+    tick_no: u64,
+    kind: TickKind,
+    kind_label: &'static str,
+    /// which side of the double buffer the step was assembled into
+    buf: usize,
+    /// per lane: (real_c, flat chosen-slot table) — None for lanes that
+    /// were inactive (or not yet seated) at submit time
+    chunk_info: Vec<Option<(usize, Vec<usize>)>>,
+    want_attn: bool,
+    want_kv: bool,
+    n_active: usize,
+    /// submit instant (step_us measures submit -> completion)
+    t0: Instant,
+    /// open Execute span on the device trace track, closed at wait
+    exec_span: SpanHandle,
 }
 
 pub struct Engine<B: ModelBackend> {
@@ -102,9 +138,15 @@ pub struct Engine<B: ModelBackend> {
     tick_no: u64,
     /// `[L, B, H, M]` validity mask, incrementally maintained
     valid: ValidMask,
-    /// reusable fused `StepPlan` operand buffers (perf: no per-step
-    /// allocation of the [B,C]/[L,B,H,C] scratch)
-    bufs: StepBufs,
+    /// double-buffered fused `StepPlan` operand scratch: the next step
+    /// assembles into one side while the in-flight step's postprocess
+    /// still reads the other (and no per-step allocation, as before)
+    dbufs: DoubleBufs,
+    /// the step submitted but not yet waited on (pipelined loop)
+    in_flight: Option<InFlight>,
+    /// lanes parked under the eager swap policy whose snapshots are
+    /// deferred to the next tick's overlap window (pipelined loop)
+    chained_parks: Vec<usize>,
     /// observability plane: tick flight recorder + retention histograms
     pub obs: EngineObs,
 }
@@ -142,7 +184,9 @@ impl<B: ModelBackend> Engine<B> {
             clock: 0,
             tick_no: 0,
             valid: ValidMask::new(&dims, b, slots),
-            bufs: StepBufs::new(&dims, b, chunk),
+            dbufs: DoubleBufs::new(&dims, b, chunk),
+            in_flight: None,
+            chained_parks: Vec::new(),
             obs: EngineObs::new(cfg.trace_capacity, cfg.trace, dims.layers,
                                 dims.hkv),
             cfg,
@@ -172,6 +216,7 @@ impl<B: ModelBackend> Engine<B> {
     /// they are passive residents awaiting their next turn.
     pub fn idle(&self) -> bool {
         self.queue.is_empty()
+            && self.in_flight.is_none()
             && self.lanes.iter().all(|l| !matches!(l, Lane::Busy(_)))
     }
 
@@ -193,8 +238,11 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     /// Force every parked lane out to the host store (drain / checkpoint)
-    /// in one batched swap.
+    /// in one batched swap.  Resolves the in-flight step first: its
+    /// finishing turns may park, and those lanes must be in the flush.
     pub fn flush_sessions(&mut self) -> Result<()> {
+        self.complete_in_flight()?;
+        self.drain_chained_swaps()?;
         let parked: Vec<usize> = self
             .lanes
             .iter()
@@ -259,7 +307,23 @@ impl<B: ModelBackend> Engine<B> {
     /// on no-op ticks).
     pub fn tick(&mut self) -> Result<bool> {
         let t0 = Instant::now();
+        if self.in_flight.is_some() {
+            // overlap window: every piece of host work that does not
+            // depend on the in-flight step's outputs runs while the
+            // device executes it — deferred eager-park snapshots, then
+            // admission (whose batched `swap_lanes` chains behind the
+            // step on the device timeline).  Lanes the window seats are
+            // invisible to the in-flight step (its chunk_info was
+            // captured at submit), and per-session turn order holds
+            // because in-flight turns keep their lanes Busy.
+            let w0 = Instant::now();
+            self.drain_chained_swaps()?;
+            self.admit_waiting()?;
+            self.obs.journal.note_overlap(w0.elapsed().as_nanos() as u64);
+        }
+        self.complete_in_flight()?;
         self.process_pending_closes();
+        // late admission pass: lanes freed by the postprocess above
         self.admit_waiting()?;
         self.tick_no += 1;
         let any_prefill = self.lanes.iter().any(|l| match l {
@@ -281,18 +345,26 @@ impl<B: ModelBackend> Engine<B> {
             && any_prefill
             && any_decode;
         let worked = if fuse {
-            self.step_tick(TickKind::Fused)?
+            self.submit_tick(TickKind::Fused)?
         } else if any_prefill && (self.cfg.prefill_priority || !any_decode) {
-            self.step_tick(TickKind::Prefill)?
+            self.submit_tick(TickKind::Prefill)?
         } else if any_decode || any_prefill {
-            self.step_tick(TickKind::Decode)?
+            self.submit_tick(TickKind::Decode)?
         } else {
             false
         };
-        // turns that finished this tick may unblock a deferred close
-        self.process_pending_closes();
+        if worked {
+            if !self.cfg.pipeline {
+                // serial loop: resolve the step before the tick returns
+                self.complete_in_flight()?;
+                self.process_pending_closes();
+            }
+        } else {
+            // nothing submitted: no later overlap window will flush these
+            self.drain_chained_swaps()?;
+        }
         // device-idle accounting: a runnable tick that issued no backend
-        // step is a host gap (structurally zero on this serial loop)
+        // step is a host gap (structurally zero on both loop shapes)
         self.obs.journal.note_host_gap(
             any_prefill || any_decode, worked,
             (t0.elapsed().as_secs_f64() * 1e6) as u64);
@@ -307,6 +379,9 @@ impl<B: ModelBackend> Engine<B> {
     /// residency change (preempt-to-store, load-from-store) as one batched
     /// `swap_lanes` call, and finally seat the requests.  Preempting and
     /// restoring N lanes costs N lane-sized transfers in one backend call.
+    /// A turn whose own parked lane was claimed earlier in the same round
+    /// chases its snapshot through a second, chained swap instead of
+    /// deferring a tick.
     fn admit_waiting(&mut self) -> Result<()> {
         if self.queue.is_empty() {
             return Ok(()); // steady-state decode: stay allocation-free
@@ -324,6 +399,7 @@ impl<B: ModelBackend> Engine<B> {
             .collect();
         let mut placements: Vec<(usize, usize)> = Vec::new(); // (lane, q idx)
         let mut evict: Vec<usize> = Vec::new();
+        let mut chased: Vec<usize> = Vec::new(); // q idxs chasing a snapshot
         for qi in 0..self.queue.len() {
             let req = self.queue.get(qi).expect("index in range");
             let sid = req.session.clone();
@@ -337,15 +413,14 @@ impl<B: ModelBackend> Engine<B> {
                 self.lanes.iter().position(
                     |l| matches!(l, Lane::Parked(p) if p.session_id == s))
             });
-            if let Some(i) = own_parked {
-                if avail[i] != LaneAvail::Parked {
-                    // its retained lane was claimed earlier in this plan;
-                    // the snapshot reaches the host store only once the
-                    // batched swap executes — defer the turn one tick
-                    continue;
-                }
-            }
-            let lane_idx = own_parked
+            // its retained lane was claimed earlier in this plan: the
+            // snapshot reaches the host store with this round's batched
+            // swap-out, so the turn *chases* it — seat it on another lane
+            // and pull the snapshot back in a second, chained swap (this
+            // used to defer the turn a full tick)
+            let chase = own_parked
+                .map_or(false, |i| avail[i] != LaneAvail::Parked);
+            let lane_idx = (if chase { None } else { own_parked })
                 .or_else(|| avail.iter().position(|&a| a == LaneAvail::Free))
                 .or_else(|| self.lru_parked_lane(&avail));
             let Some(lane_idx) = lane_idx else {
@@ -357,6 +432,9 @@ impl<B: ModelBackend> Engine<B> {
                 evict.push(lane_idx);
             }
             avail[lane_idx] = LaneAvail::Claimed;
+            if chase {
+                chased.push(qi);
+            }
             placements.push((lane_idx, qi));
             if let Some(s) = sid {
                 busy_sessions.push(s);
@@ -382,6 +460,25 @@ impl<B: ModelBackend> Engine<B> {
         self.metrics.preemptions += evict.len() as u64;
         let mut loaded_by_lane: std::collections::BTreeMap<usize, SessionSnapshot> =
             load.iter().map(|&(lane, _)| lane).zip(loaded).collect();
+        // chased turns: their snapshots entered the store with the swap
+        // above; pull them back through a second, chained swap.  (Under
+        // capacity pressure the store may have LRU-dropped one already —
+        // that turn then starts a fresh conversation, the documented drop
+        // semantic, so the filter below is load-bearing.)
+        if !chased.is_empty() {
+            let chase: Vec<(usize, String)> = placements
+                .iter()
+                .filter(|(_, qi)| chased.contains(qi))
+                .filter_map(|&(lane, qi)| {
+                    let sid = self.queue.get(qi)?.session.as_deref()?;
+                    self.sessions.contains(sid)
+                        .then(|| (lane, sid.to_string()))
+                })
+                .collect();
+            let chase_loaded = self.execute_swap(&[], &chase)?;
+            loaded_by_lane
+                .extend(chase.iter().map(|&(lane, _)| lane).zip(chase_loaded));
+        }
         // --- seat the requests ------------------------------------------
         // pop planned requests in descending queue order (indices stay
         // valid), then place
@@ -476,6 +573,9 @@ impl<B: ModelBackend> Engine<B> {
             self.metrics.swap_ins += load.len() as u64;
         }
         self.metrics.swap_batches += 1;
+        // batches issued while a step was in flight rode an overlap
+        // window — the deterministic overlap measure the bench gates on
+        self.metrics.swap_batches_overlapped += self.in_flight.is_some() as u64;
         self.obs.journal.record(self.tick_no, Phase::Swap, "swap",
                                 (evict.len() + load.len()) as u32, span);
         Ok(loaded)
@@ -529,19 +629,21 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     // -----------------------------------------------------------------
-    // the unified step pipeline: plan -> assemble -> execute -> postprocess
+    // the unified step pipeline: plan -> assemble -> submit ... wait ->
+    // postprocess (the wait half lives in `complete_in_flight`)
     // -----------------------------------------------------------------
-    /// One scheduling step of the given kind.  Returns false when no lane
-    /// had work (no backend call was issued — `run_to_completion` must
-    /// never spin on no-op ticks).
+    /// Plan, assemble and SUBMIT one scheduling step of the given kind.
+    /// Returns false when no lane had work (no backend call was issued —
+    /// `run_to_completion` must never spin on no-op ticks).
     ///
     /// The pipeline is identical for every phase: `plan::assign_ops` gives
-    /// each lane a [`LaneOp`], the assembly loop fills the reusable fused
-    /// buffers (applying pending retrieval injections, which upgrades a
-    /// lane's op to `Inject`), ONE `ModelBackend::execute` call runs the
-    /// plan, and [`postprocess_lane`] — the single shared per-lane helper —
-    /// commits every lane's results.
-    fn step_tick(&mut self, kind: TickKind) -> Result<bool> {
+    /// each lane a [`LaneOp`], the assembly loop fills the current side of
+    /// the double-buffered fused scratch (applying pending retrieval
+    /// injections, which upgrades a lane's op to `Inject`), and ONE
+    /// `ModelBackend::submit` call enqueues the plan.  The matching wait
+    /// and [`postprocess_lane`] sweep run in [`Self::complete_in_flight`] —
+    /// immediately on the serial loop, a tick later on the pipelined one.
+    fn submit_tick(&mut self, kind: TickKind) -> Result<bool> {
         let dims = self.backend.dims();
         let (l, b, h, m, c) = (dims.layers, self.backend.batch(), dims.hkv,
                                self.backend.slots(), self.backend.chunk());
@@ -554,10 +656,12 @@ impl<B: ModelBackend> Engine<B> {
         let mut span = self.obs.journal.now_us();
 
         // --- plan --------------------------------------------------------
-        self.bufs.reset(trash);
-        let n_active = assign_ops(&self.lanes, kind, self.cfg.chunked_prefill,
-                                  self.cfg.tick_token_budget, c,
-                                  &mut self.bufs.ops);
+        self.dbufs.cur_mut().reset(trash);
+        let n_active = {
+            let Engine { lanes, dbufs, cfg, .. } = self;
+            assign_ops(lanes, kind, cfg.chunked_prefill,
+                       cfg.tick_token_budget, c, &mut dbufs.cur_mut().ops)
+        };
         if n_active == 0 {
             return Ok(false);
         }
@@ -570,18 +674,21 @@ impl<B: ModelBackend> Engine<B> {
         // steady-state decode stays off the allocator's hot path)
         let mut chunk_info: Vec<Option<(usize, Vec<usize>)>> = vec![None; b];
         let mut any_inject = false;
-        for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+        {
+        let Engine { lanes, dbufs, valid, metrics, .. } = self;
+        let bufs = dbufs.cur_mut();
+        for (lane_idx, lane) in lanes.iter_mut().enumerate() {
             let Lane::Busy(seq) = lane else { continue };
-            let op = self.bufs.ops[lane_idx];
+            let op = bufs.ops[lane_idx];
             if !op.is_active() {
                 continue;
             }
             // rebuild this lane's mask region only if its occupant changed
-            self.valid.sync(lane_idx, &seq.cache);
+            valid.sync(lane_idx, &seq.cache);
             if op.is_decode() {
-                self.bufs.tokens[lane_idx * c] = seq.stream_token(seq.fed) as i32;
-                self.bufs.pos[lane_idx * c] = seq.fed as i32;
-                self.bufs.in_mask[lane_idx * c] = 1.0;
+                bufs.tokens[lane_idx * c] = seq.stream_token(seq.fed) as i32;
+                bufs.pos[lane_idx * c] = seq.fed as i32;
+                bufs.in_mask[lane_idx * c] = 1.0;
                 let mut injected = 0usize;
                 let mut per_head = Vec::with_capacity(l * h);
                 for li in 0..l {
@@ -592,39 +699,39 @@ impl<B: ModelBackend> Engine<B> {
                         // *before* the call (the graph writes inject k/v
                         // ahead of attention)
                         if let Some((slot, me)) = seq.inject.plans[flat].take() {
-                            self.bufs.inject_flag[base] = 1.0;
-                            self.bufs.inject_slot[base] = slot as i32;
+                            bufs.inject_flag[base] = 1.0;
+                            bufs.inject_slot[base] = slot as i32;
                             let kb = base * dims.dh;
-                            self.bufs.inject_k[kb..kb + dims.dh]
+                            bufs.inject_k[kb..kb + dims.dh]
                                 .copy_from_slice(&me.key);
-                            self.bufs.inject_v[kb..kb + dims.dh]
+                            bufs.inject_v[kb..kb + dims.dh]
                                 .copy_from_slice(&me.val);
                             seq.cache.head_mut(li, hi).insert_kv(
                                 slot, me.entry, Some(&me.key), Some(&me.val));
-                            self.valid.set(lane_idx, li, hi, slot, true);
+                            valid.set(lane_idx, li, hi, slot, true);
                             injected += 1;
-                            self.metrics.injections += 1;
+                            metrics.injections += 1;
                         }
                         let head = seq.cache.head(li, hi);
                         let slot = head
                             .free_slot()
                             .context("no free slot (arena invariant broken)")?;
-                        self.bufs.write_slots[base * c] = slot as i32;
+                        bufs.write_slots[base * c] = slot as i32;
                         per_head.push(slot);
                     }
                 }
                 if injected > 0 {
-                    self.bufs.ops[lane_idx] = LaneOp::Inject { slots: injected };
+                    bufs.ops[lane_idx] = LaneOp::Inject { slots: injected };
                     any_inject = true;
                 }
                 chunk_info[lane_idx] = Some((1, per_head));
             } else if let LaneOp::Chunk { tokens: real_c } = op {
                 let start = seq.fed;
                 for ci in 0..real_c {
-                    self.bufs.tokens[lane_idx * c + ci] =
+                    bufs.tokens[lane_idx * c + ci] =
                         seq.prompt[start + ci] as i32;
-                    self.bufs.pos[lane_idx * c + ci] = (start + ci) as i32;
-                    self.bufs.in_mask[lane_idx * c + ci] = 1.0;
+                    bufs.pos[lane_idx * c + ci] = (start + ci) as i32;
+                    bufs.in_mask[lane_idx * c + ci] = 1.0;
                 }
                 let mut per_head = Vec::with_capacity(l * h * real_c);
                 for li in 0..l {
@@ -639,7 +746,7 @@ impl<B: ModelBackend> Engine<B> {
                                 per_head.len() - before);
                         let base = ((li * b + lane_idx) * h + hi) * c;
                         for ci in 0..real_c {
-                            self.bufs.write_slots[base + ci] =
+                            bufs.write_slots[base + ci] =
                                 per_head[before + ci] as i32;
                         }
                     }
@@ -647,29 +754,34 @@ impl<B: ModelBackend> Engine<B> {
                 chunk_info[lane_idx] = Some((real_c, per_head));
             }
         }
+        }
 
-        span = self.obs.journal.record(self.tick_no, Phase::Assemble,
-                                       kind_label, n_active as u32, span);
+        self.obs.journal.record(self.tick_no, Phase::Assemble, kind_label,
+                                n_active as u32, span);
 
-        // --- execute -----------------------------------------------------
+        // --- submit ------------------------------------------------------
+        // the backend fully consumes the plan's borrowed buffers before
+        // returning (pipelining contract), so the double buffer may flip
+        // and host state may mutate while the step runs
         let want_attn = self.policy.needs_attention() || self.record_gates;
         let want_kv = self.policy.needs_keys();
         let t0 = Instant::now();
-        let out = {
-            let plan = self.bufs.as_plan(self.valid.as_slice(), any_inject,
-                                         want_attn, want_kv);
-            self.backend.execute(&plan)?
+        let token = {
+            let Engine { backend, dbufs, valid, .. } = self;
+            let plan = dbufs.cur().as_plan(valid.as_slice(), any_inject,
+                                           want_attn, want_kv);
+            backend.submit(&plan)?
         };
-        span = self.obs.journal.record(self.tick_no, Phase::Execute,
-                                       kind_label, n_active as u32, span);
-        self.metrics.step_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        let exec_span = self.obs.journal.begin_span(
+            self.tick_no, Phase::Execute, kind_label, n_active as u32,
+            TID_DEVICE);
         self.metrics.lane_occupancy.push(n_active as f64);
         match kind {
             TickKind::Decode => self.metrics.decode_steps += 1,
             TickKind::Prefill => self.metrics.prefill_chunks += 1,
             TickKind::Fused => {
-                let n_dec =
-                    self.bufs.ops.iter().filter(|o| o.is_decode()).count();
+                let n_dec = self.dbufs.cur().ops.iter()
+                    .filter(|o| o.is_decode()).count();
                 self.metrics.mixed_steps += 1;
                 self.metrics.mixed_decode_lanes.push(n_dec as f64);
                 self.metrics.mixed_chunk_lanes
@@ -677,15 +789,46 @@ impl<B: ModelBackend> Engine<B> {
                 self.metrics.mixed_inject_steps += any_inject as u64;
             }
         }
+        let buf = self.dbufs.flip();
+        self.in_flight = Some(InFlight {
+            token,
+            tick_no: self.tick_no,
+            kind,
+            kind_label,
+            buf,
+            chunk_info,
+            want_attn,
+            want_kv,
+            n_active,
+            t0,
+            exec_span,
+        });
+        Ok(true)
+    }
+
+    /// The wait half of the step pipeline: block on the in-flight step (a
+    /// no-op when none is), close its device Execute span, and run the
+    /// shared per-lane postprocess sweep against the retired side of the
+    /// double buffer.  Lanes seated after the submit (overlap-window
+    /// admission) have no `chunk_info` entry and are skipped untouched.
+    fn complete_in_flight(&mut self) -> Result<()> {
+        let Some(fl) = self.in_flight.take() else { return Ok(()) };
+        let out = self.backend.wait(fl.token)?;
+        self.obs.journal.end_span(fl.exec_span);
+        self.metrics.step_us.push(fl.t0.elapsed().as_secs_f64() * 1e6);
+        let span = self.obs.journal.now_us();
 
         // --- postprocess (ONE shared per-lane helper) --------------------
-        let fused = kind == TickKind::Fused;
+        let dims = self.backend.dims();
+        let (b, m) = (self.backend.batch(), self.backend.slots());
+        let fused = fl.kind == TickKind::Fused;
         let budget = self.cfg.budget;
         let eos_token = self.eos_token;
-        let tick_no = self.tick_no;
+        let mut chunk_info = fl.chunk_info;
         let mut finished: Vec<usize> = Vec::new();
-        let Engine { lanes, policy, valid, metrics, sampler, bufs, obs, .. } =
+        let Engine { lanes, policy, valid, metrics, sampler, dbufs, obs, .. } =
             self;
+        let bufs = dbufs.get(fl.buf);
         for (lane_idx, lane) in lanes.iter_mut().enumerate() {
             let Lane::Busy(seq) = lane else { continue };
             let Some((real_c, per_head)) = chunk_info[lane_idx].take() else {
@@ -693,16 +836,36 @@ impl<B: ModelBackend> Engine<B> {
             };
             let done = postprocess_lane(
                 seq, lane_idx, bufs.ops[lane_idx], real_c, &per_head, &out,
-                &dims, b, m, budget, fused, want_attn, want_kv, policy, valid,
-                metrics, sampler, &mut obs.retention, eos_token, tick_no)?;
+                &dims, b, m, budget, fused, fl.want_attn, fl.want_kv, policy,
+                valid, metrics, sampler, &mut obs.retention, eos_token,
+                fl.tick_no)?;
             if done {
                 finished.push(lane_idx);
             }
         }
-        obs.journal.record(tick_no, Phase::Postprocess, kind_label,
-                           n_active as u32, span);
+        obs.journal.record(fl.tick_no, Phase::Postprocess, fl.kind_label,
+                           fl.n_active as u32, span);
         self.finish_lanes(finished)?;
-        Ok(true)
+        self.process_pending_closes();
+        Ok(())
+    }
+
+    /// Flush deferred eager-park snapshots (queued by `finish_lanes` on
+    /// the pipelined loop) in one batched swap.  Lanes whose occupant
+    /// changed since parking are skipped — an in-place resume or an
+    /// admission preemption already resolved them.
+    fn drain_chained_swaps(&mut self) -> Result<()> {
+        if self.chained_parks.is_empty() {
+            return Ok(());
+        }
+        let mut parked: Vec<usize> = std::mem::take(&mut self.chained_parks)
+            .into_iter()
+            .filter(|&i| matches!(self.lanes[i], Lane::Parked(_)))
+            .collect();
+        parked.sort_unstable();
+        parked.dedup();
+        self.execute_swap(&parked, &[])?;
+        Ok(())
     }
 
     /// Retire the finished sequence on `lane_idx`.  Returns true when the
@@ -797,7 +960,10 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     /// Retire every lane in `finished`; under the eager swap policy, all
-    /// freshly parked lanes snapshot to the host store in ONE batched swap.
+    /// freshly parked lanes snapshot to the host store in ONE batched swap
+    /// — immediately on the serial loop, deferred to the next tick's
+    /// overlap window on the pipelined one (the snapshot transfer then
+    /// rides alongside the next step instead of the critical path).
     fn finish_lanes(&mut self, finished: Vec<usize>) -> Result<()> {
         let mut parked: Vec<usize> = Vec::new();
         for lane_idx in finished {
@@ -806,7 +972,11 @@ impl<B: ModelBackend> Engine<B> {
             }
         }
         if self.cfg.swap_policy == "eager" {
-            self.execute_swap(&parked, &[])?;
+            if self.cfg.pipeline {
+                self.chained_parks.extend(parked);
+            } else {
+                self.execute_swap(&parked, &[])?;
+            }
         }
         Ok(())
     }
@@ -843,6 +1013,14 @@ impl<B: ModelBackend> Engine<B> {
     /// `GET /metrics` payload).
     pub fn prometheus_text(&self) -> String {
         let mut samples = self.metrics.samples();
+        // per-direction swap wall time straight off the backend's transfer
+        // accounting (the engine's swap_out_us/swap_in_us series time the
+        // whole batched call; these split download from upload)
+        let t = self.backend.swap_traffic();
+        samples.push(obs::Sample::counter("trimkv_swap_lane_out_us_total",
+                                          (t.out_ns / 1000) as f64));
+        samples.push(obs::Sample::counter("trimkv_swap_lane_in_us_total",
+                                          (t.in_ns / 1000) as f64));
         samples.extend(self.obs.samples());
         obs::render_prometheus(&samples)
     }
@@ -1647,7 +1825,7 @@ mod tests {
     }
 
     #[test]
-    fn chrome_trace_spans_are_valid_and_monotone() {
+    fn chrome_trace_spans_are_valid_and_monotone_per_track() {
         let mut e = mixed_engine(2, 16, true, false, 0);
         e.submit(Request::new(0, vec![1, 40], 6)).unwrap();
         e.submit(Request::new(1, (0..40).map(|i| 32 + i).collect(), 2))
@@ -1657,18 +1835,27 @@ mod tests {
         let doc = crate::util::json::Json::parse(&text).unwrap();
         let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
         assert!(!evs.is_empty());
-        let mut prev_end = 0.0;
+        // host and device are separate tracks: Execute spans legitimately
+        // overlap the next tick's host spans (that IS the pipelining), but
+        // within one track spans must never overlap
+        let mut prev_end = std::collections::BTreeMap::new();
         let mut cats = std::collections::BTreeSet::new();
         for ev in evs {
             assert_eq!(ev.str_field("ph").unwrap(), "X");
+            let tid = ev.get("tid").unwrap().as_f64().unwrap() as u32;
             let ts = ev.get("ts").unwrap().as_f64().unwrap();
             let dur = ev.get("dur").unwrap().as_f64().unwrap();
-            assert!(ts >= prev_end, "spans overlap: ts {ts} < end {prev_end}");
-            prev_end = ts + dur;
+            let end = prev_end.get(&tid).copied().unwrap_or(0.0);
+            assert!(ts >= end, "tid {tid} spans overlap: ts {ts} < end {end}");
+            prev_end.insert(tid, ts + dur);
             cats.insert(ev.str_field("cat").unwrap().to_string());
         }
         assert!(cats.contains("mixed"),
                 "fused ticks must be labelled mixed, got {cats:?}");
+        assert!(prev_end.contains_key(&crate::obs::TID_HOST)
+                    && prev_end.contains_key(&crate::obs::TID_DEVICE),
+                "want host + device tracks, got {:?}",
+                prev_end.keys().collect::<Vec<_>>());
     }
 
     #[test]
@@ -1690,20 +1877,156 @@ mod tests {
         // agrees with the engine's
         assert!(text.contains(&line("trimkv_retention_evictions_total",
                                     e.metrics.evictions)));
+        assert!(text.contains(&line("trimkv_swap_batches_overlapped_total",
+                                    e.metrics.swap_batches_overlapped)));
+        // per-direction swap wall time from the backend traffic counters
+        assert!(text.contains("trimkv_swap_lane_out_us_total"));
+        assert!(text.contains("trimkv_swap_lane_in_us_total"));
+        assert!(text.contains("trimkv_overlap_us_total"));
         assert!(text.contains("trimkv_step_us_count"));
         assert!(text.contains("trimkv_ttft_us_bucket{le=\"+Inf\"}"));
     }
 
     #[test]
-    fn host_gap_is_structurally_zero_on_the_serial_loop() {
-        let mut e = mixed_engine(2, 16, true, false, 0);
-        e.submit(Request::new(0, vec![1, 40], 8)).unwrap();
-        e.submit(Request::new(1, (0..30).map(|i| 32 + i).collect(), 4))
-            .unwrap();
+    fn host_gap_is_structurally_zero_on_both_loop_shapes() {
+        // availability for the step plan is computed after the in-flight
+        // step completes, so neither the pipelined loop (default) nor the
+        // serial one can leave runnable work unstepped within a tick
+        for pipeline in [true, false] {
+            let mut e = mixed_engine(2, 16, true, false, 0);
+            e.cfg.pipeline = pipeline;
+            e.submit(Request::new(0, vec![1, 40], 8)).unwrap();
+            e.submit(Request::new(1, (0..30).map(|i| 32 + i).collect(), 4))
+                .unwrap();
+            e.run_to_completion().unwrap();
+            e.tick().unwrap(); // an idle tick is not a gap either
+            assert_eq!(e.obs.journal.host_gap_ticks, 0, "pipeline={pipeline}");
+            assert_eq!(e.obs.journal.host_gap_us, 0, "pipeline={pipeline}");
+        }
+    }
+
+    #[test]
+    fn pipelined_loop_overlaps_host_work_and_matches_serial_streams() {
+        // session churn over 2 lanes with real (synthetic) device latency:
+        // the pipelined loop must emit bit-identical streams, keep the
+        // host-gap counter at zero, and actually record overlap windows
+        let mut outs = Vec::new();
+        for pipeline in [true, false] {
+            let cfg = EngineConfig {
+                policy: "trimkv".into(),
+                budget: 16,
+                batch: 2,
+                chunked_prefill: true,
+                mixed_ticks: true,
+                swap_policy: "eager".into(),
+                pipeline,
+                ..Default::default()
+            };
+            let backend =
+                MockBackend::new(2, 16 + 20).with_synthetic_latency_us(200);
+            let mut e = Engine::new(backend, cfg, 2).unwrap();
+            for i in 0..5u64 {
+                let p: Vec<u32> = (0..(5 + 7 * i as usize))
+                    .map(|j| 32 + j as u32)
+                    .collect();
+                e.submit(Request::new(i, p, 4)
+                         .with_session(format!("s{}", i % 3)))
+                    .unwrap();
+            }
+            let mut rs = e.run_to_completion().unwrap();
+            rs.sort_by_key(|r| r.id);
+            assert_eq!(rs.len(), 5);
+            if pipeline {
+                assert_eq!(e.obs.journal.host_gap_ticks, 0);
+                assert!(e.obs.journal.overlap_ns > 0,
+                        "pipelined run must record overlap windows");
+            }
+            outs.push(rs.into_iter()
+                      .map(|r| (r.id, r.tokens))
+                      .collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1], "pipelining changed a token stream");
+    }
+
+    #[test]
+    fn chained_eager_snapshot_rides_the_overlap_window() {
+        // an eager park that happens while another lane keeps decoding is
+        // deferred into the next overlap window, so its swap-out transfers
+        // while a step is in flight instead of stalling the tick
+        let cfg = EngineConfig {
+            policy: "trimkv".into(),
+            budget: 16,
+            batch: 2,
+            chunked_prefill: false,
+            swap_policy: "eager".into(),
+            ..Default::default() // pipeline defaults to on
+        };
+        let mut e = Engine::new(MockBackend::new(2, 36), cfg, 2).unwrap();
+        let long: Vec<u32> = (0..10).map(|i| 32 + i).collect();
+        e.submit(Request::new(1, long, 2).with_session("x")).unwrap();
+        e.submit(Request::new(2, vec![1, 40], 2).with_session("y")).unwrap();
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(e.metrics.swap_outs, 2, "eager: both turns snapshot");
+        assert!(e.metrics.swap_batches_overlapped >= 1,
+                "the early finisher's snapshot must ride an overlap window");
+        assert_eq!(e.sessions().len(), 2);
+        assert!(e.idle(), "chained snapshots must all drain by idle");
+    }
+
+    #[test]
+    fn same_round_lane_claim_chases_the_snapshot() {
+        // regression for the carried admission bug: a turn whose session's
+        // parked lane is claimed by an earlier request in the SAME round
+        // used to defer a full tick — it must now seat in that round, with
+        // its snapshot pulled back through the chained chase swap
+        let mut e = engine("trimkv", 16, 2); // lazy swap policy
+        e.submit(Request::new(1, vec![1, 40], 2).with_session("a")).unwrap();
         e.run_to_completion().unwrap();
-        e.tick().unwrap(); // an idle tick is not a gap either
-        assert_eq!(e.obs.journal.host_gap_ticks, 0);
-        assert_eq!(e.obs.journal.host_gap_us, 0);
+        e.submit(Request::new(2, vec![1, 41], 2).with_session("b")).unwrap();
+        e.run_to_completion().unwrap();
+        // one round: a fresh request claims "a"'s LRU lane while both
+        // sessions have queued turns
+        e.submit(Request::new(3, vec![1, 50, 51], 2)).unwrap();
+        e.submit(Request::new(4, vec![60], 2).with_session("a")).unwrap();
+        e.submit(Request::new(5, vec![70], 2).with_session("b")).unwrap();
+        e.tick().unwrap();
+        assert!(matches!(&e.lanes[0], Lane::Busy(s) if s.session.is_none()),
+                "the fresh request claims the LRU lane");
+        assert!(matches!(&e.lanes[1], Lane::Busy(s)
+                         if s.session.as_deref() == Some("a")),
+                "a's turn must seat in the same round, not defer a tick");
+        assert_eq!(e.metrics.swap_outs, 2, "both parked lanes preempted");
+        assert_eq!(e.metrics.swap_ins, 1, "a chased its snapshot back");
+        assert_eq!(e.metrics.resumes_in_place, 0);
+        let rs = e.run_to_completion().unwrap();
+        assert_eq!(rs.len(), 3);
+        let mut by_id: Vec<(u64, Vec<u32>)> =
+            rs.into_iter().map(|r| (r.id, r.tokens)).collect();
+        by_id.sort_by_key(|&(id, _)| id);
+        // chased history survives: both dialogues continue their streams
+        assert_eq!(by_id[1], (4, vec![61, 62]));
+        assert_eq!(by_id[2], (5, vec![71, 72]));
+        e.flush_sessions().unwrap(); // lazy: lanes still hold the parks
+        assert_eq!(e.sessions().get("a").unwrap().history,
+                   vec![1, 40, 41, 42, 60, 61, 62]);
+    }
+
+    #[test]
+    fn flush_sessions_drains_the_in_flight_step_before_snapshotting() {
+        let mut e = engine("trimkv", 16, 1); // lazy, pipeline defaults on
+        e.submit(Request::new(1, vec![1, 40], 1).with_session("s")).unwrap();
+        assert!(e.tick().unwrap());
+        assert!(e.tick().unwrap());
+        assert!(e.in_flight.is_some(), "a step must be in flight");
+        // the in-flight step samples the final token: flush must resolve
+        // it (finish + park) before collecting snapshots
+        e.flush_sessions().unwrap();
+        assert!(e.in_flight.is_none());
+        let snap = e.sessions().get("s").expect("session reaches the store");
+        assert_eq!(snap.history, vec![1, 40, 41]);
+        assert_eq!(e.take_responses().len(), 1);
+        assert!(e.idle());
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! lane, Sarathi-style splitting the tick token budget across mid-prefill
 //! lanes (decoders reserved first).  The engine then fills the `StepBufs`
 //! scratch (tokens, masks, write slots, retrieval injections) and hands the
-//! assembled plan to `ModelBackend::execute` — the same pipeline for
-//! decode-only, prefill-only, mixed and inject-carrying steps.
+//! assembled plan to `ModelBackend::submit` — the same pipeline for
+//! decode-only, prefill-only, mixed and inject-carrying steps.  [`DoubleBufs`]
+//! holds two of them so the pipelined loop can assemble the next tick while
+//! the previous one is still in flight.
 
 use crate::model_meta::ModelDims;
 use crate::runtime::{LaneOp, StepPlan};
@@ -164,6 +166,47 @@ impl StepBufs {
     }
 }
 
+/// Two [`StepBufs`] and a cursor: the pipelined engine assembles tick t+1
+/// into one buffer while tick t's plan — borrowed from the other at
+/// `submit` — is still pinned by the in-flight step's postprocess.  The
+/// in-flight bookkeeping records the index `flip` retired, so postprocess
+/// reads the exact buffer its step was assembled from.
+pub(crate) struct DoubleBufs {
+    bufs: [StepBufs; 2],
+    cur: usize,
+}
+
+impl DoubleBufs {
+    pub fn new(dims: &ModelDims, b: usize, c: usize) -> DoubleBufs {
+        DoubleBufs {
+            bufs: [StepBufs::new(dims, b, c), StepBufs::new(dims, b, c)],
+            cur: 0,
+        }
+    }
+
+    /// The buffer the next tick assembles into.
+    pub fn cur(&self) -> &StepBufs {
+        &self.bufs[self.cur]
+    }
+
+    pub fn cur_mut(&mut self) -> &mut StepBufs {
+        &mut self.bufs[self.cur]
+    }
+
+    /// Pinned access for an in-flight step's postprocess.
+    pub fn get(&self, idx: usize) -> &StepBufs {
+        &self.bufs[idx]
+    }
+
+    /// Retire the current buffer to its just-submitted step and expose the
+    /// other side for the next tick's assembly; returns the retired index.
+    pub fn flip(&mut self) -> usize {
+        let retired = self.cur;
+        self.cur ^= 1;
+        retired
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,5 +298,21 @@ mod tests {
         let valid = vec![0.0; 2 * 2 * 2 * 6];
         let plan = bufs.as_plan(&valid, false, false, false);
         assert!(plan.inject_flag.is_none());
+    }
+
+    #[test]
+    fn double_bufs_flip_preserves_the_retired_side() {
+        let d = dims();
+        let mut db = DoubleBufs::new(&d, 2, 4);
+        db.cur_mut().tokens[0] = 41;
+        let retired = db.flip();
+        assert_eq!(retired, 0);
+        // the in-flight side is untouched by writes to the new current side
+        db.cur_mut().tokens[0] = 99;
+        assert_eq!(db.get(retired).tokens[0], 41);
+        assert_eq!(db.cur().tokens[0], 99);
+        // flipping again returns to the first side
+        assert_eq!(db.flip(), 1);
+        assert_eq!(db.cur().tokens[0], 41);
     }
 }

@@ -67,6 +67,10 @@ fn common_spec() -> trimkv::util::cli::SpecBuilder {
         .opt("tick-token-budget", "0",
              "token budget per mixed tick, decoders reserved first \
               (Sarathi-style; 0 = unbounded)")
+        .opt("pipeline", "true",
+             "pipelined tick loop: submit the step async and overlap the \
+              next tick's admission/swap host work with device execution \
+              (token streams stay bit-identical; false = serial loop)")
         .opt("trace-capacity", "8192",
              "flight-recorder journal capacity, in events (hard memory cap)")
         .flag("no-trace", "disable the per-tick flight recorder")

@@ -42,6 +42,9 @@ pub struct EngineMetrics {
     pub swap_outs: u64,                  // lanes preempted to the host store
     pub swap_ins: u64,                   // lanes restored from the host store
     pub swap_batches: u64,               // batched swap_lanes calls executed
+    /// swap batches issued while a step was in flight (pipelined loop):
+    /// transfers that rode an overlap window instead of the critical path
+    pub swap_batches_overlapped: u64,
     pub preemptions: u64,                // parked lane evicted for new work
     pub resumes_in_place: u64,           // next turn hit its parked lane
     pub ttft_us: LatencyHistogram,       // time to first token
@@ -93,6 +96,7 @@ impl EngineMetrics {
             swap_outs: 0,
             swap_ins: 0,
             swap_batches: 0,
+            swap_batches_overlapped: 0,
             preemptions: 0,
             resumes_in_place: 0,
             ttft_us: LatencyHistogram::new(),
@@ -166,8 +170,8 @@ impl EngineMetrics {
         format!(
             "sessions {} opened / {} closed / {} dropped | swaps {} out \
              (mean {:.1} us, p95 {} us) / {} in (mean {:.1} us, p95 \
-             {} us) over {} batched calls | preemptions {} | in-place \
-             resumes {}",
+             {} us) over {} batched calls ({} overlapped) | preemptions {} \
+             | in-place resumes {}",
             self.sessions_opened,
             self.sessions_closed,
             self.sessions_dropped,
@@ -178,6 +182,7 @@ impl EngineMetrics {
             self.swap_in_us.mean(),
             fmt_opt(self.swap_in_us.pct(95.0), 1),
             self.swap_batches,
+            self.swap_batches_overlapped,
             self.preemptions,
             self.resumes_in_place,
         )
@@ -206,6 +211,8 @@ impl EngineMetrics {
             ("trimkv_swap_outs_total", self.swap_outs),
             ("trimkv_swap_ins_total", self.swap_ins),
             ("trimkv_swap_batches_total", self.swap_batches),
+            ("trimkv_swap_batches_overlapped_total",
+             self.swap_batches_overlapped),
             ("trimkv_preemptions_total", self.preemptions),
             ("trimkv_resumes_in_place_total", self.resumes_in_place),
         ]

@@ -14,7 +14,8 @@ pub mod retention;
 pub mod trace;
 
 pub use retention::{HeadHist, RetentionObs, AGE_BUCKETS, SCORE_BUCKETS};
-pub use trace::{Phase, TraceEvent, TraceJournal};
+pub use trace::{Phase, SpanHandle, TraceEvent, TraceJournal, TID_DEVICE,
+                TID_HOST};
 
 use crate::util::stats::{LatencyHistogram, StreamSummary};
 
@@ -140,6 +141,8 @@ impl EngineObs {
                             self.journal.host_gap_ticks as f64),
             Sample::counter("trimkv_host_gap_us_total",
                             self.journal.host_gap_us as f64),
+            Sample::counter("trimkv_overlap_us_total",
+                            (self.journal.overlap_ns / 1000) as f64),
             Sample::counter("trimkv_retention_evictions_total",
                             self.retention.total_evictions() as f64),
         ]
@@ -233,10 +236,12 @@ mod tests {
         let t = obs.journal.now_us();
         obs.journal.record(0, Phase::Execute, "decode", 1, t);
         obs.retention.record_eviction(0, 1, -0.1, 3);
+        obs.journal.note_overlap(2_500);
         let s = obs.samples();
         let get = |n: &str| s.iter().find(|x| x.name == n).unwrap().value;
         assert_eq!(get("trimkv_trace_events"), 1.0);
         assert_eq!(get("trimkv_host_gap_ticks_total"), 0.0);
+        assert_eq!(get("trimkv_overlap_us_total"), 2.0);
         assert_eq!(get("trimkv_retention_evictions_total"), 1.0);
         assert_prometheus_parses(&render_prometheus(&s));
     }

@@ -1,24 +1,29 @@
-//! Tick flight recorder: a bounded ring-buffer journal of `step_tick` phase
+//! Tick flight recorder: a bounded ring-buffer journal of engine-tick phase
 //! spans, exportable as Chrome-trace (`chrome://tracing` / Perfetto) JSON.
 //!
 //! One [`TraceEvent`] per phase per tick, O(1) memory per event and a hard
 //! capacity cap: once the ring is full the oldest events are overwritten
 //! (and counted in `dropped`), so the journal can run forever in serving.
-//! Phase spans chain through [`TraceJournal::record`] — the returned end
-//! timestamp is the next phase's start — which makes the exported spans
-//! monotone and non-overlapping by construction.
+//! Host-side phase spans chain through [`TraceJournal::record`] — the
+//! returned end timestamp is the next phase's start — which makes the
+//! exported spans monotone and non-overlapping per track by construction.
+//! Device execution spans are open-ended: [`TraceJournal::begin_span`] at
+//! submit, [`TraceJournal::end_span`] at wait patches the duration in
+//! place, and the span renders on its own "device" track (tid 2) so the
+//! pipelined overlap is directly visible in Perfetto.
 //!
-//! The journal also owns the device-idle accounting ROADMAP item 2 needs:
+//! The journal also owns the device-idle accounting ROADMAP item 2 needed:
 //! [`TraceJournal::note_host_gap`] counts ticks where runnable work existed
-//! but no step executed.  The current engine loop is strictly serial (a
-//! runnable tick always executes), so both gap counters are structurally
-//! zero today; they arm the moment pipelined execution lands.
+//! but no step executed — structurally zero on both the serial and the
+//! pipelined loop (a runnable tick always submits), and the CI gate that
+//! keeps it that way.  [`TraceJournal::note_overlap`] accumulates the host
+//! work done while a step was in flight (the pipelined loop's win).
 
 use std::time::Instant;
 
 use crate::util::json::Json;
 
-/// One `step_tick` phase (plus the session-swap step around it).
+/// One engine-tick phase (plus the session-swap step around it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     Plan,
@@ -40,6 +45,13 @@ impl Phase {
     }
 }
 
+/// Chrome-trace track for host-side phase spans (plan/assemble/postprocess
+/// and swaps issued from the tick loop).
+pub const TID_HOST: u32 = 1;
+/// Chrome-trace track for device execution spans (submit → wait): a
+/// separate row in Perfetto, so overlap with host work is visible.
+pub const TID_DEVICE: u32 = 2;
+
 /// One recorded phase span.  `Copy` and fixed-size: journal memory is
 /// exactly `capacity * size_of::<TraceEvent>()` no matter the uptime.
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +65,19 @@ pub struct TraceEvent {
     pub kind: &'static str,
     /// active lanes in the tick's plan (lanes moved, for a swap span)
     pub lanes: u32,
+    /// Chrome-trace track ([`TID_HOST`] or [`TID_DEVICE`])
+    pub tid: u32,
+}
+
+/// Handle to an open span begun with [`TraceJournal::begin_span`]: feed it
+/// to `end_span` to patch the duration in place.  Carries the record's
+/// sequence number so a span overwritten by ring wraparound while open is
+/// detected and skipped rather than corrupting an unrelated event.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanHandle {
+    seq: u64,
+    start_us: u64,
+    live: bool,
 }
 
 /// Bounded ring-buffer trace journal (see module docs).
@@ -65,11 +90,16 @@ pub struct TraceJournal {
     dropped: u64,
     epoch: Instant,
     enabled: bool,
-    /// ticks where runnable work existed but no step executed (serial loop:
-    /// always 0; pipelined execution will make this the device-idle metric)
+    /// ticks where runnable work existed but no step executed — the
+    /// device-idle metric, structurally zero on both loop shapes and
+    /// gated so in CI
     pub host_gap_ticks: u64,
     /// host-side microseconds accumulated across those gap ticks
     pub host_gap_us: u64,
+    /// host-side nanoseconds of useful work done while a step was in
+    /// flight (window admission, chained swaps, completed-tick
+    /// postprocess) — exposed as `trimkv_overlap_us_total`
+    pub overlap_ns: u64,
 }
 
 impl TraceJournal {
@@ -83,6 +113,7 @@ impl TraceJournal {
             enabled,
             host_gap_ticks: 0,
             host_gap_us: 0,
+            overlap_ns: 0,
         }
     }
 
@@ -118,24 +149,74 @@ impl TraceJournal {
     pub fn record(&mut self, tick: u64, phase: Phase, kind: &'static str,
                   lanes: u32, start_us: u64) -> u64 {
         let end = self.now_us();
-        if self.enabled && self.cap > 0 {
-            let ev = TraceEvent {
-                ts_us: start_us,
-                dur_us: end.saturating_sub(start_us),
-                tick,
-                phase,
-                kind,
-                lanes,
-            };
-            if self.buf.len() < self.cap {
-                self.buf.push(ev);
-            } else {
-                self.buf[self.head] = ev;
-                self.head = (self.head + 1) % self.cap;
-                self.dropped += 1;
-            }
-        }
+        self.push(TraceEvent {
+            ts_us: start_us,
+            dur_us: end.saturating_sub(start_us),
+            tick,
+            phase,
+            kind,
+            lanes,
+            tid: TID_HOST,
+        });
         end
+    }
+
+    /// Append an event to the ring, returning its sequence number (total
+    /// records ever made; `u64::MAX` when recording is off).
+    fn push(&mut self, ev: TraceEvent) -> u64 {
+        if !self.enabled || self.cap == 0 {
+            return u64::MAX;
+        }
+        let seq = self.buf.len() as u64 + self.dropped;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+        seq
+    }
+
+    /// Open a span at the current timestamp on track `tid` — used for the
+    /// device execute span, recorded at submit and still open while host
+    /// work proceeds.  The event enters the ring now (buffer order stays
+    /// chronological by start time); `end_span` patches the duration.
+    pub fn begin_span(&mut self, tick: u64, phase: Phase, kind: &'static str,
+                      lanes: u32, tid: u32) -> SpanHandle {
+        let start_us = self.now_us();
+        if !self.enabled || self.cap == 0 {
+            return SpanHandle { seq: 0, start_us, live: false };
+        }
+        let seq = self.push(TraceEvent {
+            ts_us: start_us,
+            dur_us: 0,
+            tick,
+            phase,
+            kind,
+            lanes,
+            tid,
+        });
+        SpanHandle { seq, start_us, live: true }
+    }
+
+    /// Close an open span, patching its duration in place.  A span whose
+    /// ring slot was overwritten while it was open (journal smaller than
+    /// the pipeline depth) is silently skipped.
+    pub fn end_span(&mut self, h: SpanHandle) {
+        if !h.live {
+            return;
+        }
+        let total = self.buf.len() as u64 + self.dropped;
+        if total.saturating_sub(h.seq) <= self.cap as u64 {
+            let idx = (h.seq % self.cap as u64) as usize;
+            self.buf[idx].dur_us = self.now_us().saturating_sub(h.start_us);
+        }
+    }
+
+    /// Accumulate host work performed while a step was in flight.
+    pub fn note_overlap(&mut self, ns: u64) {
+        self.overlap_ns += ns;
     }
 
     /// Device-idle accounting: a tick that had runnable work but executed
@@ -168,7 +249,7 @@ impl TraceJournal {
                     ("ts", Json::num(e.ts_us as f64)),
                     ("dur", Json::num(e.dur_us as f64)),
                     ("pid", Json::num(1.0)),
-                    ("tid", Json::num(1.0)),
+                    ("tid", Json::num(e.tid as f64)),
                     ("args", Json::obj(vec![
                         ("tick", Json::num(e.tick as f64)),
                         ("lanes", Json::num(e.lanes as f64)),
@@ -240,6 +321,49 @@ mod tests {
         assert_eq!(evs[0].str_field("cat").unwrap(), "chunk");
         assert_eq!(evs[0].str_field("ph").unwrap(), "X");
         assert_eq!(evs[0].path("args.tick").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn begin_end_span_patches_duration_in_place() {
+        let mut j = TraceJournal::new(16, true);
+        let h = j.begin_span(3, Phase::Execute, "decode", 2, TID_DEVICE);
+        // host work recorded while the span is open: buffer stays
+        // chronological because the open span entered at begin time
+        let t = j.now_us();
+        j.record(3, Phase::Postprocess, "decode", 2, t);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        j.end_span(h);
+        let evs: Vec<&TraceEvent> = j.events().collect();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].phase, Phase::Execute);
+        assert_eq!(evs[0].tid, TID_DEVICE);
+        assert!(evs[0].dur_us >= 2000, "duration not patched: {:?}", evs[0]);
+        assert_eq!(evs[1].tid, TID_HOST);
+        assert!(evs[0].ts_us <= evs[1].ts_us, "buffer order not chronological");
+    }
+
+    #[test]
+    fn end_span_skips_slots_overwritten_while_open() {
+        let mut j = TraceJournal::new(2, true);
+        let h = j.begin_span(0, Phase::Execute, "decode", 1, TID_DEVICE);
+        let mut t = j.now_us();
+        for tick in 1..5u64 {
+            t = j.record(tick, Phase::Plan, "decode", 1, t);
+        }
+        j.end_span(h); // slot long since recycled: must not corrupt it
+        for ev in j.events() {
+            assert_eq!(ev.phase, Phase::Plan, "stale end_span hit {ev:?}");
+        }
+    }
+
+    #[test]
+    fn disabled_journal_spans_are_inert_and_overlap_still_counts() {
+        let mut j = TraceJournal::new(8, false);
+        let h = j.begin_span(0, Phase::Execute, "decode", 1, TID_DEVICE);
+        j.end_span(h);
+        assert!(j.is_empty());
+        j.note_overlap(1500);
+        assert_eq!(j.overlap_ns, 1500);
     }
 
     #[test]

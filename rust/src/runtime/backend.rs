@@ -2,7 +2,12 @@
 //!
 //! The contract is ONE declarative step: the engine assembles a [`StepPlan`]
 //! — a [`LaneOp`] per batch lane plus the fused flat operand buffers — and
-//! the backend executes it through whatever graph is cheapest.
+//! the backend executes it through whatever graph is cheapest.  Execution
+//! is asynchronous: `submit` enqueues the plan and returns a [`StepToken`],
+//! `wait` blocks for the outputs — so the engine can overlap next-tick
+//! assembly, last-tick postprocess and chained `swap_lanes` transfers with
+//! the step in flight.  `execute` remains as the serial submit+wait
+//! convenience for callers that do not pipeline.
 //!
 //! `PjrtBackend` executes the HLO artifacts on the PJRT CPU client with the
 //! KV caches held device-resident (only logits / gate scores / attention
@@ -15,6 +20,8 @@
 //! session swap) — the only supported `cache_layout`.  `MockBackend` is a
 //! deterministic stand-in used by unit/property tests so the scheduler,
 //! cache manager and policies are testable without artifacts.
+
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
@@ -178,20 +185,47 @@ pub struct StepOut {
     pub v_chunk: Vec<f32>,    // [L, B, H, cols, dh]
 }
 
+/// Handle to a submitted, not-yet-waited step (see [`ModelBackend::submit`]).
+/// Single-use and backend-scoped: passing a stale or foreign token to
+/// `wait` is an error, never silent data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepToken(u64);
+
 pub trait ModelBackend: Send {
     fn dims(&self) -> ModelDims;
     fn batch(&self) -> usize;
     fn slots(&self) -> usize;
     fn chunk(&self) -> usize;
 
-    /// THE step entrypoint: execute one declarative [`StepPlan`].
+    /// THE step entrypoint, async half 1: validate and enqueue one
+    /// declarative [`StepPlan`], returning a [`StepToken`] for `wait`.
     /// Implementations must keep exact per-lane token accounting — every
     /// `in_mask == 1` position of an active lane advances that lane by
     /// exactly one token, decode and chunk lanes alike, in the one call —
     /// and are free to dispatch to whichever graph(s) realize the plan
     /// cheapest, as long as the result is lane-for-lane equivalent to the
     /// fused semantics.
-    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut>;
+    ///
+    /// Pipelining contract: the plan's borrowed buffers are fully consumed
+    /// by the time `submit` returns — the caller may immediately reuse or
+    /// mutate them (double-buffered assembly) and may issue `swap_lanes`
+    /// while the step is in flight; such chained work observes the
+    /// post-step cache state (in-order queue semantics).  At most one step
+    /// may be in flight per backend; a second `submit` is an error.
+    fn submit(&mut self, plan: &StepPlan) -> Result<StepToken>;
+
+    /// Async half 2: block until the in-flight step completes and download
+    /// its outputs.  The token must be the one the matching `submit`
+    /// returned — stale/foreign tokens and double waits are errors.
+    fn wait(&mut self, token: StepToken) -> Result<StepOut>;
+
+    /// Serial convenience composing the async pair.  Callers that do not
+    /// pipeline (tests, benches, `pipeline = off`) need nothing else, and
+    /// implementations get it for free from `submit`/`wait`.
+    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut> {
+        let token = self.submit(plan)?;
+        self.wait(token)
+    }
 
     /// Zero the device-resident KV caches (new evaluation run).
     fn reset_cache(&mut self) -> Result<()>;
@@ -221,6 +255,44 @@ pub trait ModelBackend: Send {
 // PJRT backend
 // ---------------------------------------------------------------------------
 
+/// Step outputs still device-resident between `submit` and `wait`: only
+/// the buffers the plan's want flags kept are held, and nothing crosses
+/// the device boundary until the engine asks for it.
+struct DeviceStepOut {
+    cols: usize,
+    logits: xla::PjRtBuffer,
+    log_beta: xla::PjRtBuffer,
+    attn_slots: Option<xla::PjRtBuffer>,
+    attn_chunk: Option<xla::PjRtBuffer>,
+    k_chunk: Option<xla::PjRtBuffer>,
+    v_chunk: Option<xla::PjRtBuffer>,
+}
+
+impl DeviceStepOut {
+    fn download(self) -> Result<StepOut> {
+        fn opt(buf: &Option<xla::PjRtBuffer>) -> Result<Vec<f32>> {
+            buf.as_ref().map_or(Ok(Vec::new()), to_host)
+        }
+        Ok(StepOut {
+            cols: self.cols,
+            logits: to_host(&self.logits)?,
+            log_beta: to_host(&self.log_beta)?,
+            attn_slots: opt(&self.attn_slots)?,
+            attn_chunk: opt(&self.attn_chunk)?,
+            k_chunk: opt(&self.k_chunk)?,
+            v_chunk: opt(&self.v_chunk)?,
+        })
+    }
+}
+
+/// What `PjrtBackend::submit` parks for `wait`: device buffers on the
+/// graph paths, an already-host tuple on the split-dispatch degrade path
+/// (which merges per-kind host outputs and is synchronous by nature).
+enum PendingOut {
+    Device(DeviceStepOut),
+    Host(StepOut),
+}
+
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     decode_exe: xla::PjRtLoadedExecutable,
@@ -234,6 +306,8 @@ pub struct PjrtBackend {
     b: usize,
     m: usize,
     c: usize,
+    next_token: u64,
+    pending: Option<(StepToken, PendingOut)>,
 }
 
 impl PjrtBackend {
@@ -322,6 +396,8 @@ impl PjrtBackend {
             b,
             m,
             c: meta.chunk,
+            next_token: 0,
+            pending: None,
         })
     }
 
@@ -338,7 +414,7 @@ impl PjrtBackend {
 
     /// Pure-decode dispatch: gather column 0 of the plan into the decode
     /// graph's `[B]`/`[L,B,H]` operands and return cols=1 outputs.
-    fn exec_decode(&mut self, plan: &StepPlan) -> Result<StepOut> {
+    fn exec_decode(&mut self, plan: &StepPlan) -> Result<DeviceStepOut> {
         let (l, b, h) = self.lbh();
         let (c, dh) = (self.c, self.dims.dh);
         let mut tokens = vec![0i32; b];
@@ -375,32 +451,37 @@ impl PjrtBackend {
         ensure!(outs.len() == 6 + ncache,
                 "decode graph returned {} outputs, expected {}", outs.len(),
                 6 + ncache);
-        // order: logits, kc.., vc.., valid, log_beta, attn, k_new, v_new
-        // (perf: skip device->host transfers the policy will not consume)
-        let iv = 1 + ncache; // index of the (unused) valid output
-        let out = StepOut {
-            cols: 1,
-            logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[iv + 1])?,
-            attn_slots: if plan.want_attn {
-                to_host(&outs[iv + 2])?
-            } else {
-                Vec::new()
-            },
-            attn_chunk: Vec::new(),
-            k_chunk: if plan.want_kv { to_host(&outs[iv + 3])? } else { Vec::new() },
-            v_chunk: if plan.want_kv { to_host(&outs[iv + 4])? } else { Vec::new() },
-        };
+        // order: logits, kc.., vc.., valid, log_beta, attn, k_new, v_new.
+        // Install the updated cache buffers immediately (the device queue
+        // is in order, so chained swaps observe the post-step cache); the
+        // rest stays device-resident until `wait`, and the want flags
+        // decide at submit which buffers survive to be downloaded at all.
         let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
         self.cache.update_from_outputs(cache_bufs)?;
-        Ok(out)
+        let mut outs = outs.into_iter();
+        let logits = outs.next().context("missing logits output")?;
+        let _valid = outs.next();
+        let log_beta = outs.next().context("missing log_beta output")?;
+        let attn = outs.next().context("missing attn output")?;
+        let k_new = outs.next().context("missing k_new output")?;
+        let v_new = outs.next().context("missing v_new output")?;
+        Ok(DeviceStepOut {
+            cols: 1,
+            logits,
+            log_beta,
+            attn_slots: plan.want_attn.then_some(attn),
+            attn_chunk: None,
+            k_chunk: plan.want_kv.then_some(k_new),
+            v_chunk: plan.want_kv.then_some(v_new),
+        })
     }
 
     /// Pure-chunk dispatch: the plan's fused buffers ARE the prefill
     /// graph's operands.  `tokens`/`in_mask`/`write_slots` may be the
     /// caller-modified copies of the degraded mixed path.
     fn exec_prefill(&mut self, tokens: &[i32], pos: &[i32], in_mask: &[f32],
-                    valid: &[f32], write_slots: &[i32]) -> Result<StepOut> {
+                    valid: &[f32], write_slots: &[i32])
+        -> Result<DeviceStepOut> {
         let (l, b, h) = self.lbh();
         let (m, c) = (self.m, self.c);
         let tok_b = self.upload_i32(tokens, &[b, c])?;
@@ -426,25 +507,31 @@ impl PjrtBackend {
                 7 + ncache);
         // order: logits, kc.., vc.., valid, log_beta, attn_slots,
         //        attn_chunk, k_chunk, v_chunk
-        let iv = 1 + ncache;
-        let out = StepOut {
-            cols: c,
-            logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[iv + 1])?,
-            attn_slots: to_host(&outs[iv + 2])?,
-            attn_chunk: to_host(&outs[iv + 3])?,
-            k_chunk: to_host(&outs[iv + 4])?,
-            v_chunk: to_host(&outs[iv + 5])?,
-        };
         let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
         self.cache.update_from_outputs(cache_bufs)?;
-        Ok(out)
+        let mut outs = outs.into_iter();
+        let logits = outs.next().context("missing logits output")?;
+        let _valid = outs.next();
+        let log_beta = outs.next().context("missing log_beta output")?;
+        let attn_slots = outs.next().context("missing attn_slots output")?;
+        let attn_chunk = outs.next().context("missing attn_chunk output")?;
+        let k_chunk = outs.next().context("missing k_chunk output")?;
+        let v_chunk = outs.next().context("missing v_chunk output")?;
+        Ok(DeviceStepOut {
+            cols: c,
+            logits,
+            log_beta,
+            attn_slots: Some(attn_slots),
+            attn_chunk: Some(attn_chunk),
+            k_chunk: Some(k_chunk),
+            v_chunk: Some(v_chunk),
+        })
     }
 
     /// Mixed dispatch through the fused graph (one execution for decode AND
     /// chunk lanes).  The retrieval inject operands are always appended —
     /// zeros when the plan carries none.
-    fn exec_mixed(&mut self, plan: &StepPlan) -> Result<StepOut> {
+    fn exec_mixed(&mut self, plan: &StepPlan) -> Result<DeviceStepOut> {
         let (l, b, h) = self.lbh();
         let (m, c, dh) = (self.m, self.c, self.dims.dh);
         let mut mode = vec![0.0f32; b];
@@ -484,19 +571,25 @@ impl PjrtBackend {
                 7 + ncache);
         // order: logits, kc.., vc.., valid, log_beta, attn_slots,
         //        attn_chunk, k_chunk, v_chunk (attn_slots mode-fused)
-        let iv = 1 + ncache;
-        let out = StepOut {
-            cols: c,
-            logits: to_host(&outs[0])?,
-            log_beta: to_host(&outs[iv + 1])?,
-            attn_slots: to_host(&outs[iv + 2])?,
-            attn_chunk: to_host(&outs[iv + 3])?,
-            k_chunk: to_host(&outs[iv + 4])?,
-            v_chunk: to_host(&outs[iv + 5])?,
-        };
         let cache_bufs: Vec<xla::PjRtBuffer> = outs.drain(1..1 + ncache).collect();
         self.cache.update_from_outputs(cache_bufs)?;
-        Ok(out)
+        let mut outs = outs.into_iter();
+        let logits = outs.next().context("missing logits output")?;
+        let _valid = outs.next();
+        let log_beta = outs.next().context("missing log_beta output")?;
+        let attn_slots = outs.next().context("missing attn_slots output")?;
+        let attn_chunk = outs.next().context("missing attn_chunk output")?;
+        let k_chunk = outs.next().context("missing k_chunk output")?;
+        let v_chunk = outs.next().context("missing v_chunk output")?;
+        Ok(DeviceStepOut {
+            cols: c,
+            logits,
+            log_beta,
+            attn_slots: Some(attn_slots),
+            attn_chunk: Some(attn_chunk),
+            k_chunk: Some(k_chunk),
+            v_chunk: Some(v_chunk),
+        })
     }
 
     /// Degraded mixed dispatch for artifacts exported without any mixed
@@ -539,7 +632,7 @@ impl PjrtBackend {
             write_slots: &dec_ws,
             ..*plan
         };
-        let dec = self.exec_decode(&dec_plan)?;
+        let dec = self.exec_decode(&dec_plan)?.download()?;
 
         // --- prefill-graph call over the chunk lanes --------------------
         let mut pre_tokens = vec![0i32; b * c];
@@ -563,7 +656,7 @@ impl PjrtBackend {
             }
         }
         let pre = self.exec_prefill(&pre_tokens, &pre_pos, &pre_mask,
-                                    plan.valid, &pre_ws)?;
+                                    plan.valid, &pre_ws)?.download()?;
 
         // --- merge into the fused cols=C layout -------------------------
         let mut out = StepOut {
@@ -652,21 +745,45 @@ impl ModelBackend for PjrtBackend {
         self.c
     }
 
-    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut> {
+    fn submit(&mut self, plan: &StepPlan) -> Result<StepToken> {
+        ensure!(self.pending.is_none(),
+                "step already in flight (one submit per wait)");
         let (l, b, h) = self.lbh();
         plan.validate(l, b, h, self.m, self.c, self.dims.dh)?;
-        match plan.kind() {
-            PlanKind::Empty | PlanKind::Decode => self.exec_decode(plan),
-            PlanKind::Chunk => self.exec_prefill(plan.tokens, plan.pos,
-                                                 plan.in_mask, plan.valid,
-                                                 plan.write_slots),
+        // dispatch now: operand uploads and the graph execution are
+        // enqueued on the in-order device stream, downloads wait for
+        // `wait` — the plan's borrowed buffers are dead once this returns
+        let out = match plan.kind() {
+            PlanKind::Empty | PlanKind::Decode => {
+                PendingOut::Device(self.exec_decode(plan)?)
+            }
+            PlanKind::Chunk => PendingOut::Device(self.exec_prefill(
+                plan.tokens, plan.pos, plan.in_mask, plan.valid,
+                plan.write_slots)?),
             PlanKind::Mixed => {
                 if self.mixed_exe.is_some() {
-                    self.exec_mixed(plan)
+                    PendingOut::Device(self.exec_mixed(plan)?)
                 } else {
-                    self.exec_split(plan)
+                    PendingOut::Host(self.exec_split(plan)?)
                 }
             }
+        };
+        let token = StepToken(self.next_token);
+        self.next_token += 1;
+        self.pending = Some((token, out));
+        Ok(token)
+    }
+
+    fn wait(&mut self, token: StepToken) -> Result<StepOut> {
+        match &self.pending {
+            Some((t, _)) if *t == token => {}
+            Some((t, _)) => anyhow::bail!(
+                "wait token mismatch: in flight {t:?}, got {token:?}"),
+            None => anyhow::bail!("wait with no step in flight"),
+        }
+        match self.pending.take().expect("checked above").1 {
+            PendingOut::Device(dev) => dev.download(),
+            PendingOut::Host(out) => Ok(out),
         }
     }
 
@@ -703,6 +820,11 @@ pub struct MockBackend {
     /// EOS trigger for tests: a lane's distribution flips to EOS once its
     /// counter of decode-op tokens reaches this.
     pub eos_after: usize,
+    /// Synthetic device-execution latency in microseconds, paid in `wait`
+    /// and never in `submit` (net of host time already elapsed since the
+    /// submit): models a device that computes while the host does other
+    /// work, so host/device overlap is measurable in CI without hardware.
+    pub synthetic_execute_us: u64,
     pub decoded_per_lane: Vec<usize>,
     /// executed plans by dispatch kind (mirrors `PjrtBackend`'s graph
     /// choice: pure-decode / pure-chunk / mixed)
@@ -723,6 +845,8 @@ pub struct MockBackend {
     /// the real graphs would scatter, so the batched session-swap path is
     /// testable end-to-end with exact transfer accounting.
     pub arena: HostLaneArena,
+    next_token: u64,
+    pending: Option<(StepToken, StepOut, Instant)>,
 }
 
 impl MockBackend {
@@ -736,6 +860,7 @@ impl MockBackend {
             m,
             c: 16,
             eos_after: usize::MAX,
+            synthetic_execute_us: 0,
             decoded_per_lane: vec![0; b],
             decode_calls: 0,
             prefill_calls: 0,
@@ -745,11 +870,20 @@ impl MockBackend {
             mixed_tokens_per_lane: vec![0; b],
             injected_entries: 0,
             arena: HostLaneArena::new(b, lane_len),
+            next_token: 0,
+            pending: None,
         }
     }
 
     pub fn with_eos_after(mut self, n: usize) -> Self {
         self.eos_after = n;
+        self
+    }
+
+    /// Builder for the synthetic device latency (see
+    /// [`MockBackend::synthetic_execute_us`]).
+    pub fn with_synthetic_latency_us(mut self, us: u64) -> Self {
+        self.synthetic_execute_us = us;
         self
     }
 
@@ -777,21 +911,6 @@ impl MockBackend {
         let j = (((li * hkv + hh) * c + ci) * dh) + d;
         ((j % 7) as f32) * 0.1 + token as f32 * 1e-3
     }
-}
-
-impl ModelBackend for MockBackend {
-    fn dims(&self) -> ModelDims {
-        self.dims
-    }
-    fn batch(&self) -> usize {
-        self.b
-    }
-    fn slots(&self) -> usize {
-        self.m
-    }
-    fn chunk(&self) -> usize {
-        self.c
-    }
 
     /// One plan-execute step, mirroring `PjrtBackend`'s dispatch: a
     /// pure-decode plan returns compact cols=1 outputs (and honours
@@ -799,7 +918,8 @@ impl ModelBackend for MockBackend {
     /// chunk lanes returns the full cols=C tuple.  Per lane the numbers are
     /// exactly what the dedicated decode/prefill laws produce, so the
     /// engine's fused scheduling is token-equivalent to alternating ticks.
-    fn execute(&mut self, plan: &StepPlan) -> Result<StepOut> {
+    /// Runs eagerly inside `submit`; `wait` just pays the synthetic latency.
+    fn compute(&mut self, plan: &StepPlan) -> Result<StepOut> {
         let (l, b, h) = (self.dims.layers, self.b, self.dims.hkv);
         let (m, dh, v, c) = (self.m, self.dims.dh, self.dims.vocab, self.c);
         plan.validate(l, b, h, m, c, dh)?;
@@ -965,6 +1085,53 @@ impl ModelBackend for MockBackend {
         };
         Ok(StepOut { cols, logits, log_beta, attn_slots, attn_chunk, k_chunk,
                      v_chunk })
+    }
+}
+
+impl ModelBackend for MockBackend {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+    fn batch(&self) -> usize {
+        self.b
+    }
+    fn slots(&self) -> usize {
+        self.m
+    }
+    fn chunk(&self) -> usize {
+        self.c
+    }
+
+    /// All state mutations happen eagerly at submit — in-order device-queue
+    /// semantics: work chained between `submit` and `wait` (e.g. a batched
+    /// `swap_lanes`) observes the post-step arenas, exactly as it would
+    /// against hardware with an in-order stream.
+    fn submit(&mut self, plan: &StepPlan) -> Result<StepToken> {
+        ensure!(self.pending.is_none(),
+                "step already in flight (one submit per wait)");
+        let out = self.compute(plan)?;
+        let token = StepToken(self.next_token);
+        self.next_token += 1;
+        self.pending = Some((token, out, Instant::now()));
+        Ok(token)
+    }
+
+    fn wait(&mut self, token: StepToken) -> Result<StepOut> {
+        match &self.pending {
+            Some((t, ..)) if *t == token => {}
+            Some((t, ..)) => anyhow::bail!(
+                "wait token mismatch: in flight {t:?}, got {token:?}"),
+            None => anyhow::bail!("wait with no step in flight"),
+        }
+        let (_, out, submitted) = self.pending.take().expect("checked above");
+        // the synthetic device "finishes" synthetic_execute_us after the
+        // submit, regardless of what the host did in between
+        let target = Duration::from_micros(self.synthetic_execute_us);
+        let left = target.saturating_sub(submitted.elapsed());
+        if !left.is_zero() {
+            std::thread::sleep(left);
+        }
+        Ok(out)
     }
 
     fn reset_cache(&mut self) -> Result<()> {
@@ -1326,6 +1493,62 @@ mod tests {
                 assert_ne!(slab.k[(row + 2) * dh], 0.0, "decode write present");
             }
         }
+    }
+
+    #[test]
+    fn submit_wait_enforces_one_in_flight_and_token_identity() {
+        let mut mb = MockBackend::new(1, 8);
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.decode_lane(&mb, 0, 10, 0);
+        let plan = bufs.plan(false, false);
+        let tok = mb.submit(&plan).unwrap();
+        assert!(mb.submit(&plan).is_err(), "second submit while in flight");
+        assert!(mb.wait(StepToken(tok.0 + 7)).is_err(),
+                "foreign token accepted");
+        let out = mb.wait(tok).unwrap();
+        assert_eq!(out.cols, 1);
+        assert!(mb.wait(tok).is_err(), "double wait accepted");
+        // tokens are never reused across steps
+        let tok2 = mb.submit(&plan).unwrap();
+        assert_ne!(tok, tok2);
+        mb.wait(tok2).unwrap();
+    }
+
+    #[test]
+    fn synthetic_latency_is_paid_in_wait_net_of_host_work() {
+        let mut mb = MockBackend::new(1, 8).with_synthetic_latency_us(40_000);
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.decode_lane(&mb, 0, 10, 0);
+        let plan = bufs.plan(false, false);
+        // serial: the full latency lands on the submit+wait pair
+        let t0 = Instant::now();
+        let tok = mb.submit(&plan).unwrap();
+        let submit_us = t0.elapsed().as_micros();
+        mb.wait(tok).unwrap();
+        assert!(t0.elapsed().as_micros() >= 40_000, "latency not paid");
+        assert!(submit_us < 20_000, "submit blocked for {submit_us}us");
+        // overlapped: host work between submit and wait is credited
+        let tok = mb.submit(&plan).unwrap();
+        std::thread::sleep(Duration::from_micros(45_000));
+        let w0 = Instant::now();
+        mb.wait(tok).unwrap();
+        assert!(w0.elapsed().as_micros() < 20_000,
+                "wait re-paid latency already covered by host work");
+    }
+
+    #[test]
+    fn chained_swaps_between_submit_and_wait_see_post_step_state() {
+        let mut mb = MockBackend::new(1, 8);
+        let dh = mb.dims.dh;
+        let mut bufs = PlanBufs::new(&mb);
+        bufs.decode_lane(&mb, 0, 42, 3);
+        let plan = bufs.plan(false, true);
+        let tok = mb.submit(&plan).unwrap();
+        // in-order queue semantics: a swap chained behind the in-flight
+        // step downloads the slab that step wrote
+        let slab = mb.swap_lanes(&[0], &[]).unwrap().remove(0);
+        assert_ne!(slab.k[3 * dh], 0.0, "chained swap missed the step write");
+        mb.wait(tok).unwrap();
     }
 
     #[test]

@@ -47,7 +47,10 @@ impl LaneKv {
 /// Cumulative transfer accounting for swap operations.  `elems_*` count f32
 /// elements that crossed the host/device boundary (both K and V), which is
 /// what the O(lane) acceptance tests assert on: swapping one lane must move
-/// `2 * lane_kv_len()` elements regardless of batch size.
+/// `2 * lane_kv_len()` elements regardless of batch size.  `out_ns`/`in_ns`
+/// accumulate per-direction wall time (nanoseconds — one lane slab can
+/// transfer in well under a microsecond on the mock arena), so the swap
+/// cost the pipelined engine hides is visible per direction.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SwapTraffic {
     /// batched `swap_lanes` calls
@@ -60,6 +63,10 @@ pub struct SwapTraffic {
     pub elems_out: u64,
     /// f32 elements moved host -> device by swaps
     pub elems_in: u64,
+    /// wall time spent in the download phase of swap calls
+    pub out_ns: u64,
+    /// wall time spent in the upload phase of swap calls
+    pub in_ns: u64,
 }
 
 /// Validate a batched swap request against lane count and slab sizes.
@@ -130,10 +137,20 @@ impl HostLaneArena {
     pub fn swap_lanes(&mut self, out: &[usize], inn: &[(usize, &LaneKv)])
         -> Result<Vec<LaneKv>> {
         check_swap_args(self.batch(), self.lane_len, out, inn)?;
+        let t0 = std::time::Instant::now();
         let downloaded: Vec<LaneKv> =
             out.iter().map(|&lane| self.lanes[lane].clone()).collect();
+        let t1 = std::time::Instant::now();
         for (lane, kv) in inn {
             self.lanes[*lane] = (*kv).clone();
+        }
+        // per-direction wall time, attributed only when the direction did
+        // work (an empty phase must not smear timer noise into its counter)
+        if !out.is_empty() {
+            self.traffic.out_ns += (t1 - t0).as_nanos() as u64;
+        }
+        if !inn.is_empty() {
+            self.traffic.in_ns += t1.elapsed().as_nanos() as u64;
         }
         self.traffic.swap_calls += 1;
         self.traffic.lanes_out += out.len() as u64;
@@ -269,6 +286,7 @@ impl DeviceKvCache {
         self.traffic.swap_calls += 1;
         self.traffic.lanes_out += out.len() as u64;
         self.traffic.lanes_in += inn.len() as u64;
+        let t0 = std::time::Instant::now();
         let mut downloaded = Vec::with_capacity(out.len());
         for &lane in out {
             let kv = LaneKv { k: to_host(&self.kc[lane])?,
@@ -276,10 +294,14 @@ impl DeviceKvCache {
             self.traffic.elems_out += kv.elems() as u64;
             downloaded.push(kv);
         }
+        if !out.is_empty() {
+            self.traffic.out_ns += t0.elapsed().as_nanos() as u64;
+        }
         // stage every upload before installing any: a mid-call allocation
         // failure must leave the device cache exactly as it was (the engine
         // keeps sessions parked on error)
         let dims = shape.lane_dims();
+        let t0 = std::time::Instant::now();
         let mut staged = Vec::with_capacity(inn.len());
         for (lane, kv) in inn {
             staged.push((
@@ -293,6 +315,9 @@ impl DeviceKvCache {
             self.kc[lane] = k_buf;
             self.vc[lane] = v_buf;
             self.traffic.elems_in += elems;
+        }
+        if !inn.is_empty() {
+            self.traffic.in_ns += t0.elapsed().as_nanos() as u64;
         }
         Ok(downloaded)
     }
@@ -333,6 +358,23 @@ mod tests {
         assert_eq!(a.lane(2).k[0], 100.0);
         assert_eq!(a.lane(1), &lane1, "untouched lane changed");
         assert_eq!(a.traffic.elems_in, 2 * 2 * 8);
+    }
+
+    #[test]
+    fn swap_wall_time_is_attributed_per_direction() {
+        let mut a = HostLaneArena::new(2, 4096);
+        fill(&mut a, 0, 1.0);
+        // out-only call: download time accrues, upload time must not
+        let down = a.swap_lanes(&[0], &[]).unwrap();
+        assert!(a.traffic.out_ns > 0, "download wall time not recorded");
+        assert_eq!(a.traffic.in_ns, 0,
+                   "upload time accrued on an out-only swap");
+        // in-only call: only the upload counter moves
+        let out_before = a.traffic.out_ns;
+        a.swap_lanes(&[], &[(1, &down[0])]).unwrap();
+        assert!(a.traffic.in_ns > 0, "upload wall time not recorded");
+        assert_eq!(a.traffic.out_ns, out_before,
+                   "download time accrued on an in-only swap");
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod golden;
 pub mod weights;
 
 pub use backend::{compile_hlo, LaneOp, MockBackend, ModelBackend,
-                  PjrtBackend, PlanKind, StepOut, StepPlan};
+                  PjrtBackend, PlanKind, StepOut, StepPlan, StepToken};
 pub use devcache::{CacheShape, DeviceKvCache, HostLaneArena, LaneKv,
                    SwapTraffic};
 pub use weights::{read_weights, HostTensor};

@@ -190,6 +190,74 @@ fn prop_mixed_ticks_token_equivalent_to_alternating() {
 }
 
 #[test]
+fn prop_pipelined_token_streams_match_serial() {
+    // the pipelining tentpole invariant: overlapping the next tick's host
+    // work (admission, chained snapshot swaps) with the in-flight device
+    // step is a scheduling change only — every request emits bit-identical
+    // tokens to the serial submit-then-wait loop, for all 7+1 deterministic
+    // policies.  Sessions force mid-run parking, preemption and chase
+    // swaps through the overlap window; eager vs lazy varies how many
+    // transfers ride it.
+    forall("pipelined equivalence", 15, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret", "retrieval"];
+        let policy = names[rng.below(names.len())];
+        let budget = rng.range(12, 28);
+        let batch = rng.range(2, 5);
+        let n_req = rng.range(2, 7);
+        let prompts: Vec<Vec<u32>> = (0..n_req)
+            .map(|_| {
+                (0..rng.range(2, 70))
+                    .map(|_| 32 + rng.below(64) as u32)
+                    .collect()
+            })
+            .collect();
+        let max_new: Vec<usize> = (0..n_req).map(|_| rng.range(1, 8)).collect();
+        // ~half the requests belong to two dialogues, so lanes park, swap
+        // in mid-run and get preempted; the rest are one-shots
+        let sessions: Vec<Option<String>> = (0..n_req)
+            .map(|_| match rng.below(4) {
+                0 => Some("sa".to_string()),
+                1 => Some("sb".to_string()),
+                _ => None,
+            })
+            .collect();
+        let mixed = rng.bool(0.5);
+        let eager = rng.bool(0.5);
+        let mut streams: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+        for pipeline in [true, false] {
+            let cfg = EngineConfig {
+                policy: policy.into(),
+                budget,
+                batch,
+                chunked_prefill: true,
+                mixed_ticks: mixed,
+                swap_policy: if eager { "eager" } else { "lazy" }.into(),
+                pipeline,
+                ..Default::default()
+            };
+            let backend = MockBackend::new(batch, budget + 20);
+            let mut engine = Engine::new(backend, cfg, 2).unwrap();
+            for (i, p) in prompts.iter().enumerate() {
+                let mut req = Request::new(i as u64, p.clone(), max_new[i]);
+                if let Some(s) = &sessions[i] {
+                    req = req.with_session(s.clone());
+                }
+                engine.submit(req).map_err(|e| format!("{e}"))?;
+            }
+            let mut rs = engine.run_to_completion().map_err(|e| format!("{e}"))?;
+            rs.sort_by_key(|r| r.id);
+            prop_assert_eq!(rs.len(), n_req);
+            // flush must drain any in-flight step before snapshotting
+            engine.flush_sessions().map_err(|e| format!("{e}"))?;
+            streams.push(rs.into_iter().map(|r| (r.id, r.tokens)).collect());
+        }
+        prop_assert_eq!(&streams[0], &streams[1]);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_eviction_monotonicity() {
     // paper constraint alpha_ti >= alpha_(t+1)i: once evicted, a token's
     // position never reappears in the cache (except via retrieval inject,
