@@ -1,0 +1,240 @@
+//! Engine-group bench: aggregate token throughput of N routed replicas vs
+//! one engine, plus the migration-correctness gate.
+//!
+//! The MockBackend's synthetic execute latency stands in for the device:
+//! every replica thread sleeps its own step latency concurrently, so a
+//! well-routed group approaches N× the single-engine token rate.  The
+//! workload is a deterministic skewed session mix
+//! (`workload::session_mix`): hot conversations pin to hash homes, cold
+//! ones and one-shots spread by lane availability, and the router's
+//! rebalancer may move a quiescent session off a saturated replica.
+//!
+//! Inline correctness asserts (the bench doubles as an end-to-end check):
+//! - every per-request token stream at N=2 is bit-exact with N=1 —
+//!   placement and migration are scheduling changes only;
+//! - both replicas finish work under the skewed mix (no starvation);
+//! - a session explicitly migrated between turns answers bit-exactly like
+//!   a never-migrated engine (TRIM-KV's creation-time scores make the
+//!   moved cache valid verbatim).
+//!
+//! Deterministic CI gates: the routed / migrated counters (placement is
+//! pure accounting — submit order is fixed and responses drain after all
+//! submits, so the decision sequence is machine-independent).  Wall-clock
+//! tok/s and the N=2 scaling ratio carry the loose wall-time threshold.
+//!
+//! Emits `BENCH_group.json` (util::benchkit) for the CI bench-smoke job's
+//! regression gate.
+//!
+//!   cargo bench --bench engine_group [-- --quick]
+
+use std::time::Instant;
+
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::router::EngineGroup;
+use trimkv::runtime::MockBackend;
+use trimkv::scheduler::Request;
+use trimkv::util::benchkit::{bench, gate, iters, report, results_json,
+                             write_bench_json, BenchResult};
+use trimkv::util::json::Json;
+use trimkv::workload::{session_mix, Arrival};
+
+const BATCH: usize = 4;
+const BUDGET: usize = 24;
+/// Synthetic device step latency: device-bound, so scaling is visible.
+const LATENCY_US: u64 = 200;
+const SESSIONS: usize = 8;
+const TURNS: usize = 64;
+const MIX_SEED: u64 = 11;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        policy: "trimkv".into(),
+        budget: BUDGET,
+        batch: BATCH,
+        chunked_prefill: true,
+        mixed_ticks: true,
+        ..Default::default()
+    }
+}
+
+fn make_group(n: usize, latency_us: u64) -> EngineGroup {
+    EngineGroup::spawn(n, true, |_| {
+        let backend = MockBackend::new(BATCH, BUDGET + 24)
+            .with_synthetic_latency_us(latency_us);
+        Engine::new(backend, cfg(), 2)
+    })
+    .expect("group")
+}
+
+struct RunStats {
+    wall_ms: f64,
+    tokens: u64,
+    streams: Vec<(u64, Vec<u32>)>,
+    routed: u64,
+    rebalances: u64,
+    /// finished requests per replica, parsed off the aggregated scrape
+    finished: Vec<u64>,
+}
+
+fn run_group(n: usize, arrivals: &[Arrival]) -> RunStats {
+    let group = make_group(n, LATENCY_US);
+    let t0 = Instant::now();
+    for a in arrivals {
+        let mut req = Request::new(a.id, a.prompt.clone(), a.max_new);
+        if let Some(s) = &a.session {
+            req = req.with_session(s.clone());
+        }
+        group.submit(req);
+    }
+    let mut streams = Vec::with_capacity(arrivals.len());
+    let mut tokens = 0u64;
+    for _ in 0..arrivals.len() {
+        let r = group.recv_blocking().expect("group response");
+        tokens += r.tokens.len() as u64;
+        streams.push((r.id, r.tokens));
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let m = group.router.metrics();
+    let text = group.metrics_snapshot().expect("scrape");
+    let mut finished = vec![0u64; n];
+    for line in text.lines() {
+        if let Some(rest) =
+            line.strip_prefix("trimkv_requests_finished_total{replica=\"")
+        {
+            if let Some((i, v)) = rest.split_once("\"} ") {
+                finished[i.parse::<usize>().unwrap()] =
+                    v.parse::<f64>().unwrap() as u64;
+            }
+        }
+    }
+    group.shutdown();
+    streams.sort_by_key(|(id, _)| *id);
+    RunStats {
+        wall_ms,
+        tokens,
+        streams,
+        routed: m.routed,
+        rebalances: m.rebalances,
+        finished,
+    }
+}
+
+/// Migration-correctness scenario: K two-turn sessions, each explicitly
+/// migrated to the other replica between its turns; a plain single engine
+/// is the never-migrated reference.  Returns the migration counter.
+fn migration_check() -> u64 {
+    let group = make_group(2, 0);
+    let turn1 = |s: usize| -> Vec<u32> {
+        (0..6).map(|j| 32 + ((s * 7 + j) % 64) as u32).collect()
+    };
+    let turn2 = |s: usize| -> Vec<u32> {
+        (0..3).map(|j| 40 + ((s * 5 + j) % 48) as u32).collect()
+    };
+    const K: usize = 4;
+    let mut grouped: Vec<Vec<Vec<u32>>> = Vec::new();
+    for s in 0..K {
+        let sid = format!("mig-{s}");
+        group.submit(Request::new(s as u64, turn1(s), 4).with_session(&sid));
+        let r1 = group.recv_blocking().expect("turn 1");
+        let target = 1 - group.router.replica_for(&sid);
+        group.migrate_session(&sid, target).expect("migration");
+        group.submit(
+            Request::new(100 + s as u64, turn2(s), 4).with_session(&sid));
+        let r2 = group.recv_blocking().expect("turn 2");
+        grouped.push(vec![r1.tokens, r2.tokens]);
+    }
+    let migrations = group.router.metrics().migrations;
+    group.shutdown();
+    // never-migrated reference: one engine per session, both turns local
+    for (s, got) in grouped.iter().enumerate() {
+        let mut e = Engine::new(MockBackend::new(BATCH, BUDGET + 24),
+                                cfg(), 2).expect("engine");
+        let mut want = Vec::new();
+        for (t, prompt) in [turn1(s), turn2(s)].into_iter().enumerate() {
+            e.submit(Request::new(t as u64, prompt, 4).with_session("ref"))
+                .unwrap();
+            let rs = e.run_to_completion().unwrap();
+            want.push(rs[0].tokens.clone());
+        }
+        assert_eq!(got, &want,
+                   "migrated session {s} diverged from the never-migrated \
+                    reference");
+    }
+    migrations
+}
+
+fn main() {
+    let arrivals = session_mix(MIX_SEED, SESSIONS, TURNS, 0.5, 1.0);
+    println!("=== engine group scaling ({TURNS} arrivals, {SESSIONS} \
+              skewed sessions, {BATCH} lanes/replica, {LATENCY_US}us \
+              device step) ===");
+
+    // canonical runs: correctness asserts + deterministic counters
+    let one = run_group(1, &arrivals);
+    let two = run_group(2, &arrivals);
+    assert_eq!(one.streams, two.streams,
+               "replication changed a token stream");
+    assert!(two.finished.iter().all(|&f| f > 0),
+            "a replica starved under the skewed mix: {:?}", two.finished);
+    assert_eq!(one.routed, TURNS as u64);
+    assert_eq!(two.routed, TURNS as u64);
+    let migrations = migration_check();
+    assert_eq!(migrations, 4, "migration scenario lost a handoff");
+
+    println!("{:<9} {:>10} {:>8} {:>10} {:>11} {:>14}",
+             "replicas", "wall_ms", "tokens", "tok_s", "rebalances",
+             "finished/repl");
+    for (n, s) in [(1usize, &one), (2, &two)] {
+        println!("{:<9} {:>10.2} {:>8} {:>10.0} {:>11} {:>14}",
+                 n, s.wall_ms, s.tokens,
+                 s.tokens as f64 / (s.wall_ms / 1e3), s.rebalances,
+                 format!("{:?}", s.finished));
+    }
+
+    // wall-time distribution over repeated runs (spawn + serve + join)
+    let (warmup, n_iters) = iters(1, 5);
+    let mut results: Vec<BenchResult> = Vec::new();
+    for (name, n) in [("serve/n1", 1usize), ("serve/n2", 2)] {
+        results.push(bench(name, warmup, n_iters, || {
+            std::hint::black_box(run_group(n, &arrivals));
+        }));
+    }
+    report(&results);
+    let tokens = one.tokens as f64;
+    let n1_tok_s = tokens / (results[0].mean_us / 1e6);
+    let n2_tok_s = tokens / (results[1].mean_us / 1e6);
+    let scaling = n2_tok_s / n1_tok_s;
+    println!("aggregate throughput: n1 {n1_tok_s:.0} tok/s, n2 \
+              {n2_tok_s:.0} tok/s -> {scaling:.2}x scaling");
+    // sanity floor (broken routing serializes to ~1x); the ≥1.7x target
+    // is the baseline-gated value
+    assert!(scaling > 1.4,
+            "N=2 scaling collapsed to {scaling:.2}x (routing serialized?)");
+
+    let payload = Json::obj(vec![
+        ("batch", Json::num(BATCH as f64)),
+        ("budget", Json::num(BUDGET as f64)),
+        ("turns", Json::num(TURNS as f64)),
+        ("sessions", Json::num(SESSIONS as f64)),
+        ("latency_us", Json::num(LATENCY_US as f64)),
+        ("tokens", Json::num(tokens)),
+        ("n1_tok_s", Json::num(n1_tok_s)),
+        ("n2_tok_s", Json::num(n2_tok_s)),
+        ("rebalances_n2", Json::num(two.rebalances as f64)),
+        ("finished_per_replica_n2", Json::arr_usize(
+            &two.finished.iter().map(|&f| f as usize).collect::<Vec<_>>())),
+        ("results", results_json(&results)),
+        // CI gates: routed/migrated are deterministic accounting; tok/s
+        // and the scaling ratio carry the loose wall-time threshold in
+        // the baseline
+        ("regress_on", Json::obj(vec![
+            ("group_routed_total", gate(two.routed as f64, false)),
+            ("group_migrations_total", gate(migrations as f64, true)),
+            ("group_scaling_n2", gate(scaling, true)),
+            ("group_n2_tok_s", gate(n2_tok_s, true)),
+        ])),
+    ]);
+    let path = write_bench_json("group", payload).expect("bench json");
+    println!("wrote {}", path.display());
+}

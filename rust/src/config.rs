@@ -32,6 +32,13 @@
 //! [obs]
 //! trace = true            # tick flight recorder (per-phase trace journal)
 //! trace_capacity = 8192   # journal ring size, in events (hard memory cap)
+//!
+//! [router]
+//! replicas = 1            # engine workers behind the session router
+//!                         # (1 = plain single-engine serving, no group)
+//! migration = "on"        # cross-replica session migration + automatic
+//!                         # rebalancing ("off": sessions stay pinned to
+//!                         # their hash home forever)
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -84,6 +91,12 @@ pub struct EngineConfig {
     /// Journal ring capacity in events; the hard memory cap (oldest events
     /// are overwritten, and counted, once it fills).
     pub trace_capacity: usize,
+    /// Engine workers behind the session router (`serve` spawns an
+    /// `EngineGroup` when > 1; 1 keeps the plain single-engine path).
+    pub replicas: usize,
+    /// Cross-replica session migration and automatic rebalancing; off
+    /// keeps every session pinned to its hash home.
+    pub migration: bool,
 }
 
 impl Default for EngineConfig {
@@ -107,6 +120,8 @@ impl Default for EngineConfig {
             swap_policy: "lazy".into(),
             trace: true,
             trace_capacity: 8192,
+            replicas: 1,
+            migration: true,
         }
     }
 }
@@ -172,6 +187,19 @@ impl EngineConfig {
                     cfg.trace_capacity =
                         val.as_usize().ok_or_else(|| bad(key))?
                 }
+                "router.replicas" => {
+                    cfg.replicas = val.as_usize().ok_or_else(|| bad(key))?
+                }
+                "router.migration" => {
+                    // accepts a bool or the "on"/"off" strings
+                    cfg.migration = match (val.as_bool(), val.as_str()) {
+                        (Some(b), _) => b,
+                        (None, Some("on")) => true,
+                        (None, Some("off")) => false,
+                        _ => anyhow::bail!(
+                            "router.migration must be on|off (got {val:?})"),
+                    }
+                }
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -232,6 +260,17 @@ impl EngineConfig {
             self.trace_capacity =
                 v.parse().map_err(|_| anyhow::anyhow!("bad --trace-capacity"))?;
         }
+        if let Some(v) = args.get("replicas") {
+            self.replicas =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --replicas"))?;
+        }
+        if let Some(v) = args.get("migration") {
+            self.migration = match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                _ => anyhow::bail!("bad --migration (on|off)"),
+            };
+        }
         self.validate()
     }
 
@@ -250,6 +289,7 @@ impl EngineConfig {
         );
         anyhow::ensure!(self.trace_capacity >= 1,
                         "trace_capacity must be >= 1");
+        anyhow::ensure!(self.replicas >= 1, "replicas must be >= 1");
         Ok(())
     }
 }
@@ -351,5 +391,23 @@ prefill_priority = true
             "[obs]\ntrace_capacity = 0").is_err());
         assert!(EngineConfig::from_toml_str(
             "[obs]\ntrace = \"maybe\"").is_err());
+    }
+
+    #[test]
+    fn parses_router_keys() {
+        let cfg = EngineConfig::from_toml_str(
+            "[router]\nreplicas = 4\nmigration = \"off\"").unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert!(!cfg.migration);
+        // bool spelling works too
+        let cfg = EngineConfig::from_toml_str(
+            "[router]\nmigration = true").unwrap();
+        assert!(cfg.migration);
+        let d = EngineConfig::default();
+        assert_eq!(d.replicas, 1, "single-engine serving is the default");
+        assert!(d.migration, "migration is on by default");
+        assert!(EngineConfig::from_toml_str("[router]\nreplicas = 0").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "[router]\nmigration = \"sometimes\"").is_err());
     }
 }

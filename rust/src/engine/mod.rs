@@ -253,6 +253,40 @@ impl<B: ModelBackend> Engine<B> {
         Ok(())
     }
 
+    /// Drain a session out of this engine for cross-replica migration:
+    /// resolve the in-flight step, force the session's parked lane (if any)
+    /// down to the host store, then take the snapshot out of the store.
+    /// Returns `Ok(None)` when the engine holds no state for the id.
+    /// Refuses while the session has turns decoding or queued — the router
+    /// only migrates quiescent sessions, so a refusal is a caller bug.
+    pub fn export_session(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
+        self.complete_in_flight()?;
+        self.drain_chained_swaps()?;
+        let busy = self.lanes.iter().any(|l| {
+            matches!(l, Lane::Busy(s) if s.session.as_deref() == Some(id))
+        });
+        ensure!(
+            !busy && !self.queue.has_session(id),
+            "session {id} has turns in flight; migration requires quiescence"
+        );
+        let parked = self.lanes.iter().position(|l| {
+            matches!(l, Lane::Parked(p) if p.session_id == id)
+        });
+        if let Some(lane) = parked {
+            self.execute_swap(&[lane], &[])?;
+        }
+        Ok(self.sessions.take(id))
+    }
+
+    /// Rebind a migrated snapshot into this engine's host store (the
+    /// target half of a cross-replica handoff).  The session's next turn
+    /// swaps it into a lane through the ordinary admission path.  LRU
+    /// pressure applies exactly as for a locally parked session.
+    pub fn import_session(&mut self, id: &str, snap: SessionSnapshot) {
+        let dropped = self.sessions.insert(id.to_string(), snap);
+        self.metrics.sessions_dropped += dropped as u64;
+    }
+
     /// Drop a conversation: its host snapshot and its parked lane.  The
     /// close is a *barrier*: turns already decoding or queued at close time
     /// finish normally (with the retained cache), then the state is
@@ -1021,6 +1055,21 @@ impl<B: ModelBackend> Engine<B> {
                                           (t.out_ns / 1000) as f64));
         samples.push(obs::Sample::counter("trimkv_swap_lane_in_us_total",
                                           (t.in_ns / 1000) as f64));
+        // instantaneous occupancy gauges (the router's per-replica load
+        // signals when scraped through the group's labeled aggregation)
+        let busy = self.lanes.iter()
+            .filter(|l| matches!(l, Lane::Busy(_))).count();
+        let parked = self.lanes.iter()
+            .filter(|l| matches!(l, Lane::Parked(_))).count();
+        samples.push(obs::Sample::gauge("trimkv_lanes_busy", busy as f64));
+        samples.push(obs::Sample::gauge("trimkv_lanes_parked",
+                                        parked as f64));
+        samples.push(obs::Sample::gauge("trimkv_queue_depth",
+                                        self.queue.len() as f64));
+        samples.push(obs::Sample::gauge("trimkv_session_store_size",
+                                        self.sessions.len() as f64));
+        samples.push(obs::Sample::gauge("trimkv_session_store_bytes",
+                                        self.sessions.host_bytes() as f64));
         samples.extend(self.obs.samples());
         obs::render_prometheus(&samples)
     }

@@ -11,6 +11,8 @@
 //!   Prometheus-style exposition, retention-score introspection
 //! - [`session`] — host-side KV snapshot/swap store for multi-turn serving
 //! - [`engine`] / [`scheduler`] / [`server`] — the serving coordinator
+//! - [`router`] — N-replica `EngineGroup` + session router (pinning,
+//!   load balancing, cross-replica migration)
 //! - [`workload`] / [`eval`] — paper benchmark suites and table harnesses
 
 pub mod config;
@@ -21,6 +23,7 @@ pub mod metrics;
 pub mod model_meta;
 pub mod obs;
 pub mod policy;
+pub mod router;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

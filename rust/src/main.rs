@@ -17,6 +17,7 @@ use trimkv::engine::Engine;
 use trimkv::eval::{self, inspect};
 use trimkv::model_meta::ModelMeta;
 use trimkv::policy::Policy;
+use trimkv::router::EngineGroup;
 use trimkv::runtime::PjrtBackend;
 use trimkv::scheduler::Request;
 use trimkv::server::{tcp, InProcServer};
@@ -74,6 +75,11 @@ fn common_spec() -> trimkv::util::cli::SpecBuilder {
         .opt("trace-capacity", "8192",
              "flight-recorder journal capacity, in events (hard memory cap)")
         .flag("no-trace", "disable the per-tick flight recorder")
+        .opt("replicas", "1",
+             "engine workers behind the session router (serve spawns an \
+              EngineGroup when > 1; each replica loads its own backend)")
+        .opt("migration", "on",
+             "cross-replica session migration + rebalancing (on|off)")
 }
 
 fn load_engine(args: &Args) -> Result<(Engine<PjrtBackend>, Vocab, ModelMeta)> {
@@ -98,8 +104,22 @@ fn serve(argv: &[String]) -> Result<()> {
     let args = common_spec()
         .opt("addr", "127.0.0.1:7878", "listen address")
         .parse(argv)?;
-    let (engine, _vocab, _meta) = load_engine(&args)?;
+    let mut cfg = EngineConfig::default();
+    cfg.apply_cli(&args)?;
     let addr = args.get_or("addr", "127.0.0.1:7878");
+    if cfg.replicas > 1 {
+        // replicated serving: N engines (each its own backend) behind the
+        // session router, same wire protocol
+        let n = cfg.replicas;
+        eprintln!("[trimkv] spawning engine group: {n} replicas");
+        let group = EngineGroup::spawn(n, cfg.migration, |i| {
+            let (engine, _, _) = load_engine(&args)?;
+            eprintln!("[trimkv] replica {i} ready");
+            Ok(engine)
+        })?;
+        return tcp::listen(&addr, &group);
+    }
+    let (engine, _vocab, _meta) = load_engine(&args)?;
     let srv = InProcServer::spawn(engine);
     tcp::listen(&addr, &srv)
 }

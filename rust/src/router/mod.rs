@@ -1,0 +1,786 @@
+//! Replicated serving: an [`EngineGroup`] of N engine workers behind a
+//! [`SessionRouter`].
+//!
+//! One engine owns one backend and B lanes — the ceiling on concurrent
+//! users is one device.  The group runs N replicas (each its own
+//! `ModelBackend` + `Engine` on its own thread, driven through the same
+//! worker loop `InProcServer` uses) and routes at the request level:
+//!
+//! - **session turns** are *pinned*: the first turn of a session lands on
+//!   `hash(session_id) % N` (a stable FNV-1a hash — the same session finds
+//!   the same home replica across process restarts), and every later turn
+//!   follows the pin, so the conversation's retained KV cache is always
+//!   local to the engine that serves it;
+//! - **sessionless requests** load-balance: the router tracks outstanding
+//!   turns per replica and picks the replica with the most free lanes,
+//!   breaking ties toward the shallowest queue, then the lowest index —
+//!   deterministic, so tests and replays see the same placement;
+//! - **cross-replica migration** moves a quiescent session: drain the
+//!   source replica's in-flight step, force the session's parked lane down
+//!   to the host store (`Engine::export_session`), hand the O(budget)
+//!   [`crate::session::SessionSnapshot`] to the target store
+//!   (`Engine::import_session`), and repin.  The swap/park machinery is
+//!   untouched — migration is a store handoff, not a new serialization
+//!   format.  TRIM-KV makes this sound by construction: retention scores
+//!   are assigned at creation time and are query-agnostic, so the migrated
+//!   cache is valid verbatim on the target replica (an attention-proxy
+//!   scheme would need the new replica to have seen the query history).
+//!   When the pinned replica is saturated and another has free lanes, the
+//!   router migrates automatically before routing the turn (*rebalancing*;
+//!   `[router] migration = off` disables both forms).
+//!
+//! `GET /metrics` on the group aggregates every replica's exposition under
+//! a `replica="<i>"` label and appends the router's own counters
+//! (`trimkv_router_*`).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::Engine;
+use crate::obs::{self, Sample};
+use crate::runtime::ModelBackend;
+use crate::scheduler::{Request, Response};
+use crate::server::{spawn_worker, Frontend, Msg};
+
+/// Stable 64-bit FNV-1a. The pin hash must not change across processes or
+/// rust versions (std's `DefaultHasher` is explicitly unstable), so a
+/// session restarted against a fresh group lands on the same home replica
+/// and finds its snapshot where an external checkpoint put it.
+pub fn session_hash(id: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in id.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// The home replica a session id hashes to in a group of `n`.
+pub fn home_replica(id: &str, n: usize) -> usize {
+    (session_hash(id) % n.max(1) as u64) as usize
+}
+
+/// Router decision/outcome counters (exposed as `trimkv_router_*`).
+#[derive(Debug, Default, Clone)]
+pub struct RouterMetrics {
+    /// requests routed to a replica (sessionful + sessionless)
+    pub routed: u64,
+    /// sessionless requests placed by load (no pin)
+    pub balanced: u64,
+    /// successful cross-replica session migrations (incl. rebalances)
+    pub migrations: u64,
+    /// migrations triggered automatically by a saturated home replica
+    pub rebalances: u64,
+    /// migration attempts refused (disabled, in-flight turns, bad target)
+    pub migrations_rejected: u64,
+}
+
+/// Placement state: one mutex'd blob so every routing decision reads a
+/// consistent picture.  All counts are router-side accounting (submitted
+/// minus responses drained), not engine introspection — deterministic
+/// regardless of replica thread timing.
+struct RouterState {
+    /// session -> replica; absent means "home replica by hash"
+    pins: BTreeMap<String, usize>,
+    /// outstanding turns per replica (submitted - responses drained)
+    inflight: Vec<usize>,
+    /// outstanding turns per session (migration requires zero)
+    session_inflight: BTreeMap<String, usize>,
+    metrics: RouterMetrics,
+}
+
+impl RouterState {
+    fn free_lanes(&self, replica: usize, batch: usize) -> usize {
+        batch.saturating_sub(self.inflight[replica])
+    }
+
+    /// The sessionless placement rule: most free lanes, then least
+    /// outstanding work (shallowest queue), then lowest index.
+    fn best_replica(&self, batch: usize) -> usize {
+        (0..self.inflight.len())
+            .min_by_key(|&i| {
+                (std::cmp::Reverse(self.free_lanes(i, batch)), self.inflight[i], i)
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// The placement policy, separable from the worker plumbing so the routing
+/// rules unit-test without spawning engine threads.
+pub struct SessionRouter {
+    n: usize,
+    /// lanes per replica (homogeneous fleet)
+    batch: usize,
+    migration: bool,
+    state: Mutex<RouterState>,
+}
+
+/// What `SessionRouter::route` decided for one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// send to this replica
+    To(usize),
+    /// migrate the session from `.0` to `.1` first, then send to `.1`
+    MigrateThenTo(usize, usize),
+}
+
+impl SessionRouter {
+    pub fn new(n: usize, batch: usize, migration: bool) -> SessionRouter {
+        SessionRouter {
+            n: n.max(1),
+            batch,
+            migration,
+            state: Mutex::new(RouterState {
+                pins: BTreeMap::new(),
+                inflight: vec![0; n.max(1)],
+                session_inflight: BTreeMap::new(),
+                metrics: RouterMetrics::default(),
+            }),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.n
+    }
+
+    /// The replica a session currently resolves to (pin, else hash home).
+    pub fn replica_for(&self, session: &str) -> usize {
+        let st = self.state.lock().unwrap();
+        st.pins
+            .get(session)
+            .copied()
+            .unwrap_or_else(|| home_replica(session, self.n))
+    }
+
+    /// Decide a placement and book the request as outstanding there.  The
+    /// caller must act on a `MigrateThenTo` (or fall back to the source on
+    /// a failed handoff via [`SessionRouter::repin`]).
+    pub fn route(&self, req: &Request) -> RouteDecision {
+        let mut st = self.state.lock().unwrap();
+        st.metrics.routed += 1;
+        let decision = match &req.session {
+            None => {
+                st.metrics.balanced += 1;
+                RouteDecision::To(st.best_replica(self.batch))
+            }
+            Some(sid) => {
+                let cur = st
+                    .pins
+                    .get(sid)
+                    .copied()
+                    .unwrap_or_else(|| home_replica(sid, self.n));
+                let quiescent =
+                    st.session_inflight.get(sid).copied().unwrap_or(0) == 0;
+                let best = st.best_replica(self.batch);
+                if self.migration
+                    && quiescent
+                    && st.free_lanes(cur, self.batch) == 0
+                    && st.free_lanes(best, self.batch) > 0
+                {
+                    // home is saturated, somewhere else has a free lane:
+                    // move the session rather than queue behind the hot
+                    // replica (skewed hash loads rebalance instead of
+                    // starving)
+                    st.pins.insert(sid.clone(), best);
+                    st.metrics.rebalances += 1;
+                    RouteDecision::MigrateThenTo(cur, best)
+                } else {
+                    st.pins.insert(sid.clone(), cur);
+                    RouteDecision::To(cur)
+                }
+            }
+        };
+        let target = match decision {
+            RouteDecision::To(t) | RouteDecision::MigrateThenTo(_, t) => t,
+        };
+        st.inflight[target] += 1;
+        if let Some(sid) = &req.session {
+            *st.session_inflight.entry(sid.clone()).or_insert(0) += 1;
+        }
+        decision
+    }
+
+    /// Book a drained response against its replica and session.
+    pub fn note_done(&self, replica: usize, resp: &Response) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight[replica] = st.inflight[replica].saturating_sub(1);
+        if let Some(sid) = &resp.session {
+            if let Some(c) = st.session_inflight.get_mut(sid) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    st.session_inflight.remove(sid);
+                }
+            }
+        }
+    }
+
+    /// Point a session at a replica (migration bookkeeping / fallback).
+    pub fn repin(&self, session: &str, replica: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.pins.insert(session.to_string(), replica);
+    }
+
+    /// Forget a session (close): the next turn with this id re-homes by
+    /// hash, exactly like a brand-new conversation.
+    pub fn unpin(&self, session: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.pins.remove(session);
+        st.session_inflight.remove(session);
+    }
+
+    /// Preflight an explicit migration: checks the feature gate, target
+    /// range and session quiescence, and counts rejections.
+    fn check_migration(&self, session: &str, target: usize) -> Result<usize> {
+        let mut st = self.state.lock().unwrap();
+        let source = st
+            .pins
+            .get(session)
+            .copied()
+            .unwrap_or_else(|| home_replica(session, self.n));
+        let ok = (|| {
+            ensure!(self.migration, "migration is disabled ([router] migration = off)");
+            ensure!(target < self.n, "target replica {target} out of range (n = {})", self.n);
+            ensure!(
+                st.session_inflight.get(session).copied().unwrap_or(0) == 0,
+                "session {session} has turns in flight"
+            );
+            Ok(())
+        })();
+        if let Err(e) = ok {
+            st.metrics.migrations_rejected += 1;
+            return Err(e);
+        }
+        Ok(source)
+    }
+
+    fn count_migration(&self, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        if ok {
+            st.metrics.migrations += 1;
+        } else {
+            st.metrics.migrations_rejected += 1;
+        }
+    }
+
+    pub fn metrics(&self) -> RouterMetrics {
+        self.state.lock().unwrap().metrics.clone()
+    }
+
+    /// Router-plane samples (appended to the aggregated exposition).
+    pub fn samples(&self) -> Vec<Sample> {
+        let st = self.state.lock().unwrap();
+        let m = &st.metrics;
+        let mut out = vec![
+            Sample::gauge("trimkv_router_replicas", self.n as f64),
+            Sample::counter("trimkv_router_routed_total", m.routed as f64),
+            Sample::counter("trimkv_router_balanced_total", m.balanced as f64),
+            Sample::counter("trimkv_router_migrations_total",
+                            m.migrations as f64),
+            Sample::counter("trimkv_router_rebalances_total",
+                            m.rebalances as f64),
+            Sample::counter("trimkv_router_migrations_rejected_total",
+                            m.migrations_rejected as f64),
+            Sample::gauge("trimkv_router_pinned_sessions",
+                          st.pins.len() as f64),
+        ];
+        for (i, &inflight) in st.inflight.iter().enumerate() {
+            out.push(
+                Sample::gauge("trimkv_router_inflight", inflight as f64)
+                    .label("replica", i.to_string()),
+            );
+        }
+        out
+    }
+}
+
+struct Worker {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+/// N replica engines behind one request-level router.  Implements
+/// [`Frontend`], so the TCP front door (and every example) is identical at
+/// N=1 and N=8.
+pub struct EngineGroup {
+    workers: Vec<Worker>,
+    rx: Receiver<(usize, Response)>,
+    pub router: SessionRouter,
+}
+
+impl EngineGroup {
+    /// Spawn `n` replicas; `make_engine(i)` builds replica i's engine (its
+    /// own backend — replicas share nothing but the response channel).
+    /// The fleet must be homogeneous in lane count: the router's free-lane
+    /// arithmetic assumes one `batch` across replicas.
+    pub fn spawn<B, F>(n: usize, migration: bool, mut make_engine: F)
+        -> Result<EngineGroup>
+    where
+        B: ModelBackend + 'static,
+        F: FnMut(usize) -> Result<Engine<B>>,
+    {
+        ensure!(n >= 1, "engine group needs at least one replica");
+        let (resp_tx, rx) = channel::<(usize, Response)>();
+        let mut workers = Vec::with_capacity(n);
+        let mut batch = 0usize;
+        for i in 0..n {
+            let engine = make_engine(i)?;
+            let b = engine.backend().batch();
+            if i == 0 {
+                batch = b;
+            } else {
+                ensure!(b == batch,
+                        "replica {i} has {b} lanes, replica 0 has {batch}: \
+                         the group must be homogeneous");
+            }
+            let (tx, mrx) = channel::<Msg>();
+            let sink = resp_tx.clone();
+            let handle = spawn_worker(engine, mrx, move |r| {
+                let _ = sink.send((i, r));
+            });
+            workers.push(Worker { tx, handle: Some(handle) });
+        }
+        drop(resp_tx);
+        Ok(EngineGroup { workers, rx, router: SessionRouter::new(n, batch, migration) })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Route and submit one request (the `Frontend` entry point).
+    pub fn submit(&self, req: Request) {
+        match self.router.route(&req) {
+            RouteDecision::To(t) => {
+                let _ = self.workers[t].tx.send(Msg::Req(req));
+            }
+            RouteDecision::MigrateThenTo(src, dst) => {
+                let sid = req.session.clone().expect("rebalance is sessionful");
+                // best effort: a failed handoff (source still warming the
+                // snapshot, store miss) falls back to the source replica —
+                // the turn still runs, just on the busy engine
+                match self.handoff(&sid, src, dst) {
+                    Ok(()) => {
+                        self.router.count_migration(true);
+                        let _ = self.workers[dst].tx.send(Msg::Req(req));
+                    }
+                    Err(_) => {
+                        self.router.count_migration(false);
+                        self.router.repin(&sid, src);
+                        let _ = self.workers[src].tx.send(Msg::Req(req));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Explicitly migrate a session to `target`.  Errors when migration is
+    /// disabled, the target is out of range, the session has turns in
+    /// flight, or the source handoff fails.  Migrating a session the group
+    /// has never seen is a no-op pin (its first turn simply lands there).
+    pub fn migrate_session(&self, session: &str, target: usize) -> Result<()> {
+        let source = self.router.check_migration(session, target)?;
+        if source == target {
+            return Ok(());
+        }
+        match self.handoff(session, source, target) {
+            Ok(()) => {
+                self.router.count_migration(true);
+                self.router.repin(session, target);
+                Ok(())
+            }
+            Err(e) => {
+                self.router.count_migration(false);
+                Err(e)
+            }
+        }
+    }
+
+    /// The migration handshake: TakeSession out of `src`'s store (the
+    /// worker drains its in-flight step and swaps the parked lane down
+    /// first), PutSession into `dst`'s, both acked.  A session with no
+    /// state on the source (never ran there, or externally dropped) moves
+    /// as a pure repin.
+    fn handoff(&self, session: &str, src: usize, dst: usize) -> Result<()> {
+        let (take_tx, take_rx) = channel();
+        if self.workers[src].tx.send(
+            Msg::TakeSession(session.to_string(), take_tx)).is_err()
+        {
+            bail!("replica {src} is gone");
+        }
+        let snap = match take_rx.recv() {
+            Ok(Ok(s)) => s,
+            Ok(Err(reason)) => bail!("replica {src} refused: {reason}"),
+            Err(_) => bail!("replica {src} dropped the migration reply"),
+        };
+        let Some(snap) = snap else {
+            return Ok(()); // no state to move: repin only
+        };
+        let (put_tx, put_rx) = channel();
+        if self.workers[dst].tx.send(
+            Msg::PutSession(session.to_string(), snap, put_tx)).is_err()
+        {
+            bail!("replica {dst} is gone");
+        }
+        ensure!(put_rx.recv().is_ok(), "replica {dst} dropped the rebind ack");
+        Ok(())
+    }
+
+    /// Drop a conversation's retained state on whichever replica holds it,
+    /// and forget its pin (a later same-id session re-homes by hash).
+    pub fn close_session(&self, id: &str) {
+        let replica = self.router.replica_for(id);
+        let _ = self.workers[replica].tx.send(Msg::CloseSession(id.to_string()));
+        self.router.unpin(id);
+    }
+
+    /// Drain every replica's in-flight step and force all parked lanes to
+    /// the host stores (group-wide checkpoint barrier).  False if any
+    /// replica thread is gone.
+    pub fn flush_sessions(&self) -> bool {
+        let mut acks = Vec::with_capacity(self.workers.len());
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(Msg::Flush(tx)).is_err() {
+                return false;
+            }
+            acks.push(rx);
+        }
+        acks.into_iter().all(|rx| rx.recv().is_ok())
+    }
+
+    /// Next finished response from any replica, if one is ready.
+    pub fn try_recv(&self) -> Option<Response> {
+        let (replica, resp) = self.rx.try_recv().ok()?;
+        self.router.note_done(replica, &resp);
+        Some(resp)
+    }
+
+    /// Block for the next finished response from any replica.
+    pub fn recv_blocking(&self) -> Option<Response> {
+        let (replica, resp) = self.rx.recv().ok()?;
+        self.router.note_done(replica, &resp);
+        Some(resp)
+    }
+
+    /// Aggregated exposition: every replica's samples under a
+    /// `replica="<i>"` label, then the router's own `trimkv_router_*`
+    /// series.  Replica lines are relabeled textually — the exposition
+    /// format is strictly `name value` / `name{labels} value`, so the
+    /// injection is mechanical and keeps each engine's rendering code
+    /// single-sourced.
+    pub fn metrics_snapshot(&self) -> Option<String> {
+        let mut out = String::new();
+        for (i, w) in self.workers.iter().enumerate() {
+            let (tx, rx) = channel();
+            w.tx.send(Msg::Stats(tx)).ok()?;
+            let text = rx.recv().ok()?;
+            out.push_str(&label_replica(&text, i));
+        }
+        out.push_str(&obs::render_prometheus(&self.router.samples()));
+        Some(out)
+    }
+
+    /// One replica's Chrome-trace snapshot (traces stay per-replica: each
+    /// engine has its own flight recorder and time origin).
+    pub fn trace_snapshot(&self, replica: usize) -> Option<String> {
+        let w = self.workers.get(replica)?;
+        let (tx, rx) = channel();
+        w.tx.send(Msg::Trace(tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    /// Finish outstanding work on every replica and join the threads.
+    pub fn shutdown(mut self) -> Vec<Response> {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        let mut out = Vec::new();
+        while let Ok((replica, resp)) = self.rx.recv() {
+            self.router.note_done(replica, &resp);
+            out.push(resp);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+        out
+    }
+}
+
+impl Frontend for EngineGroup {
+    fn submit(&self, req: Request) {
+        EngineGroup::submit(self, req)
+    }
+    fn close_session(&self, id: &str) {
+        EngineGroup::close_session(self, id)
+    }
+    fn try_recv(&self) -> Option<Response> {
+        EngineGroup::try_recv(self)
+    }
+    fn recv_blocking(&self) -> Option<Response> {
+        EngineGroup::recv_blocking(self)
+    }
+    fn metrics_snapshot(&self) -> Option<String> {
+        EngineGroup::metrics_snapshot(self)
+    }
+}
+
+/// Inject `replica="<i>"` as the first label of every exposition line.
+fn label_replica(text: &str, replica: usize) -> String {
+    let mut out = String::with_capacity(text.len() + text.lines().count() * 14);
+    for line in text.lines() {
+        match line.rsplit_once(' ') {
+            Some((name, value)) => {
+                match name.split_once('{') {
+                    Some((bare, rest)) => {
+                        out.push_str(bare);
+                        out.push_str(&format!("{{replica=\"{replica}\","));
+                        out.push_str(rest);
+                    }
+                    None => {
+                        out.push_str(name);
+                        out.push_str(&format!("{{replica=\"{replica}\"}}"));
+                    }
+                }
+                out.push(' ');
+                out.push_str(value);
+                out.push('\n');
+            }
+            None => {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::runtime::MockBackend;
+
+    fn group(n: usize, batch: usize, migration: bool) -> EngineGroup {
+        EngineGroup::spawn(n, migration, |_| {
+            let cfg = EngineConfig {
+                budget: 16,
+                batch,
+                chunked_prefill: false,
+                ..Default::default()
+            };
+            Engine::new(MockBackend::new(batch, 20), cfg, 2)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn hash_pinning_is_stable_across_restarts() {
+        // the pin is a pure function of (id, n): a fresh router — a
+        // restarted process — maps every session to the same replica
+        let ids: Vec<String> = (0..64).map(|i| format!("sess-{i}")).collect();
+        let first: Vec<usize> = ids.iter().map(|s| home_replica(s, 4)).collect();
+        let again: Vec<usize> = ids.iter().map(|s| home_replica(s, 4)).collect();
+        assert_eq!(first, again);
+        // spot-check against precomputed FNV-1a values: these are part of
+        // the on-disk/cross-restart contract, not an implementation detail
+        assert_eq!(session_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(session_hash("a"), 0xaf63_dc4c_8601_ec8c);
+        // all replicas reachable over a small id population
+        let mut seen = [false; 4];
+        for &r in &first {
+            seen[r] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "hash never reaches some replica");
+        // a router wrapper agrees with the bare hash for unpinned sessions
+        let router = SessionRouter::new(4, 2, true);
+        for (id, &home) in ids.iter().zip(&first) {
+            assert_eq!(router.replica_for(id), home);
+        }
+    }
+
+    #[test]
+    fn sessionless_requests_prefer_most_free_lanes() {
+        let router = SessionRouter::new(3, 2, true);
+        let req = |id: u64| Request::new(id, vec![1, 2], 1);
+        // empty group: lowest index wins the tie
+        assert_eq!(router.route(&req(0)), RouteDecision::To(0));
+        // replica 0 now has 1 outstanding -> 1 free lane; 1 and 2 have 2
+        assert_eq!(router.route(&req(1)), RouteDecision::To(1));
+        assert_eq!(router.route(&req(2)), RouteDecision::To(2));
+        // all at 1 outstanding again: round keeps spreading
+        assert_eq!(router.route(&req(3)), RouteDecision::To(0));
+        assert_eq!(router.route(&req(4)), RouteDecision::To(1));
+        assert_eq!(router.route(&req(5)), RouteDecision::To(2));
+        // everyone full (0 free lanes): shallowest queue, lowest index
+        assert_eq!(router.route(&req(6)), RouteDecision::To(0));
+        assert_eq!(router.route(&req(7)), RouteDecision::To(1));
+        let m = router.metrics();
+        assert_eq!(m.routed, 8);
+        assert_eq!(m.balanced, 8);
+    }
+
+    #[test]
+    fn saturated_home_rebalances_quiescent_session() {
+        let router = SessionRouter::new(2, 1, true);
+        let sid = "conv";
+        let home = home_replica(sid, 2);
+        let other = 1 - home;
+        // first turn lands on the hash home
+        let turn = Request::new(1, vec![1, 2], 1).with_session(sid);
+        assert_eq!(router.route(&turn), RouteDecision::To(home));
+        let done = Response {
+            id: 1, tag: String::new(), session: Some(sid.to_string()),
+            prompt_len: 2, tokens: vec![3], finish:
+                crate::scheduler::FinishReason::Length,
+            ttft_us: 0.0, e2e_us: 0.0,
+        };
+        router.note_done(home, &done);
+        // saturate the home replica with another pinned session's turn
+        // (sessionless fillers would spread; a pin targets the lane)
+        router.repin("blocker", home);
+        let blocker = Request::new(2, vec![1], 1).with_session("blocker");
+        assert_eq!(router.route(&blocker), RouteDecision::To(home));
+        // the session's next turn rebalances to the free replica
+        let turn2 = Request::new(3, vec![4], 1).with_session(sid);
+        match router.route(&turn2) {
+            RouteDecision::MigrateThenTo(src, dst) => {
+                assert_eq!(src, home);
+                assert_eq!(dst, other);
+            }
+            other => panic!("expected rebalance, got {other:?}"),
+        }
+        assert_eq!(router.metrics().rebalances, 1);
+        // and the pin moved: the turn after resolves to the new replica
+        assert_eq!(router.replica_for(sid), other);
+    }
+
+    #[test]
+    fn migration_off_cleanly_rejects() {
+        let group = group(2, 1, false);
+        let sid = "conv";
+        let home = home_replica(sid, 2);
+        group.submit(Request::new(1, vec![1, 50], 2).with_session(sid));
+        assert!(group.recv_blocking().is_some());
+        let err = group.migrate_session(sid, 1 - home).unwrap_err();
+        assert!(err.to_string().contains("migration is disabled"),
+                "unexpected error: {err}");
+        assert_eq!(group.router.metrics().migrations_rejected, 1);
+        assert_eq!(group.router.metrics().migrations, 0);
+        // the session still serves fine where it is
+        group.submit(Request::new(2, vec![60], 2).with_session(sid));
+        let r = group.recv_blocking().unwrap();
+        assert_eq!(r.tokens, vec![61, 62]);
+        group.shutdown();
+    }
+
+    #[test]
+    fn group_flush_drains_every_replica() {
+        let group = group(3, 1, true);
+        // one session per replica (pinned by distinct explicit ids that
+        // hash apart is fiddly — route enough sessions that each replica
+        // holds at least one parked lane)
+        let mut turn = 0u64;
+        for i in 0..6 {
+            turn += 1;
+            group.submit(
+                Request::new(turn, vec![1, 40 + i], 2)
+                    .with_session(format!("s{i}")),
+            );
+        }
+        for _ in 0..6 {
+            assert!(group.recv_blocking().is_some());
+        }
+        assert!(group.flush_sessions());
+        let text = group.metrics_snapshot().unwrap();
+        // every parked lane went down to its host store: no replica
+        // reports parked lanes, and the store sizes sum to 6
+        let mut stored = 0.0;
+        for line in text.lines() {
+            if let Some((name, value)) = line.rsplit_once(' ') {
+                if name.starts_with("trimkv_lanes_parked{") {
+                    assert_eq!(value, "0", "parked lane survived flush: {line}");
+                }
+                if name.starts_with("trimkv_session_store_size{") {
+                    stored += value.parse::<f64>().unwrap();
+                }
+            }
+        }
+        assert_eq!(stored, 6.0);
+        group.shutdown();
+    }
+
+    #[test]
+    fn explicit_migration_moves_session_state() {
+        let group = group(2, 1, true);
+        let sid = "mover";
+        let home = home_replica(sid, 2);
+        let target = 1 - home;
+        group.submit(Request::new(1, vec![1, 50], 2).with_session(sid));
+        let r1 = group.recv_blocking().unwrap();
+        assert_eq!(r1.tokens, vec![51, 52]);
+        group.migrate_session(sid, target).unwrap();
+        assert_eq!(group.router.replica_for(sid), target);
+        assert_eq!(group.router.metrics().migrations, 1);
+        // the next turn runs on the target replica with the retained
+        // cache: the mock emits successors of the full stream, so a
+        // re-prefilled (state-lost) session would answer differently
+        group.submit(Request::new(2, vec![60], 2).with_session(sid));
+        let r2 = group.recv_blocking().unwrap();
+        assert_eq!(r2.tokens, vec![61, 62]);
+        // and the state genuinely moved: the target's store held it
+        let text = group.metrics_snapshot().unwrap();
+        let line = format!("trimkv_sessions_opened_total{{replica=\"{home}\"}} 1");
+        assert!(text.contains(&line), "home replica lost its open count:\n{text}");
+        group.shutdown();
+    }
+
+    #[test]
+    fn group_round_trip_spreads_sessionless_load() {
+        let group = group(2, 2, true);
+        for i in 0..8 {
+            group.submit(Request::new(i, vec![1, 30 + i as u32], 3));
+        }
+        // the balanced counter is final at submit time (and `shutdown`
+        // consumes the group, router included)
+        assert_eq!(group.router.metrics().balanced, 8);
+        let responses = group.shutdown();
+        assert_eq!(responses.len(), 8);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn label_injection_preserves_exposition_grammar() {
+        let text = "trimkv_tokens_total 42\n\
+                    trimkv_step_us{quantile=\"0.5\"} 1.5\n";
+        let labeled = label_replica(text, 3);
+        assert_eq!(labeled,
+                   "trimkv_tokens_total{replica=\"3\"} 42\n\
+                    trimkv_step_us{replica=\"3\",quantile=\"0.5\"} 1.5\n");
+        crate::obs::assert_prometheus_parses(&labeled);
+    }
+
+    #[test]
+    fn group_metrics_aggregate_with_replica_labels() {
+        let group = group(2, 1, true);
+        group.submit(Request::new(1, vec![1, 40], 3));
+        assert!(group.recv_blocking().is_some());
+        let text = group.metrics_snapshot().unwrap();
+        crate::obs::assert_prometheus_parses(&text);
+        for i in 0..2 {
+            let needle = format!("trimkv_uptime_seconds{{replica=\"{i}\"}}");
+            assert!(text.contains(&needle), "missing {needle}:\n{text}");
+        }
+        assert!(text.contains("trimkv_router_replicas 2\n"));
+        assert!(text.contains("trimkv_router_routed_total 1\n"));
+        assert!(text.contains("trimkv_router_inflight{replica=\"0\"} 0\n"));
+        group.shutdown();
+    }
+}

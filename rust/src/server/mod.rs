@@ -1,12 +1,23 @@
 //! Serving front-ends.
 //!
-//! `InProcServer` runs the engine on a dedicated thread behind mpsc
+//! `InProcServer` runs one engine on a dedicated thread behind mpsc
 //! channels (the in-process API used by examples and the eval harness when
-//! overlap matters).  `tcp` exposes a line-delimited JSON protocol over a
-//! std TcpListener — one request per line:
+//! overlap matters).  The same worker loop, spawned with a shared response
+//! sink instead of a private channel, is the replica body of
+//! [`crate::router::EngineGroup`] — the router drives N of these through
+//! the identical `Msg` shape, plus the migration handshake
+//! (`TakeSession`/`PutSession`) layered on the engine's
+//! `export_session`/`import_session` hooks.
+//!
+//! `tcp` exposes a line-delimited JSON protocol over a std TcpListener —
+//! one request per line:
 //!   {"id": 1, "prompt": [1, 40, 41], "max_new_tokens": 16}
 //! responses stream back as
 //!   {"id": 1, "tokens": [...], "finish": "eos", "ttft_us": ..., "e2e_us": ...}
+//! A line of `{"stats": true}` replies `{"metrics": "<prometheus text>"}`
+//! (the exposition as one JSON string — the same body `GET /metrics`
+//! serves raw), and `{"session": "<id>", "close": true}` drops a
+//! conversation's retained state.
 
 pub mod tcp;
 
@@ -16,15 +27,143 @@ use std::thread::JoinHandle;
 use crate::engine::Engine;
 use crate::runtime::ModelBackend;
 use crate::scheduler::{Request, Response};
+use crate::session::SessionSnapshot;
 
-enum Msg {
+/// One engine worker's mailbox.  `pub(crate)` so the router can drive
+/// replica workers through the same shape the in-process server uses.
+pub(crate) enum Msg {
     Req(Request),
     CloseSession(String),
     /// reply with the engine's Prometheus-style metrics text
     Stats(Sender<String>),
     /// reply with the flight recorder's Chrome-trace JSON
     Trace(Sender<String>),
+    /// drain the in-flight step and force every parked lane to the host
+    /// store, then ack (checkpoint / drain barrier)
+    Flush(Sender<()>),
+    /// migration source half: drain the session's lane and hand its
+    /// snapshot out of the store.  Err(reason) when the session still has
+    /// turns in flight (the engine refuses, the worker survives).
+    TakeSession(String, Sender<Result<Option<Box<SessionSnapshot>>, String>>),
+    /// migration target half: rebind a snapshot into the host store; ack
+    /// so the caller can order the session's next turn after the rebind
+    PutSession(String, Box<SessionSnapshot>, Sender<()>),
     Shutdown,
+}
+
+/// Apply one mailbox message to the engine.  Engine errors on flush
+/// propagate (they are tick-loop-fatal, like a failed backend step);
+/// per-session migration refusals travel back to the caller instead.
+fn handle_msg<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    msg: Msg,
+    shutdown: &mut bool,
+) -> anyhow::Result<()> {
+    match msg {
+        Msg::Req(r) => {
+            if let Err(e) = engine.submit(r) {
+                log_admit_error(&e);
+            }
+        }
+        Msg::CloseSession(id) => engine.close_session(&id),
+        Msg::Stats(reply) => {
+            let _ = reply.send(engine.prometheus_text());
+        }
+        Msg::Trace(reply) => {
+            let _ = reply.send(engine.chrome_trace_json());
+        }
+        Msg::Flush(reply) => {
+            engine.flush_sessions()?;
+            let _ = reply.send(());
+        }
+        Msg::TakeSession(id, reply) => {
+            let out = engine
+                .export_session(&id)
+                .map(|snap| snap.map(Box::new))
+                .map_err(|e| e.to_string());
+            let _ = reply.send(out);
+        }
+        Msg::PutSession(id, snap, reply) => {
+            engine.import_session(&id, *snap);
+            let _ = reply.send(());
+        }
+        Msg::Shutdown => *shutdown = true,
+    }
+    Ok(())
+}
+
+/// Spawn the engine worker loop: drain the mailbox without blocking the
+/// decode loop, tick, forward responses into `sink`, and block on the
+/// mailbox when idle (parked sessions wait without burning a core).
+pub(crate) fn spawn_worker<B, F>(
+    mut engine: Engine<B>,
+    rx: Receiver<Msg>,
+    mut sink: F,
+) -> JoinHandle<anyhow::Result<()>>
+where
+    B: ModelBackend + 'static,
+    F: FnMut(Response) + Send + 'static,
+{
+    std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut shutdown = false;
+        loop {
+            loop {
+                match rx.try_recv() {
+                    Ok(msg) => handle_msg(&mut engine, msg, &mut shutdown)?,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            }
+            let worked = engine.tick()?;
+            for resp in engine.take_responses() {
+                sink(resp);
+            }
+            if shutdown && engine.idle() {
+                return Ok(());
+            }
+            if !worked && !shutdown {
+                match rx.recv() {
+                    Ok(msg) => handle_msg(&mut engine, msg, &mut shutdown)?,
+                    Err(_) => return Ok(()),
+                }
+            }
+        }
+    })
+}
+
+/// What the TCP front door needs from whatever sits behind it — one
+/// engine ([`InProcServer`]) or a routed fleet
+/// ([`crate::router::EngineGroup`]).  `serve_connection`/`listen` are
+/// generic over this, so the wire protocol is identical at N=1 and N=8.
+pub trait Frontend {
+    fn submit(&self, req: Request);
+    fn close_session(&self, id: &str);
+    fn try_recv(&self) -> Option<Response>;
+    fn recv_blocking(&self) -> Option<Response>;
+    /// Prometheus-style exposition text (the `GET /metrics` body); the
+    /// group aggregates per-replica series under a `replica` label.
+    fn metrics_snapshot(&self) -> Option<String>;
+}
+
+impl Frontend for InProcServer {
+    fn submit(&self, req: Request) {
+        InProcServer::submit(self, req)
+    }
+    fn close_session(&self, id: &str) {
+        InProcServer::close_session(self, id)
+    }
+    fn try_recv(&self) -> Option<Response> {
+        InProcServer::try_recv(self)
+    }
+    fn recv_blocking(&self) -> Option<Response> {
+        InProcServer::recv_blocking(self)
+    }
+    fn metrics_snapshot(&self) -> Option<String> {
+        InProcServer::metrics_snapshot(self)
+    }
 }
 
 /// Engine on its own thread; submit requests and poll responses from any
@@ -36,63 +175,11 @@ pub struct InProcServer {
 }
 
 impl InProcServer {
-    pub fn spawn<B: ModelBackend + 'static>(mut engine: Engine<B>) -> InProcServer {
+    pub fn spawn<B: ModelBackend + 'static>(engine: Engine<B>) -> InProcServer {
         let (tx, req_rx) = channel::<Msg>();
         let (resp_tx, rx) = channel::<Response>();
-        let handle = std::thread::spawn(move || -> anyhow::Result<()> {
-            let mut shutdown = false;
-            loop {
-                // drain incoming requests without blocking the decode loop
-                loop {
-                    match req_rx.try_recv() {
-                        Ok(Msg::Req(r)) => {
-                            if let Err(e) = engine.submit(r) {
-                                log_admit_error(&e);
-                            }
-                        }
-                        Ok(Msg::CloseSession(id)) => engine.close_session(&id),
-                        Ok(Msg::Stats(reply)) => {
-                            let _ = reply.send(engine.prometheus_text());
-                        }
-                        Ok(Msg::Trace(reply)) => {
-                            let _ = reply.send(engine.chrome_trace_json());
-                        }
-                        Ok(Msg::Shutdown) => shutdown = true,
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            shutdown = true;
-                            break;
-                        }
-                    }
-                }
-                let worked = engine.tick()?;
-                for resp in engine.take_responses() {
-                    let _ = resp_tx.send(resp);
-                }
-                if shutdown && engine.idle() {
-                    return Ok(());
-                }
-                if !worked && !shutdown {
-                    // idle: block until the next request arrives (parked
-                    // sessions wait here without burning a core)
-                    match req_rx.recv() {
-                        Ok(Msg::Req(r)) => {
-                            if let Err(e) = engine.submit(r) {
-                                log_admit_error(&e);
-                            }
-                        }
-                        Ok(Msg::CloseSession(id)) => engine.close_session(&id),
-                        Ok(Msg::Stats(reply)) => {
-                            let _ = reply.send(engine.prometheus_text());
-                        }
-                        Ok(Msg::Trace(reply)) => {
-                            let _ = reply.send(engine.chrome_trace_json());
-                        }
-                        Ok(Msg::Shutdown) => shutdown = true,
-                        Err(_) => return Ok(()),
-                    }
-                }
-            }
+        let handle = spawn_worker(engine, req_rx, move |r| {
+            let _ = resp_tx.send(r);
         });
         InProcServer { tx, rx, handle: Some(handle) }
     }
@@ -104,6 +191,16 @@ impl InProcServer {
     /// Drop a conversation's retained state (host snapshot + parked lane).
     pub fn close_session(&self, id: impl Into<String>) {
         let _ = self.tx.send(Msg::CloseSession(id.into()));
+    }
+
+    /// Drain in-flight work and force every parked lane to the host store.
+    /// Blocks until the engine acks; false if the engine thread is gone.
+    pub fn flush_sessions(&self) -> bool {
+        let (reply_tx, reply_rx) = channel();
+        if self.tx.send(Msg::Flush(reply_tx)).is_err() {
+            return false;
+        }
+        reply_rx.recv().is_ok()
     }
 
     pub fn try_recv(&self) -> Option<Response> {
@@ -215,5 +312,26 @@ mod tests {
         assert_eq!(responses[0].tokens, vec![51, 52]);
         assert_eq!(responses[1].id, 2);
         assert_eq!(responses[1].tokens, vec![61, 62]);
+    }
+
+    #[test]
+    fn inproc_server_flush_parks_sessions_to_store() {
+        let cfg = EngineConfig {
+            budget: 16,
+            batch: 1,
+            chunked_prefill: false,
+            ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        srv.submit(Request::new(1, vec![1, 50], 2).with_session("s"));
+        assert!(srv.recv_blocking().is_some());
+        // under the lazy swap policy the finished turn parks on the lane;
+        // the flush barrier forces it down to the host store
+        assert!(srv.flush_sessions());
+        let text = srv.metrics_snapshot().unwrap();
+        assert!(text.contains("trimkv_session_store_size 1\n"),
+                "flush must land the parked session in the store:\n{text}");
+        srv.shutdown();
     }
 }

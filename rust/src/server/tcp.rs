@@ -11,7 +11,9 @@
 //! Prometheus-style exposition text:
 //!   {"stats": true}  ->  {"metrics": "trimkv_tokens_decoded_total 42\n..."}
 //! plain HTTP scrapers are also served: a connection whose first line is
-//! `GET /metrics` receives one `text/plain` exposition and is closed.
+//! `GET /metrics` receives one `text/plain` exposition and is closed;
+//! any other `GET` path (health probes, typos) gets a 404, never a
+//! metrics body.
 //! each response is one JSON line
 //!   {"id": 1, "tag": "x", "session": "abc", "tokens": [...],
 //!    "finish": "eos", "ttft_us": 123.0, "e2e_us": 456.0}
@@ -22,7 +24,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
 use crate::scheduler::{FinishReason, Request, Response};
-use crate::server::InProcServer;
+use crate::server::Frontend;
 use crate::util::json::Json;
 
 /// One parsed client line.
@@ -94,7 +96,7 @@ pub fn response_to_json(r: &Response) -> Json {
 
 /// Serve one client connection: read request lines, stream response lines.
 /// Returns when the client closes its write side and all work is done.
-pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result<usize> {
+pub fn serve_connection<F: Frontend>(stream: TcpStream, srv: &F) -> anyhow::Result<usize> {
     stream.set_nodelay(true).ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -105,16 +107,30 @@ pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result
         if line.trim().is_empty() {
             continue;
         }
-        // HTTP fast path: a plain `GET /metrics` (curl, Prometheus) gets
-        // one text/plain exposition and the connection closes
-        if line.starts_with("GET /metrics") {
-            let body = srv.metrics_snapshot().unwrap_or_default();
-            write!(writer,
-                   "HTTP/1.0 200 OK\r\n\
-                    Content-Type: text/plain; version=0.0.4\r\n\
-                    Content-Length: {}\r\n\
-                    Connection: close\r\n\r\n{}",
-                   body.len(), body)?;
+        // HTTP fast path: plain scrapers (curl, Prometheus) get one
+        // response and the connection closes.  Only `GET /metrics` is the
+        // exposition; any other path — health probes, typos — is a 404,
+        // never a metrics body.
+        if let Some(rest) = line.strip_prefix("GET ") {
+            let path = rest.split_whitespace().next().unwrap_or("");
+            // ignore a query string ("/metrics?ts=..."), match exactly
+            if path.split('?').next() == Some("/metrics") {
+                let body = srv.metrics_snapshot().unwrap_or_default();
+                write!(writer,
+                       "HTTP/1.0 200 OK\r\n\
+                        Content-Type: text/plain; version=0.0.4\r\n\
+                        Content-Length: {}\r\n\
+                        Connection: close\r\n\r\n{}",
+                       body.len(), body)?;
+            } else {
+                let body = "not found\n";
+                write!(writer,
+                       "HTTP/1.0 404 Not Found\r\n\
+                        Content-Type: text/plain\r\n\
+                        Content-Length: {}\r\n\
+                        Connection: close\r\n\r\n{}",
+                       body.len(), body)?;
+            }
             return Ok(served);
         }
         match parse_client_line(&line) {
@@ -123,7 +139,7 @@ pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result
                 outstanding += 1;
             }
             Ok(ClientMsg::Close(sid)) => {
-                srv.close_session(sid.clone());
+                srv.close_session(&sid);
                 writeln!(writer, "{}", Json::obj(vec![
                     ("session", Json::str(sid)),
                     ("closed", Json::Bool(true)),
@@ -160,8 +176,10 @@ pub fn serve_connection(stream: TcpStream, srv: &InProcServer) -> anyhow::Result
     Ok(served)
 }
 
-/// Accept loop: one connection at a time (single engine, single core).
-pub fn listen(addr: &str, srv: &InProcServer) -> anyhow::Result<()> {
+/// Accept loop: one connection at a time (the engine-group frontend still
+/// serves all replicas concurrently — routing is cheap; the single accept
+/// loop only serializes protocol parsing).
+pub fn listen<F: Frontend>(addr: &str, srv: &F) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("[tcp] listening on {addr}");
     for stream in listener.incoming() {
@@ -182,6 +200,7 @@ pub fn listen(addr: &str, srv: &InProcServer) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::InProcServer;
 
     #[test]
     fn parses_request_line() {
@@ -335,6 +354,47 @@ mod tests {
         let body = raw.split("\r\n\r\n").nth(1).expect("header/body split");
         crate::obs::assert_prometheus_parses(body);
         assert!(body.contains("trimkv_uptime_seconds"));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_get_other_paths_answer_404_not_metrics() {
+        use crate::config::EngineConfig;
+        use crate::engine::Engine;
+        use crate::runtime::MockBackend;
+        use std::io::{Read, Write};
+
+        let cfg = EngineConfig {
+            budget: 16, batch: 1, chunked_prefill: false, ..Default::default()
+        };
+        let engine = Engine::new(MockBackend::new(1, 20), cfg, 2).unwrap();
+        let srv = InProcServer::spawn(engine);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            // two probes, then a query-string scrape that must still work
+            for _ in 0..3 {
+                let (s, _) = listener.accept().unwrap();
+                serve_connection(s, &srv).unwrap();
+            }
+        });
+        for path in ["/healthz", "/metricsz"] {
+            let mut client = TcpStream::connect(addr).unwrap();
+            write!(client, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            client.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut raw = String::new();
+            client.read_to_string(&mut raw).unwrap();
+            assert!(raw.starts_with("HTTP/1.0 404 Not Found\r\n"),
+                    "{path} must 404, got: {raw}");
+            assert!(!raw.contains("trimkv_"), "{path} leaked metrics: {raw}");
+        }
+        let mut client = TcpStream::connect(addr).unwrap();
+        write!(client, "GET /metrics?ts=1 HTTP/1.1\r\n\r\n").unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut raw = String::new();
+        client.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.0 200 OK\r\n"), "got: {raw}");
+        assert!(raw.contains("trimkv_uptime_seconds"));
         t.join().unwrap();
     }
 

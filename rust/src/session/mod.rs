@@ -16,6 +16,12 @@
 //! The store is LRU-bounded (`EngineConfig::max_sessions`): under pressure
 //! the coldest conversation is dropped, exactly the trade the paper's
 //! retention gates make per token, lifted to whole dialogues.
+//!
+//! The snapshot doubles as the unit of **cross-replica migration**
+//! (`router`): `SessionStore::take` on the source and `insert` on the
+//! target replica move a conversation wholesale — no extra serialization
+//! format, and TRIM-KV's creation-time scores keep the moved cache valid
+//! verbatim.
 
 use std::collections::BTreeMap;
 

@@ -335,6 +335,57 @@ impl<'a> Gen<'a> {
     }
 }
 
+/// One scheduled arrival in a replicated-serving workload: a turn of a
+/// (possibly skewed-popularity) conversation, or a sessionless one-shot.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub id: u64,
+    pub session: Option<String>,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// Deterministic session-mix schedule for the engine-group bench and
+/// router tests: `n_turns` arrivals spread over `n_sessions` conversations
+/// with Zipf-like popularity (`skew` = 0 uniform, ~1 realistic hot-session
+/// traffic), plus a `sessionless_frac` of one-shot requests.  Pure
+/// function of the seed — every run, bench arm and replica count sees the
+/// identical arrival sequence.
+pub fn session_mix(seed: u64, n_sessions: usize, n_turns: usize,
+                   sessionless_frac: f64, skew: f64) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed);
+    let weights: Vec<f64> = (0..n_sessions.max(1))
+        .map(|i| 1.0 / ((i + 1) as f64).powf(skew))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut out = Vec::with_capacity(n_turns);
+    for t in 0..n_turns {
+        let session = if rng.bool(sessionless_frac) {
+            None
+        } else {
+            let mut x = rng.f64() * total;
+            let mut pick = weights.len() - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if x < *w {
+                    pick = i;
+                    break;
+                }
+                x -= w;
+            }
+            Some(format!("conv-{pick}"))
+        };
+        let len = rng.range(2, 10);
+        let prompt = (0..len).map(|_| 32 + rng.below(64) as u32).collect();
+        out.push(Arrival {
+            id: t as u64,
+            session,
+            prompt,
+            max_new: rng.range(2, 6),
+        });
+    }
+    out
+}
+
 /// Parse one line of artifacts/golden_episodes.jsonl (cross-language parity:
 /// python-generated episodes must be gradeable by the rust rules).
 pub fn parse_golden_line(line: &str)
@@ -495,5 +546,32 @@ mod tests {
         assert_eq!(tokens.len(), 5);
         assert_eq!(pe, 3);
         assert_eq!(ans, vec![41]);
+    }
+
+    #[test]
+    fn session_mix_is_deterministic_and_skewed() {
+        let a = session_mix(7, 8, 200, 0.25, 1.0);
+        let b = session_mix(7, 8, 200, 0.25, 1.0);
+        assert_eq!(a.len(), 200);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.session, y.session);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        // skew makes conv-0 the hottest session, and one-shots appear
+        let count = |sid: &str| {
+            a.iter().filter(|t| t.session.as_deref() == Some(sid)).count()
+        };
+        assert!(count("conv-0") > count("conv-7"),
+                "skew 1.0 must favor the first session");
+        assert!(a.iter().any(|t| t.session.is_none()));
+        // zero skew with no one-shots: every session gets traffic
+        let u = session_mix(7, 4, 400, 0.0, 0.0);
+        for i in 0..4 {
+            let want = format!("conv-{i}");
+            assert!(u.iter().any(
+                |t| t.session.as_deref() == Some(want.as_str())));
+        }
     }
 }

@@ -720,3 +720,102 @@ fn prop_grading_never_rewards_wrong_prefix() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_migrated_session_stream_matches_never_migrated() {
+    // the replicated-serving tentpole invariant: cross-replica migration
+    // (drain -> export_session -> import_session on another engine with
+    // its own backend) is a placement change only — the session's token
+    // stream is bit-exact with a never-migrated run, for all 7+1
+    // deterministic policies.  TRIM-KV's creation-time, query-agnostic
+    // retention scores make the migrated cache valid verbatim; the test
+    // also covers every baseline because victim selection is a pure
+    // function of the (migrated) head state.  Only "random" is out: the
+    // policy rng's consumption history differs across two engines by
+    // construction.  Sessionless churn on the source engine before the
+    // cut proves lane-invariance survives the handoff.
+    forall("migration equivalence", 12, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret", "retrieval"];
+        let policy = names[rng.below(names.len())];
+        let budget = rng.range(12, 28);
+        let batch = rng.range(2, 5);
+        let n_turns = rng.range(2, 6);
+        let prompts: Vec<Vec<u32>> = (0..n_turns)
+            .map(|t| {
+                let len = if t == 0 { rng.range(2, 40) } else { rng.range(1, 12) };
+                (0..len).map(|_| 32 + rng.below(64) as u32).collect()
+            })
+            .collect();
+        let max_new: Vec<usize> = (0..n_turns).map(|_| rng.range(1, 7)).collect();
+        // migrate at a turn boundary with at least one turn on each side
+        let cut = rng.range(1, n_turns);
+        let mixed = rng.bool(0.5);
+        let eager = rng.bool(0.5);
+        let pipeline = rng.bool(0.5);
+        let cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch,
+            chunked_prefill: true,
+            mixed_ticks: mixed,
+            swap_policy: if eager { "eager" } else { "lazy" }.into(),
+            pipeline,
+            ..Default::default()
+        };
+        let make = |cfg: &EngineConfig| {
+            Engine::new(MockBackend::new(batch, budget + 20), cfg.clone(), 2)
+                .unwrap()
+        };
+        // reference arm: one engine serves every turn
+        let mut reference: Vec<Vec<u32>> = Vec::new();
+        let mut eng = make(&cfg);
+        for t in 0..n_turns {
+            eng.submit(Request::new(t as u64, prompts[t].clone(), max_new[t])
+                    .with_session("conv"))
+                .map_err(|e| format!("{e}"))?;
+            let rs = eng.run_to_completion().map_err(|e| format!("{e}"))?;
+            prop_assert_eq!(rs.len(), 1);
+            reference.push(rs[0].tokens.clone());
+        }
+        // migrated arm: turns < cut on the source engine (with sessionless
+        // churn), then the snapshot moves to a second engine with its own
+        // backend, which serves the rest
+        let mut migrated: Vec<Vec<u32>> = Vec::new();
+        let mut src = make(&cfg);
+        let mut dst = make(&cfg);
+        for t in 0..cut {
+            if rng.bool(0.4) {
+                let filler: Vec<u32> =
+                    (0..rng.range(2, 10)).map(|_| 32 + rng.below(64) as u32)
+                        .collect();
+                src.submit(Request::new(100 + t as u64, filler, rng.range(1, 4)))
+                    .map_err(|e| format!("{e}"))?;
+            }
+            src.submit(Request::new(t as u64, prompts[t].clone(), max_new[t])
+                    .with_session("conv"))
+                .map_err(|e| format!("{e}"))?;
+            let mut rs = src.run_to_completion().map_err(|e| format!("{e}"))?;
+            rs.retain(|r| r.session.as_deref() == Some("conv"));
+            prop_assert_eq!(rs.len(), 1);
+            migrated.push(rs[0].tokens.clone());
+        }
+        let snap = src
+            .export_session("conv")
+            .map_err(|e| format!("{e}"))?
+            .ok_or_else(|| "source engine held no snapshot".to_string())?;
+        prop_assert!(!src.sessions().contains("conv"),
+                     "export must take the snapshot out of the source store");
+        dst.import_session("conv", snap);
+        for t in cut..n_turns {
+            dst.submit(Request::new(t as u64, prompts[t].clone(), max_new[t])
+                    .with_session("conv"))
+                .map_err(|e| format!("{e}"))?;
+            let rs = dst.run_to_completion().map_err(|e| format!("{e}"))?;
+            prop_assert_eq!(rs.len(), 1);
+            migrated.push(rs[0].tokens.clone());
+        }
+        prop_assert_eq!(&migrated, &reference);
+        Ok(())
+    });
+}
