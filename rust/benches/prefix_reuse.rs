@@ -1,0 +1,205 @@
+//! Shared-prefix store bench: TTFT collapse when a fleet's common system
+//! prompts are served from the prefix cache instead of re-prefilled.
+//!
+//! The workload is `workload::shared_prefix_mix`: every arrival opens with
+//! one of a few fixed 96-token "system prompts" (Zipf-picked) plus a short
+//! unique tail.  The warm arm first runs one padded request per prefix so
+//! the store holds each prefix at the 64-token boundary, then serves the
+//! mix: admission seeds every lane from the cached slab + frozen retention
+//! state and prefills only the tail.  The cold arm is the identical engine
+//! with the store disabled.
+//!
+//! Inline correctness asserts (the bench doubles as an end-to-end check):
+//! - every warm token stream is bit-exact with the cold arm — the cached
+//!   slab plus TRIM-KV's creation-time scores reproduce the cold lane
+//!   verbatim;
+//! - the warm arm's hit/miss/insert/saved counters land on their exact
+//!   closed-form values (the mix and the store are both deterministic).
+//!
+//! Deterministic CI gates: the prefix hit/miss/insert counters and
+//! `prefill_tokens_saved` (pure accounting over a fixed arrival sequence).
+//! The TTFT collapse ratio and warm serve time carry the loose wall-time
+//! threshold — the synthetic device latency makes prefill ticks visible
+//! but shared runners jitter.
+//!
+//! Emits `BENCH_prefix.json` (util::benchkit) for the CI bench-smoke job's
+//! regression gate.
+//!
+//!   cargo bench --bench prefix_reuse [-- --quick]
+
+use trimkv::config::EngineConfig;
+use trimkv::engine::Engine;
+use trimkv::runtime::MockBackend;
+use trimkv::scheduler::{Request, Response};
+use trimkv::util::benchkit::{bench, gate, iters, report, results_json,
+                             write_bench_json, BenchResult};
+use trimkv::util::json::Json;
+use trimkv::util::rng::Rng;
+use trimkv::workload::{shared_prefix_mix, Arrival};
+
+const BATCH: usize = 4;
+const BUDGET: usize = 48;
+/// Synthetic device step latency: prefill ticks dominate TTFT, so the
+/// skipped-prefix savings are visible on the clock.
+const LATENCY_US: u64 = 200;
+const PREFIXES: usize = 4;
+const PREFIX_TOKENS: usize = 96;
+/// Store granularity: every 96-token prefix shares its 64-token head.
+const CHUNK_TOKENS: usize = 64;
+const REQUESTS: usize = 16;
+const MIX_SEED: u64 = 13;
+
+fn cfg(warm: bool) -> EngineConfig {
+    EngineConfig {
+        policy: "trimkv".into(),
+        budget: BUDGET,
+        batch: BATCH,
+        chunked_prefill: true,
+        mixed_ticks: true,
+        prefix_enabled: warm,
+        prefix_chunk_tokens: CHUNK_TOKENS,
+        ..Default::default()
+    }
+}
+
+fn make_engine(warm: bool) -> Engine<MockBackend> {
+    let backend = MockBackend::new(BATCH, BUDGET + 24)
+        .with_synthetic_latency_us(LATENCY_US);
+    Engine::new(backend, cfg(warm), 2).expect("engine")
+}
+
+/// The fixed prefix pool behind `shared_prefix_mix(MIX_SEED, ..)`: the mix
+/// draws its pool first from a fresh `Rng`, so the same draws reproduce it.
+/// `main` asserts every arrival actually opens with one of these, so a
+/// change to the workload generator fails loudly here instead of silently
+/// desynchronizing the warm-up set.
+fn prefix_pool() -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(MIX_SEED);
+    (0..PREFIXES)
+        .map(|_| (0..PREFIX_TOKENS).map(|_| 32 + rng.below(64) as u32).collect())
+        .collect()
+}
+
+/// One warm-up request per prefix, padded to the next store boundary
+/// (96 + 32 = 128 tokens) so each prefix publishes at depths 64 and 128.
+fn warmups(pool: &[Vec<u32>]) -> Vec<Arrival> {
+    pool.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut prompt = p.clone();
+            prompt.extend(
+                (0..2 * CHUNK_TOKENS - PREFIX_TOKENS)
+                    .map(|t| 32 + ((i * 13 + t) % 64) as u32));
+            Arrival { id: 1000 + i as u64, session: None, prompt, max_new: 2 }
+        })
+        .collect()
+}
+
+/// Serve `arrivals` to completion; returns per-request token streams
+/// (sorted by id) and the mean time-to-first-token.
+fn serve(engine: &mut Engine<MockBackend>, arrivals: &[Arrival])
+    -> (Vec<(u64, Vec<u32>)>, f64) {
+    for a in arrivals {
+        engine
+            .submit(Request::new(a.id, a.prompt.clone(), a.max_new))
+            .expect("admit");
+    }
+    let rs: Vec<Response> = engine.run_to_completion().expect("serve");
+    assert_eq!(rs.len(), arrivals.len(), "lost a response");
+    let ttft_mean =
+        rs.iter().map(|r| r.ttft_us).sum::<f64>() / rs.len() as f64;
+    let mut streams: Vec<(u64, Vec<u32>)> =
+        rs.into_iter().map(|r| (r.id, r.tokens)).collect();
+    streams.sort_by_key(|(id, _)| *id);
+    (streams, ttft_mean)
+}
+
+fn main() {
+    let arrivals =
+        shared_prefix_mix(MIX_SEED, PREFIXES, PREFIX_TOKENS, REQUESTS, 1.0);
+    let pool = prefix_pool();
+    for a in &arrivals {
+        assert!(pool.iter().any(|p| a.prompt.starts_with(p)),
+                "arrival {} does not open with a pool prefix (generator \
+                 changed?)", a.id);
+    }
+    println!("=== shared-prefix reuse ({REQUESTS} arrivals over {PREFIXES} \
+              {PREFIX_TOKENS}-token prefixes, chunk {CHUNK_TOKENS}, \
+              {BATCH} lanes, {LATENCY_US}us device step) ===");
+
+    // canonical runs: correctness asserts + deterministic counters
+    let mut cold = make_engine(false);
+    let (cold_streams, cold_ttft) = serve(&mut cold, &arrivals);
+
+    let mut warm = make_engine(true);
+    let warm_set = warmups(&pool);
+    serve(&mut warm, &warm_set);
+    let store = warm.prefix_store().expect("store enabled");
+    let after_warmup = store.counters();
+    assert_eq!((after_warmup.hits, after_warmup.misses, after_warmup.inserts),
+               (0, PREFIXES as u64, 2 * PREFIXES as u64),
+               "warm-up pass must publish each prefix at both boundaries");
+    let (warm_streams, warm_ttft) = serve(&mut warm, &arrivals);
+    assert_eq!(warm_streams, cold_streams,
+               "prefix-cache hit changed a token stream");
+    let c = warm.prefix_store().expect("store enabled").counters();
+    let saved = (REQUESTS * CHUNK_TOKENS) as u64;
+    assert_eq!(c.hits, REQUESTS as u64, "an arrival missed the warm store");
+    assert_eq!(c.misses, PREFIXES as u64, "only warm-ups may miss");
+    assert_eq!(c.inserts, 2 * PREFIXES as u64,
+               "hit lanes must not republish their prefix");
+    assert_eq!(c.prefill_tokens_saved, saved);
+    assert_eq!(c.evictions, 0, "the pool fits the default byte budget");
+
+    let collapse = cold_ttft / warm_ttft;
+    println!("{:<6} {:>12} {:>14}", "arm", "ttft_us", "prefill_saved");
+    println!("{:<6} {:>12.0} {:>14}", "cold", cold_ttft, 0);
+    println!("{:<6} {:>12.0} {:>14}", "warm", warm_ttft,
+             c.prefill_tokens_saved);
+    println!("ttft collapse: {collapse:.2}x");
+    // sanity floor: a hit skips 64 of ~110 prompt tokens, so TTFT must
+    // drop well clear of noise; the gated value lives in the baseline
+    assert!(collapse > 1.2,
+            "warm TTFT did not collapse ({collapse:.2}x) — seeding fell \
+             back to full prefill?");
+
+    // wall-time distribution over repeated serves (store stays warm; the
+    // cold engine re-prefills every prompt each iteration)
+    let (warmup_iters, n_iters) = iters(1, 5);
+    let mut results: Vec<BenchResult> = Vec::new();
+    results.push(bench("serve/cold", warmup_iters, n_iters, || {
+        std::hint::black_box(serve(&mut cold, &arrivals));
+    }));
+    results.push(bench("serve/warm", warmup_iters, n_iters, || {
+        std::hint::black_box(serve(&mut warm, &arrivals));
+    }));
+    report(&results);
+
+    let payload = Json::obj(vec![
+        ("batch", Json::num(BATCH as f64)),
+        ("budget", Json::num(BUDGET as f64)),
+        ("prefixes", Json::num(PREFIXES as f64)),
+        ("prefix_tokens", Json::num(PREFIX_TOKENS as f64)),
+        ("chunk_tokens", Json::num(CHUNK_TOKENS as f64)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("latency_us", Json::num(LATENCY_US as f64)),
+        ("cold_ttft_us", Json::num(cold_ttft)),
+        ("warm_ttft_us", Json::num(warm_ttft)),
+        ("results", results_json(&results)),
+        // CI gates: the counters are deterministic accounting over a fixed
+        // mix; the TTFT collapse and warm serve time carry the loose
+        // wall-time threshold in the baseline
+        ("regress_on", Json::obj(vec![
+            ("prefix_hits_total", gate(c.hits as f64, true)),
+            ("prefix_misses_total", gate(c.misses as f64, false)),
+            ("prefix_inserts_total", gate(c.inserts as f64, false)),
+            ("prefix_prefill_tokens_saved",
+             gate(c.prefill_tokens_saved as f64, true)),
+            ("prefix_ttft_collapse", gate(collapse, true)),
+            ("prefix_warm_serve_mean_us",
+             gate(results[1].mean_us, false)),
+        ])),
+    ]);
+    let path = write_bench_json("prefix", payload).expect("bench json");
+    println!("wrote {}", path.display());
+}

@@ -39,6 +39,16 @@
 //! migration = "on"        # cross-replica session migration + automatic
 //!                         # rebalancing ("off": sessions stay pinned to
 //!                         # their hash home forever)
+//!
+//! [prefix]
+//! enabled = false         # shared-prefix KV store: admission reuses the
+//!                         # cached slab + retention state of a common
+//!                         # prompt prefix, prefilling only the tail
+//! max_bytes = 67108864    # store byte budget; LRU-evicts unreferenced
+//!                         # entries beyond it (64 MiB)
+//! chunk_tokens = 64       # prefix match/publish granularity in tokens
+//!                         # (must divide into full backend chunks under
+//!                         # chunked prefill to take effect)
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -97,6 +107,15 @@ pub struct EngineConfig {
     /// Cross-replica session migration and automatic rebalancing; off
     /// keeps every session pinned to its hash home.
     pub migration: bool,
+    /// Shared-prefix KV store: one-shot admissions consult a
+    /// longest-cached-prefix index and seed their lane from the stored
+    /// slab + frozen retention state, prefilling only the prompt tail.
+    pub prefix_enabled: bool,
+    /// Prefix-store byte budget; beyond it the least-recently-used entry
+    /// no live lane references is evicted.
+    pub prefix_max_bytes: usize,
+    /// Prefix match/publish granularity in tokens.
+    pub prefix_chunk_tokens: usize,
 }
 
 impl Default for EngineConfig {
@@ -122,6 +141,9 @@ impl Default for EngineConfig {
             trace_capacity: 8192,
             replicas: 1,
             migration: true,
+            prefix_enabled: false,
+            prefix_max_bytes: 64 << 20,
+            prefix_chunk_tokens: 64,
         }
     }
 }
@@ -200,6 +222,17 @@ impl EngineConfig {
                             "router.migration must be on|off (got {val:?})"),
                     }
                 }
+                "prefix.enabled" => {
+                    cfg.prefix_enabled = val.as_bool().ok_or_else(|| bad(key))?
+                }
+                "prefix.max_bytes" => {
+                    cfg.prefix_max_bytes =
+                        val.as_usize().ok_or_else(|| bad(key))?
+                }
+                "prefix.chunk_tokens" => {
+                    cfg.prefix_chunk_tokens =
+                        val.as_usize().ok_or_else(|| bad(key))?
+                }
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -271,6 +304,17 @@ impl EngineConfig {
                 _ => anyhow::bail!("bad --migration (on|off)"),
             };
         }
+        if args.flag("prefix-cache") {
+            self.prefix_enabled = true;
+        }
+        if let Some(v) = args.get("prefix-max-bytes") {
+            self.prefix_max_bytes =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --prefix-max-bytes"))?;
+        }
+        if let Some(v) = args.get("prefix-chunk") {
+            self.prefix_chunk_tokens =
+                v.parse().map_err(|_| anyhow::anyhow!("bad --prefix-chunk"))?;
+        }
         self.validate()
     }
 
@@ -290,6 +334,8 @@ impl EngineConfig {
         anyhow::ensure!(self.trace_capacity >= 1,
                         "trace_capacity must be >= 1");
         anyhow::ensure!(self.replicas >= 1, "replicas must be >= 1");
+        anyhow::ensure!(self.prefix_chunk_tokens >= 1,
+                        "prefix.chunk_tokens must be >= 1");
         Ok(())
     }
 }
@@ -409,5 +455,23 @@ prefill_priority = true
         assert!(EngineConfig::from_toml_str("[router]\nreplicas = 0").is_err());
         assert!(EngineConfig::from_toml_str(
             "[router]\nmigration = \"sometimes\"").is_err());
+    }
+
+    #[test]
+    fn parses_prefix_keys() {
+        let cfg = EngineConfig::from_toml_str(
+            "[prefix]\nenabled = true\nmax_bytes = 1024\nchunk_tokens = 32")
+            .unwrap();
+        assert!(cfg.prefix_enabled);
+        assert_eq!(cfg.prefix_max_bytes, 1024);
+        assert_eq!(cfg.prefix_chunk_tokens, 32);
+        let d = EngineConfig::default();
+        assert!(!d.prefix_enabled, "prefix sharing is opt-in");
+        assert_eq!(d.prefix_max_bytes, 64 << 20);
+        assert_eq!(d.prefix_chunk_tokens, 64);
+        assert!(EngineConfig::from_toml_str(
+            "[prefix]\nchunk_tokens = 0").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "[prefix]\nenabled = \"yes\"").is_err());
     }
 }

@@ -7,10 +7,12 @@
 //! change hands; this module owns *what* a lane can hold and the
 //! device-facing bookkeeping that must stay consistent when it does.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::kvcache::{LaneCache, MirrorEntry};
 use crate::model_meta::ModelDims;
+use crate::prefixcache::PrefixPayload;
 use crate::scheduler::Request;
 use crate::session::SessionSnapshot;
 
@@ -40,6 +42,16 @@ pub(crate) struct SeqState {
     pub cache: LaneCache,
     pub mirror: Vec<Vec<MirrorEntry>>, // per (l*h); retrieval only
     pub inject: PendingInject,
+    /// Prefix-store payload this lane was seeded from; the held `Arc` is the
+    /// store's ref-count pin (the entry cannot be evicted while we decode).
+    pub prefix_pin: Option<Arc<PrefixPayload>>,
+    /// Whether this lane's cache state is still a pure function of its fed
+    /// prefix under the canonical chunking schedule (full backend chunks
+    /// from an aligned start).  A budget-truncated mid-prompt chunk or a
+    /// session resume makes the state schedule-dependent and unpublishable.
+    pub prefix_canon: bool,
+    /// Largest prefix length already offered to the store (publish dedup).
+    pub prefix_published: usize,
     pub t_submit: Instant,
     pub ttft_us: Option<f64>,
     /// wall time of the last sampled token (time-between-tokens metric)
@@ -77,6 +89,43 @@ impl SeqState {
             cache,
             mirror: vec![Vec::new(); nheads],
             inject: PendingInject { plans: vec![None; nheads] },
+            prefix_pin: None,
+            prefix_canon: true,
+            prefix_published: 0,
+            t_submit: Instant::now(),
+            ttft_us: None,
+            last_tok_at: None,
+            last_tok_tick: None,
+            record: record_gates.then(SeqRecord::default),
+        }
+    }
+
+    /// Fresh sequence seeded from a shared-prefix store hit: the host slot
+    /// tables are cloned from the immutable payload (copy-on-write — this
+    /// lane's copy diverges freely), `fed` resumes past the shared prefix so
+    /// only the prompt tail is prefilled, and the payload `Arc` is held for
+    /// the lane's lifetime as the store's eviction pin.  The matching device
+    /// slab upload rides the batched `swap_lanes` seeding call.
+    pub fn from_prefix(req: Request, payload: Arc<PrefixPayload>,
+                       record_gates: bool) -> SeqState {
+        let fed = payload.len();
+        debug_assert!(fed < req.prompt.len(), "seeded lane needs a tail");
+        SeqState {
+            id: req.id,
+            tag: req.tag,
+            session: req.session,
+            prompt: req.prompt,
+            generated: Vec::new(),
+            max_new: req.max_new_tokens,
+            stop_at_eos: req.stop_at_eos,
+            fed,
+            turns: 0,
+            cache: payload.cache.clone(),
+            mirror: payload.mirror.clone(),
+            inject: PendingInject { plans: payload.inject.clone() },
+            prefix_canon: true,
+            prefix_published: fed,
+            prefix_pin: Some(payload),
             t_submit: Instant::now(),
             ttft_us: None,
             last_tok_at: None,
@@ -107,6 +156,10 @@ impl SeqState {
             cache,
             mirror,
             inject: PendingInject { plans: vec![None; nheads] },
+            prefix_pin: None,
+            // resumed state depends on the turn history, not just a prefix
+            prefix_canon: false,
+            prefix_published: 0,
             t_submit: Instant::now(),
             ttft_us: None,
             last_tok_at: None,

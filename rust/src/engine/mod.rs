@@ -58,6 +58,7 @@ pub(crate) mod lanes;
 pub(crate) mod plan;
 pub mod sampler;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
@@ -69,6 +70,7 @@ use crate::model_meta::ModelDims;
 use crate::obs::{self, EngineObs, Phase, RetentionObs, SpanHandle,
                  TID_DEVICE};
 use crate::policy::Policy;
+use crate::prefixcache::{PrefixFingerprint, PrefixPayload, PrefixStore};
 use crate::runtime::{LaneKv, LaneOp, ModelBackend, StepOut, StepToken};
 use crate::scheduler::{AdmitError, FinishReason, Request, Response, WaitQueue};
 use crate::session::{SessionSnapshot, SessionStore};
@@ -147,6 +149,15 @@ pub struct Engine<B: ModelBackend> {
     /// lanes parked under the eager swap policy whose snapshots are
     /// deferred to the next tick's overlap window (pipelined loop)
     chained_parks: Vec<usize>,
+    /// shared-prefix KV store: admission consults it, completed cold
+    /// prefixes publish back.  None when the feature is off.
+    prefix: Option<Arc<PrefixStore>>,
+    /// store attached from outside (`EngineGroup` replica sharing): the
+    /// group renders the store's samples once, so this engine's own
+    /// exposition skips them
+    prefix_shared: bool,
+    /// the configuration fingerprint folded into every prefix-store key
+    prefix_fp: PrefixFingerprint,
     /// observability plane: tick flight recorder + retention histograms
     pub obs: EngineObs,
 }
@@ -168,6 +179,20 @@ impl<B: ModelBackend> Engine<B> {
         );
         let policy = Policy::from_name(&cfg.policy, cfg.budget, cfg.seed)?;
         let b = backend.batch();
+        let prefix_fp = PrefixFingerprint {
+            policy: cfg.policy.clone(),
+            budget: cfg.budget,
+            chunked_prefill: cfg.chunked_prefill,
+            backend_chunk: chunk,
+            slots,
+            layers: dims.layers,
+            hkv: dims.hkv,
+            dh: dims.dh,
+        };
+        let prefix = cfg.prefix_enabled.then(|| {
+            Arc::new(PrefixStore::new(cfg.prefix_max_bytes,
+                                      cfg.prefix_chunk_tokens))
+        });
         Ok(Engine {
             sampler: Sampler::new(cfg.temperature, cfg.top_k, cfg.seed),
             queue: WaitQueue::new(cfg.queue_capacity),
@@ -187,6 +212,9 @@ impl<B: ModelBackend> Engine<B> {
             dbufs: DoubleBufs::new(&dims, b, chunk),
             in_flight: None,
             chained_parks: Vec::new(),
+            prefix,
+            prefix_shared: false,
+            prefix_fp,
             obs: EngineObs::new(cfg.trace_capacity, cfg.trace, dims.layers,
                                 dims.hkv),
             cfg,
@@ -195,6 +223,19 @@ impl<B: ModelBackend> Engine<B> {
 
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Attach an externally owned prefix store (an `EngineGroup` shares one
+    /// across its replicas).  The group renders the store's metric samples
+    /// once; this engine's own exposition then skips them.
+    pub fn set_prefix_store(&mut self, store: Arc<PrefixStore>) {
+        self.prefix = Some(store);
+        self.prefix_shared = true;
+    }
+
+    /// The prefix store this engine consults, when enabled.
+    pub fn prefix_store(&self) -> Option<&Arc<PrefixStore>> {
+        self.prefix.as_ref()
     }
 
     /// Tear down the engine and recover the backend (the eval harness
@@ -522,9 +563,32 @@ impl<B: ModelBackend> Engine<B> {
             let req = self.queue.take(qi).expect("planned index");
             seats.push((lane_idx, req));
         }
+        // shared-prefix consult: fresh one-shot placements look up the
+        // store, and every matched lane's slab uploads in ONE batched
+        // seeding call (session turns resume their own retained state and
+        // never consult the store)
+        let mut prefix_hits: std::collections::BTreeMap<usize, Arc<PrefixPayload>> =
+            std::collections::BTreeMap::new();
+        if let Some(store) = self.prefix.clone() {
+            for (lane_idx, req) in &seats {
+                if req.session.is_none() && !loaded_by_lane.contains_key(lane_idx) {
+                    if let Some(p) = store.lookup(&self.prefix_fp, &req.prompt) {
+                        prefix_hits.insert(*lane_idx, p);
+                    }
+                }
+            }
+            if !prefix_hits.is_empty() {
+                let seeds: Vec<(usize, &LaneKv)> = prefix_hits
+                    .iter()
+                    .map(|(&lane, p)| (lane, &p.kv))
+                    .collect();
+                self.backend.swap_lanes(&[], &seeds)?;
+            }
+        }
         for (lane_idx, req) in seats {
             let snap = loaded_by_lane.remove(&lane_idx);
-            self.place(lane_idx, req, snap)?;
+            let hit = prefix_hits.remove(&lane_idx);
+            self.place(lane_idx, req, snap, hit)?;
         }
         Ok(())
     }
@@ -618,9 +682,11 @@ impl<B: ModelBackend> Engine<B> {
     /// Seat a request on `lane_idx`.  `loaded` carries its session's
     /// snapshot when the batched swap just pulled it from the host store;
     /// otherwise the lane is idle, or parked on the request's own session
-    /// (in-place resume).
+    /// (in-place resume).  `prefix` carries a shared-prefix store hit whose
+    /// slab the batched seeding call just uploaded to this lane.
     fn place(&mut self, lane_idx: usize, req: Request,
-             loaded: Option<SessionSnapshot>) -> Result<()> {
+             loaded: Option<SessionSnapshot>,
+             prefix: Option<Arc<PrefixPayload>>) -> Result<()> {
         let record_gates = self.record_gates;
         if let Some(snap) = loaded {
             // swapped in from the host store: slabs are already on the
@@ -648,6 +714,15 @@ impl<B: ModelBackend> Engine<B> {
                 return Ok(());
             }
             self.metrics.sessions_opened += 1;
+        }
+        // prefix-store hit: the shared slab is already uploaded; clone the
+        // frozen slot tables and resume past the prefix — only the prompt
+        // tail will prefill
+        if let Some(payload) = prefix {
+            self.valid.mark_dirty(lane_idx);
+            self.lanes[lane_idx] = Lane::Busy(Box::new(
+                SeqState::from_prefix(req, payload, record_gates)));
+            return Ok(());
         }
         // fresh sequence on a clean slot table (device garbage in dead
         // slots is masked once the lane's mask region refreshes)
@@ -855,6 +930,7 @@ impl<B: ModelBackend> Engine<B> {
         // --- postprocess (ONE shared per-lane helper) --------------------
         let dims = self.backend.dims();
         let (b, m) = (self.backend.batch(), self.backend.slots());
+        let chunk_c = self.backend.chunk();
         let fused = fl.kind == TickKind::Fused;
         let budget = self.cfg.budget;
         let eos_token = self.eos_token;
@@ -870,8 +946,8 @@ impl<B: ModelBackend> Engine<B> {
             };
             let done = postprocess_lane(
                 seq, lane_idx, bufs.ops[lane_idx], real_c, &per_head, &out,
-                &dims, b, m, budget, fused, fl.want_attn, fl.want_kv, policy,
-                valid, metrics, sampler, &mut obs.retention, eos_token,
+                &dims, b, m, budget, chunk_c, fused, fl.want_attn, fl.want_kv,
+                policy, valid, metrics, sampler, &mut obs.retention, eos_token,
                 fl.tick_no)?;
             if done {
                 finished.push(lane_idx);
@@ -879,8 +955,64 @@ impl<B: ModelBackend> Engine<B> {
         }
         obs.journal.record(fl.tick_no, Phase::Postprocess, fl.kind_label,
                            fl.n_active as u32, span);
+        // publish completed prefixes before `finish_lanes` vacates any lane
+        // that reached a boundary on its final step — and before the next
+        // tick submits, so the downloaded slab is exactly the boundary state
+        self.publish_prefixes()?;
         self.finish_lanes(finished)?;
         self.process_pending_closes();
+        Ok(())
+    }
+
+    /// Offer every fresh one-shot lane that just reached a prefix boundary
+    /// back to the shared store: the lane's state at `fed` is a pure
+    /// function of its first `fed` tokens exactly when the canonical flag
+    /// held (full backend chunks from an aligned start — or token-by-token
+    /// prefill) and decoding has not started (`fed <= prompt.len()`), so
+    /// the frozen tables plus the slab download reproduce it verbatim for
+    /// any later prompt sharing those tokens.  All downloads ride one
+    /// batched `swap_lanes` call, which never vacates a lane.
+    fn publish_prefixes(&mut self) -> Result<()> {
+        let Some(store) = self.prefix.clone() else { return Ok(()) };
+        let chunk = store.chunk();
+        // chunked prefill advances in backend-chunk steps: boundaries are
+        // hit exactly only when the store granularity is a multiple of it
+        if self.cfg.chunked_prefill && chunk % self.backend.chunk() != 0 {
+            return Ok(());
+        }
+        let mut pull: Vec<usize> = Vec::new();
+        for (idx, lane) in self.lanes.iter_mut().enumerate() {
+            let Lane::Busy(seq) = lane else { continue };
+            if seq.session.is_some() || !seq.prefix_canon {
+                continue; // session turns break chunk alignment; see lanes.rs
+            }
+            let fed = seq.fed;
+            if fed == 0 || fed % chunk != 0 || fed > seq.prompt.len()
+                || fed <= seq.prefix_published
+            {
+                continue;
+            }
+            seq.prefix_published = fed; // this boundary is handled either way
+            if store.has(&self.prefix_fp, &seq.prompt[..fed]) {
+                continue;
+            }
+            pull.push(idx);
+        }
+        if pull.is_empty() {
+            return Ok(());
+        }
+        let slabs = self.backend.swap_lanes(&pull, &[])?;
+        for (idx, kv) in pull.into_iter().zip(slabs) {
+            let Lane::Busy(seq) = &self.lanes[idx] else { continue };
+            store.insert(PrefixPayload {
+                tokens: seq.prompt[..seq.fed].to_vec(),
+                kv,
+                cache: seq.cache.clone(),
+                mirror: seq.mirror.clone(),
+                inject: seq.inject.plans.clone(),
+                fp: self.prefix_fp.clone(),
+            });
+        }
         Ok(())
     }
 
@@ -1070,6 +1202,13 @@ impl<B: ModelBackend> Engine<B> {
                                         self.sessions.len() as f64));
         samples.push(obs::Sample::gauge("trimkv_session_store_bytes",
                                         self.sessions.host_bytes() as f64));
+        // a privately owned prefix store renders here; a store shared
+        // across an `EngineGroup` is rendered once by the group instead
+        if let Some(store) = &self.prefix {
+            if !self.prefix_shared {
+                samples.extend(store.samples());
+            }
+        }
         samples.extend(self.obs.samples());
         obs::render_prometheus(&samples)
     }
@@ -1100,8 +1239,8 @@ impl<B: ModelBackend> Engine<B> {
 fn postprocess_lane(seq: &mut SeqState, lane_idx: usize, op: LaneOp,
                     real_c: usize, per_head: &[usize], out: &StepOut,
                     dims: &ModelDims, b: usize, m: usize, budget: usize,
-                    fused: bool, want_attn: bool, want_kv: bool,
-                    policy: &mut Policy, valid: &mut ValidMask,
+                    chunk_c: usize, fused: bool, want_attn: bool,
+                    want_kv: bool, policy: &mut Policy, valid: &mut ValidMask,
                     metrics: &mut EngineMetrics, sampler: &mut Sampler,
                     retention: &mut RetentionObs,
                     eos_token: u32, tick_no: u64) -> Result<bool> {
@@ -1224,6 +1363,14 @@ fn postprocess_lane(seq: &mut SeqState, lane_idx: usize, op: LaneOp,
         }
     }
     seq.fed += real_c;
+    // shared-prefix canonicality: a budget-truncated mid-prompt chunk makes
+    // the eviction history schedule-dependent (each chunk evicts at its own
+    // `now`), so the lane's state stops being a pure function of its prefix
+    // and must never publish.  Token-by-token prefill and the final partial
+    // chunk of the greedy schedule stay canonical.
+    if !is_decode && seq.fed < seq.prompt.len() && seq.fed % chunk_c != 0 {
+        seq.prefix_canon = false;
+    }
     if is_decode {
         metrics.tokens_prefilled += (seq.fed <= seq.prompt.len()) as u64;
     } else {
@@ -1351,6 +1498,42 @@ mod tests {
         assert_eq!(rs[0].finish, FinishReason::Eos);
         assert_eq!(*rs[0].tokens.last().unwrap(), 2);
         assert!(rs[0].tokens.len() < 50);
+    }
+
+    #[test]
+    fn prefix_hit_matches_cold_and_prefills_only_the_tail() {
+        let cfg = |enabled: bool| EngineConfig {
+            policy: "trimkv".into(),
+            budget: 24,
+            batch: 1,
+            chunked_prefill: true,
+            prefix_enabled: enabled,
+            prefix_chunk_tokens: 16,
+            ..Default::default()
+        };
+        let shared: Vec<u32> = (0..40).map(|i| 50 + i).collect();
+        let p1: Vec<u32> = shared.iter().copied().chain([200, 201, 202]).collect();
+        let p2: Vec<u32> = shared.iter().copied().chain([300, 301]).collect();
+        // cold reference: p2 from token zero, no store
+        let mut cold = Engine::new(MockBackend::new(1, 44), cfg(false), 2).unwrap();
+        cold.submit(Request::new(1, p2.clone(), 4)).unwrap();
+        let cold_toks = cold.run_to_completion().unwrap().pop().unwrap().tokens;
+        assert_eq!(cold.metrics.tokens_prefilled, 42);
+        // warm: p1 publishes boundaries 16 and 32, then p2 hits at 32
+        let mut warm = Engine::new(MockBackend::new(1, 44), cfg(true), 2).unwrap();
+        warm.submit(Request::new(1, p1, 4)).unwrap();
+        warm.run_to_completion().unwrap();
+        warm.submit(Request::new(2, p2, 4)).unwrap();
+        let warm_toks = warm.run_to_completion().unwrap().pop().unwrap().tokens;
+        assert_eq!(warm_toks, cold_toks);
+        // p1 fed 43 tokens cold; p2 prefilled only its 10-token tail
+        assert_eq!(warm.metrics.tokens_prefilled, 43 + 10);
+        let c = warm.prefix_store().unwrap().counters();
+        assert_eq!((c.hits, c.misses, c.inserts), (1, 1, 2));
+        assert_eq!(c.prefill_tokens_saved, 32);
+        let text = warm.prometheus_text();
+        assert!(text.contains("trimkv_prefix_hits_total 1"));
+        assert!(text.contains("trimkv_prefix_prefill_tokens_saved_total 32"));
     }
 
     #[test]

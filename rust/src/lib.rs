@@ -10,6 +10,9 @@
 //! - [`obs`] — observability plane: tick flight recorder, metric samples +
 //!   Prometheus-style exposition, retention-score introspection
 //! - [`session`] — host-side KV snapshot/swap store for multi-turn serving
+//! - [`prefixcache`] — shared-prefix KV store: longest-cached-prefix index
+//!   over immutable slab+retention payloads, ref-counted LRU under a byte
+//!   budget
 //! - [`engine`] / [`scheduler`] / [`server`] — the serving coordinator
 //! - [`router`] — N-replica `EngineGroup` + session router (pinning,
 //!   load balancing, cross-replica migration)
@@ -23,6 +26,7 @@ pub mod metrics;
 pub mod model_meta;
 pub mod obs;
 pub mod policy;
+pub mod prefixcache;
 pub mod router;
 pub mod runtime;
 pub mod scheduler;

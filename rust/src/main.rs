@@ -10,6 +10,7 @@
 //!   selftest   golden-I/O check of the AOT artifacts vs the python export
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use trimkv::config::EngineConfig;
@@ -17,6 +18,7 @@ use trimkv::engine::Engine;
 use trimkv::eval::{self, inspect};
 use trimkv::model_meta::ModelMeta;
 use trimkv::policy::Policy;
+use trimkv::prefixcache::PrefixStore;
 use trimkv::router::EngineGroup;
 use trimkv::runtime::PjrtBackend;
 use trimkv::scheduler::Request;
@@ -50,36 +52,50 @@ fn main() -> Result<()> {
 }
 
 fn common_spec() -> trimkv::util::cli::SpecBuilder {
+    // CLI defaults are derived from `EngineConfig::default()` — one source
+    // of truth, so the binary and the library can never quietly diverge
+    // (docs/OPERATIONS.md documents a single default column).
+    let d = EngineConfig::default();
     Args::spec()
-        .opt("artifacts", "artifacts", "artifact directory (meta.json etc.)")
-        .opt("policy", "trimkv", "eviction policy")
-        .opt("budget", "127", "live tokens per head")
-        .opt("batch", "8", "batch lanes (must match an exported artifact)")
-        .opt("max-new-tokens", "64", "generation cap")
-        .opt("seed", "0", "rng seed")
-        .opt("max-sessions", "256",
+        .opt("artifacts", d.artifacts_dir.display().to_string(),
+             "artifact directory (meta.json etc.)")
+        .opt("policy", d.policy, "eviction policy")
+        .opt("budget", d.budget.to_string(), "live tokens per head")
+        .opt("batch", d.batch.to_string(),
+             "batch lanes (must match an exported artifact)")
+        .opt("max-new-tokens", d.max_new_tokens.to_string(), "generation cap")
+        .opt("seed", d.seed.to_string(), "rng seed")
+        .opt("max-sessions", d.max_sessions.to_string(),
              "host-side session snapshot store capacity (LRU beyond)")
-        .opt("swap-policy", "lazy",
+        .opt("swap-policy", d.swap_policy,
              "session swap policy: lazy (park on lane) | eager (snapshot)")
-        .opt("mixed-ticks", "true",
+        .opt("mixed-ticks", d.mixed_ticks.to_string(),
              "fuse decode + chunked prefill into one step plan (legacy \
               artifacts without a mixed graph execute the plan as two \
               per-kind graph calls — still stall-free)")
-        .opt("tick-token-budget", "0",
+        .opt("tick-token-budget", d.tick_token_budget.to_string(),
              "token budget per mixed tick, decoders reserved first \
               (Sarathi-style; 0 = unbounded)")
-        .opt("pipeline", "true",
+        .opt("pipeline", d.pipeline.to_string(),
              "pipelined tick loop: submit the step async and overlap the \
               next tick's admission/swap host work with device execution \
               (token streams stay bit-identical; false = serial loop)")
-        .opt("trace-capacity", "8192",
+        .opt("trace-capacity", d.trace_capacity.to_string(),
              "flight-recorder journal capacity, in events (hard memory cap)")
         .flag("no-trace", "disable the per-tick flight recorder")
-        .opt("replicas", "1",
+        .opt("replicas", d.replicas.to_string(),
              "engine workers behind the session router (serve spawns an \
               EngineGroup when > 1; each replica loads its own backend)")
-        .opt("migration", "on",
+        .opt("migration", if d.migration { "on" } else { "off" },
              "cross-replica session migration + rebalancing (on|off)")
+        .flag("prefix-cache",
+              "shared-prefix KV store: admission reuses the cached slab + \
+               frozen retention state of a common prompt prefix and \
+               prefills only the tail ([prefix] enabled = true)")
+        .opt("prefix-max-bytes", d.prefix_max_bytes.to_string(),
+             "prefix store byte budget; LRU-evicts unreferenced entries")
+        .opt("prefix-chunk", d.prefix_chunk_tokens.to_string(),
+             "prefix match/publish granularity in tokens")
 }
 
 fn load_engine(args: &Args) -> Result<(Engine<PjrtBackend>, Vocab, ModelMeta)> {
@@ -112,11 +128,23 @@ fn serve(argv: &[String]) -> Result<()> {
         // session router, same wire protocol
         let n = cfg.replicas;
         eprintln!("[trimkv] spawning engine group: {n} replicas");
-        let group = EngineGroup::spawn(n, cfg.migration, |i| {
-            let (engine, _, _) = load_engine(&args)?;
+        // one prefix store for the whole fleet: N replicas amortize the
+        // same system prompt instead of each warming a private copy
+        let shared = cfg.prefix_enabled.then(|| {
+            Arc::new(PrefixStore::new(cfg.prefix_max_bytes,
+                                      cfg.prefix_chunk_tokens))
+        });
+        let mut group = EngineGroup::spawn(n, cfg.migration, |i| {
+            let (mut engine, _, _) = load_engine(&args)?;
+            if let Some(store) = &shared {
+                engine.set_prefix_store(store.clone());
+            }
             eprintln!("[trimkv] replica {i} ready");
             Ok(engine)
         })?;
+        if let Some(store) = shared {
+            group.attach_prefix_store(store);
+        }
         return tcp::listen(&addr, &group);
     }
     let (engine, _vocab, _meta) = load_engine(&args)?;

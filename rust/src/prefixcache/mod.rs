@@ -1,0 +1,540 @@
+//! Shared-prefix KV store: serve a fleet's common prompt once.
+//!
+//! Production traffic is dominated by shared system prompts and few-shot
+//! preambles, yet a plain engine re-prefills them from token zero on every
+//! admission.  TRIM-KV makes prefix sharing *sound by construction*: the
+//! paper's retention scores are assigned at creation time and are
+//! query-agnostic, so a prefix's K/V slab **and** its frozen
+//! retention-score/slot state are a pure function of the prefix tokens (plus
+//! the engine configuration and chunking schedule) — they can be computed
+//! once and reused verbatim by every later request that starts with the same
+//! tokens.  Attention-proxy schemes whose importance depends on the query
+//! cannot do this at all.
+//!
+//! The store is copy-on-write: a published prefix is an immutable
+//! [`PrefixPayload`] behind an `Arc`.  A hitting lane uploads the shared
+//! device slab through the ordinary batched `swap_lanes` path and *clones*
+//! the host-side slot tables, so its private copy diverges freely while the
+//! shared original stays frozen.  The `Arc` doubles as the ref-count: LRU
+//! eviction under the `[prefix] max_bytes` budget only considers entries no
+//! live lane still references (`strong_count == 1`), so churn can never free
+//! state a seated lane depends on — at worst the store temporarily overshoots
+//! its budget while every entry is pinned.
+//!
+//! Matching is longest-cached-prefix over hashed token chunks at a fixed
+//! granularity (`[prefix] chunk_tokens`, default 64): the index keys on an
+//! FNV-1a hash of (engine fingerprint, first `k * chunk_tokens` tokens) and
+//! probes from the deepest eligible boundary down, verifying the stored
+//! tokens on a candidate hit so a hash collision degrades to a miss, never a
+//! wrong cache.  The match is capped one token short of the prompt so a
+//! seeded lane always has a non-empty tail to prefill (the engine needs at
+//! least one genuine step to produce first-token logits).
+//!
+//! One store is shared by every replica of an `EngineGroup` behind a single
+//! mutex with short critical sections — a lookup is a hash walk plus an
+//! `Arc` clone, so N replicas amortize the same system prompt without
+//! copying it N times.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
+use crate::obs::Sample;
+use crate::runtime::LaneKv;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_token(h: u64, token: u32) -> u64 {
+    fnv_bytes(h, &token.to_le_bytes())
+}
+
+/// Everything that shapes a lane's retention state besides the prefix tokens
+/// themselves.  Two engines produce bit-identical prefix state only when all
+/// of this matches: the policy and budget drive eviction, `chunked_prefill`
+/// selects the per-chunk vs per-token eviction law, the backend chunk width
+/// fixes the canonical chunking schedule, and the geometry fixes slab
+/// layout.  The fingerprint is folded into every index key, so a mismatched
+/// engine simply misses — it can never be served foreign state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixFingerprint {
+    pub policy: String,
+    pub budget: usize,
+    pub chunked_prefill: bool,
+    pub backend_chunk: usize,
+    pub slots: usize,
+    pub layers: usize,
+    pub hkv: usize,
+    pub dh: usize,
+}
+
+impl PrefixFingerprint {
+    /// Hash seed folding every fingerprint field; token hashes extend it.
+    fn seed(&self) -> u64 {
+        let mut h = fnv_bytes(FNV_OFFSET, self.policy.as_bytes());
+        for v in [
+            self.budget as u64,
+            self.chunked_prefill as u64,
+            self.backend_chunk as u64,
+            self.slots as u64,
+            self.layers as u64,
+            self.hkv as u64,
+            self.dh as u64,
+        ] {
+            h = fnv_bytes(h, &v.to_le_bytes());
+        }
+        h
+    }
+}
+
+/// The immutable shared state of one published prefix: the device K/V slab
+/// plus the frozen host-side retention state a lane needs to continue as if
+/// it had prefilled the prefix itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixPayload {
+    /// The prefix tokens (collision guard + exact-match verification).
+    pub tokens: Vec<u32>,
+    /// Device K/V slabs at the publish boundary, each flat `[L, H, M, dh]`.
+    pub kv: LaneKv,
+    /// Per-(layer, head) slot tables with frozen retention scores.
+    pub cache: LaneCache,
+    /// Retrieval-policy re-admission pool, per (layer * head).
+    pub mirror: Vec<Vec<MirrorEntry>>,
+    /// Injection plans pending at the boundary, per (layer * head).  Only
+    /// non-empty under token-by-token prefill with the retrieval policy,
+    /// where a re-admission can be scheduled mid-prompt.
+    pub inject: Vec<Option<(usize, MirrorEntry)>>,
+    /// The publishing engine's configuration fingerprint.
+    pub fp: PrefixFingerprint,
+}
+
+impl PrefixPayload {
+    /// Prefix length in tokens (== the `fed` a seeded lane resumes at).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Approximate host bytes held (budget accounting), mirroring
+    /// `SessionSnapshot::host_bytes`.
+    pub fn host_bytes(&self) -> usize {
+        let tables: usize = self
+            .cache
+            .heads
+            .iter()
+            .map(|h| {
+                h.entries.len() * std::mem::size_of::<SlotEntry>()
+                    + h.live.len()
+                    + (h.keys.len() + h.vals.len()) * 4
+            })
+            .sum();
+        let mirror: usize = self
+            .mirror
+            .iter()
+            .flat_map(|m| m.iter())
+            .map(|e| (e.key.len() + e.val.len()) * 4 + 32)
+            .sum();
+        self.kv.host_bytes() + tables + mirror + self.tokens.len() * 4
+    }
+}
+
+/// One index entry: the shared payload plus LRU/byte bookkeeping.
+struct PrefixEntry {
+    payload: Arc<PrefixPayload>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Monotonic counters and gauges, readable without parsing exposition text.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub prefill_tokens_saved: u64,
+    pub bytes: usize,
+    pub entries: usize,
+}
+
+struct Inner {
+    map: BTreeMap<u64, PrefixEntry>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    inserts: u64,
+    evictions: u64,
+    tokens_saved: u64,
+}
+
+/// The longest-cached-prefix index.  Shared across engines/replicas as an
+/// `Arc<PrefixStore>`; every method takes `&self`.
+pub struct PrefixStore {
+    chunk: usize,
+    max_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PrefixStore {
+    pub fn new(max_bytes: usize, chunk_tokens: usize) -> PrefixStore {
+        PrefixStore {
+            chunk: chunk_tokens.max(1),
+            max_bytes,
+            inner: Mutex::new(Inner {
+                map: BTreeMap::new(),
+                clock: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                inserts: 0,
+                evictions: 0,
+                tokens_saved: 0,
+            }),
+        }
+    }
+
+    /// Prefix granularity in tokens: entries exist only at multiples of it.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Longest cached prefix of `prompt`, capped one token short of the full
+    /// prompt so the seeded lane keeps a non-empty tail.  Counts a hit (plus
+    /// the prefill tokens it saves) or — for prompts long enough to have an
+    /// eligible boundary at all — a miss.
+    pub fn lookup(&self, fp: &PrefixFingerprint, prompt: &[u32])
+        -> Option<Arc<PrefixPayload>> {
+        let kmax = prompt.len().saturating_sub(1) / self.chunk;
+        if kmax == 0 {
+            return None; // too short to share: not an eligible lookup
+        }
+        // one forward hash pass, remembering the key at every boundary
+        let mut keys = Vec::with_capacity(kmax);
+        let mut h = fp.seed();
+        for (i, &tok) in prompt.iter().take(kmax * self.chunk).enumerate() {
+            h = fnv_token(h, tok);
+            if (i + 1) % self.chunk == 0 {
+                keys.push(h);
+            }
+        }
+        let mut g = self.inner.lock().unwrap();
+        for (k, key) in keys.iter().enumerate().rev() {
+            let len = (k + 1) * self.chunk;
+            let Some(entry) = g.map.get(key) else { continue };
+            // collision / fingerprint guard: degrade to a miss, never serve
+            // foreign state
+            if entry.payload.fp != *fp || entry.payload.tokens != prompt[..len] {
+                continue;
+            }
+            let payload = entry.payload.clone();
+            g.clock += 1;
+            let stamp = g.clock;
+            g.map.get_mut(key).unwrap().last_used = stamp;
+            g.hits += 1;
+            g.tokens_saved += len as u64;
+            return Some(payload);
+        }
+        g.misses += 1;
+        None
+    }
+
+    /// Whether an exact entry for `tokens` exists (publish-side dedup: a
+    /// cheap check before paying the device slab download).  Counts nothing.
+    pub fn has(&self, fp: &PrefixFingerprint, tokens: &[u32]) -> bool {
+        let mut h = fp.seed();
+        for &tok in tokens {
+            h = fnv_token(h, tok);
+        }
+        let g = self.inner.lock().unwrap();
+        g.map
+            .get(&h)
+            .is_some_and(|e| e.payload.fp == *fp && e.payload.tokens == tokens)
+    }
+
+    /// Publish a completed prefix.  Ignores payloads that are not at the
+    /// store granularity or already present; then LRU-evicts unreferenced
+    /// entries until the byte budget holds (or everything left is pinned).
+    pub fn insert(&self, payload: PrefixPayload) {
+        let len = payload.len();
+        if len == 0 || len % self.chunk != 0 {
+            return;
+        }
+        let mut h = payload.fp.seed();
+        for &tok in &payload.tokens {
+            h = fnv_token(h, tok);
+        }
+        let bytes = payload.host_bytes();
+        let mut g = self.inner.lock().unwrap();
+        if g.map.contains_key(&h) {
+            return; // racing publisher won; keep the established entry
+        }
+        g.clock += 1;
+        let stamp = g.clock;
+        g.bytes += bytes;
+        g.inserts += 1;
+        g.map.insert(h, PrefixEntry {
+            payload: Arc::new(payload),
+            bytes,
+            last_used: stamp,
+        });
+        while g.bytes > self.max_bytes {
+            let victim = g
+                .map
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.payload) == 1)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(key) = victim else { break }; // all pinned: overshoot
+            let gone = g.map.remove(&key).expect("victim chosen from map");
+            g.bytes -= gone.bytes;
+            g.evictions += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn counters(&self) -> PrefixCounters {
+        let g = self.inner.lock().unwrap();
+        PrefixCounters {
+            hits: g.hits,
+            misses: g.misses,
+            inserts: g.inserts,
+            evictions: g.evictions,
+            prefill_tokens_saved: g.tokens_saved,
+            bytes: g.bytes,
+            entries: g.map.len(),
+        }
+    }
+
+    /// Exposition samples (`trimkv_prefix_*_total` plus an entry-count
+    /// gauge).  Rendered once per store: by the owning engine when private,
+    /// by the `EngineGroup` when shared across replicas.
+    pub fn samples(&self) -> Vec<Sample> {
+        let c = self.counters();
+        vec![
+            Sample::counter("trimkv_prefix_hits_total", c.hits as f64),
+            Sample::counter("trimkv_prefix_misses_total", c.misses as f64),
+            Sample::counter("trimkv_prefix_inserts_total", c.inserts as f64),
+            Sample::counter("trimkv_prefix_evictions_total", c.evictions as f64),
+            Sample::counter("trimkv_prefix_prefill_tokens_saved_total",
+                            c.prefill_tokens_saved as f64),
+            Sample::gauge("trimkv_prefix_bytes_total", c.bytes as f64),
+            Sample::gauge("trimkv_prefix_entries", c.entries as f64),
+        ]
+    }
+}
+
+impl std::fmt::Debug for PrefixStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = self.counters();
+        f.debug_struct("PrefixStore")
+            .field("chunk", &self.chunk)
+            .field("max_bytes", &self.max_bytes)
+            .field("counters", &c)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 512, d: 128, layers: 2, hq: 4, hkv: 2, dh: 4,
+                    ffn: 256, gate_hidden: 48 }
+    }
+
+    fn fp() -> PrefixFingerprint {
+        PrefixFingerprint {
+            policy: "trimkv".into(),
+            budget: 16,
+            chunked_prefill: true,
+            backend_chunk: 16,
+            slots: 20,
+            layers: 2,
+            hkv: 2,
+            dh: 4,
+        }
+    }
+
+    fn payload(tokens: Vec<u32>) -> PrefixPayload {
+        let d = dims();
+        PrefixPayload {
+            tokens,
+            kv: LaneKv { k: vec![0.5; 2 * 2 * 20 * 4],
+                         v: vec![0.25; 2 * 2 * 20 * 4] },
+            cache: LaneCache::new(&d, 20, false),
+            mirror: vec![Vec::new(); 4],
+            inject: vec![None; 4],
+            fp: fp(),
+        }
+    }
+
+    fn toks(tag: u32, n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| 10 + tag * 100 + i % 90).collect()
+    }
+
+    #[test]
+    fn longest_cached_prefix_wins() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        let base = toks(1, 12);
+        store.insert(payload(base[..4].to_vec()));
+        store.insert(payload(base[..8].to_vec()));
+        // prompt long enough to probe k=2 first: deepest boundary matches
+        let mut prompt = base.clone();
+        prompt.push(7);
+        let hit = store.lookup(&fp(), &prompt).expect("hit");
+        assert_eq!(hit.len(), 8);
+        // shorter prompt can only use the 4-token entry
+        let hit = store.lookup(&fp(), &base[..7]).expect("hit");
+        assert_eq!(hit.len(), 4);
+        assert_eq!(store.counters().hits, 2);
+        assert_eq!(store.counters().prefill_tokens_saved, 12);
+    }
+
+    #[test]
+    fn match_is_capped_one_token_short_of_the_prompt() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        let base = toks(2, 8);
+        store.insert(payload(base.clone()));
+        // the full prompt equals the stored entry: a full-length match would
+        // leave an empty tail, so only the 4-token boundary is probed -- and
+        // no 4-token entry exists
+        assert!(store.lookup(&fp(), &base).is_none());
+        assert_eq!(store.counters().misses, 1);
+        // one token longer and the 8-token entry is usable
+        let mut longer = base.clone();
+        longer.push(9);
+        assert_eq!(store.lookup(&fp(), &longer).expect("hit").len(), 8);
+    }
+
+    #[test]
+    fn short_prompts_are_not_eligible_lookups() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        assert!(store.lookup(&fp(), &toks(3, 4)).is_none());
+        assert_eq!(store.counters().misses, 0); // no boundary to probe
+        assert!(store.lookup(&fp(), &toks(3, 5)).is_none());
+        assert_eq!(store.counters().misses, 1); // eligible, empty store
+    }
+
+    #[test]
+    fn fingerprint_mismatch_misses_safely() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        let base = toks(4, 9);
+        store.insert(payload(base[..4].to_vec()));
+        let mut other = fp();
+        other.budget = 8;
+        assert!(store.lookup(&other, &base).is_none());
+        assert!(store.lookup(&fp(), &base).is_some());
+    }
+
+    #[test]
+    fn token_mismatch_misses_even_if_hash_would_collide() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        store.insert(payload(toks(5, 4)));
+        // different tokens, same length: must verify and miss
+        assert!(store.lookup(&fp(), &toks(6, 9)).is_none());
+    }
+
+    #[test]
+    fn off_granularity_inserts_are_rejected() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        store.insert(payload(toks(7, 6)));
+        store.insert(payload(Vec::new()));
+        assert!(store.is_empty());
+        assert_eq!(store.counters().inserts, 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_order() {
+        let one = payload(toks(8, 4)).host_bytes();
+        let store = PrefixStore::new(2 * one, 4);
+        store.insert(payload(toks(8, 4)));
+        store.insert(payload(toks(9, 4)));
+        // touch the first so the second becomes LRU
+        assert!(store.lookup(&fp(), &toks(8, 5)).is_some());
+        store.insert(payload(toks(10, 4)));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.counters().evictions, 1);
+        assert!(store.lookup(&fp(), &toks(8, 5)).is_some());
+        assert!(store.lookup(&fp(), &toks(9, 5)).is_none());
+        assert!(store.lookup(&fp(), &toks(10, 5)).is_some());
+        assert!(store.bytes() <= 2 * one);
+    }
+
+    #[test]
+    fn refcounted_eviction_never_frees_a_live_entry() {
+        let one = payload(toks(11, 4)).host_bytes();
+        let store = PrefixStore::new(one, 4); // room for exactly one entry
+        store.insert(payload(toks(11, 4)));
+        let pinned = store.lookup(&fp(), &toks(11, 5)).expect("hit");
+        // a live lane holds `pinned`: inserting more must evict around it,
+        // overshooting the budget rather than freeing referenced state
+        store.insert(payload(toks(12, 4)));
+        store.insert(payload(toks(13, 4)));
+        assert!(store.lookup(&fp(), &toks(11, 5)).is_some(),
+                "pinned entry survived churn");
+        assert!(store.bytes() >= one);
+        // dropping the pin makes it evictable again
+        drop(pinned);
+        drop(store.lookup(&fp(), &toks(12, 5)));
+        drop(store.lookup(&fp(), &toks(13, 5)));
+        store.insert(payload(toks(14, 4)));
+        assert_eq!(store.len(), 1);
+        assert!(store.bytes() <= one);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_established_entry() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        store.insert(payload(toks(15, 4)));
+        store.insert(payload(toks(15, 4)));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.counters().inserts, 1);
+    }
+
+    #[test]
+    fn samples_render_and_parse() {
+        let store = PrefixStore::new(usize::MAX, 4);
+        store.insert(payload(toks(16, 4)));
+        store.lookup(&fp(), &toks(16, 5));
+        store.lookup(&fp(), &toks(17, 9));
+        let text = crate::obs::render_prometheus(&store.samples());
+        crate::obs::assert_prometheus_parses(&text);
+        for name in ["trimkv_prefix_hits_total 1",
+                     "trimkv_prefix_misses_total 1",
+                     "trimkv_prefix_inserts_total 1",
+                     "trimkv_prefix_evictions_total 0",
+                     "trimkv_prefix_prefill_tokens_saved_total 4"] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        assert!(text.contains("trimkv_prefix_bytes_total"));
+    }
+}

@@ -35,13 +35,14 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::engine::Engine;
 use crate::obs::{self, Sample};
+use crate::prefixcache::PrefixStore;
 use crate::runtime::ModelBackend;
 use crate::scheduler::{Request, Response};
 use crate::server::{spawn_worker, Frontend, Msg};
@@ -309,6 +310,11 @@ pub struct EngineGroup {
     workers: Vec<Worker>,
     rx: Receiver<(usize, Response)>,
     pub router: SessionRouter,
+    /// The fleet-shared prefix store, when one was attached: replicas that
+    /// had it injected via `Engine::set_prefix_store` suppress their own
+    /// `trimkv_prefix_*` rendering, and the group renders the store's
+    /// samples exactly once in the aggregated exposition.
+    prefix: Option<Arc<PrefixStore>>,
 }
 
 impl EngineGroup {
@@ -344,11 +350,27 @@ impl EngineGroup {
             workers.push(Worker { tx, handle: Some(handle) });
         }
         drop(resp_tx);
-        Ok(EngineGroup { workers, rx, router: SessionRouter::new(n, batch, migration) })
+        Ok(EngineGroup {
+            workers,
+            rx,
+            router: SessionRouter::new(n, batch, migration),
+            prefix: None,
+        })
     }
 
     pub fn replicas(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Register the prefix store the replicas share (the same `Arc` each
+    /// engine received through `Engine::set_prefix_store`), making the
+    /// group the single exposition point for its `trimkv_prefix_*` series.
+    pub fn attach_prefix_store(&mut self, store: Arc<PrefixStore>) {
+        self.prefix = Some(store);
+    }
+
+    pub fn prefix_store(&self) -> Option<&Arc<PrefixStore>> {
+        self.prefix.as_ref()
     }
 
     /// Route and submit one request (the `Frontend` entry point).
@@ -481,6 +503,9 @@ impl EngineGroup {
             out.push_str(&label_replica(&text, i));
         }
         out.push_str(&obs::render_prometheus(&self.router.samples()));
+        if let Some(store) = &self.prefix {
+            out.push_str(&obs::render_prometheus(&store.samples()));
+        }
         Some(out)
     }
 
@@ -754,6 +779,63 @@ mod tests {
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shared_prefix_store_spans_replicas_and_renders_once() {
+        use crate::prefixcache::PrefixStore;
+
+        let store = Arc::new(PrefixStore::new(1 << 20, 16));
+        let mut group = EngineGroup::spawn(2, true, |_| {
+            let cfg = EngineConfig {
+                budget: 24,
+                batch: 1,
+                chunked_prefill: false,
+                // injection alone activates the path — exactly the wiring
+                // `serve` uses for a fleet-shared store
+                prefix_enabled: false,
+                prefix_chunk_tokens: 16,
+                ..Default::default()
+            };
+            let mut e = Engine::new(MockBackend::new(1, 28), cfg, 2)?;
+            e.set_prefix_store(store.clone());
+            Ok(e)
+        })
+        .unwrap();
+        group.attach_prefix_store(store.clone());
+        let prefix: Vec<u32> = (100..116).collect();
+        let with_tail = |tail: &[u32]| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(tail);
+            p
+        };
+        // cold request warms the store on replica 0 (publishes at fed=16)
+        group.submit(Request::new(1, with_tail(&[200, 201, 202, 203]), 2));
+        assert_eq!(group.recv_blocking().unwrap().tokens, vec![204, 205]);
+        // two concurrent sessionless requests spread across both replicas
+        // (most-free-lanes: id 2 -> replica 0, id 3 -> replica 1) and both
+        // hit the same store entry
+        group.submit(Request::new(2, with_tail(&[300, 301]), 2));
+        group.submit(Request::new(3, with_tail(&[400, 401, 402]), 2));
+        let mut warm = vec![
+            group.recv_blocking().unwrap(),
+            group.recv_blocking().unwrap(),
+        ];
+        warm.sort_by_key(|r| r.id);
+        assert_eq!(warm[0].tokens, vec![302, 303]);
+        assert_eq!(warm[1].tokens, vec![403, 404]);
+        let c = store.counters();
+        assert_eq!((c.hits, c.misses, c.inserts), (2, 1, 1));
+        assert_eq!(c.prefill_tokens_saved, 32, "two 16-token seeds");
+        assert_eq!(c.entries, 1);
+        // the group renders the store once, unlabeled; replicas sharing
+        // the store suppress their own copy of the series
+        let text = group.metrics_snapshot().unwrap();
+        crate::obs::assert_prometheus_parses(&text);
+        assert!(text.contains("trimkv_prefix_hits_total 2\n"), "{text}");
+        assert!(!text.contains("trimkv_prefix_hits_total{replica="),
+                "replica-labeled duplicate of a shared series:\n{text}");
+        group.shutdown();
     }
 
     #[test]

@@ -10,7 +10,9 @@ use std::collections::BTreeMap;
 pub struct ArgSpec {
     pub name: &'static str,
     pub help: &'static str,
-    pub default: Option<&'static str>,
+    /// Owned so callers can derive defaults from a single source of truth
+    /// (e.g. `EngineConfig::default()`) instead of duplicating literals.
+    pub default: Option<String>,
     pub is_flag: bool,
 }
 
@@ -35,7 +37,7 @@ impl Args {
             .or_else(|| self.default_of(name))
     }
     fn default_of(&self, name: &str) -> Option<&str> {
-        self.spec.iter().find(|s| s.name == name).and_then(|s| s.default)
+        self.spec.iter().find(|s| s.name == name).and_then(|s| s.default.as_deref())
     }
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
@@ -71,7 +73,7 @@ impl Args {
             let tail = if s.is_flag {
                 String::new()
             } else {
-                format!(" <v>{}", s.default.map(|d| format!(" [default {d}]")).unwrap_or_default())
+                format!(" <v>{}", s.default.as_ref().map(|d| format!(" [default {d}]")).unwrap_or_default())
             };
             out.push_str(&format!("  --{}{}\n      {}\n", s.name, tail, s.help));
         }
@@ -90,9 +92,10 @@ pub struct SpecBuilder {
 }
 
 impl SpecBuilder {
-    pub fn opt(mut self, name: &'static str, default: &'static str,
+    pub fn opt(mut self, name: &'static str, default: impl Into<String>,
                help: &'static str) -> Self {
-        self.spec.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self.spec.push(ArgSpec { name, help, default: Some(default.into()),
+                                 is_flag: false });
         self
     }
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {

@@ -345,6 +345,27 @@ pub struct Arrival {
     pub max_new: usize,
 }
 
+/// Zipf-like popularity weights: item `i` gets `1 / (i+1)^skew` (skew = 0
+/// uniform, ~1 realistic hot-item traffic).
+fn zipf_weights(n: usize, skew: f64) -> Vec<f64> {
+    (0..n.max(1)).map(|i| 1.0 / ((i + 1) as f64).powf(skew)).collect()
+}
+
+/// Draw an index proportionally to `weights` (one `rng.f64()` consumed).
+fn weighted_pick(rng: &mut Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let mut x = rng.f64() * total;
+    let mut pick = weights.len() - 1;
+    for (i, w) in weights.iter().enumerate() {
+        if x < *w {
+            pick = i;
+            break;
+        }
+        x -= w;
+    }
+    pick
+}
+
 /// Deterministic session-mix schedule for the engine-group bench and
 /// router tests: `n_turns` arrivals spread over `n_sessions` conversations
 /// with Zipf-like popularity (`skew` = 0 uniform, ~1 realistic hot-session
@@ -354,24 +375,13 @@ pub struct Arrival {
 pub fn session_mix(seed: u64, n_sessions: usize, n_turns: usize,
                    sessionless_frac: f64, skew: f64) -> Vec<Arrival> {
     let mut rng = Rng::new(seed);
-    let weights: Vec<f64> = (0..n_sessions.max(1))
-        .map(|i| 1.0 / ((i + 1) as f64).powf(skew))
-        .collect();
-    let total: f64 = weights.iter().sum();
+    let weights = zipf_weights(n_sessions, skew);
     let mut out = Vec::with_capacity(n_turns);
     for t in 0..n_turns {
         let session = if rng.bool(sessionless_frac) {
             None
         } else {
-            let mut x = rng.f64() * total;
-            let mut pick = weights.len() - 1;
-            for (i, w) in weights.iter().enumerate() {
-                if x < *w {
-                    pick = i;
-                    break;
-                }
-                x -= w;
-            }
+            let pick = weighted_pick(&mut rng, &weights);
             Some(format!("conv-{pick}"))
         };
         let len = rng.range(2, 10);
@@ -379,6 +389,35 @@ pub fn session_mix(seed: u64, n_sessions: usize, n_turns: usize,
         out.push(Arrival {
             id: t as u64,
             session,
+            prompt,
+            max_new: rng.range(2, 6),
+        });
+    }
+    out
+}
+
+/// Deterministic shared-prefix schedule for the prefix-store bench and
+/// tests: every arrival is a sessionless one-shot whose prompt opens with
+/// one of `n_prefixes` fixed "system prompts" (`prefix_tokens` tokens
+/// each, drawn once from the seed), picked with Zipf-like popularity, then
+/// a short unique tail.  Mirrors a fleet serving a handful of agent
+/// templates: a warm prefix store prefills only the tails.  Like
+/// [`session_mix`], a pure function of the seed.
+pub fn shared_prefix_mix(seed: u64, n_prefixes: usize, prefix_tokens: usize,
+                         n_requests: usize, skew: f64) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed);
+    let prefixes: Vec<Vec<u32>> = (0..n_prefixes.max(1))
+        .map(|_| (0..prefix_tokens).map(|_| 32 + rng.below(64) as u32).collect())
+        .collect();
+    let weights = zipf_weights(prefixes.len(), skew);
+    let mut out = Vec::with_capacity(n_requests);
+    for t in 0..n_requests {
+        let mut prompt = prefixes[weighted_pick(&mut rng, &weights)].clone();
+        let tail = rng.range(8, 24);
+        prompt.extend((0..tail).map(|_| 32 + rng.below(64) as u32));
+        out.push(Arrival {
+            id: t as u64,
+            session: None,
             prompt,
             max_new: rng.range(2, 6),
         });
@@ -573,5 +612,31 @@ mod tests {
             assert!(u.iter().any(
                 |t| t.session.as_deref() == Some(want.as_str())));
         }
+    }
+
+    #[test]
+    fn shared_prefix_mix_reuses_a_small_prefix_pool() {
+        let a = shared_prefix_mix(9, 4, 64, 100, 1.0);
+        let b = shared_prefix_mix(9, 4, 64, 100, 1.0);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert!(x.session.is_none(), "shared-prefix traffic is one-shot");
+            assert!(x.prompt.len() >= 64 + 8 && x.prompt.len() < 64 + 24,
+                    "prefix + short tail, got {}", x.prompt.len());
+        }
+        // heads come from the fixed pool; tails keep full prompts distinct
+        let mut head_counts = std::collections::BTreeMap::new();
+        for t in &a {
+            *head_counts.entry(t.prompt[..64].to_vec()).or_insert(0usize) += 1;
+        }
+        assert!(head_counts.len() <= 4, "more heads than the pool");
+        assert!(head_counts.len() >= 2, "pool collapsed to one prefix");
+        let hottest = *head_counts.values().max().unwrap();
+        assert!(hottest > 100 / 4, "zipf skew must concentrate traffic");
+        let full: std::collections::BTreeSet<&Vec<u32>> =
+            a.iter().map(|t| &t.prompt).collect();
+        assert!(full.len() > 90, "tails should make prompts unique");
     }
 }

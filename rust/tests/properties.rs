@@ -819,3 +819,245 @@ fn prop_migrated_session_stream_matches_never_migrated() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_prefix_hit_lane_decodes_identically_to_cold_prefill() {
+    // the shared-prefix tentpole invariant: a lane seeded from the store
+    // (cached slab + frozen retention state, tail-only prefill) emits a
+    // token stream bit-identical to a cold lane that prefills the whole
+    // prompt — for all 7+1 deterministic policies, chunked and unchunked
+    // prefill, and random prefix/tail cut points.  TRIM-KV makes the reuse
+    // sound by construction: retention scores are creation-time and
+    // query-agnostic, so the frozen prefix state is exactly what the cold
+    // run reaches at the same depth.  Only "random" is out: its policy rng
+    // consumption differs across two engines by construction.
+    forall("prefix hit equivalence", 20, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret", "retrieval"];
+        let policy = names[rng.below(names.len())];
+        let budget = rng.range(12, 28);
+        let chunked = rng.bool(0.5);
+        // chunked prefill publishes only when the store granularity lands
+        // on backend-chunk boundaries (C = 16 on the mock)
+        let chunk_tokens =
+            if chunked { [16, 32][rng.below(2)] } else { rng.range(4, 24) };
+        let cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch: 1,
+            chunked_prefill: chunked,
+            prefix_enabled: true,
+            prefix_chunk_tokens: chunk_tokens,
+            ..Default::default()
+        };
+        let tok = |rng: &mut Rng| 32 + rng.below(64) as u32;
+        let plen = rng.range(chunk_tokens, 3 * chunk_tokens);
+        let prefix: Vec<u32> = (0..plen).map(|_| tok(rng)).collect();
+        let with_tail = |tail: &[u32]| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(tail);
+            p
+        };
+        let tail_a: Vec<u32> = (0..rng.range(1, 20)).map(|_| tok(rng)).collect();
+        let tail_b: Vec<u32> = (0..rng.range(1, 20)).map(|_| tok(rng)).collect();
+        let max_a = rng.range(1, 8);
+        let max_b = rng.range(1, 8);
+        // warm arm: P1 (a cold miss) publishes the prefix, P2 hits it
+        let mut warm =
+            Engine::new(MockBackend::new(1, budget + 20), cfg.clone(), 2)
+                .unwrap();
+        warm.submit(Request::new(1, with_tail(&tail_a), max_a))
+            .map_err(|e| format!("{e}"))?;
+        warm.run_to_completion().map_err(|e| format!("{e}"))?;
+        warm.submit(Request::new(2, with_tail(&tail_b), max_b))
+            .map_err(|e| format!("{e}"))?;
+        let w2 = warm.run_to_completion().map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(w2.len(), 1);
+        let c = warm.prefix_store().ok_or("engine lost its store")?.counters();
+        prop_assert!(c.hits >= 1,
+                     "P2 must hit ({policy}, chunked {chunked}, \
+                      chunk {chunk_tokens}, plen {plen})");
+        prop_assert!(c.prefill_tokens_saved > 0, "a hit must save prefill");
+        // cold arm: a storeless engine prefills P2 end to end
+        let cold_cfg = EngineConfig { prefix_enabled: false, ..cfg };
+        let mut cold =
+            Engine::new(MockBackend::new(1, budget + 20), cold_cfg, 2).unwrap();
+        cold.submit(Request::new(2, with_tail(&tail_b), max_b))
+            .map_err(|e| format!("{e}"))?;
+        let c2 = cold.run_to_completion().map_err(|e| format!("{e}"))?;
+        prop_assert!(w2[0].tokens == c2[0].tokens,
+                     "hit lane diverged from cold prefill ({policy}, \
+                      chunked {chunked}, chunk {chunk_tokens}, plen {plen}): \
+                      warm {:?} vs cold {:?}", w2[0].tokens, c2[0].tokens);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_shared_prefix_store_matches_cold_across_replicas() {
+    // the fleet-sharing invariant: two replicas behind an EngineGroup,
+    // sharing ONE prefix store, serve warm-hit requests bit-identically to
+    // a storeless single engine — a replica can consume a prefix another
+    // replica published, and the group's aggregated exposition carries the
+    // store's counters exactly once.
+    use std::sync::Arc;
+    use trimkv::prefixcache::PrefixStore;
+    use trimkv::router::EngineGroup;
+    forall("group prefix equivalence", 6, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret", "retrieval"];
+        let policy = names[rng.below(names.len())];
+        let budget = rng.range(12, 28);
+        let chunked = rng.bool(0.5);
+        let chunk_tokens =
+            if chunked { [16, 32][rng.below(2)] } else { rng.range(4, 24) };
+        let cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch: 1,
+            chunked_prefill: chunked,
+            prefix_chunk_tokens: chunk_tokens,
+            ..Default::default()
+        };
+        let tok = |rng: &mut Rng| 32 + rng.below(64) as u32;
+        let plen = chunk_tokens + rng.below(2 * chunk_tokens);
+        let prefix: Vec<u32> = (0..plen).map(|_| tok(rng)).collect();
+        let n_req = 5usize; // one warm-up miss + four measured followers
+        let tails: Vec<Vec<u32>> = (0..n_req)
+            .map(|_| (0..rng.range(1, 16)).map(|_| tok(rng)).collect())
+            .collect();
+        let max_new: Vec<usize> = (0..n_req).map(|_| rng.range(1, 6)).collect();
+        let prompt = |i: usize| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(&tails[i]);
+            p
+        };
+        // cold arm: a storeless single engine serves every request in turn
+        let mut cold =
+            Engine::new(MockBackend::new(1, budget + 20), cfg.clone(), 2)
+                .unwrap();
+        let mut want: Vec<Vec<u32>> = Vec::new();
+        for i in 0..n_req {
+            cold.submit(Request::new(i as u64, prompt(i), max_new[i]))
+                .map_err(|e| format!("{e}"))?;
+            let rs = cold.run_to_completion().map_err(|e| format!("{e}"))?;
+            prop_assert_eq!(rs.len(), 1);
+            want.push(rs[0].tokens.clone());
+        }
+        // warm arm: N=2 replicas, one shared store (the serve() wiring)
+        let store = Arc::new(PrefixStore::new(16 << 20, chunk_tokens));
+        let mut group = EngineGroup::spawn(2, true, |_| {
+            let mut e = Engine::new(MockBackend::new(1, budget + 20),
+                                    cfg.clone(), 2)?;
+            e.set_prefix_store(store.clone());
+            Ok(e)
+        })
+        .map_err(|e| format!("{e}"))?;
+        group.attach_prefix_store(store.clone());
+        // warm-up lands on one replica and publishes the shared prefix
+        group.submit(Request::new(0, prompt(0), max_new[0]));
+        let r0 = group.recv_blocking().ok_or("no warm-up response")?;
+        prop_assert!(r0.tokens == want[0], "warm-up diverged ({policy})");
+        // followers spread across BOTH replicas and all hit the store
+        for i in 1..n_req {
+            group.submit(Request::new(i as u64, prompt(i), max_new[i]));
+        }
+        let mut rs = Vec::new();
+        for _ in 1..n_req {
+            rs.push(group.recv_blocking().ok_or("replica died")?);
+        }
+        rs.sort_by_key(|r| r.id);
+        for (i, r) in rs.iter().enumerate() {
+            prop_assert!(r.tokens == want[i + 1],
+                         "follower {} diverged ({policy}, chunked {chunked}, \
+                          chunk {chunk_tokens})", i + 1);
+        }
+        let c = store.counters();
+        prop_assert_eq!(c.hits, 4);
+        prop_assert_eq!(c.misses, 1);
+        prop_assert!(c.prefill_tokens_saved > 0);
+        let text = group.metrics_snapshot().ok_or("no metrics")?;
+        prop_assert!(text.contains("trimkv_prefix_hits_total 4"),
+                     "group exposition lost the shared store:\n{text}");
+        group.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prefix_churn_evicts_without_corrupting_streams() {
+    // ref-counted LRU churn: a store sized for ~2 slabs serving 4 prefix
+    // families across repeated passes must evict (budget pressure is real)
+    // while every response — hit, miss or re-warm — stays bit-identical to
+    // a storeless engine.  The prefixcache unit tests pin the precise
+    // never-free-a-pinned-entry semantics; this drives the whole engine
+    // path through the churn.
+    forall("prefix churn", 10, |rng| {
+        let names = ["trimkv", "h2o", "snapkv", "streaming_llm", "rkv",
+                     "keydiff", "locret", "retrieval"];
+        let policy = names[rng.below(names.len())];
+        let budget = 16usize;
+        let chunked = rng.bool(0.5);
+        let chunk_tokens = if chunked { 16 } else { rng.range(6, 20) };
+        // each payload's LaneKv alone is 2*layers*hkv*m*dh floats =
+        // 2*4*2*36*32*4 bytes ~ 74 KiB, so 200 kB holds ~2 entries
+        let max_bytes = 200_000;
+        let cfg = EngineConfig {
+            policy: policy.into(),
+            budget,
+            batch: 1,
+            chunked_prefill: chunked,
+            prefix_enabled: true,
+            prefix_max_bytes: max_bytes,
+            prefix_chunk_tokens: chunk_tokens,
+            ..Default::default()
+        };
+        let tok = |rng: &mut Rng| 32 + rng.below(64) as u32;
+        let n_fam = 4usize;
+        let families: Vec<Vec<u32>> = (0..n_fam)
+            .map(|_| {
+                (0..chunk_tokens + rng.below(chunk_tokens))
+                    .map(|_| tok(rng))
+                    .collect()
+            })
+            .collect();
+        // two passes over the families: the second mixes hits with
+        // re-warms of whatever the LRU already threw out
+        let mut prompts: Vec<Vec<u32>> = Vec::new();
+        for _pass in 0..2 {
+            for fam in &families {
+                let mut p = fam.clone();
+                p.extend((0..rng.range(1, 12)).map(|_| tok(rng)));
+                prompts.push(p);
+            }
+        }
+        let max_new: Vec<usize> =
+            (0..prompts.len()).map(|_| rng.range(1, 6)).collect();
+        let mut warm =
+            Engine::new(MockBackend::new(1, budget + 20), cfg.clone(), 2)
+                .unwrap();
+        let cold_cfg = EngineConfig { prefix_enabled: false, ..cfg };
+        let mut cold =
+            Engine::new(MockBackend::new(1, budget + 20), cold_cfg, 2).unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            warm.submit(Request::new(i as u64, p.clone(), max_new[i]))
+                .map_err(|e| format!("{e}"))?;
+            let w = warm.run_to_completion().map_err(|e| format!("{e}"))?;
+            cold.submit(Request::new(i as u64, p.clone(), max_new[i]))
+                .map_err(|e| format!("{e}"))?;
+            let c = cold.run_to_completion().map_err(|e| format!("{e}"))?;
+            prop_assert!(w[0].tokens == c[0].tokens,
+                         "request {i} diverged under churn ({policy}, \
+                          chunked {chunked}, chunk {chunk_tokens})");
+        }
+        let c = warm.prefix_store().ok_or("engine lost its store")?.counters();
+        prop_assert!(c.inserts >= n_fam as u64,
+                     "each family must publish at least once");
+        prop_assert!(c.evictions > 0,
+                     "store must churn under the tiny byte budget \
+                      (bytes {}, inserts {})", c.bytes, c.inserts);
+        prop_assert!(c.bytes <= max_bytes,
+                     "idle store left over budget: {} > {max_bytes}", c.bytes);
+        Ok(())
+    });
+}
