@@ -1,0 +1,162 @@
+"""Staticcheck analyzer tests: each rule trips on its seeded-violation
+fixture, stays silent where the fixture is deliberately clean, and the
+whole suite reports zero findings on the real tree (the CI gate this repo
+actually ships under).
+
+No jax needed — pure python over ``tools/staticcheck``.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from staticcheck import rustlex  # noqa: E402
+from staticcheck.run import analyze  # noqa: E402
+
+FIXTURES = REPO / "tools" / "staticcheck" / "fixtures"
+
+
+def findings_for(fixture, rule):
+    return analyze(FIXTURES / fixture, only=rule)
+
+
+def messages(findings):
+    return "\n".join(f.render() for f in findings)
+
+
+# -- the lexer itself -------------------------------------------------------
+
+def test_scrub_blanks_comments_and_strings():
+    s = rustlex.scrub(
+        'let a = "x.unwrap()"; // .unwrap() in a comment\n'
+        "let b = v.unwrap();\n", "t.rs")
+    assert ".unwrap()" not in s.code.split("\n")[0]
+    assert "v.unwrap()" in s.code
+    assert len(s.code) == len(s.text)  # offsets preserved
+    assert s.strings == [(1, "x.unwrap()")]
+
+
+def test_scrub_line_of_is_exact_at_boundaries():
+    s = rustlex.scrub("a\nbb\nccc\n", "t.rs")
+    for pos, want in [(0, 1), (1, 1), (2, 2), (4, 2), (5, 3), (8, 3)]:
+        assert s.line_of(pos) == want, (pos, want)
+
+
+def test_scrub_marks_cfg_test_extent():
+    s = rustlex.scrub(
+        "fn live() {}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    fn t() {}\n"
+        "}\n"
+        "fn after() {}\n", "t.rs")
+    assert not s.in_test(1)
+    assert s.in_test(4)
+    assert not s.in_test(6)
+
+
+def test_pragma_parsing():
+    s = rustlex.scrub(
+        "// staticcheck: allow(panic-path, index proven in range)\n"
+        "// staticcheck: allow(lock-order)\n", "t.rs")
+    assert [(p.line, p.rule, p.reason) for p in s.pragmas] == [
+        (1, "panic-path", "index proven in range"),
+        (2, "lock-order", "")]
+
+
+# -- each rule trips on its fixture ----------------------------------------
+
+def test_metrics_registry_fixture():
+    f = findings_for("metrics_registry", "metrics-registry")
+    msgs = messages(f)
+    assert len(f) == 4, msgs
+    assert "trimkv_orphan_total` is emitted but not documented" in msgs
+    assert "trimkv_ghost_total` is documented but nothing" in msgs
+    # the rename pair is flagged in both directions with a near-miss hint
+    assert "near-miss of documented `trimkv_prefix_bytes_total`" in msgs
+    assert "near-miss of emitted `trimkv_prefix_byte_total`" in msgs
+    # silent: the clean series, and names inside #[cfg(test)]
+    assert "trimkv_requests_total" not in msgs
+    assert "trimkv_test_only_total" not in msgs
+
+
+def test_config_contract_fixture():
+    f = findings_for("config_contract", "config-contract")
+    msgs = messages(f)
+    assert len(f) == 6, msgs
+    assert "`gamma` is not settable via TOML" in msgs
+    assert "`engine.gamma` has no from_toml_str arm" in msgs
+    assert "--omega but apply_cli never consumes it" in msgs
+    assert "--omega default `\"42\".to_string()` is not derived" in msgs
+    assert "documents default `0.7` but EngineConfig::default() says `0.5`" \
+        in msgs
+    assert "`engine.beta` (field `beta`) is missing from" in msgs
+    # silent: alpha is fully wired (arm + CLI + docs row)
+    assert "--alpha" not in msgs
+
+
+def test_lock_order_fixture():
+    f = findings_for("lock_order", "lock-order")
+    msgs = messages(f)
+    assert len(f) == 4, msgs
+    assert "`alpha` acquired while holding `beta`" in msgs
+    assert "`alpha` re-acquired while already held" in msgs
+    assert "blocking call `.recv(` while holding `alpha`" in msgs
+    assert "undeclared lock `secret.lock()`" in msgs
+    # silent: the declared alpha -> beta nesting, the drop-before-recv
+    # function, and nesting inside #[cfg(test)]
+    assert "`beta` acquired while holding `alpha`" not in msgs
+    lines = {x.line for x in f}
+    assert all(line < 45 for line in lines), msgs  # nothing from mod tests
+
+
+def test_panic_path_fixture():
+    f = findings_for("panic_path", "panic-path")
+    msgs = messages(f)
+    assert len(f) == 5, msgs
+    assert "`unwrap` on a serving hot path" in msgs
+    assert "2 non-test panic sites but the baseline allows 1" in msgs
+    assert "baseline is stale: allows 2 panic sites, the file has 1" in msgs
+    assert "allow(panic-path) carries no reason" in msgs
+    assert "unused allow(panic-path) pragma" in msgs
+    # silent: the reasoned pragma'd expect, and unwraps in #[cfg(test)]
+    assert msgs.count("serving hot path") == 1
+
+
+def test_bench_gates_fixture():
+    f = findings_for("bench_gates", "bench-gates")
+    msgs = messages(f)
+    assert len(f) == 3, msgs
+    assert "gates `fake_b` but BENCH_baseline.json has no" in msgs
+    assert "baseline gates `fake.fake_stale` but the bench no longer" in msgs
+    assert 'baseline entry `ghost` has no bench' in msgs
+    assert "fake_a" not in msgs  # silent: the covered gate
+
+
+def test_doc_links_fixture():
+    f = findings_for("doc_links", "doc-links")
+    msgs = messages(f)
+    assert len(f) == 1, msgs
+    assert f[0].path == "README.md"
+    assert "missing/file.md" in msgs
+    # silent: live links, anchors, external URLs, fenced snippets, fragments
+    assert "OTHER.md" not in msgs and "nowhere.md" not in msgs
+
+
+# -- the real tree is clean -------------------------------------------------
+
+@pytest.mark.parametrize("rule", ["metrics-registry", "config-contract",
+                                  "lock-order", "panic-path", "bench-gates",
+                                  "doc-links"])
+def test_real_tree_is_clean_per_rule(rule):
+    f = analyze(REPO, only=rule)
+    assert f == [], messages(f)
+
+
+def test_real_tree_is_clean_full_suite():
+    f = analyze(REPO)
+    assert f == [], messages(f)

@@ -476,6 +476,7 @@ impl<B: ModelBackend> Engine<B> {
         let mut evict: Vec<usize> = Vec::new();
         let mut chased: Vec<usize> = Vec::new(); // q idxs chasing a snapshot
         for qi in 0..self.queue.len() {
+            // staticcheck: allow(panic-path, qi ranges over queue.len() with no removals in the scan)
             let req = self.queue.get(qi).expect("index in range");
             let sid = req.session.clone();
             if let Some(s) = sid.as_deref() {
@@ -560,6 +561,7 @@ impl<B: ModelBackend> Engine<B> {
         let mut seats: Vec<(usize, Request)> = Vec::with_capacity(placements.len());
         placements.sort_by_key(|&(_, qi)| std::cmp::Reverse(qi));
         for (lane_idx, qi) in placements {
+            // staticcheck: allow(panic-path, placements hold distinct indices popped in descending order)
             let req = self.queue.take(qi).expect("planned index");
             seats.push((lane_idx, req));
         }
@@ -650,6 +652,7 @@ impl<B: ModelBackend> Engine<B> {
         // snapshots are inserted (an insert may LRU-drop the coldest entry)
         let mut loaded = Vec::with_capacity(load.len());
         for (_, sid) in load {
+            // staticcheck: allow(panic-path, load list built from sessions present in the store this tick)
             loaded.push(self.sessions.take(sid).expect("present above"));
         }
         for (&lane_idx, kv) in evict.iter().zip(downloaded) {
@@ -705,6 +708,7 @@ impl<B: ModelBackend> Engine<B> {
                 let Lane::Parked(p) =
                     std::mem::replace(&mut self.lanes[lane_idx], Lane::Idle)
                 else {
+                    // staticcheck: allow(panic-path, the matches! guard above proves this lane is Parked)
                     unreachable!("checked above");
                 };
                 self.metrics.resumes_in_place += 1;
@@ -1264,6 +1268,7 @@ fn postprocess_lane(seq: &mut SeqState, lane_idx: usize, op: LaneOp,
                 let slot = per_head[li * h + hi];
                 let entry = SlotEntry {
                     pos: start as i64,
+                    // staticcheck: allow(panic-path, decode ops always carry the sampled token)
                     token: dec_token.expect("decode op"),
                     log_beta: out.log_beta[cb],
                     ..Default::default()
@@ -1437,11 +1442,11 @@ fn plan_injection(head: &crate::kvcache::HeadState,
         .iter()
         .enumerate()
         .map(|(i, me)| (i, cos(&me.key, q_proxy)))
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        .max_by(|a, b| a.1.total_cmp(&b.1))?;
     let (worst_slot, worst_sim) = head
         .live_slots()
         .map(|s| (s, cos(head.key(s), q_proxy)))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        .min_by(|a, b| a.1.total_cmp(&b.1))?;
     if best_sim > worst_sim + 0.05 {
         let me = mirror.swap_remove(best_idx);
         Some((worst_slot, me))

@@ -21,7 +21,7 @@ impl Sampler {
         // softmax with temperature over the (optionally top-k-truncated) set
         let mut idx: Vec<usize> = (0..logits.len()).collect();
         if self.top_k > 0 && self.top_k < logits.len() {
-            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
             idx.truncate(self.top_k);
         }
         let t = self.temperature as f32;
@@ -36,7 +36,7 @@ impl Sampler {
                 return i;
             }
         }
-        *idx.last().unwrap()
+        idx.last().copied().unwrap_or(0)
     }
 }
 

@@ -36,7 +36,7 @@
 //! copying it N times.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::kvcache::{LaneCache, MirrorEntry, SlotEntry};
 use crate::obs::Sample;
@@ -214,6 +214,14 @@ impl PrefixStore {
         self.max_bytes
     }
 
+    /// Index guard; recovers a poisoned mutex.  The store is shared by
+    /// every replica of a group, so one panicking engine thread must not
+    /// wedge prefix reuse for the rest of the fleet — the map/byte
+    /// bookkeeping is consistent at every statement boundary.
+    fn locked(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Longest cached prefix of `prompt`, capped one token short of the full
     /// prompt so the seeded lane keeps a non-empty tail.  Counts a hit (plus
     /// the prefill tokens it saves) or — for prompts long enough to have an
@@ -233,7 +241,7 @@ impl PrefixStore {
                 keys.push(h);
             }
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         for (k, key) in keys.iter().enumerate().rev() {
             let len = (k + 1) * self.chunk;
             let Some(entry) = g.map.get(key) else { continue };
@@ -245,7 +253,9 @@ impl PrefixStore {
             let payload = entry.payload.clone();
             g.clock += 1;
             let stamp = g.clock;
-            g.map.get_mut(key).unwrap().last_used = stamp;
+            if let Some(e) = g.map.get_mut(key) {
+                e.last_used = stamp;
+            }
             g.hits += 1;
             g.tokens_saved += len as u64;
             return Some(payload);
@@ -261,7 +271,7 @@ impl PrefixStore {
         for &tok in tokens {
             h = fnv_token(h, tok);
         }
-        let g = self.inner.lock().unwrap();
+        let g = self.locked();
         g.map
             .get(&h)
             .is_some_and(|e| e.payload.fp == *fp && e.payload.tokens == tokens)
@@ -280,7 +290,7 @@ impl PrefixStore {
             h = fnv_token(h, tok);
         }
         let bytes = payload.host_bytes();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if g.map.contains_key(&h) {
             return; // racing publisher won; keep the established entry
         }
@@ -301,14 +311,14 @@ impl PrefixStore {
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| *k);
             let Some(key) = victim else { break }; // all pinned: overshoot
-            let gone = g.map.remove(&key).expect("victim chosen from map");
+            let Some(gone) = g.map.remove(&key) else { break };
             g.bytes -= gone.bytes;
             g.evictions += 1;
         }
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.locked().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -316,11 +326,11 @@ impl PrefixStore {
     }
 
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.locked().bytes
     }
 
     pub fn counters(&self) -> PrefixCounters {
-        let g = self.inner.lock().unwrap();
+        let g = self.locked();
         PrefixCounters {
             hits: g.hits,
             misses: g.misses,

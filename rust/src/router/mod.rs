@@ -35,7 +35,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
 use anyhow::{bail, ensure, Result};
@@ -148,9 +148,18 @@ impl SessionRouter {
         self.n
     }
 
+    /// Placement-state guard.  A replica thread that panics while the
+    /// router is mid-update poisons the mutex; the state is plain
+    /// bookkeeping that is consistent at every statement boundary, so
+    /// recover the guard instead of cascading the panic into every
+    /// subsequent request.
+    fn st(&self) -> MutexGuard<'_, RouterState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// The replica a session currently resolves to (pin, else hash home).
     pub fn replica_for(&self, session: &str) -> usize {
-        let st = self.state.lock().unwrap();
+        let st = self.st();
         st.pins
             .get(session)
             .copied()
@@ -161,7 +170,7 @@ impl SessionRouter {
     /// caller must act on a `MigrateThenTo` (or fall back to the source on
     /// a failed handoff via [`SessionRouter::repin`]).
     pub fn route(&self, req: &Request) -> RouteDecision {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         st.metrics.routed += 1;
         let decision = match &req.session {
             None => {
@@ -207,7 +216,7 @@ impl SessionRouter {
 
     /// Book a drained response against its replica and session.
     pub fn note_done(&self, replica: usize, resp: &Response) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         st.inflight[replica] = st.inflight[replica].saturating_sub(1);
         if let Some(sid) = &resp.session {
             if let Some(c) = st.session_inflight.get_mut(sid) {
@@ -221,14 +230,14 @@ impl SessionRouter {
 
     /// Point a session at a replica (migration bookkeeping / fallback).
     pub fn repin(&self, session: &str, replica: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         st.pins.insert(session.to_string(), replica);
     }
 
     /// Forget a session (close): the next turn with this id re-homes by
     /// hash, exactly like a brand-new conversation.
     pub fn unpin(&self, session: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         st.pins.remove(session);
         st.session_inflight.remove(session);
     }
@@ -236,7 +245,7 @@ impl SessionRouter {
     /// Preflight an explicit migration: checks the feature gate, target
     /// range and session quiescence, and counts rejections.
     fn check_migration(&self, session: &str, target: usize) -> Result<usize> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         let source = st
             .pins
             .get(session)
@@ -259,7 +268,7 @@ impl SessionRouter {
     }
 
     fn count_migration(&self, ok: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         if ok {
             st.metrics.migrations += 1;
         } else {
@@ -268,12 +277,12 @@ impl SessionRouter {
     }
 
     pub fn metrics(&self) -> RouterMetrics {
-        self.state.lock().unwrap().metrics.clone()
+        self.st().metrics.clone()
     }
 
     /// Router-plane samples (appended to the aggregated exposition).
     pub fn samples(&self) -> Vec<Sample> {
-        let st = self.state.lock().unwrap();
+        let st = self.st();
         let m = &st.metrics;
         let mut out = vec![
             Sample::gauge("trimkv_router_replicas", self.n as f64),
@@ -380,7 +389,13 @@ impl EngineGroup {
                 let _ = self.workers[t].tx.send(Msg::Req(req));
             }
             RouteDecision::MigrateThenTo(src, dst) => {
-                let sid = req.session.clone().expect("rebalance is sessionful");
+                let Some(sid) = req.session.clone() else {
+                    // route() only rebalances sessionful requests; if that
+                    // invariant ever breaks, still serve the turn on the
+                    // chosen replica rather than panic the server
+                    let _ = self.workers[dst].tx.send(Msg::Req(req));
+                    return;
+                };
                 // best effort: a failed handoff (source still warming the
                 // snapshot, store miss) falls back to the source replica —
                 // the turn still runs, just on the busy engine

@@ -1,67 +1,20 @@
 #!/usr/bin/env python3
 """Dead-link check for the repo's markdown docs.
 
-Scans every tracked *.md file for relative markdown links
-(``[text](path)`` / ``![alt](path)``) and fails if a target does not
-exist on disk.  External schemes (http/https/mailto) and pure anchors
-(``#section``) are skipped; ``path#fragment`` is checked as ``path``.
-Fenced code blocks are ignored so exemplar snippets can't false-positive.
-
-Run from the repo root (CI: the python job's "docs link check" step):
+Kept as a standalone entry point for muscle memory; the logic moved into
+the staticcheck analyzer (``tools/staticcheck/passes/doc_links.py``) and
+this wrapper just runs that single pass:
 
     python3 tools/check_doc_links.py
+    # == python3 tools/staticcheck/run.py --only doc-links
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-SKIP_DIRS = {".git", "target", "vendor", "node_modules", "__pycache__"}
-LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^()\s]+)\)")
-EXTERNAL = ("http://", "https://", "mailto:")
-
-
-def md_files(root: Path):
-    for path in sorted(root.rglob("*.md")):
-        if not SKIP_DIRS.intersection(p.name for p in path.parents):
-            yield path
-
-
-def check_file(path: Path, root: Path) -> list[str]:
-    errors = []
-    in_fence = False
-    for lineno, line in enumerate(path.read_text().splitlines(), 1):
-        if line.lstrip().startswith("```"):
-            in_fence = not in_fence
-            continue
-        if in_fence:
-            continue
-        for target in LINK_RE.findall(line):
-            if target.startswith(EXTERNAL) or target.startswith("#"):
-                continue
-            rel = target.split("#", 1)[0]
-            if not rel:
-                continue
-            resolved = (root / rel) if rel.startswith("/") \
-                else (path.parent / rel)
-            if not resolved.exists():
-                errors.append(
-                    f"{path.relative_to(root)}:{lineno}: dead link "
-                    f"-> {target}")
-    return errors
-
-
-def main() -> int:
-    root = Path(__file__).resolve().parent.parent
-    files = list(md_files(root))
-    errors = [e for f in files for e in check_file(f, root)]
-    for e in errors:
-        print(e, file=sys.stderr)
-    print(f"checked {len(files)} markdown files: "
-          f"{'FAIL' if errors else 'ok'} ({len(errors)} dead links)")
-    return 1 if errors else 0
-
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from staticcheck.run import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--only", "doc-links"]))

@@ -1,0 +1,12 @@
+"""staticcheck — the repo-contract static analyzer.
+
+Multi-pass analysis over the Rust tree (via the hand-rolled scrubber in
+``rustlex``) plus the cross-language contract files (docs/OPERATIONS.md,
+BENCH_baseline.json, lockorder.toml).  Entry point:
+
+    python3 tools/staticcheck/run.py
+
+See docs/STATIC_ANALYSIS.md for the rule catalogue, the
+``// staticcheck: allow(<rule>, <reason>)`` pragma syntax, and the
+panic-path baseline ratchet workflow.
+"""

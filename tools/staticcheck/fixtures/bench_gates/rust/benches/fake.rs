@@ -1,0 +1,14 @@
+//! Fixture bench emitting two gated keys; the baseline covers one,
+//! carries one stale key, and names a bench that no longer exists.
+
+fn main() {
+    let stats = run_fake_bench();
+    let payload = Json::obj(vec![
+        ("bench", Json::str("fake")),
+        ("regress_on", Json::obj(vec![
+            ("fake_a", gate(stats.mean_us, 0.10)),
+            ("fake_b", gate(stats.p99_us, 0.15)),
+        ])),
+    ]);
+    write_bench_json("fake", &payload);
+}

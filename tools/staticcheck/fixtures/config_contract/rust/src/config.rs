@@ -1,0 +1,41 @@
+//! Fixture EngineConfig with seeded contract violations.
+
+pub struct EngineConfig {
+    pub alpha: f32,
+    pub beta: usize,
+    // seeded violation: no from_toml_str arm targets gamma
+    pub gamma: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            alpha: 0.5,
+            beta: 64,
+            gamma: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_toml_str(text: &str) -> Self {
+        let mut cfg = Self::default();
+        for (key, v) in toml_pairs(text) {
+            match key {
+                "engine.alpha" => cfg.alpha = v.parse().unwrap_or(cfg.alpha),
+                "engine.beta" => cfg.beta = v.parse().unwrap_or(cfg.beta),
+                _ => {}
+            }
+        }
+        cfg
+    }
+
+    pub fn apply_cli(&mut self, args: &Args) {
+        if let Some(v) = args.get("alpha") {
+            self.alpha = v.parse().unwrap_or(self.alpha);
+        }
+        if let Some(v) = args.get("beta") {
+            self.beta = v.parse().unwrap_or(self.beta);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture CLI spec with seeded violations.
+
+fn common_spec() -> Spec {
+    let d = EngineConfig::default();
+    Spec::new()
+        .opt("alpha", d.alpha.to_string(), "retention decay")
+        .opt("beta", d.beta.to_string(), "window width")
+        // seeded violations: apply_cli never consumes --omega, and its
+        // default is a bare literal instead of deriving from d.
+        .opt("omega", "42".to_string(), "dead flag")
+}

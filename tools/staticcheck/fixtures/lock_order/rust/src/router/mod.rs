@@ -1,0 +1,55 @@
+//! Fixture router with seeded lock-discipline violations.
+
+impl Router {
+    pub fn ok_nesting(&self) {
+        // silent: alpha -> beta is a declared edge
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        g.touch(&h);
+    }
+
+    pub fn bad_nesting(&self) {
+        // seeded violation: beta -> alpha is not a declared edge
+        let g = self.b.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        g.touch(&h);
+    }
+
+    pub fn relock(&self) {
+        // seeded violation: alpha re-acquired while held
+        let g = self.a.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        g.touch(&h);
+    }
+
+    pub fn blocking(&self) {
+        // seeded violation: channel recv while holding alpha
+        let g = self.a.lock().unwrap();
+        let msg = self.rx.recv().expect("peer alive");
+        g.push(msg);
+    }
+
+    pub fn dropped_before_blocking(&self) {
+        // silent: the guard is dropped before the recv
+        let g = self.a.lock().unwrap();
+        g.bump();
+        drop(g);
+        let _ = self.rx.recv();
+    }
+
+    pub fn undeclared(&self) {
+        // seeded violation: `secret` is not on the ledger
+        let s = self.secret.lock().unwrap();
+        s.peek();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn nesting_in_tests_is_ignored() {
+        let g = R.b.lock().unwrap();
+        let h = R.a.lock().unwrap();
+        assert!(g.touch(&h));
+    }
+}

@@ -1,0 +1,19 @@
+//! Fixture: one undocumented series, one near-miss rename, one clean.
+
+pub fn samples() -> Vec<Sample> {
+    vec![
+        Sample::counter("trimkv_requests_total", 2),
+        // seeded violation: not documented at all
+        Sample::counter("trimkv_orphan_total", 1),
+        // seeded violation: docs say trimkv_prefix_bytes_total (near-miss)
+        Sample::counter("trimkv_prefix_byte_total", 3),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_only_names_do_not_count() {
+        assert_eq!(name(), "trimkv_test_only_total");
+    }
+}

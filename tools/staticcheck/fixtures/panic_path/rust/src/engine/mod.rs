@@ -1,0 +1,23 @@
+//! Fixture engine hot path with seeded panic-discipline violations.
+
+impl Engine {
+    pub fn tick(&mut self) {
+        // seeded violation: bare unwrap on the hot path
+        let x = self.queue.pop().unwrap();
+        // staticcheck: allow(panic-path, index proven in range by the scan above)
+        let y = self.slots.get(0).expect("in range");
+        // staticcheck: allow(panic-path)
+        let z = self.slots.get(1).expect("seeded violation: reasonless pragma");
+        // staticcheck: allow(panic-path, seeded violation: suppresses nothing)
+        let w = x + y + z;
+        self.emit(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_in_tests_are_fine() {
+        Engine::new().queue.pop().unwrap();
+    }
+}

@@ -1,0 +1,5 @@
+//! Fixture util file that burned down below its baselined count (2).
+
+pub fn one_site(s: &str) -> u32 {
+    s.parse().expect("caller validated")
+}

@@ -1,0 +1,7 @@
+//! Fixture util file that grew past its baselined panic-site count (1).
+
+pub fn parse_pair(s: &str) -> (u32, u32) {
+    let mut it = s.split(',');
+    let a = it.next().unwrap().parse().unwrap();
+    (a, 0)
+}

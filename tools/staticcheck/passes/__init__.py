@@ -1,0 +1,26 @@
+"""The pass registry.  Order is report order, not dependency order —
+every pass is independent and runs against the same Context."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent.parent))
+
+from staticcheck.passes import (  # noqa: E402
+    bench_gates,
+    config_contract,
+    doc_links,
+    lock_order,
+    metrics_registry,
+    panic_path,
+)
+
+ALL_PASSES = [
+    ("metrics-registry", metrics_registry),
+    ("config-contract", config_contract),
+    ("lock-order", lock_order),
+    ("panic-path", panic_path),
+    ("bench-gates", bench_gates),
+    ("doc-links", doc_links),
+]

@@ -1,0 +1,97 @@
+"""bench-gates: every deterministic metric a bench emits under
+``regress_on`` must have a matching entry in BENCH_baseline.json, and
+every baselined gate must still be emitted by some bench.
+
+Extraction is syntactic over the scrubbed bench sources: the bench name
+comes from ``write_bench_json("<name>", ...)``, the gated keys from
+``("<key>", gate(...))`` pairs inside each ``("regress_on", Json::obj(
+vec![...]))`` block (bracket-matched on the blanked view so string
+contents cannot desync it).  A bench that emits several payloads (e.g. a
+quick-skip marker plus the real run) contributes the union of its keys.
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from staticcheck.report import Context, Finding
+from staticcheck.rustlex import Scrub
+
+RULE = "bench-gates"
+BASELINE = "BENCH_baseline.json"
+NAME_RE = re.compile(r'write_bench_json\(\s*"(\w+)"')
+KEY_RE = re.compile(r'\(\s*"([A-Za-z0-9_]+)"\s*,\s*gate\s*\(')
+
+
+def run(ctx: Context) -> list[Finding]:
+    emitted: dict[str, dict] = {}  # bench name -> {"keys", "path", "line"}
+    for rel in ctx.rust_files("rust/benches"):
+        s = ctx.scrub(rel)
+        names = [(m.group(1), s.line_of(m.start()))
+                 for m in NAME_RE.finditer(s.code_str)
+                 if not s.in_test(s.line_of(m.start()))]
+        if not names:
+            continue
+        keys = set()
+        for block in _regress_blocks(s):
+            keys.update(KEY_RE.findall(block))
+        for name, line in names:
+            e = emitted.setdefault(name,
+                                   {"keys": set(), "path": rel, "line": line})
+            e["keys"].update(keys)
+
+    gated = {n: e for n, e in emitted.items() if e["keys"]}
+    if not ctx.exists(BASELINE):
+        if gated:
+            return [Finding(RULE, BASELINE, 0,
+                            f"{len(gated)} benches emit regress_on gates "
+                            f"but {BASELINE} does not exist")]
+        return []
+    baseline = json.loads(ctx.read(BASELINE)).get("benches", {})
+
+    out = []
+    for name, e in sorted(gated.items()):
+        want = set(baseline.get(name, {}).get("regress_on", {}))
+        if name not in baseline:
+            out.append(Finding(
+                RULE, e["path"], e["line"],
+                f"bench `{name}` emits regress_on gates but {BASELINE} has "
+                f"no `{name}` entry — its regressions go ungated in CI"))
+            continue
+        for k in sorted(e["keys"] - want):
+            out.append(Finding(
+                RULE, e["path"], e["line"],
+                f"bench `{name}` gates `{k}` but {BASELINE} has no "
+                f"regress_on entry for it"))
+        for k in sorted(want - e["keys"]):
+            out.append(Finding(
+                RULE, BASELINE, 0,
+                f"baseline gates `{name}.{k}` but the bench no longer "
+                f"emits it — stale entry"))
+    for name in sorted(set(baseline) - set(emitted)):
+        out.append(Finding(
+            RULE, BASELINE, 0,
+            f"baseline entry `{name}` has no bench emitting "
+            f"write_bench_json(\"{name}\")"))
+    return out
+
+
+def _regress_blocks(s: Scrub) -> list[str]:
+    """The `vec![...]` span of every regress_on block, from the
+    string-bearing view (keys intact), bracket-matched on the blanked
+    view (strings can't desync the walk)."""
+    blocks = []
+    for m in re.finditer(r'"regress_on"', s.code_str):
+        open_pos = s.code.find("[", m.end())
+        if open_pos == -1:
+            continue
+        depth = 0
+        for j in range(open_pos, len(s.code)):
+            if s.code[j] == "[":
+                depth += 1
+            elif s.code[j] == "]":
+                depth -= 1
+                if depth == 0:
+                    blocks.append(s.code_str[open_pos:j + 1])
+                    break
+    return blocks

@@ -1,0 +1,292 @@
+"""config-contract: EngineConfig field <-> TOML key <-> CLI flag <->
+OPERATIONS.md row, with defaults cross-checked.
+
+Sources of truth, all parsed from scrubbed views (comments stripped,
+strings intact):
+
+- ``rust/src/config.rs``: the `EngineConfig` struct fields, the literal
+  defaults in `impl Default`, the `"section.key" =>` match arms of
+  `from_toml_str`, and the `args.get("name")` / `args.flag("name")` ->
+  `self.field` pairs of `apply_cli`;
+- ``rust/src/main.rs``: the `.opt("name", <default>, ...)` /
+  `.flag("name", ...)` declarations inside `common_spec()` — every
+  declared default must derive from `EngineConfig::default()` (contain a
+  `d.` reference), the repo's one-source-of-truth rule;
+- ``docs/OPERATIONS.md``: the configuration table rows
+  ``| `[section] key` | `--flag` | default | meaning |``.
+
+The pass enforces the full cycle: every TOML arm documented and vice
+versa, every arm targeting a real field and every field reachable from
+TOML, CLI consumption (`apply_cli`) equal to CLI declaration
+(`common_spec`), the docs CLI column pointing at the flag that really
+sets that field (em-dash rows must NOT be CLI-settable), and the docs
+default column equal to the evaluated `Default` literal (`on`/`off`
+normalize to bools, `64 << 20` evaluates).
+"""
+from __future__ import annotations
+
+import re
+
+from staticcheck.report import Context, Finding
+
+RULE = "config-contract"
+CONFIG = "rust/src/config.rs"
+MAIN = "rust/src/main.rs"
+DOCS = "docs/OPERATIONS.md"
+
+
+def run(ctx: Context) -> list[Finding]:
+    if not ctx.exists(CONFIG):
+        return []
+    s = ctx.scrub(CONFIG)
+    out: list[Finding] = []
+
+    fields = _struct_fields(s)
+    defaults = _default_literals(s)
+    arms = _toml_arms(s)          # toml key -> (field, line)
+    cli = _apply_cli(s)           # cli name -> (field, kind, line)
+
+    for key, (field, line) in sorted(arms.items()):
+        if field not in fields:
+            out.append(Finding(
+                RULE, CONFIG, line,
+                f"TOML arm `{key}` assigns `cfg.{field}` which is not an "
+                f"EngineConfig field"))
+    armed_fields = {f for f, _ in arms.values()}
+    for field, line in sorted(fields.items()):
+        if field not in armed_fields:
+            out.append(Finding(
+                RULE, CONFIG, line,
+                f"EngineConfig field `{field}` is not settable via TOML "
+                f"(no from_toml_str arm targets it)"))
+
+    if ctx.exists(MAIN):
+        spec = _common_spec(ctx.scrub(MAIN))  # name -> (kind, expr, line)
+        for name, (kind, expr, line) in sorted(spec.items()):
+            if name not in cli:
+                out.append(Finding(
+                    RULE, MAIN, line,
+                    f"common_spec declares --{name} but apply_cli never "
+                    f"consumes it (dead flag)"))
+            elif cli[name][1] != kind:
+                out.append(Finding(
+                    RULE, MAIN, line,
+                    f"--{name} is a {kind} in common_spec but a "
+                    f"{cli[name][1]} in apply_cli"))
+            if kind == "opt" and "d." not in expr:
+                out.append(Finding(
+                    RULE, MAIN, line,
+                    f"--{name} default `{expr.strip()}` is not derived from "
+                    f"EngineConfig::default() — the CLI and the library "
+                    f"must share one source of truth"))
+        for name, (_, kind, line) in sorted(cli.items()):
+            if name not in spec:
+                out.append(Finding(
+                    RULE, CONFIG, line,
+                    f"apply_cli consumes --{name} but common_spec never "
+                    f"declares it (unreachable override)"))
+
+    if ctx.exists(DOCS):
+        rows = _docs_rows(ctx)    # toml key -> (cli cell, default, line)
+        for key, (_, _, line) in sorted(rows.items()):
+            if key not in arms:
+                out.append(Finding(
+                    RULE, DOCS, line,
+                    f"documented TOML key `{key}` has no from_toml_str arm"))
+        for key, (field, line) in sorted(arms.items()):
+            if key not in rows:
+                out.append(Finding(
+                    RULE, DOCS, 0,
+                    f"TOML key `{key}` (field `{field}`) is missing from "
+                    f"the {DOCS} configuration table"))
+        cli_fields = {f: (n, k) for n, (f, k, _) in cli.items()}
+        for key, (cli_cell, default_cell, line) in sorted(rows.items()):
+            if key not in arms:
+                continue
+            field = arms[key][0]
+            if cli_cell is None:
+                if field in cli_fields:
+                    n, _ = cli_fields[field]
+                    out.append(Finding(
+                        RULE, DOCS, line,
+                        f"`{key}` is documented as CLI-less (em-dash) but "
+                        f"apply_cli sets `{field}` from --{n}"))
+            else:
+                name, kind = cli_cell
+                if name not in cli:
+                    out.append(Finding(
+                        RULE, DOCS, line,
+                        f"`{key}` documents --{name} which apply_cli never "
+                        f"consumes"))
+                else:
+                    got_field, got_kind, _ = cli[name]
+                    if got_field != field:
+                        out.append(Finding(
+                            RULE, DOCS, line,
+                            f"`{key}` documents --{name}, but that flag "
+                            f"sets `{got_field}`, not `{field}`"))
+                    if got_kind != kind:
+                        out.append(Finding(
+                            RULE, DOCS, line,
+                            f"--{name} kind mismatch: docs say {kind}, "
+                            f"apply_cli treats it as {got_kind}"))
+            if field in defaults and defaults[field] is not None:
+                want = defaults[field]
+                if not _defaults_equal(want, default_cell):
+                    out.append(Finding(
+                        RULE, DOCS, line,
+                        f"`{key}` documents default `{default_cell}` but "
+                        f"EngineConfig::default() says `{want}`"))
+    return out
+
+
+# -- config.rs extraction ---------------------------------------------------
+
+def _find_block(s, pattern):
+    """(start, end) offsets of the brace block after `pattern`, or None."""
+    from staticcheck.rustlex import match_brace
+    m = re.search(pattern, s.code)
+    if not m:
+        return None
+    open_pos = s.code.find("{", m.end())
+    if open_pos == -1:
+        return None
+    return open_pos, match_brace(s.code, open_pos)
+
+
+def _struct_fields(s) -> dict:
+    span = _find_block(s, r"pub\s+struct\s+EngineConfig\b")
+    if not span:
+        return {}
+    lo, hi = span
+    return {m.group(1): s.line_of(lo + m.start())
+            for m in re.finditer(r"pub\s+(\w+)\s*:", s.code[lo:hi])}
+
+
+def _default_literals(s) -> dict:
+    span = _find_block(s, r"impl\s+Default\s+for\s+EngineConfig\b")
+    if not span:
+        return {}
+    lo, hi = span
+    inner = _find_block_within(s, lo, hi, r"EngineConfig\s*")
+    if inner:
+        lo, hi = inner
+    out = {}
+    for m in re.finditer(r"(\w+)\s*:\s*([^\n]+?),\s*$",
+                         s.code_str[lo:hi], re.M):
+        out[m.group(1)] = _eval_default(m.group(2))
+    return out
+
+
+def _find_block_within(s, lo, hi, pattern):
+    from staticcheck.rustlex import match_brace
+    m = re.search(pattern + r"\{", s.code[lo + 1:hi])
+    if not m:
+        return None
+    open_pos = lo + 1 + m.end() - 1
+    return open_pos, match_brace(s.code, open_pos)
+
+
+def _eval_default(expr: str):
+    e = expr.strip().rstrip(",").strip()
+    for pat in (r'^PathBuf::from\("([^"]*)"\)$', r'^"([^"]*)"\s*\.into\(\)$',
+                r'^"([^"]*)"\s*\.to_string\(\)$'):
+        m = re.match(pat, e)
+        if m:
+            return m.group(1)
+    if e in ("true", "false"):
+        return e == "true"
+    m = re.match(r"^(\d[\d_]*)\s*<<\s*(\d+)$", e)
+    if m:
+        return int(m.group(1).replace("_", "")) << int(m.group(2))
+    try:
+        return int(e.replace("_", ""))
+    except ValueError:
+        pass
+    try:
+        return float(e)
+    except ValueError:
+        return None  # not statically evaluable; skip the docs comparison
+
+
+def _toml_arms(s) -> dict:
+    span = _find_block(s, r"fn\s+from_toml_str\b")
+    if not span:
+        return {}
+    lo, hi = span
+    out = {}
+    body = s.code_str[lo:hi]
+    for m in re.finditer(r'"([a-z0-9_.]+)"\s*=>', body):
+        tail = body[m.end():m.end() + 400]
+        f = re.search(r"cfg\.(\w+)\s*=", tail)
+        if f:
+            out[m.group(1)] = (f.group(1), s.line_of(lo + m.start()))
+    return out
+
+
+def _apply_cli(s) -> dict:
+    span = _find_block(s, r"fn\s+apply_cli\b")
+    if not span:
+        return {}
+    lo, hi = span
+    out = {}
+    body = s.code_str[lo:hi]
+    for m in re.finditer(r'args\.(get|flag)\(\s*"([a-z0-9-]+)"\s*\)', body):
+        tail = body[m.end():m.end() + 400]
+        f = re.search(r"self\.(\w+)\s*=", tail)
+        if f:
+            kind = "flag" if m.group(1) == "flag" else "opt"
+            out[m.group(2)] = (f.group(1), kind, s.line_of(lo + m.start()))
+    return out
+
+
+# -- main.rs extraction -----------------------------------------------------
+
+def _common_spec(s) -> dict:
+    span = _find_block(s, r"fn\s+common_spec\b")
+    if not span:
+        return {}
+    lo, hi = span
+    out = {}
+    body = s.code_str[lo:hi]
+    for m in re.finditer(r'\.opt\(\s*"([a-z0-9-]+)"\s*,\s*([^,]+),', body):
+        out[m.group(1)] = ("opt", m.group(2).strip(),
+                           s.line_of(lo + m.start()))
+    for m in re.finditer(r'\.flag\(\s*"([a-z0-9-]+)"', body):
+        out[m.group(1)] = ("flag", "", s.line_of(lo + m.start()))
+    return out
+
+
+# -- OPERATIONS.md table ----------------------------------------------------
+
+def _docs_rows(ctx: Context) -> dict:
+    rows = {}
+    for lineno, line in enumerate(ctx.read(DOCS).splitlines(), 1):
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) < 4:
+            continue
+        m = re.match(r"^`(?:\[(\w+)\]\s+)?(\w+)`$", cells[0])
+        if not m:
+            continue
+        key = f"{m.group(1)}.{m.group(2)}" if m.group(1) else m.group(2)
+        cli = None
+        c = re.match(r"^`--([a-z0-9-]+)`(\s*\(flag\))?$", cells[1])
+        if c:
+            cli = (c.group(1), "flag" if c.group(2) else "opt")
+        rows[key] = (cli, cells[2].strip("`"), lineno)
+    return rows
+
+
+def _defaults_equal(code_val, docs_cell: str) -> bool:
+    cell = docs_cell.strip()
+    if isinstance(code_val, bool):
+        return cell.lower() in (("true", "on", "1") if code_val
+                                else ("false", "off", "0"))
+    if isinstance(code_val, (int, float)):
+        try:
+            return float(cell) == float(code_val)
+        except ValueError:
+            return False
+    return cell == str(code_val)

@@ -1,0 +1,55 @@
+"""doc-links: no dead relative links in the repo's markdown docs.
+
+Formerly the standalone ``tools/check_doc_links.py`` (now a thin wrapper
+over this pass).  Every tracked *.md file is scanned for markdown links
+(``[text](path)`` / ``![alt](path)``); a relative target that does not
+exist on disk is a finding.  External schemes (http/https/mailto) and
+pure anchors (``#section``) are skipped; ``path#fragment`` is checked as
+``path``; fenced code blocks are ignored so exemplar snippets can't
+false-positive.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from staticcheck.report import Context, Finding
+
+RULE = "doc-links"
+# `fixtures` holds staticcheck's own seeded-violation corpora; each mini-
+# tree is only scanned when analyzed as its own root.
+SKIP_DIRS = {".git", "target", "vendor", "node_modules", "__pycache__",
+             "fixtures"}
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^()\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(path.relative_to(root).parts[:-1]):
+            yield path
+
+
+def run(ctx: Context) -> list[Finding]:
+    out = []
+    for path in md_files(ctx.root):
+        rel = str(path.relative_to(ctx.root))
+        in_fence = False
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(EXTERNAL) or target.startswith("#"):
+                    continue
+                frag = target.split("#", 1)[0]
+                if not frag:
+                    continue
+                resolved = (ctx.root / frag.lstrip("/")) \
+                    if frag.startswith("/") else (path.parent / frag)
+                if not resolved.exists():
+                    out.append(Finding(
+                        RULE, rel, lineno, f"dead link -> {target}"))
+    return out

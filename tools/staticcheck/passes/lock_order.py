@@ -1,0 +1,179 @@
+"""lock-order: syntactic lock discipline across the serving modules.
+
+``tools/staticcheck/lockorder.toml`` declares every mutex the scoped
+modules (router, prefixcache, session, server, engine) are allowed to
+hold, the guard-returning helper methods that stand in for a raw
+``.lock()`` (poison-recovery wrappers), and the acquisition-order DAG
+(``edges = ["outer -> inner"]`` means: holding `outer`, you may take
+`inner`).  The pass then extracts every acquisition site and its
+*syntactic* guard live range:
+
+- ``let g = <acquire>`` holds to the end of the enclosing block, or to an
+  explicit ``drop(g)``;
+- a temporary (``<acquire>.field``) holds to the end of the statement.
+
+Findings:
+
+- acquiring a ``.lock()`` receiver the TOML does not declare (every lock
+  in the serving core must be on the ledger);
+- nested acquisition whose ``outer -> inner`` edge is not declared
+  (including re-acquiring the same lock: std mutexes self-deadlock);
+- a blocking call (``.recv(`` / ``.recv_timeout(`` / ``.submit(`` /
+  ``.wait(`` / ``.join(``) while a guard is live — the
+  blocking-while-locked hazard a fleet sharing a PrefixStore across
+  replica threads cannot afford.
+
+Everything is a line-level approximation over scrubbed source (no rust
+toolchain in the container), deliberately conservative: a finding means
+"restructure or declare the edge", not "proved deadlock".
+"""
+from __future__ import annotations
+
+import re
+
+from staticcheck.report import Context, Finding, parse_toml_lite
+from staticcheck.rustlex import Scrub
+
+RULE = "lock-order"
+TOML = "tools/staticcheck/lockorder.toml"
+SCOPED = {"router", "prefixcache", "session", "server", "engine"}
+
+ACQ_RE = re.compile(r"(\w+)\s*\.\s*(lock|read|write)\s*\(\s*\)")
+BLOCKING_RE = re.compile(r"\.\s*(recv|recv_timeout|submit|wait|join)\s*\(")
+LET_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*$|\blet\s+(?:mut\s+)?(\w+)\s*=")
+
+
+def run(ctx: Context) -> list[Finding]:
+    if not ctx.exists(TOML):
+        return []
+    try:
+        cfg = parse_toml_lite(ctx.read(TOML))
+    except ValueError as e:
+        return [Finding(RULE, TOML, 0, str(e))]
+    locks = cfg.get("locks", {})
+    by_module: dict[str, dict[str, str]] = {}   # module -> field -> lock id
+    helpers: dict[str, dict[str, str]] = {}     # module -> helper -> lock id
+    for lock_id, spec in locks.items():
+        by_module.setdefault(spec["module"], {})[spec["field"]] = lock_id
+        for h in spec.get("helpers", []):
+            helpers.setdefault(spec["module"], {})[h] = lock_id
+    edges = set()
+    out: list[Finding] = []
+    for e in cfg.get("order", {}).get("edges", []):
+        a, _, b = e.partition("->")
+        a, b = a.strip(), b.strip()
+        if a not in locks or b not in locks:
+            out.append(Finding(RULE, TOML, 0,
+                               f"edge `{e}` references an undeclared lock"))
+        edges.add((a, b))
+
+    for rel in ctx.rust_files():
+        module = _module_of(rel)
+        if module not in SCOPED:
+            continue
+        out.extend(_check_file(ctx.scrub(rel), module,
+                               by_module.get(module, {}),
+                               helpers.get(module, {}), edges))
+    return out
+
+
+def _module_of(rel: str) -> str:
+    parts = rel.split("/")
+    if len(parts) < 3 or parts[0] != "rust" or parts[1] != "src":
+        return ""
+    return parts[2][:-3] if parts[2].endswith(".rs") else parts[2]
+
+
+def _check_file(s: Scrub, module, fields, helper_map, edges):
+    out = []
+    acqs = []   # (lock_id, pos, end, line)
+    for m in ACQ_RE.finditer(s.code):
+        recv, kind = m.group(1), m.group(2)
+        line = s.line_of(m.start())
+        if s.in_test(line):
+            continue
+        if recv in fields:
+            acqs.append((fields[recv], m.start(), m.end(), line))
+        elif kind == "lock":
+            out.append(Finding(
+                RULE, s.path, line,
+                f"acquisition of undeclared lock `{recv}.lock()` in module "
+                f"`{module}` — declare it in {TOML}"))
+        # bare .read()/.write() on undeclared receivers are ignored: too
+        # many io methods share the names; RwLocks must be declared to
+        # be checked at all
+    for helper, lock_id in helper_map.items():
+        for m in re.finditer(r"\.\s*" + re.escape(helper) + r"\s*\(\s*\)",
+                             s.code):
+            line = s.line_of(m.start())
+            if not s.in_test(line):
+                acqs.append((lock_id, m.start(), m.end(), line))
+    acqs.sort(key=lambda a: a[1])
+
+    ranges = [(lock_id, pos, _live_end(s.code, pos, end), line)
+              for lock_id, pos, end, line in acqs]
+    for i, (outer, pos, stop, line) in enumerate(ranges):
+        for inner, ipos, _, iline in ranges:
+            if ipos <= pos or ipos >= stop:
+                continue
+            if inner == outer:
+                out.append(Finding(
+                    RULE, s.path, iline,
+                    f"`{inner}` re-acquired while already held (taken at "
+                    f"line {line}) — std mutexes self-deadlock"))
+            elif (outer, inner) not in edges:
+                out.append(Finding(
+                    RULE, s.path, iline,
+                    f"`{inner}` acquired while holding `{outer}` (taken at "
+                    f"line {line}) but `{outer} -> {inner}` is not a "
+                    f"declared edge in {TOML}"))
+        for b in BLOCKING_RE.finditer(s.code, pos, stop):
+            bline = s.line_of(b.start())
+            out.append(Finding(
+                RULE, s.path, bline,
+                f"blocking call `.{b.group(1)}(` while holding `{outer}` "
+                f"(guard taken at line {line}) — a stalled peer would wedge "
+                f"every thread contending for the lock"))
+    return out
+
+
+def _live_end(code: str, pos: int, acq_end: int) -> int:
+    """End offset of the guard born by the acquisition at `pos`."""
+    # statement head: text since the previous ; { or }
+    head_start = max(code.rfind(c, 0, pos) for c in ";{}") + 1
+    m = LET_RE.search(code, head_start, pos)
+    if not m:
+        return _stmt_end(code, acq_end)
+    var = m.group(1) or m.group(2)
+    block_end = _block_end(code, acq_end)
+    d = re.search(r"\bdrop\s*\(\s*" + re.escape(var) + r"\s*\)",
+                  code[acq_end:block_end])
+    return acq_end + d.start() if d else block_end
+
+
+def _block_end(code: str, pos: int) -> int:
+    depth = 0
+    for j in range(pos, len(code)):
+        c = code[j]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            if depth == 0:
+                return j
+            depth -= 1
+    return len(code)
+
+
+def _stmt_end(code: str, pos: int) -> int:
+    depth = 0
+    for j in range(pos, len(code)):
+        c = code[j]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth < 0:
+                return j
+        elif c == ";" and depth <= 0:
+            return j
+    return len(code)

@@ -1,0 +1,84 @@
+"""metrics-registry: every `trimkv_*` series the Rust tree emits must be
+documented in docs/OPERATIONS.md, and every documented name must still be
+emitted.  Near-miss pairs (edit distance <= 2 across the two difference
+sets) are called out explicitly — they are almost always a rename that
+updated one side only.
+
+Emitted = every non-test string literal in rust/src that is exactly a
+metric name (`trimkv_[a-z0-9_]+`).  The exposition layer derives
+`_sum`/`_count`/`_bucket`/quantile series from base names by
+concatenation, so base names are the comparison universe on both sides
+(OPERATIONS.md documents the derivation rule once, in prose).
+"""
+from __future__ import annotations
+
+import re
+
+from staticcheck.report import Context, Finding
+
+RULE = "metrics-registry"
+DOCS = "docs/OPERATIONS.md"
+NAME_RE = re.compile(r"^trimkv_[a-z0-9_]+$")
+DOC_NAME_RE = re.compile(r"trimkv_[a-z0-9_]+")
+
+
+def run(ctx: Context) -> list[Finding]:
+    emitted: dict[str, tuple[str, int]] = {}
+    for rel in ctx.rust_files():
+        s = ctx.scrub(rel)
+        for line, val in s.strings:
+            if NAME_RE.match(val) and not s.in_test(line):
+                emitted.setdefault(val, (rel, line))
+    if not emitted:
+        return []
+    if not ctx.exists(DOCS):
+        return [Finding(RULE, DOCS, 0,
+                        f"{len(emitted)} trimkv_* series are emitted but "
+                        f"{DOCS} does not exist")]
+
+    documented: dict[str, int] = {}
+    for lineno, line in enumerate(ctx.read(DOCS).splitlines(), 1):
+        for name in DOC_NAME_RE.findall(line):
+            documented.setdefault(name, lineno)
+
+    out = []
+    undocumented = sorted(set(emitted) - set(documented))
+    unemitted = sorted(set(documented) - set(emitted))
+    for name in undocumented:
+        rel, line = emitted[name]
+        hint = _near_miss(name, unemitted)
+        out.append(Finding(
+            RULE, rel, line,
+            f"series `{name}` is emitted but not documented in {DOCS}"
+            + (f" (near-miss of documented `{hint}` — rename drift?)"
+               if hint else "")))
+    for name in unemitted:
+        hint = _near_miss(name, undocumented)
+        out.append(Finding(
+            RULE, DOCS, documented[name],
+            f"series `{name}` is documented but nothing in rust/src emits it"
+            + (f" (near-miss of emitted `{hint}` — rename drift?)"
+               if hint else "")))
+    return out
+
+
+def _near_miss(name: str, candidates: list[str]) -> str | None:
+    best = None
+    for c in candidates:
+        d = _edit_distance(name, c)
+        if d <= 2 and (best is None or d < best[0]):
+            best = (d, c)
+    return best[1] if best else None
+
+
+def _edit_distance(a: str, b: str) -> int:
+    if abs(len(a) - len(b)) > 2:
+        return 3  # caller only cares about <= 2
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i]
+        for j, cb in enumerate(b, 1):
+            cur.append(min(prev[j] + 1, cur[j - 1] + 1,
+                           prev[j - 1] + (ca != cb)))
+        prev = cur
+    return prev[-1]

@@ -1,0 +1,116 @@
+"""panic-path: no unwrap/expect/panic!/unreachable! on serving paths.
+
+Hot paths (engine tick, router, server, prefixcache) get zero tolerance:
+every non-test site is a finding unless an adjacent
+``// staticcheck: allow(panic-path, <reason>)`` pragma justifies it.
+
+Everything else is held by ``tools/staticcheck/baseline.json``, a
+per-file count of non-test, non-pragma'd sites that only ratchets DOWN:
+
+- a file exceeding its baselined count fails (new panic sites never land
+  silently; the baseline is not raised by --update-baseline);
+- a file below its baselined count fails too ("stale baseline") until
+  ``run.py --update-baseline`` records the lower count — so the burn-down
+  is monotonic and visible in review.
+
+The site patterns are exact: ``.unwrap()`` (never ``unwrap_or*``),
+``.expect(`` (never ``expect_err``), ``panic!`` and ``unreachable!`` with
+any delimiter.  Matching runs on the scrubbed view, so strings, comments
+and ``#[cfg(test)]`` modules can never count.
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from staticcheck.report import Context, Finding
+
+RULE = "panic-path"
+BASELINE = "tools/staticcheck/baseline.json"
+HOT = ("rust/src/engine/", "rust/src/router/", "rust/src/server/",
+       "rust/src/prefixcache/")
+SITE_RE = re.compile(
+    r"\.unwrap\s*\(\s*\)|\.expect\s*\(|\bpanic!\s*[\(\[{]|"
+    r"\bunreachable!\s*[\(\[{]")
+
+
+def sites(ctx: Context, rel: str) -> list[tuple[int, str, bool]]:
+    """(line, matched token, pragma'd) for every non-test site in `rel`.
+    Consulting the pragma here (not in the driver) lets the baseline count
+    exclude justified sites; the pragma is marked used either way."""
+    s = ctx.scrub(rel)
+    out = []
+    for m in SITE_RE.finditer(s.code):
+        line = s.line_of(m.start())
+        if s.in_test(line):
+            continue
+        pragma = next((p for p in s.pragmas
+                       if p.rule == RULE and p.line in (line, line - 1)),
+                      None)
+        if pragma:
+            pragma.used = True
+        out.append((line, m.group(0).split("(")[0].strip("."), bool(pragma)))
+    return out
+
+
+def survey(ctx: Context) -> tuple[dict, list[Finding]]:
+    """Current non-pragma'd counts for baselined (non-hot) files, plus the
+    zero-tolerance findings for hot files."""
+    counts: dict[str, int] = {}
+    hot_findings: list[Finding] = []
+    for rel in ctx.rust_files():
+        file_sites = sites(ctx, rel)
+        if rel.startswith(HOT):
+            for line, tok, pragmad in file_sites:
+                if not pragmad:
+                    hot_findings.append(Finding(
+                        RULE, rel, line,
+                        f"`{tok}` on a serving hot path — return an error, "
+                        f"or justify it with // staticcheck: "
+                        f"allow(panic-path, reason)"))
+        else:
+            n = sum(1 for _, _, pragmad in file_sites if not pragmad)
+            if n:
+                counts[rel] = n
+    return counts, hot_findings
+
+
+def run(ctx: Context) -> list[Finding]:
+    counts, out = survey(ctx)
+    baseline = load_baseline(ctx)
+    files = baseline.get("files", {})
+    for rel in sorted(set(counts) | set(files)):
+        have, allowed = counts.get(rel, 0), files.get(rel, 0)
+        if have > allowed:
+            out.append(Finding(
+                RULE, rel, 0,
+                f"{have} non-test panic sites but the baseline allows "
+                f"{allowed} — fix the new ones or pragma them with reasons "
+                f"(the baseline only ratchets down)"))
+        elif have < allowed:
+            out.append(Finding(
+                RULE, rel, 0,
+                f"baseline is stale: allows {allowed} panic sites, the "
+                f"file has {have} — run `python3 tools/staticcheck/run.py "
+                f"--update-baseline` to lock in the progress"))
+    return out
+
+
+def load_baseline(ctx: Context) -> dict:
+    if not ctx.exists(BASELINE):
+        return {"files": {}}
+    return json.loads(ctx.read(BASELINE))
+
+
+def update_baseline(ctx: Context) -> dict:
+    """Rewrite the baseline at the current counts, ratcheting down only:
+    a file whose count grew keeps its old (lower) allowance, so the
+    violation still fails after the update."""
+    counts, _ = survey(ctx)
+    baseline = load_baseline(ctx)
+    old = baseline.get("files", {})
+    baseline["files"] = {
+        rel: min(n, old.get(rel, n)) for rel, n in sorted(counts.items())}
+    (ctx.root / BASELINE).write_text(
+        json.dumps(baseline, indent=1) + "\n")
+    return baseline

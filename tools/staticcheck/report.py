@@ -1,0 +1,144 @@
+"""Findings, the per-tree analysis context, and pragma suppression.
+
+A pass is a module exposing ``run(ctx) -> list[Finding]``.  The driver
+builds one :class:`Context` per analyzed tree (the real repo or a fixture
+mini-tree), runs every pass against it, then applies the inline
+``// staticcheck: allow(<rule>, <reason>)`` pragmas:
+
+- a pragma suppresses findings of its rule on the SAME line or the NEXT
+  line (so it can ride above a statement without fighting rustfmt);
+- a pragma that suppressed nothing is itself a finding (stale suppressions
+  rot into lies about the code);
+- a pragma with no reason is a finding even when it fires — the reason is
+  the reviewable content.
+"""
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from staticcheck import rustlex  # noqa: E402
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str      # repo-relative, '' for tree-level findings
+    line: int      # 1-based, 0 for file-level findings
+    message: str
+
+    def render(self) -> str:
+        loc = self.path if self.path else "<tree>"
+        if self.line:
+            loc = f"{loc}:{self.line}"
+        return f"[{self.rule}] {loc}: {self.message}"
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+class Context:
+    """One analyzed tree: scrub cache + path helpers shared by all passes."""
+
+    def __init__(self, root):
+        self.root = Path(root).resolve()
+        self._scrubs: dict[str, rustlex.Scrub] = {}
+
+    def exists(self, rel: str) -> bool:
+        return (self.root / rel).exists()
+
+    def read(self, rel: str) -> str:
+        return (self.root / rel).read_text()
+
+    def rust_files(self, sub: str = "rust/src") -> list[str]:
+        return [str(p.relative_to(self.root))
+                for p in rustlex.rust_files(self.root, sub)]
+
+    def scrub(self, rel: str) -> rustlex.Scrub:
+        if rel not in self._scrubs:
+            self._scrubs[rel] = rustlex.scrub_path(self.root / rel, rel)
+        return self._scrubs[rel]
+
+    # -- pragma application ------------------------------------------------
+
+    def apply_pragmas(self, findings: list[Finding],
+                      rules: set[str] | None = None) -> list[Finding]:
+        """Drop pragma-suppressed findings; append pragma-hygiene findings
+        for every Rust file the passes touched.  `rules` is the set of
+        rules that actually ran — a pragma for a rule that did not run
+        this invocation (e.g. under --only) is never "unused"."""
+        kept = []
+        for f in findings:
+            pragma = self._pragma_for(f)
+            if pragma is None:
+                kept.append(f)
+            else:
+                pragma.used = True
+        for rel, s in sorted(self._scrubs.items()):
+            for p in s.pragmas:
+                if rules is not None and p.rule not in rules:
+                    continue
+                if not p.reason:
+                    kept.append(Finding(
+                        "pragma", rel, p.line,
+                        f"allow({p.rule}) carries no reason — justify the "
+                        f"suppression: // staticcheck: allow({p.rule}, why)"))
+                if not p.used:
+                    kept.append(Finding(
+                        "pragma", rel, p.line,
+                        f"unused allow({p.rule}) pragma — the finding it "
+                        f"suppressed is gone; delete the pragma"))
+        return kept
+
+    def _pragma_for(self, f: Finding):
+        if not f.path or not f.path.endswith(".rs") or not f.line:
+            return None
+        if f.path not in self._scrubs:
+            return None  # pass never scrubbed it -> no pragmas collected
+        for p in self._scrubs[f.path].pragmas:
+            if p.rule == f.rule and p.line in (f.line, f.line - 1):
+                return p
+        return None
+
+
+def parse_toml_lite(text: str) -> dict:
+    """Tiny TOML subset parser (the container python predates tomllib):
+    ``[section]`` / ``[two.part.section]`` headers, ``key = value`` with
+    string, bool, int and flat string-array values.  Enough for
+    lockorder.toml; anything fancier is a config error."""
+    out: dict = {}
+    section = out
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip() if not raw.strip().startswith('"') \
+            else raw.strip()
+        if not line:
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            section = out
+            for part in line[1:-1].strip().split("."):
+                section = section.setdefault(part.strip(), {})
+            continue
+        if "=" not in line:
+            raise ValueError(f"lockorder.toml:{lineno}: expected key = value")
+        key, _, val = line.partition("=")
+        section[key.strip()] = _toml_value(val.strip(), lineno)
+    return out
+
+
+def _toml_value(val: str, lineno: int):
+    if val.startswith("[") and val.endswith("]"):
+        inner = val[1:-1].strip()
+        if not inner:
+            return []
+        return [_toml_value(v.strip(), lineno) for v in inner.split(",")]
+    if val.startswith('"') and val.endswith('"') and len(val) >= 2:
+        return val[1:-1]
+    if val in ("true", "false"):
+        return val == "true"
+    try:
+        return int(val)
+    except ValueError:
+        raise ValueError(f"lockorder.toml:{lineno}: bad value {val!r}")

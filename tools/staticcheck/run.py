@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""staticcheck driver: run every analysis pass over a tree and report.
+
+    python3 tools/staticcheck/run.py                 # analyze the repo, exit 1 on findings
+    python3 tools/staticcheck/run.py --only lock-order
+    python3 tools/staticcheck/run.py --json findings.json
+    python3 tools/staticcheck/run.py --update-baseline   # ratchet panic-path baseline down
+
+Passes live in ``tools/staticcheck/passes/`` (one module per rule); the
+rule set, pragma syntax, and baseline workflow are documented in
+``docs/STATIC_ANALYSIS.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from staticcheck.passes import ALL_PASSES  # noqa: E402
+from staticcheck.passes import panic_path  # noqa: E402
+from staticcheck.report import Context, Finding  # noqa: E402
+
+
+def analyze(root, only: str | None = None) -> list[Finding]:
+    ctx = Context(root)
+    findings: list[Finding] = []
+    ran: set[str] = set()
+    for rule, module in ALL_PASSES:
+        if only and rule != only:
+            continue
+        findings.extend(module.run(ctx))
+        ran.add(rule)
+    findings = ctx.apply_pragmas(findings, ran)
+    findings.sort(key=lambda f: (f.rule, f.path, f.line))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="staticcheck", description=__doc__)
+    ap.add_argument("--root", default=None,
+                    help="tree to analyze (default: the repo root)")
+    ap.add_argument("--only", default=None, metavar="RULE",
+                    help="run a single pass: " +
+                         ", ".join(r for r, _ in ALL_PASSES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write findings as a JSON report")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the panic-path baseline at current counts "
+                         "(ratchets down only), then re-check")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root \
+        else Path(__file__).resolve().parent.parent.parent
+    if args.only and args.only not in {r for r, _ in ALL_PASSES}:
+        ap.error(f"unknown rule {args.only!r}")
+
+    if args.update_baseline:
+        baseline = panic_path.update_baseline(Context(root))
+        total = sum(baseline["files"].values())
+        print(f"panic-path baseline updated: {len(baseline['files'])} files, "
+              f"{total} allowed sites")
+
+    findings = analyze(root, args.only)
+    for f in findings:
+        print(f.render(), file=sys.stderr)
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            {"root": str(root), "findings": [f.as_dict() for f in findings]},
+            indent=1) + "\n")
+    ran = [r for r, _ in ALL_PASSES if not args.only or r == args.only]
+    print(f"staticcheck: {len(ran)} passes ({', '.join(ran)}): "
+          f"{'FAIL' if findings else 'ok'} ({len(findings)} findings)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,203 @@
+"""Minimal hand-rolled Rust lexer/scrubber for the staticcheck passes.
+
+No rust toolchain exists in the build container, so every pass works on a
+*scrubbed* view of the source produced here by a single character scan:
+
+- ``code``      — comments blanked AND string/char-literal contents blanked
+                  (newlines kept, so byte offsets and line numbers survive).
+                  Regex passes run on this view: an ``unwrap()`` inside a
+                  doc comment or a log string can never count.
+- ``code_str``  — comments blanked, string literals kept verbatim.  Passes
+                  that read string keys (config match arms, metric names in
+                  emission tables) run on this view.
+- ``strings``   — every string literal as ``(line, value)``.
+- ``pragmas``   — ``// staticcheck: allow(<rule>, <reason>)`` suppressions.
+- ``test_lines``— the 1-based line numbers inside ``#[cfg(test)] mod …``
+                  blocks (brace-matched on the scrubbed view).
+
+The scan understands line comments, nested block comments, plain/byte
+strings with escapes, raw strings (``r"…"`` … ``r###"…"###``), char
+literals, and tells lifetimes (``'a``) from char literals.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+PRAGMA_RE = re.compile(
+    r"staticcheck:\s*allow\(\s*([a-z0-9-]+)\s*(?:,\s*(.*?))?\s*\)\s*$")
+
+CFG_TEST_RE = re.compile(
+    r"#\[cfg\(test\)\]\s*(?:#\[[^\]]*\]\s*)*mod\s+\w+\s*\{")
+
+
+@dataclass
+class Pragma:
+    line: int
+    rule: str
+    reason: str
+    used: bool = False
+
+
+@dataclass
+class Scrub:
+    path: str
+    text: str
+    code: str
+    code_str: str
+    strings: list = field(default_factory=list)      # (line, value)
+    pragmas: list = field(default_factory=list)
+    test_lines: set = field(default_factory=set)     # 1-based line numbers
+    _offsets: list = field(default_factory=list)
+
+    def line_of(self, pos: int) -> int:
+        """1-based line number of byte offset ``pos``."""
+        import bisect
+        return bisect.bisect_right(self._offsets, pos - 1) + 1
+
+    def in_test(self, line: int) -> bool:
+        return line in self.test_lines
+
+
+def _is_ident(ch: str) -> bool:
+    return ch.isalnum() or ch == "_"
+
+
+def scrub(text: str, path: str = "<mem>") -> Scrub:
+    n = len(text)
+    code = list(text)
+    code_str = list(text)
+    strings: list = []
+    pragmas: list = []
+
+    def blank(arr, lo, hi):
+        for k in range(lo, min(hi, n)):
+            if arr[k] != "\n":
+                arr[k] = " "
+
+    i, line = 0, 1
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        # line comment (also the pragma carrier)
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            m = PRAGMA_RE.search(text[i:j])
+            if m:
+                pragmas.append(Pragma(line, m.group(1),
+                                      (m.group(2) or "").strip()))
+            blank(code, i, j)
+            blank(code_str, i, j)
+            i = j
+            continue
+        # block comment (rust nests them)
+        if c == "/" and i + 1 < n and text[i + 1] == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text[j] == "/" and j + 1 < n and text[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif text[j] == "*" and j + 1 < n and text[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    if text[j] == "\n":
+                        line += 1
+                    j += 1
+            blank(code, i, j)
+            blank(code_str, i, j)
+            i = j
+            continue
+        # raw string r"…" / r#"…"# / br"…"; not an identifier tail
+        if (c in "rb" and (i == 0 or not _is_ident(text[i - 1]))):
+            m = re.match(r'(?:br|r)(#*)"', text[i:i + 8])
+            if m:
+                hashes = m.group(1)
+                start = i + m.end()
+                term = '"' + hashes
+                end = text.find(term, start)
+                end = n if end == -1 else end
+                val = text[start:end]
+                strings.append((line, val))
+                stop = min(end + len(term), n)
+                blank(code, start, end)  # keep the quotes, blank contents
+                line += text.count("\n", i, stop)
+                i = stop
+                continue
+        # plain / byte string
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                    continue
+                if text[j] == '"':
+                    break
+                j += 1
+            val = text[i + 1:j]
+            strings.append((line, val))
+            blank(code, i + 1, j)
+            line += text.count("\n", i, min(j + 1, n))
+            i = min(j + 1, n)
+            continue
+        # char literal vs lifetime
+        if c == "'":
+            if i + 1 < n and text[i + 1] == "\\":
+                j = i + 2
+                while j < n and text[j] != "'":
+                    j += 1
+                blank(code, i + 1, j)
+                i = min(j + 1, n)
+                continue
+            if i + 2 < n and text[i + 2] == "'" and text[i + 1] != "'":
+                blank(code, i + 1, i + 2)
+                i += 3
+                continue
+            i += 1  # lifetime: skip the quote
+            continue
+        i += 1
+
+    out = Scrub(path=path, text=text, code="".join(code),
+                code_str="".join(code_str), strings=strings, pragmas=pragmas)
+    out._offsets = [m.start() for m in re.finditer("\n", text)]
+
+    # mark #[cfg(test)] mod … { … } extents on the scrubbed view
+    for m in CFG_TEST_RE.finditer(out.code):
+        open_pos = out.code.rfind("{", m.start(), m.end())
+        close = match_brace(out.code, open_pos)
+        for ln in range(out.line_of(m.start()), out.line_of(close) + 1):
+            out.test_lines.add(ln)
+    return out
+
+
+def match_brace(code: str, open_pos: int) -> int:
+    """Offset of the ``}`` closing the ``{`` at ``open_pos`` (scrubbed view,
+    so braces inside strings/comments cannot desync the walk)."""
+    depth = 0
+    for j in range(open_pos, len(code)):
+        if code[j] == "{":
+            depth += 1
+        elif code[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(code) - 1
+
+
+def scrub_path(path: Path, rel: str | None = None) -> Scrub:
+    return scrub(path.read_text(), rel or str(path))
+
+
+def rust_files(root: Path, sub: str = "rust/src") -> list:
+    """Sorted .rs files under ``root/sub`` (vendor/ and target/ excluded)."""
+    base = root / sub
+    if not base.exists():
+        return []
+    skip = {"vendor", "target"}
+    return sorted(p for p in base.rglob("*.rs")
+                  if not skip.intersection(q.name for q in p.parents))
